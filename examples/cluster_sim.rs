@@ -1,0 +1,80 @@
+//! Trace-driven 128-GPU cluster simulation (§4.2 headline numbers):
+//! replays a synthetic ACMETrace-style workload under all five policies
+//! and prints throughput / JCT / utilization — the `compare` subcommand
+//! as a runnable example.
+//!
+//! ```sh
+//! cargo run --release --example cluster_sim -- [--n-jobs 120] \
+//!     [--n-gpus 128] [--seed 42] [--month 1]
+//! ```
+
+use tlora::cli::Args;
+use tlora::config::{ExperimentConfig, Policy};
+use tlora::metrics::Table;
+use tlora::sim::simulate;
+use tlora::workload::trace::TraceProfile;
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let refs: Vec<&str> = argv.iter().map(String::as_str).collect();
+    let args = Args::parse_from(&refs).map_err(anyhow::Error::msg)?;
+
+    let mut cfg = ExperimentConfig::default();
+    cfg.n_jobs = args.get_usize("n-jobs", 120).map_err(anyhow::Error::msg)?;
+    cfg.cluster = tlora::cluster::ClusterSpec::with_gpus(
+        args.get_usize("n-gpus", 128).map_err(anyhow::Error::msg)?,
+    );
+    cfg.seed = args.get_u64("seed", 42).map_err(anyhow::Error::msg)?;
+    cfg.trace = match args.get_usize("month", 1).unwrap_or(1) {
+        2 => TraceProfile::month2(),
+        3 => TraceProfile::month3(),
+        _ => TraceProfile::month1(),
+    };
+
+    let mut table = Table::new(
+        &format!(
+            "cluster simulation — {} jobs, {} GPUs, month-1 trace",
+            cfg.n_jobs,
+            cfg.cluster.total_gpus()
+        ),
+        &["policy", "throughput (samples/s)", "mean JCT (s)",
+          "p99 JCT (s)", "GPU util"],
+    );
+
+    let mut tlora_thr = 0.0;
+    let mut mlora_thr = 0.0;
+    let mut tlora_jct = 0.0;
+    let mut mlora_jct = 0.0;
+    for policy in Policy::all() {
+        let mut c = cfg.clone();
+        c.policy = policy;
+        let r = simulate(&c);
+        match policy {
+            Policy::TLora => {
+                tlora_thr = r.avg_throughput;
+                tlora_jct = r.mean_jct;
+            }
+            Policy::MLora => {
+                mlora_thr = r.avg_throughput;
+                mlora_jct = r.mean_jct;
+            }
+            _ => {}
+        }
+        table.row(&[
+            policy.name().to_string(),
+            format!("{:.2}", r.avg_throughput),
+            format!("{:.1}", r.mean_jct),
+            format!("{:.1}", r.p99_jct),
+            format!("{:.1}%", r.avg_gpu_util * 100.0),
+        ]);
+    }
+    table.print();
+
+    println!(
+        "\ntLoRA vs mLoRA: throughput {:.2}x (paper: 1.2-1.8x), \
+         mean JCT {:.2}x better (paper: 2.3-5.4x)",
+        tlora_thr / mlora_thr,
+        mlora_jct / tlora_jct
+    );
+    Ok(())
+}

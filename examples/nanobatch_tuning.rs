@@ -1,0 +1,58 @@
+//! The AIMD nano-batch controller in action (§3.3, Eq. 2).
+//!
+//! Simulates a fused group whose interconnect bandwidth changes
+//! mid-run (e.g. a contending tenant appears): the controller re-adapts
+//! the nano-batch count online, tracking the moving optimum that a
+//! static configuration would miss.
+//!
+//! ```sh
+//! cargo run --release --example nanobatch_tuning
+//! ```
+
+use tlora::config::AimdConfig;
+use tlora::kernelsim::overlap::{best_fixed_n, iter_time};
+use tlora::kernelsim::AimdController;
+
+fn main() {
+    let comp = 1.0; // seconds of compute per step
+    let oh = 0.004; // per-nano launch overhead
+    let lat = 0.001; // per-message latency
+
+    // phase 1: fast network (little comm), phase 2: congested (lots)
+    let phases = [(0.3, 150usize), (1.2, 150usize)];
+
+    let mut ctl = AimdController::new(AimdConfig::default());
+    println!("== AIMD nano-batch adaptation under changing bandwidth ==");
+    println!("{:>5} {:>6} {:>5} {:>9} {:>9} {:>7}",
+             "step", "comm", "N", "t_step", "t_best", "regret");
+
+    let mut step = 0usize;
+    for &(comm, len) in &phases {
+        let (best_n, best_t) = best_fixed_n(comp, comm, 64, oh, lat);
+        for i in 0..len {
+            let n = ctl.n();
+            let t = iter_time(comp, comm, n, oh, lat);
+            if i % 25 == 0 {
+                println!(
+                    "{step:>5} {comm:>6.2} {n:>5} {t:>9.4} {best_t:>9.4} \
+                     {:>6.1}%",
+                    (t / best_t - 1.0) * 100.0
+                );
+            }
+            ctl.observe(t);
+            step += 1;
+        }
+        let tail_n = ctl.n();
+        let tail_t = iter_time(comp, comm, tail_n, oh, lat);
+        println!(
+            "-- phase end: comm={comm:.2}s  AIMD N={tail_n} \
+             (t={tail_t:.4})  oracle N={best_n} (t={best_t:.4})  \
+             regret {:.1}%",
+            (tail_t / best_t - 1.0) * 100.0
+        );
+    }
+    println!(
+        "\nAIMD tracked both regimes with no cost model — the paper's \
+         argument for feedback-driven adaptation (Fig. 8a)."
+    );
+}

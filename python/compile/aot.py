@@ -1,0 +1,228 @@
+"""AOT compiler: lower SSM variants to HLO text + manifest for Rust.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published `xla` 0.1.6 crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Each variant emits:
+  <name>.init.hlo.txt   (seed:i32) -> full state tuple
+  <name>.step.hlo.txt   (*state, tokens, adapter_ids) -> (lora', opt', t,
+                                                          loss, per_adapter)
+plus kernel micro-bench programs (kmicro_*), and a single manifest.json
+describing every program's positional buffer layout so the Rust runtime
+can bind PJRT buffers without any Python at run time.
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--variants tiny,small]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile.model import (SsmConfig, make_flat_init, make_flat_train_step,
+                           BACKBONE_ORDER, LORA_ORDER)
+from compile.kernels.fused_lora import (fused_lora_fwd_only,
+                                        fused_lora_bwd_only, unfused_lora)
+
+# ---------------------------------------------------------------------------
+# Variant registry — tiny/small feed tests & CI benches, med/e2e100m feed
+# fig10 and the end-to-end example. Ranks/batches are heterogeneous on
+# purpose (the paper's §2 heterogeneity dimensions).
+# ---------------------------------------------------------------------------
+
+VARIANTS = {
+    "tiny": SsmConfig(
+        name="tiny", vocab=256, d_model=64, n_layers=2, n_heads=4, d_ff=256,
+        seq_len=32, num_adapters=4, r_max=8, ranks=(2, 4, 8, 8),
+        batch_sizes=(2, 2, 2, 2), tile_t=64, lr=5e-3),
+    "tiny_unfused": SsmConfig(
+        name="tiny_unfused", vocab=256, d_model=64, n_layers=2, n_heads=4,
+        d_ff=256, seq_len=32, num_adapters=4, r_max=8, ranks=(2, 4, 8, 8),
+        batch_sizes=(2, 2, 2, 2), fused=False, tile_t=64, lr=5e-3),
+    "small": SsmConfig(
+        name="small", vocab=2048, d_model=256, n_layers=4, n_heads=8,
+        d_ff=1024, seq_len=64, num_adapters=4, r_max=16, ranks=(2, 4, 8, 16),
+        batch_sizes=(1, 2, 4, 1), tile_t=128, lr=5e-3),
+    "med": SsmConfig(
+        name="med", vocab=8192, d_model=512, n_layers=8, n_heads=8,
+        d_ff=2048, seq_len=64, num_adapters=4, r_max=16, ranks=(4, 4, 8, 16),
+        batch_sizes=(1, 1, 1, 1), tile_t=128, lr=2e-3),
+    "e2e100m": SsmConfig(
+        name="e2e100m", vocab=16384, d_model=768, n_layers=12, n_heads=12,
+        d_ff=3072, seq_len=128, num_adapters=4, r_max=16, ranks=(4, 8, 8, 16),
+        batch_sizes=(1, 1, 1, 1), tile_t=128, lr=2e-3),
+}
+
+# nano-batched step programs (Fig. 8a real-numerics check): name -> (base, N)
+NANO_VARIANTS = {
+    "tiny_nano2": ("tiny", 2),
+    "tiny_nano4": ("tiny", 4),
+}
+
+# kernel micro programs: (fused?, K adapters)
+KMICRO = [(True, 1), (False, 1), (True, 4), (False, 4), (True, 16),
+          (False, 16)]
+KMICRO_T, KMICRO_D, KMICRO_R = 512, 256, 16
+
+DEFAULT_VARIANT_SET = ["tiny", "tiny_unfused", "small", "med", "e2e100m"]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _dtype_name(dt) -> str:
+    return {"float32": "f32", "int32": "i32", "bfloat16": "bf16",
+            "float16": "f16"}[jnp.dtype(dt).name]
+
+
+def _spec_list(shapes) -> list:
+    return [{"shape": list(s.shape), "dtype": _dtype_name(s.dtype)}
+            for s in shapes]
+
+
+def _state_specs(cfg: SsmConfig):
+    """ShapeDtypeStructs of the flattened state, in manifest order."""
+    init = make_flat_init(cfg)
+    out = jax.eval_shape(init, jax.ShapeDtypeStruct((), jnp.int32))
+    return list(out)
+
+
+def lower_variant(cfg: SsmConfig, out_dir: str, n_nano: int = 1,
+                  name: str | None = None) -> dict:
+    name = name or cfg.name
+    state = _state_specs(cfg)
+    tokens = jax.ShapeDtypeStruct((cfg.total_batch, cfg.seq_len), jnp.int32)
+    aid = jax.ShapeDtypeStruct((cfg.total_batch,), jnp.int32)
+
+    entry = {"name": name, "n_nano": n_nano,
+             "config": dataclasses.asdict(cfg),
+             "param_count": cfg.param_count(),
+             "lora_param_count": cfg.lora_param_count(),
+             "flops_per_step": cfg.flops_per_step(),
+             "state_layout": {
+                 "backbone": BACKBONE_ORDER, "lora": LORA_ORDER,
+                 "n_backbone": len(BACKBONE_ORDER),
+                 "n_lora": len(LORA_ORDER)}}
+
+    if n_nano == 1:
+        init = make_flat_init(cfg)
+        init_lowered = jax.jit(init).lower(
+            jax.ShapeDtypeStruct((), jnp.int32))
+        init_file = f"{name}.init.hlo.txt"
+        with open(os.path.join(out_dir, init_file), "w") as f:
+            f.write(to_hlo_text(init_lowered))
+        entry["init"] = {
+            "file": init_file,
+            "inputs": [{"shape": [], "dtype": "i32"}],
+            "outputs": _spec_list(state)}
+
+    step = make_flat_train_step(cfg, n_nano=n_nano)
+    step_args = state + [tokens, aid]
+    step_lowered = jax.jit(step).lower(*step_args)
+    step_out = jax.eval_shape(step, *step_args)
+    step_file = f"{name}.step.hlo.txt"
+    with open(os.path.join(out_dir, step_file), "w") as f:
+        f.write(to_hlo_text(step_lowered))
+    entry["step"] = {"file": step_file,
+                     "inputs": _spec_list(step_args),
+                     "outputs": _spec_list(list(step_out))}
+    return entry
+
+
+def lower_kmicro(fused: bool, k_adp: int, out_dir: str) -> dict:
+    """Standalone fused-vs-unfused kernel program: fwd + full backward."""
+    t, d, r = KMICRO_T, KMICRO_D, KMICRO_R
+
+    def prog(x, aid, a, b, scaling):
+        if fused:
+            y = fused_lora_fwd_only(x, aid, a, b, scaling)
+            dx, da, db = fused_lora_bwd_only(x, aid, a, b, scaling, y)
+        else:
+            y = unfused_lora(x, aid, a, b, scaling)
+            _, vjp = jax.vjp(
+                lambda xx, aa, bb: unfused_lora(xx, aid, aa, bb, scaling),
+                x, a, b)
+            dx, da, db = vjp(y)
+        return y, dx, da, db
+
+    args = [jax.ShapeDtypeStruct((t, d), jnp.float32),
+            jax.ShapeDtypeStruct((t,), jnp.int32),
+            jax.ShapeDtypeStruct((k_adp, d, r), jnp.float32),
+            jax.ShapeDtypeStruct((k_adp, r, d), jnp.float32),
+            jax.ShapeDtypeStruct((k_adp,), jnp.float32)]
+    lowered = jax.jit(prog).lower(*args)
+    outs = jax.eval_shape(prog, *args)
+    kind = "fused" if fused else "unfused"
+    name = f"kmicro_{kind}_k{k_adp}"
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(to_hlo_text(lowered))
+    flops = 2 * 2 * t * d * r * 2 * (k_adp if not fused else k_adp)
+    return {"name": name, "file": fname, "fused": fused, "k": k_adp,
+            "t": t, "d": d, "r": r,
+            "inputs": _spec_list(args),
+            "outputs": _spec_list(list(outs)),
+            "flops_est": flops}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--variants", default=",".join(DEFAULT_VARIANT_SET),
+                    help="comma-separated variant names, 'all', or 'ci'")
+    ap.add_argument("--skip-kmicro", action="store_true")
+    ap.add_argument("--skip-nano", action="store_true")
+    args = ap.parse_args()
+
+    if args.variants == "all":
+        names = DEFAULT_VARIANT_SET
+    elif args.variants == "ci":
+        names = ["tiny", "tiny_unfused", "small"]
+    else:
+        names = [n for n in args.variants.split(",") if n]
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"format": 1, "variants": [], "kmicro": [], "nano": []}
+
+    for n in names:
+        cfg = VARIANTS[n]
+        print(f"[aot] lowering variant {n} "
+              f"(params={cfg.param_count() / 1e6:.1f}M)", flush=True)
+        manifest["variants"].append(lower_variant(cfg, args.out_dir))
+
+    if not args.skip_nano:
+        for name, (base, n_nano) in NANO_VARIANTS.items():
+            if base in names:
+                print(f"[aot] lowering nano variant {name}", flush=True)
+                manifest["nano"].append(
+                    lower_variant(VARIANTS[base], args.out_dir,
+                                  n_nano=n_nano, name=name))
+
+    if not args.skip_kmicro:
+        for fused, k_adp in KMICRO:
+            print(f"[aot] lowering kmicro fused={fused} k={k_adp}",
+                  flush=True)
+            manifest["kmicro"].append(lower_kmicro(fused, k_adp,
+                                                   args.out_dir))
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

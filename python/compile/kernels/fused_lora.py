@@ -1,0 +1,303 @@
+"""Fused batched multi-LoRA Pallas kernel (tLoRA §3.3, Layer 1).
+
+The paper's Kernel Fuser executes K heterogeneous LoRA adapters over a
+shared token stream in a *single* kernel launch, never materializing the
+per-adapter dense update ``W_i = A_i @ B_i`` and never allocating
+full-sized per-adapter temporaries.  For each adapter ``i`` the tokens
+mapped to it are gathered, pushed through the down-projection ``A_i`` to a
+compact ``(|X_i|, r_i)`` intermediate, immediately pushed through the
+up-projection ``B_i`` and scattered back into the shared output.
+
+Hardware adaptation (GPU -> TPU, see DESIGN.md §Hardware-Adaptation):
+
+* Triton's per-CTA token gather becomes a Pallas grid over
+  ``(token_tile, adapter)`` with ``BlockSpec`` describing the HBM->VMEM
+  schedule.  Gather/scatter is expressed as a rank-mask multiply — exact,
+  because a zeroed row contributes nothing to either GEMM.
+* The rank-``r`` intermediate lives in VMEM scratch (``r_max <= 16`` for
+  the paper's workloads, trivially resident).
+* Heterogeneous ranks share one static shape ``r_max`` with zero-padded
+  columns/rows.  Padding is *exactly* preserved by training: with
+  ``A[:, r:] = 0`` and ``B[r:, :] = 0`` the corresponding gradients are
+  identically zero (see ``python/tests/test_model.py``).
+* MXU targeting: matmuls accumulate in f32 via ``preferred_element_type``
+  so bf16 inputs hit the systolic array shape the paper's tensor-core
+  path used.
+
+All ``pallas_call``s use ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret mode lowers to plain HLO that
+the Rust runtime executes (see /opt/xla-example/README.md).
+
+Public API
+----------
+
+``fused_lora(x, adapter_ids, a, b, scaling)``
+    Differentiable (``jax.custom_vjp``) fused multi-adapter LoRA delta.
+``fused_lora_fwd_only`` / ``fused_lora_bwd_*``
+    The raw forward / backward kernels (exported for tests).
+``unfused_lora``
+    The per-adapter "PyTorch-native" comparator used by the Fig. 7
+    ablation: one masked dense GEMM pair per adapter, materializing the
+    per-adapter temporaries the fused kernel avoids.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default token tile. On a real TPU this is the sublane-aligned HBM->VMEM
+# block; the kernel_micro bench sweeps it (DESIGN.md §Perf).
+DEFAULT_TILE_T = 128
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+# ---------------------------------------------------------------------------
+# Forward kernel: grid (token_tiles, K); adapters iterate innermost so each
+# output tile stays resident in VMEM while every adapter accumulates into it.
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel(x_ref, aid_ref, a_ref, b_ref, s_ref, o_ref):
+    k = pl.program_id(1)
+    x = x_ref[...]                                        # (Tt, D)
+    mask = (aid_ref[...] == k).astype(jnp.float32)[:, None]
+    xm = x * mask.astype(x.dtype)                         # gather-by-mask
+    # (Tt, r_max) compact intermediate — the tensor the paper keeps in
+    # shared memory / VMEM instead of materializing A_i @ B_i.
+    xa = jnp.dot(xm, a_ref[0], preferred_element_type=jnp.float32)
+    y = jnp.dot(xa, b_ref[0].astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+    y = y * s_ref[0]
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # Rows of tokens not owned by adapter k are exactly zero (mask applied
+    # to x), so accumulation doubles as the scatter.
+    o_ref[...] += y.astype(o_ref.dtype)
+
+
+def fused_lora_fwd_only(x, adapter_ids, a, b, scaling, *,
+                        tile_t: int = DEFAULT_TILE_T):
+    """Forward fused LoRA delta.
+
+    Args:
+      x:           (T, D) token activations.
+      adapter_ids: (T,) int32 adapter ownership per token. Tokens with ids
+                   outside [0, K) (e.g. -1 padding) contribute zero.
+      a:           (K, D, R) stacked down-projections, zero-padded past r_i.
+      b:           (K, R, O) stacked up-projections, zero-padded past r_i.
+      scaling:     (K,) per-adapter alpha/r_i scale.
+
+    Returns: (T, O) LoRA delta, f32-accumulated, cast to x.dtype.
+    """
+    t, d = x.shape
+    k_adp, _, r = a.shape
+    o_dim = b.shape[2]
+    tp = _ceil_to(max(t, 1), tile_t)
+    if tp != t:
+        x = jnp.pad(x, ((0, tp - t), (0, 0)))
+        adapter_ids = jnp.pad(adapter_ids, (0, tp - t),
+                              constant_values=jnp.int32(-1))
+    nt = tp // tile_t
+    out = pl.pallas_call(
+        _fwd_kernel,
+        grid=(nt, k_adp),
+        in_specs=[
+            pl.BlockSpec((tile_t, d), lambda i, k: (i, 0)),
+            pl.BlockSpec((tile_t,), lambda i, k: (i,)),
+            pl.BlockSpec((1, d, r), lambda i, k: (k, 0, 0)),
+            pl.BlockSpec((1, r, o_dim), lambda i, k: (k, 0, 0)),
+            pl.BlockSpec((1,), lambda i, k: (k,)),
+        ],
+        out_specs=pl.BlockSpec((tile_t, o_dim), lambda i, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((tp, o_dim), x.dtype),
+        interpret=True,
+    )(x, adapter_ids, a, b, scaling.astype(jnp.float32))
+    return out[:t]
+
+
+# ---------------------------------------------------------------------------
+# Backward kernels.
+#   dx   = s_k * (g B_k^T) A_k^T           grid (token_tiles, K), like fwd
+#   dA_k = s_k * (x ⊙ m_k)^T (g B_k^T)     grid (K, token_tiles), tile-acc
+#   dB_k = s_k * ((x ⊙ m_k) A_k)^T g       fused with dA (shares x·mask)
+# ---------------------------------------------------------------------------
+
+
+def _dx_kernel(g_ref, aid_ref, a_ref, b_ref, s_ref, dx_ref):
+    k = pl.program_id(1)
+    g = g_ref[...]
+    mask = (aid_ref[...] == k).astype(jnp.float32)[:, None]
+    gm = g * mask.astype(g.dtype)
+    gb = jnp.dot(gm, b_ref[0].T, preferred_element_type=jnp.float32)
+    dx = jnp.dot(gb, a_ref[0].T.astype(jnp.float32),
+                 preferred_element_type=jnp.float32) * s_ref[0]
+
+    @pl.when(k == 0)
+    def _init():
+        dx_ref[...] = jnp.zeros_like(dx_ref)
+
+    dx_ref[...] += dx.astype(dx_ref.dtype)
+
+
+def _dab_kernel(x_ref, g_ref, aid_ref, a_ref, b_ref, s_ref, da_ref, db_ref):
+    k = pl.program_id(0)
+    i = pl.program_id(1)
+    x = x_ref[...]
+    g = g_ref[...].astype(jnp.float32)
+    mask = (aid_ref[...] == k).astype(jnp.float32)[:, None]
+    xm = (x * mask.astype(x.dtype)).astype(jnp.float32)
+    gb = jnp.dot(g, b_ref[0].T.astype(jnp.float32),
+                 preferred_element_type=jnp.float32)       # (Tt, R)
+    xa = jnp.dot(xm, a_ref[0].astype(jnp.float32),
+                 preferred_element_type=jnp.float32)       # (Tt, R)
+    da = jnp.dot(xm.T, gb, preferred_element_type=jnp.float32) * s_ref[0]
+    db = jnp.dot(xa.T, g, preferred_element_type=jnp.float32) * s_ref[0]
+
+    @pl.when(i == 0)
+    def _init():
+        da_ref[...] = jnp.zeros_like(da_ref)
+        db_ref[...] = jnp.zeros_like(db_ref)
+
+    da_ref[...] += da[None].astype(da_ref.dtype)
+    db_ref[...] += db[None].astype(db_ref.dtype)
+
+
+def fused_lora_bwd_only(x, adapter_ids, a, b, scaling, g, *,
+                        tile_t: int = DEFAULT_TILE_T):
+    """Backward pass: returns (dx, da, db)."""
+    t, d = x.shape
+    k_adp, _, r = a.shape
+    o_dim = b.shape[2]
+    tp = _ceil_to(max(t, 1), tile_t)
+    if tp != t:
+        x = jnp.pad(x, ((0, tp - t), (0, 0)))
+        g = jnp.pad(g, ((0, tp - t), (0, 0)))
+        adapter_ids = jnp.pad(adapter_ids, (0, tp - t),
+                              constant_values=jnp.int32(-1))
+    nt = tp // tile_t
+    s32 = scaling.astype(jnp.float32)
+
+    dx = pl.pallas_call(
+        _dx_kernel,
+        grid=(nt, k_adp),
+        in_specs=[
+            pl.BlockSpec((tile_t, o_dim), lambda i, k: (i, 0)),
+            pl.BlockSpec((tile_t,), lambda i, k: (i,)),
+            pl.BlockSpec((1, d, r), lambda i, k: (k, 0, 0)),
+            pl.BlockSpec((1, r, o_dim), lambda i, k: (k, 0, 0)),
+            pl.BlockSpec((1,), lambda i, k: (k,)),
+        ],
+        out_specs=pl.BlockSpec((tile_t, d), lambda i, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((tp, d), x.dtype),
+        interpret=True,
+    )(g, adapter_ids, a, b, s32)
+
+    da, db = pl.pallas_call(
+        _dab_kernel,
+        grid=(k_adp, nt),
+        in_specs=[
+            pl.BlockSpec((tile_t, d), lambda k, i: (i, 0)),
+            pl.BlockSpec((tile_t, o_dim), lambda k, i: (i, 0)),
+            pl.BlockSpec((tile_t,), lambda k, i: (i,)),
+            pl.BlockSpec((1, d, r), lambda k, i: (k, 0, 0)),
+            pl.BlockSpec((1, r, o_dim), lambda k, i: (k, 0, 0)),
+            pl.BlockSpec((1,), lambda k, i: (k,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, d, r), lambda k, i: (k, 0, 0)),
+            pl.BlockSpec((1, r, o_dim), lambda k, i: (k, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k_adp, d, r), a.dtype),
+            jax.ShapeDtypeStruct((k_adp, r, o_dim), b.dtype),
+        ],
+        interpret=True,
+    )(x, g, adapter_ids, a, b, s32)
+    return dx[:t], da, db
+
+
+# ---------------------------------------------------------------------------
+# Differentiable wrapper
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def fused_lora(x, adapter_ids, a, b, scaling, tile_t: int = DEFAULT_TILE_T):
+    """Differentiable fused multi-adapter LoRA delta (see module docs)."""
+    return fused_lora_fwd_only(x, adapter_ids, a, b, scaling, tile_t=tile_t)
+
+
+def _vjp_fwd(x, adapter_ids, a, b, scaling, tile_t):
+    y = fused_lora_fwd_only(x, adapter_ids, a, b, scaling, tile_t=tile_t)
+    return y, (x, adapter_ids, a, b, scaling)
+
+
+def _vjp_bwd(tile_t, res, g):
+    x, adapter_ids, a, b, scaling = res
+    dx, da, db = fused_lora_bwd_only(x, adapter_ids, a, b, scaling, g,
+                                     tile_t=tile_t)
+    # scaling is a hyperparameter; return symbolic zero via None-like zeros.
+    ds = jnp.zeros_like(scaling)
+    return dx, None, da, db, ds
+
+
+fused_lora.defvjp(_vjp_fwd, _vjp_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Unfused comparator (the "PyTorch-native kernel" of Fig. 7): one dense
+# GEMM pair per adapter, materializing per-adapter temporaries and issuing
+# K separate (simulated) launches. Differentiable via plain jax autodiff.
+# ---------------------------------------------------------------------------
+
+
+def unfused_lora(x, adapter_ids, a, b, scaling):
+    """Per-adapter loop comparator. Same math, K separate GEMM pairs."""
+    k_adp = a.shape[0]
+    out = jnp.zeros((x.shape[0], b.shape[2]), x.dtype)
+    for k in range(k_adp):  # unrolled: one "launch" per adapter
+        mask = (adapter_ids == k).astype(x.dtype)[:, None]
+        xk = x * mask                      # materialized gather
+        inter = xk @ a[k]                  # materialized (T, R) temp
+        yk = (inter @ b[k]) * scaling[k]   # materialized (T, O) temp
+        out = out + yk * mask
+    return out
+
+
+def vmem_footprint_bytes(tile_t: int, d: int, r: int, o_dim: int,
+                         dtype_bytes: int = 4) -> int:
+    """Estimated VMEM residency of one fwd grid step (DESIGN.md §Perf)."""
+    x_tile = tile_t * d
+    a_tile = d * r
+    b_tile = r * o_dim
+    inter = tile_t * r
+    out_tile = tile_t * o_dim
+    return (x_tile + a_tile + b_tile + inter + out_tile) * dtype_bytes
+
+
+def mxu_utilization_estimate(tokens_per_adapter, d: int, r_used, r_max: int,
+                             o_dim: int) -> float:
+    """Useful MACs / padded-tile MACs for a group of adapters.
+
+    ``tokens_per_adapter`` and ``r_used`` are per-adapter sequences. This is
+    the rank-padding efficiency of the fused kernel: the masked-accumulate
+    schedule does K passes over every token tile, so utilization is
+    (sum_i t_i * d * (r_i + ... )) / (K * T * d * r_max + ...).
+    """
+    total_tokens = float(sum(tokens_per_adapter))
+    k_adp = len(r_used)
+    useful = sum(t * (d * r + r * o_dim)
+                 for t, r in zip(tokens_per_adapter, r_used))
+    padded = k_adp * total_tokens * (d * r_max + r_max * o_dim)
+    return useful / padded if padded else 0.0

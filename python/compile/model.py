@@ -1,0 +1,420 @@
+"""Layer 2: the Shared Super-Model (SSM) as a JAX compute graph.
+
+tLoRA's Model Fuser (§3.2) consolidates K LoRA fine-tuning jobs that share
+one frozen backbone into a single composite model. Here that composite is
+a decoder-only transformer whose q/v projections carry *stacked* LoRA
+branches — one slice per job — executed by the fused Pallas kernel
+(kernels/fused_lora.py). Functional equivalence with independent training
+holds because:
+
+  * the backbone is frozen (no cross-job interference through shared
+    weights);
+  * each token belongs to exactly one adapter, and the fused kernel's
+    rank-mask gather means job i's tokens only ever touch (A_i, B_i);
+  * optimizer state is sliced per adapter (stacked on the K axis), so
+    updates never mix across jobs (tested in test_model.py).
+
+Everything here runs at *build time only*: ``aot.py`` lowers ``init_fn``
+and ``train_step`` to HLO text that the Rust runtime loads via PJRT.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.fused_lora import fused_lora, unfused_lora
+
+
+@dataclasses.dataclass(frozen=True)
+class SsmConfig:
+    """Static configuration of one Shared Super-Model variant."""
+
+    name: str = "tiny"
+    vocab: int = 256
+    d_model: int = 64
+    n_layers: int = 2
+    n_heads: int = 4
+    d_ff: int = 256
+    seq_len: int = 32
+    # --- SSM / multi-LoRA ---
+    num_adapters: int = 4
+    r_max: int = 8
+    # per-adapter true ranks (len == num_adapters, each <= r_max)
+    ranks: Tuple[int, ...] = (2, 4, 8, 8)
+    lora_alpha: float = 16.0
+    # sequences per adapter in one fused step (heterogeneous batch sizes)
+    batch_sizes: Tuple[int, ...] = (2, 2, 2, 2)
+    # --- optimizer ---
+    lr: float = 1e-3
+    adam_b1: float = 0.9
+    adam_b2: float = 0.999
+    adam_eps: float = 1e-8
+    # use the fused pallas kernel (True) or the per-adapter unfused
+    # comparator (False) — the Fig. 7 ablation.
+    fused: bool = True
+    # kernel token tile
+    tile_t: int = 128
+
+    @property
+    def total_batch(self) -> int:
+        return sum(self.batch_sizes)
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def scaling(self) -> jnp.ndarray:
+        return jnp.asarray(
+            [self.lora_alpha / r for r in self.ranks], jnp.float32)
+
+    def rank_mask_a(self) -> jnp.ndarray:
+        """(K, 1, R) mask zeroing columns past each adapter's true rank."""
+        r = jnp.arange(self.r_max)[None, None, :]
+        ranks = jnp.asarray(self.ranks)[:, None, None]
+        return (r < ranks).astype(jnp.float32)
+
+    def param_count(self) -> int:
+        c = self.vocab * self.d_model
+        per_layer = (2 * self.d_model            # ln scales
+                     + 4 * self.d_model * self.d_model
+                     + 2 * self.d_model * self.d_ff)
+        c += self.n_layers * per_layer + self.d_model
+        return c
+
+    def lora_param_count(self) -> int:
+        # q and v projections, per layer, per adapter (padded to r_max)
+        per = self.d_model * self.r_max * 2          # A and B
+        return self.n_layers * self.num_adapters * per * 2
+
+    def flops_per_step(self) -> int:
+        """~6 * params * tokens for fwd+bwd (backbone activations only
+        need fwd+dx; adapters need full fwd+bwd). Coarse, used for
+        cross-checking the Rust cost model."""
+        tokens = self.total_batch * self.seq_len
+        return 6 * self.param_count() * tokens
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization
+# ---------------------------------------------------------------------------
+
+
+def init_backbone(cfg: SsmConfig, key) -> Dict[str, jnp.ndarray]:
+    """Frozen backbone parameters. Layer-stacked for lax.scan."""
+    ks = jax.random.split(key, 8)
+    d, f, l_num = cfg.d_model, cfg.d_ff, cfg.n_layers
+    sd = d ** -0.5
+    sf = f ** -0.5
+
+    def nrm(k, shape, scale):
+        return (jax.random.normal(k, shape, jnp.float32) * scale)
+
+    return {
+        "embed": nrm(ks[0], (cfg.vocab, d), 0.02),
+        "ln1": jnp.ones((l_num, d), jnp.float32),
+        "wq": nrm(ks[1], (l_num, d, d), sd),
+        "wk": nrm(ks[2], (l_num, d, d), sd),
+        "wv": nrm(ks[3], (l_num, d, d), sd),
+        "wo": nrm(ks[4], (l_num, d, d), sd),
+        "ln2": jnp.ones((l_num, d), jnp.float32),
+        "w_in": nrm(ks[5], (l_num, d, f), sd),
+        "w_out": nrm(ks[6], (l_num, f, d), sf),
+        "ln_f": jnp.ones((d,), jnp.float32),
+    }
+
+
+def init_lora(cfg: SsmConfig, key) -> Dict[str, jnp.ndarray]:
+    """Stacked LoRA branches: A ~ N(0, 1/r), B = 0 (standard LoRA init).
+
+    Columns of A past each adapter's true rank are zeroed; this padding is
+    exactly preserved by training (zero gradients — see module docs of
+    fused_lora.py), so heterogeneous ranks share one static shape.
+    """
+    l_num, k_adp, d, r = cfg.n_layers, cfg.num_adapters, cfg.d_model, cfg.r_max
+    ka, kb = jax.random.split(key)
+    mask = cfg.rank_mask_a()[None]      # (1, K, 1, R)
+    a_q = jax.random.normal(ka, (l_num, k_adp, d, r), jnp.float32) * (r ** -0.5)
+    a_v = jax.random.normal(kb, (l_num, k_adp, d, r), jnp.float32) * (r ** -0.5)
+    return {
+        "a_q": a_q * mask,
+        "b_q": jnp.zeros((l_num, k_adp, r, d), jnp.float32),
+        "a_v": a_v * mask,
+        "b_v": jnp.zeros((l_num, k_adp, r, d), jnp.float32),
+    }
+
+
+def init_fn(cfg: SsmConfig, seed):
+    """Full state init from an int32 seed (AOT'd as `<name>.init`)."""
+    key = jax.random.PRNGKey(seed)
+    kb, kl = jax.random.split(key)
+    backbone = init_backbone(cfg, kb)
+    lora = init_lora(cfg, kl)
+    opt = {
+        "m": jax.tree.map(jnp.zeros_like, lora),
+        "v": jax.tree.map(jnp.zeros_like, lora),
+        "t": jnp.zeros((), jnp.float32),
+    }
+    return backbone, lora, opt
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+
+def _rms_norm(x, scale):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + 1e-6) * scale
+
+
+def _positional(seq_len: int, d: int) -> jnp.ndarray:
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, (2 * (dim // 2)) / d)
+    return jnp.where(dim % 2 == 0, jnp.sin(angle), jnp.cos(angle))
+
+
+def _attention(q, k, v, n_heads: int):
+    b, s, d = q.shape
+    hd = d // n_heads
+
+    def split(t):
+        return t.reshape(b, s, n_heads, hd).transpose(0, 2, 1, 3)
+
+    qh, kh, vh = split(q), split(k), split(v)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", qh, kh) / jnp.sqrt(float(hd))
+    causal = jnp.tril(jnp.ones((s, s), jnp.float32))
+    logits = jnp.where(causal[None, None] > 0, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vh)
+    return out.transpose(0, 2, 1, 3).reshape(b, s, d)
+
+
+def ssm_forward(cfg: SsmConfig, backbone, lora, tokens, adapter_ids):
+    """Fused multi-job forward.
+
+    tokens: (B, S) int32; adapter_ids: (B,) int32 — per-sequence job
+    ownership (a fused batch concatenates each job's sequences).
+    Returns logits (B, S, V).
+    """
+    b, s = tokens.shape
+    d = cfg.d_model
+    lora_op = fused_lora if cfg.fused else unfused_lora
+    scaling = cfg.scaling()
+
+    h = backbone["embed"][tokens] + _positional(s, d)[None]
+    tok_ids = jnp.repeat(adapter_ids, s)          # (B*S,) token ownership
+
+    def apply_lora(x, a, b_mat):
+        flat = x.reshape(b * s, d)
+        if cfg.fused:
+            delta = lora_op(flat, tok_ids, a, b_mat, scaling, cfg.tile_t)
+        else:
+            delta = lora_op(flat, tok_ids, a, b_mat, scaling)
+        return delta.reshape(b, s, d)
+
+    def layer(h, layer_params):
+        (ln1, wq, wk, wv, wo, ln2, w_in, w_out,
+         a_q, b_q, a_v, b_v) = layer_params
+        x = _rms_norm(h, ln1)
+        q = x @ wq + apply_lora(x, a_q, b_q)
+        k = x @ wk
+        v = x @ wv + apply_lora(x, a_v, b_v)
+        attn = _attention(q, k, v, cfg.n_heads)
+        h = h + attn @ wo
+        x2 = _rms_norm(h, ln2)
+        ff = jax.nn.gelu(x2 @ w_in) @ w_out
+        h = h + ff
+        return h, None
+
+    stacked = (backbone["ln1"], backbone["wq"], backbone["wk"],
+               backbone["wv"], backbone["wo"], backbone["ln2"],
+               backbone["w_in"], backbone["w_out"],
+               lora["a_q"], lora["b_q"], lora["a_v"], lora["b_v"])
+    h, _ = jax.lax.scan(lambda c, p: layer(c, p), h, stacked)
+    h = _rms_norm(h, backbone["ln_f"])
+    logits = h @ backbone["embed"].T        # tied lm head
+    return logits
+
+
+def loss_fn(cfg: SsmConfig, backbone, lora, tokens, adapter_ids):
+    """Causal-LM cross entropy; returns (mean loss, per-adapter loss).
+
+    The *training objective* is ``sum(per_adapter)`` — each job's own mean
+    loss, summed. This (not the batch mean) is what makes fused training
+    functionally identical to isolated training: job k's adapter gradient
+    is exactly the gradient of job k's standalone objective, independent of
+    which other jobs share the batch (tested in
+    test_model.py::test_grouped_equals_isolated_training).
+    """
+    logits = ssm_forward(cfg, backbone, lora, tokens, adapter_ids)
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    per_seq = jnp.mean(nll, axis=-1)                       # (B,)
+    onehot = (adapter_ids[:, None] ==
+              jnp.arange(cfg.num_adapters)[None, :]).astype(jnp.float32)
+    seq_count = jnp.maximum(onehot.sum(axis=0), 1.0)
+    per_adapter = (per_seq[:, None] * onehot).sum(axis=0) / seq_count
+    return jnp.mean(per_seq), per_adapter
+
+
+# ---------------------------------------------------------------------------
+# Train step (adapters only; Adam)
+# ---------------------------------------------------------------------------
+
+
+def train_step(cfg: SsmConfig, backbone, lora, opt, tokens, adapter_ids):
+    """One fused SSM training step. Backbone is frozen (no grads).
+
+    Returns (lora', opt', loss, per_adapter_loss).
+    """
+
+    def objective(lo):
+        l, per = loss_fn(cfg, backbone, lo, tokens, adapter_ids)
+        # sum of per-job means: preserves isolated-training semantics
+        return jnp.sum(per), (l, per)
+
+    (_, (loss, per_adapter)), grads = jax.value_and_grad(
+        objective, has_aux=True)(lora)
+
+    t = opt["t"] + 1.0
+    b1, b2, eps, lr = cfg.adam_b1, cfg.adam_b2, cfg.adam_eps, cfg.lr
+
+    def upd(m, v, g, p):
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m2 / (1 - b1 ** t)
+        vhat = v2 / (1 - b2 ** t)
+        return m2, v2, p - lr * mhat / (jnp.sqrt(vhat) + eps)
+
+    new_m, new_v, new_p = {}, {}, {}
+    for name in lora:
+        m2, v2, p2 = upd(opt["m"][name], opt["v"][name], grads[name],
+                         lora[name])
+        new_m[name], new_v[name], new_p[name] = m2, v2, p2
+
+    opt2 = {"m": new_m, "v": new_v, "t": t}
+    return new_p, opt2, loss, per_adapter
+
+
+def train_step_nano(cfg: SsmConfig, backbone, lora, opt, tokens, adapter_ids,
+                    n_nano: int):
+    """Nano-batched train step (§3.3): the fused batch is split into
+    ``n_nano`` slices along the batch dimension, gradients accumulated.
+
+    On a real multi-GPU deployment each slice's gradient all-reduce
+    overlaps the next slice's compute (Eq. 1); on the single-device AOT
+    artifact this is the numerics-equivalent schedule (identical result,
+    tested), while the Rust kernelsim models the comm/comp overlap.
+
+    Exact equivalence with ``train_step`` requires each nano-slice to have
+    the same per-job sequence composition (round-robin interleaving),
+    which is how the coordinator lays out fused batches.
+    """
+    b = cfg.total_batch
+    assert b % n_nano == 0, "nano count must divide fused batch"
+    nb = b // n_nano
+
+    def seg_loss(lo, seg_tokens, seg_ids):
+        l, per = loss_fn(cfg, backbone, lo, seg_tokens, seg_ids)
+        return jnp.sum(per), (l, per)
+
+    zeros = jax.tree.map(jnp.zeros_like, lora)
+    loss_acc = jnp.zeros(())
+    per_acc = jnp.zeros((cfg.num_adapters,))
+    grads_acc = zeros
+    for i in range(n_nano):
+        seg_t = jax.lax.dynamic_slice_in_dim(tokens, i * nb, nb, axis=0)
+        seg_i = jax.lax.dynamic_slice_in_dim(adapter_ids, i * nb, nb, axis=0)
+        (_, (l, per)), g = jax.value_and_grad(seg_loss, has_aux=True)(
+            lora, seg_t, seg_i)
+        grads_acc = jax.tree.map(jnp.add, grads_acc, g)
+        loss_acc = loss_acc + l
+        per_acc = per_acc + per
+    grads = jax.tree.map(lambda g: g / n_nano, grads_acc)
+    loss = loss_acc / n_nano
+    per_adapter = per_acc / n_nano
+
+    t = opt["t"] + 1.0
+    b1, b2, eps, lr = cfg.adam_b1, cfg.adam_b2, cfg.adam_eps, cfg.lr
+    new_m, new_v, new_p = {}, {}, {}
+    for name in lora:
+        m2 = b1 * opt["m"][name] + (1 - b1) * grads[name]
+        v2 = b2 * opt["v"][name] + (1 - b2) * jnp.square(grads[name])
+        mhat = m2 / (1 - b1 ** t)
+        vhat = v2 / (1 - b2 ** t)
+        new_m[name], new_v[name] = m2, v2
+        new_p[name] = lora[name] - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return new_p, {"m": new_m, "v": new_v, "t": t}, loss, per_adapter
+
+
+# ---------------------------------------------------------------------------
+# Flattening helpers shared with aot.py (fixed argument order — the Rust
+# runtime binds buffers positionally from the manifest).
+# ---------------------------------------------------------------------------
+
+BACKBONE_ORDER = ["embed", "ln1", "wq", "wk", "wv", "wo", "ln2", "w_in",
+                  "w_out", "ln_f"]
+LORA_ORDER = ["a_q", "b_q", "a_v", "b_v"]
+
+
+def flatten_state(backbone, lora, opt) -> List[jnp.ndarray]:
+    out = [backbone[n] for n in BACKBONE_ORDER]
+    out += [lora[n] for n in LORA_ORDER]
+    out += [opt["m"][n] for n in LORA_ORDER]
+    out += [opt["v"][n] for n in LORA_ORDER]
+    out.append(opt["t"])
+    return out
+
+
+def unflatten_state(cfg: SsmConfig, flat: List[jnp.ndarray]):
+    nb, nl = len(BACKBONE_ORDER), len(LORA_ORDER)
+    backbone = dict(zip(BACKBONE_ORDER, flat[:nb]))
+    lora = dict(zip(LORA_ORDER, flat[nb:nb + nl]))
+    m = dict(zip(LORA_ORDER, flat[nb + nl:nb + 2 * nl]))
+    v = dict(zip(LORA_ORDER, flat[nb + 2 * nl:nb + 3 * nl]))
+    opt = {"m": m, "v": v, "t": flat[nb + 3 * nl]}
+    return backbone, lora, opt
+
+
+def make_flat_train_step(cfg: SsmConfig, n_nano: int = 1):
+    """Positional-args train step for AOT lowering.
+
+    Signature: (*state_flat, tokens, adapter_ids) ->
+               (lora_flat..., opt_m..., opt_v..., t, loss, per_adapter)
+    """
+
+    def flat_step(*args):
+        state_flat = list(args[:-2])
+        tokens, adapter_ids = args[-2], args[-1]
+        backbone, lora, opt = unflatten_state(cfg, state_flat)
+        if n_nano == 1:
+            lora2, opt2, loss, per = train_step(
+                cfg, backbone, lora, opt, tokens, adapter_ids)
+        else:
+            lora2, opt2, loss, per = train_step_nano(
+                cfg, backbone, lora, opt, tokens, adapter_ids, n_nano)
+        outs = [lora2[n] for n in LORA_ORDER]
+        outs += [opt2["m"][n] for n in LORA_ORDER]
+        outs += [opt2["v"][n] for n in LORA_ORDER]
+        outs.append(opt2["t"])
+        outs.append(loss)
+        outs.append(per)
+        return tuple(outs)
+
+    return flat_step
+
+
+def make_flat_init(cfg: SsmConfig):
+    def flat_init(seed):
+        backbone, lora, opt = init_fn(cfg, seed)
+        return tuple(flatten_state(backbone, lora, opt))
+
+    return flat_init

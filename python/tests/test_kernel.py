@@ -1,0 +1,239 @@
+"""L1 correctness: fused Pallas LoRA kernel vs the pure-jnp oracle.
+
+This is the core numerics signal of the stack: everything the Rust runtime
+executes flows through these kernels. Hypothesis sweeps shapes, adapter
+counts, heterogeneous ranks, dtypes and tile boundaries; explicit tests
+pin the paper-relevant edge cases.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.fused_lora import (
+    fused_lora, fused_lora_fwd_only, fused_lora_bwd_only, unfused_lora,
+    vmem_footprint_bytes, mxu_utilization_estimate)
+from compile.kernels.ref import lora_ref, lora_ref_grads
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _mk(t, d, o, k_adp, r_max, ranks, seed=0, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = jax.random.normal(ks[0], (t, d), dtype)
+    aid = jax.random.randint(ks[1], (t,), 0, k_adp).astype(jnp.int32)
+    a = jax.random.normal(ks[2], (k_adp, d, r_max), dtype) * 0.3
+    b = jax.random.normal(ks[3], (k_adp, r_max, o), dtype) * 0.3
+    # zero-pad past each adapter's true rank (heterogeneous ranks)
+    rr = jnp.arange(r_max)
+    mask = (rr[None, :] < jnp.asarray(ranks)[:, None]).astype(dtype)
+    a = a * mask[:, None, :]
+    b = b * mask[:, :, None]
+    scaling = jnp.asarray([16.0 / r for r in ranks], jnp.float32)
+    return x, aid, a, b, scaling
+
+
+class TestForward:
+    def test_basic_matches_ref(self):
+        x, aid, a, b, s = _mk(96, 32, 48, 3, 8, (2, 4, 8))
+        got = fused_lora_fwd_only(x, aid, a, b, s, tile_t=32)
+        want = lora_ref(x, aid, a, b, s)
+        np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+    def test_matches_unfused(self):
+        x, aid, a, b, s = _mk(64, 16, 16, 4, 4, (1, 2, 3, 4))
+        got = fused_lora_fwd_only(x, aid, a, b, s, tile_t=32)
+        want = unfused_lora(x, aid, a, b, s)
+        np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+    def test_tokens_not_multiple_of_tile(self):
+        # T=50 with tile 32 forces internal padding
+        x, aid, a, b, s = _mk(50, 16, 24, 2, 4, (2, 4))
+        got = fused_lora_fwd_only(x, aid, a, b, s, tile_t=32)
+        want = lora_ref(x, aid, a, b, s)
+        assert got.shape == (50, 24)
+        np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+    def test_out_of_range_ids_contribute_zero(self):
+        x, aid, a, b, s = _mk(64, 16, 16, 2, 4, (4, 4))
+        aid = aid.at[:16].set(-1)           # padding tokens
+        got = fused_lora_fwd_only(x, aid, a, b, s, tile_t=32)
+        assert jnp.allclose(got[:16], 0.0)
+        want = lora_ref(x, aid, a, b, s)
+        np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+    def test_single_adapter(self):
+        x, aid, a, b, s = _mk(32, 8, 8, 1, 2, (2,))
+        got = fused_lora_fwd_only(x, aid, a, b, s, tile_t=32)
+        want = lora_ref(x, aid, a, b, s)
+        np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+    def test_adapter_with_no_tokens(self):
+        x, aid, a, b, s = _mk(64, 16, 16, 3, 4, (2, 2, 4))
+        aid = jnp.zeros_like(aid)           # all tokens -> adapter 0
+        got = fused_lora_fwd_only(x, aid, a, b, s, tile_t=32)
+        want = lora_ref(x, aid, a, b, s)
+        np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+    def test_bf16_inputs_f32_accumulate(self):
+        x, aid, a, b, s = _mk(64, 32, 32, 2, 8, (4, 8), dtype=jnp.bfloat16)
+        got = fused_lora_fwd_only(x, aid, a, b, s, tile_t=32)
+        want = lora_ref(x, aid, a, b, s)
+        assert got.dtype == jnp.bfloat16
+        np.testing.assert_allclose(
+            got.astype(jnp.float32), want.astype(jnp.float32),
+            atol=0.15, rtol=0.15)
+
+    def test_scaling_applied(self):
+        x, aid, a, b, _ = _mk(32, 8, 8, 2, 4, (4, 4))
+        s1 = jnp.asarray([1.0, 1.0], jnp.float32)
+        s2 = jnp.asarray([2.0, 0.5], jnp.float32)
+        y1 = fused_lora_fwd_only(x, aid, a, b, s1, tile_t=32)
+        y2 = fused_lora_fwd_only(x, aid, a, b, s2, tile_t=32)
+        m0 = (aid == 0)
+        np.testing.assert_allclose(y2[m0], 2.0 * y1[m0], atol=1e-4,
+                                   rtol=1e-4)
+        np.testing.assert_allclose(y2[~m0], 0.5 * y1[~m0], atol=1e-4,
+                                   rtol=1e-4)
+
+
+class TestBackward:
+    def test_bwd_matches_closed_form(self):
+        x, aid, a, b, s = _mk(96, 24, 32, 3, 8, (2, 4, 8), seed=7)
+        g = jax.random.normal(jax.random.PRNGKey(9), (96, 32))
+        dx, da, db = fused_lora_bwd_only(x, aid, a, b, s, g, tile_t=32)
+        rdx, rda, rdb = lora_ref_grads(x, aid, a, b, s, g)
+        np.testing.assert_allclose(dx, rdx, atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(da, rda, atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(db, rdb, atol=1e-4, rtol=1e-4)
+
+    def test_custom_vjp_matches_autodiff_of_ref(self):
+        x, aid, a, b, s = _mk(64, 16, 16, 2, 4, (2, 4), seed=3)
+
+        def loss_fused(params):
+            aa, bb = params
+            y = fused_lora(x, aid, aa, bb, s, 32)
+            return jnp.sum(jnp.sin(y))
+
+        def loss_ref(params):
+            aa, bb = params
+            y = lora_ref(x, aid, aa, bb, s)
+            return jnp.sum(jnp.sin(y))
+
+        gf = jax.grad(loss_fused)((a, b))
+        gr = jax.grad(loss_ref)((a, b))
+        np.testing.assert_allclose(gf[0], gr[0], atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(gf[1], gr[1], atol=1e-4, rtol=1e-4)
+
+    def test_dx_flows(self):
+        x, aid, a, b, s = _mk(64, 16, 16, 2, 4, (2, 4), seed=5)
+
+        def lf(xx):
+            return jnp.sum(fused_lora(xx, aid, a, b, s, 32) ** 2)
+
+        def lr(xx):
+            return jnp.sum(lora_ref(xx, aid, a, b, s) ** 2)
+
+        np.testing.assert_allclose(jax.grad(lf)(x), jax.grad(lr)(x),
+                                   atol=1e-3, rtol=1e-3)
+
+    def test_padded_rank_gradients_are_zero(self):
+        """The invariant that makes heterogeneous ranks exact: grads in
+        the zero-padded region vanish, so padding survives training."""
+        x, aid, a, b, s = _mk(64, 16, 16, 2, 8, (2, 4), seed=11)
+
+        def loss(params):
+            aa, bb = params
+            return jnp.sum(fused_lora(x, aid, aa, bb, s, 32) ** 2)
+
+        da, db = jax.grad(loss)((a, b))
+        assert jnp.allclose(da[0][:, 2:], 0.0)   # adapter 0: rank 2
+        assert jnp.allclose(db[0][2:, :], 0.0)
+        assert jnp.allclose(da[1][:, 4:], 0.0)   # adapter 1: rank 4
+        assert jnp.allclose(db[1][4:, :], 0.0)
+
+
+class TestHypothesis:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        t=st.integers(min_value=1, max_value=130),
+        d=st.sampled_from([8, 16, 32]),
+        o=st.sampled_from([8, 16, 24]),
+        k_adp=st.integers(min_value=1, max_value=5),
+        seed=st.integers(min_value=0, max_value=2 ** 16),
+        tile=st.sampled_from([16, 32, 128]),
+        data=st.data(),
+    )
+    def test_fwd_random(self, t, d, o, k_adp, seed, tile, data):
+        r_max = 8
+        ranks = tuple(
+            data.draw(st.lists(st.integers(1, r_max), min_size=k_adp,
+                               max_size=k_adp)))
+        x, aid, a, b, s = _mk(t, d, o, k_adp, r_max, ranks, seed=seed)
+        got = fused_lora_fwd_only(x, aid, a, b, s, tile_t=tile)
+        want = lora_ref(x, aid, a, b, s)
+        np.testing.assert_allclose(got, want, atol=2e-4, rtol=2e-4)
+
+    @settings(max_examples=12, deadline=None)
+    @given(
+        t=st.integers(min_value=1, max_value=96),
+        d=st.sampled_from([8, 16]),
+        k_adp=st.integers(min_value=1, max_value=4),
+        seed=st.integers(min_value=0, max_value=2 ** 16),
+        data=st.data(),
+    )
+    def test_bwd_random(self, t, d, k_adp, seed, data):
+        r_max = 4
+        ranks = tuple(
+            data.draw(st.lists(st.integers(1, r_max), min_size=k_adp,
+                               max_size=k_adp)))
+        x, aid, a, b, s = _mk(t, d, d, k_adp, r_max, ranks, seed=seed)
+        g = jax.random.normal(jax.random.PRNGKey(seed + 1), (t, d))
+        dx, da, db = fused_lora_bwd_only(x, aid, a, b, s, g, tile_t=32)
+        rdx, rda, rdb = lora_ref_grads(x, aid, a, b, s, g)
+        np.testing.assert_allclose(dx, rdx, atol=3e-4, rtol=3e-4)
+        np.testing.assert_allclose(da, rda, atol=3e-4, rtol=3e-4)
+        np.testing.assert_allclose(db, rdb, atol=3e-4, rtol=3e-4)
+
+
+class TestOracleSelfConsistency:
+    def test_ref_grads_match_autodiff(self):
+        x, aid, a, b, s = _mk(48, 12, 20, 3, 4, (1, 2, 4), seed=13)
+        g = jax.random.normal(jax.random.PRNGKey(17), (48, 20))
+
+        def inner(xx, aa, bb):
+            return jnp.sum(lora_ref(xx, aid, aa, bb, s) * g)
+
+        adx, ada, adb = jax.grad(inner, argnums=(0, 1, 2))(x, a, b)
+        rdx, rda, rdb = lora_ref_grads(x, aid, a, b, s, g)
+        np.testing.assert_allclose(adx, rdx, atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(ada, rda, atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(adb, rdb, atol=1e-4, rtol=1e-4)
+
+
+class TestPerfModels:
+    def test_vmem_footprint_within_budget(self):
+        # paper-scale tile on an 8B model's projection: must fit 16 MB VMEM
+        bytes_ = vmem_footprint_bytes(128, 4096, 16, 4096)
+        assert bytes_ < 16 * 2 ** 20
+
+    def test_vmem_monotone_in_tile(self):
+        a = vmem_footprint_bytes(64, 256, 8, 256)
+        b = vmem_footprint_bytes(128, 256, 8, 256)
+        assert b > a
+
+    def test_mxu_utilization_bounds(self):
+        u = mxu_utilization_estimate([100, 100], 256, [16, 16], 16, 256)
+        assert 0.0 < u <= 1.0
+        # uniform full-rank tokens across K=2 adapters: each pass wastes
+        # the other adapter's tokens -> utilization 1/K
+        assert abs(u - 0.5) < 1e-9
+
+    def test_mxu_utilization_rank_padding(self):
+        full = mxu_utilization_estimate([64], 128, [16], 16, 128)
+        padded = mxu_utilization_estimate([64], 128, [2], 16, 128)
+        assert padded < full

@@ -1,0 +1,197 @@
+"""L2 correctness: the Shared Super-Model training step.
+
+Validates the SSM's functional-equivalence claims from §3.2: fused
+execution preserves independent-training semantics — per-job parameter
+isolation, rank-padding invariance, fused == unfused numerics — and that
+the step actually learns (loss decreases on a memorizable stream).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (SsmConfig, init_fn, ssm_forward, loss_fn,
+                           train_step, train_step_nano, flatten_state,
+                           unflatten_state, make_flat_train_step,
+                           make_flat_init)
+
+CFG = SsmConfig(name="test", vocab=64, d_model=32, n_layers=2, n_heads=4,
+                d_ff=64, seq_len=16, num_adapters=3, r_max=4,
+                ranks=(1, 2, 4), batch_sizes=(2, 2, 2), tile_t=32, lr=5e-3)
+
+
+def _data(cfg, seed=0):
+    key = jax.random.PRNGKey(seed)
+    tokens = jax.random.randint(
+        key, (cfg.total_batch, cfg.seq_len), 0, cfg.vocab).astype(jnp.int32)
+    aid = jnp.repeat(jnp.arange(cfg.num_adapters, dtype=jnp.int32),
+                     jnp.asarray(cfg.batch_sizes))
+    return tokens, aid
+
+
+class TestForward:
+    def test_shapes(self):
+        backbone, lora, _ = init_fn(CFG, 0)
+        tokens, aid = _data(CFG)
+        logits = ssm_forward(CFG, backbone, lora, tokens, aid)
+        assert logits.shape == (CFG.total_batch, CFG.seq_len, CFG.vocab)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def test_fused_equals_unfused(self):
+        """Fig. 7's two kernel paths are numerically identical."""
+        cfg_f = CFG
+        cfg_u = dataclasses.replace(CFG, fused=False)
+        backbone, lora, _ = init_fn(CFG, 0)
+        # B=0 makes LoRA delta zero; perturb B to make the test sharp
+        lora = jax.tree.map(
+            lambda x: x + 0.01 * jax.random.normal(
+                jax.random.PRNGKey(1), x.shape), lora)
+        tokens, aid = _data(CFG)
+        lf = ssm_forward(cfg_f, backbone, lora, tokens, aid)
+        lu = ssm_forward(cfg_u, backbone, lora, tokens, aid)
+        np.testing.assert_allclose(lf, lu, atol=1e-4, rtol=1e-4)
+
+    def test_zero_lora_b_means_backbone_only(self):
+        backbone, lora, _ = init_fn(CFG, 0)   # B init to zero
+        tokens, aid = _data(CFG)
+        out1 = ssm_forward(CFG, backbone, lora, tokens, aid)
+        out2 = ssm_forward(CFG, backbone, lora, tokens,
+                           jnp.zeros_like(aid))   # different ownership
+        np.testing.assert_allclose(out1, out2, atol=1e-5)
+
+
+class TestTrainStep:
+    def test_loss_decreases(self):
+        backbone, lora, opt = init_fn(CFG, 0)
+        tokens, aid = _data(CFG)
+        step = jax.jit(lambda lo, op: train_step(
+            CFG, backbone, lo, op, tokens, aid))
+        first = None
+        for i in range(12):
+            lora, opt, loss, _ = step(lora, opt)
+            if first is None:
+                first = float(loss)
+        assert float(loss) < first - 0.01, (first, float(loss))
+
+    def test_backbone_never_changes(self):
+        # train_step signature takes backbone immutably; verify the flat
+        # program returns no backbone outputs (structure-level freeze).
+        flat = make_flat_train_step(CFG)
+        backbone, lora, opt = init_fn(CFG, 0)
+        tokens, aid = _data(CFG)
+        args = flatten_state(backbone, lora, opt) + [tokens, aid]
+        outs = flat(*args)
+        # outputs: 4 lora + 4 m + 4 v + t + loss + per_adapter
+        assert len(outs) == 4 * 3 + 1 + 2
+
+    def test_per_job_isolation(self):
+        """§3.2: a job whose tokens are absent must see *zero* update to
+        its adapter and optimizer slice — grouped training is lossless."""
+        backbone, lora, opt = init_fn(CFG, 0)
+        tokens, aid = _data(CFG)
+        aid = jnp.where(aid == 2, 0, aid)     # adapter 2 gets no tokens
+        lora2, opt2, _, _ = train_step(CFG, backbone, lora, opt, tokens, aid)
+        for name in lora:
+            np.testing.assert_allclose(lora2[name][:, 2], lora[name][:, 2],
+                                       atol=0, rtol=0)
+            np.testing.assert_allclose(opt2["m"][name][:, 2], 0.0, atol=0)
+
+    def test_rank_padding_preserved(self):
+        """Zero-padded rank region stays exactly zero through Adam."""
+        backbone, lora, opt = init_fn(CFG, 0)
+        tokens, aid = _data(CFG)
+        for _ in range(3):
+            lora, opt, _, _ = train_step(CFG, backbone, lora, opt, tokens,
+                                         aid)
+        # adapter 0 has rank 1, adapter 1 rank 2 (r_max 4)
+        assert bool(jnp.all(lora["a_q"][:, 0, :, 1:] == 0.0))
+        assert bool(jnp.all(lora["b_q"][:, 0, 1:, :] == 0.0))
+        assert bool(jnp.all(lora["a_v"][:, 1, :, 2:] == 0.0))
+        assert bool(jnp.all(lora["b_v"][:, 1, 2:, :] == 0.0))
+
+    def test_per_adapter_loss_shape_and_finite(self):
+        backbone, lora, opt = init_fn(CFG, 0)
+        tokens, aid = _data(CFG)
+        _, _, loss, per = train_step(CFG, backbone, lora, opt, tokens, aid)
+        assert per.shape == (CFG.num_adapters,)
+        assert bool(jnp.all(jnp.isfinite(per)))
+        # mean of per-adapter losses weighted by batch share == total
+        w = jnp.asarray(CFG.batch_sizes) / CFG.total_batch
+        np.testing.assert_allclose(float(jnp.sum(per * w)), float(loss),
+                                   atol=1e-5)
+
+    def test_grouped_equals_isolated_training(self):
+        """The SSM headline guarantee: training K jobs fused produces the
+        same adapter trajectories as training each job alone."""
+        backbone, lora, opt = init_fn(CFG, 0)
+        tokens, aid = _data(CFG)
+        fused_lora_p, fused_opt, _, _ = train_step(
+            CFG, backbone, lora, opt, tokens, aid)
+        for k in range(CFG.num_adapters):
+            sel = aid == k
+            tk = tokens[sel]
+            # run the same SSM with only job k's sequences present
+            aid_k = jnp.full((tk.shape[0],), k, jnp.int32)
+            solo_lora, _, _, _ = train_step(
+                dataclasses.replace(CFG, batch_sizes=(int(sel.sum()),)),
+                backbone, lora, opt, tk, aid_k)
+            for name in lora:
+                np.testing.assert_allclose(
+                    solo_lora[name][:, k], fused_lora_p[name][:, k],
+                    atol=2e-6, rtol=2e-5)
+
+
+class TestNanoBatching:
+    def test_nano_grad_equivalence(self):
+        """Composition-balanced nano-batches reproduce the full-batch
+        update (the coordinator round-robins jobs across nano slices)."""
+        backbone, lora, opt = init_fn(CFG, 0)
+        tokens, _ = _data(CFG)
+        # round-robin layout: [0,1,2, 0,1,2] -> each nano slice of size 3
+        # contains one sequence of every job
+        aid = jnp.tile(jnp.arange(CFG.num_adapters, dtype=jnp.int32), 2)
+        l1, o1, loss1, _ = train_step(CFG, backbone, lora, opt, tokens, aid)
+        l2, o2, loss2, _ = train_step_nano(CFG, backbone, lora, opt, tokens,
+                                           aid, n_nano=2)
+        # losses: mean-of-slice-means == overall mean for equal slices
+        np.testing.assert_allclose(float(loss1), float(loss2), atol=1e-5)
+        for name in l1:
+            np.testing.assert_allclose(l1[name], l2[name], atol=1e-5,
+                                       rtol=1e-4)
+
+    def test_nano_sizes(self):
+        backbone, lora, opt = init_fn(CFG, 0)
+        tokens, aid = _data(CFG)
+        for n in (1, 2, 3, 6):
+            l, o, loss, per = train_step_nano(
+                CFG, backbone, lora, opt, tokens, aid, n_nano=n)
+            assert bool(jnp.isfinite(loss))
+
+
+class TestFlattening:
+    def test_roundtrip(self):
+        backbone, lora, opt = init_fn(CFG, 3)
+        flat = flatten_state(backbone, lora, opt)
+        b2, l2, o2 = unflatten_state(CFG, flat)
+        for n in backbone:
+            np.testing.assert_array_equal(backbone[n], b2[n])
+        for n in lora:
+            np.testing.assert_array_equal(lora[n], l2[n])
+        np.testing.assert_array_equal(opt["t"], o2["t"])
+
+    def test_flat_init_matches_init_fn(self):
+        flat_init = make_flat_init(CFG)
+        flat = flat_init(7)
+        backbone, lora, opt = init_fn(CFG, 7)
+        ref_flat = flatten_state(backbone, lora, opt)
+        assert len(flat) == len(ref_flat)
+        for a, b in zip(flat, ref_flat):
+            np.testing.assert_array_equal(a, b)
+
+    def test_seed_changes_init(self):
+        f = make_flat_init(CFG)
+        a, b = f(0), f(1)
+        assert not np.allclose(a[0], b[0])

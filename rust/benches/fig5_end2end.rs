@@ -1,0 +1,113 @@
+//! Figures 5a + 5b (and the §4 headline row): end-to-end cluster
+//! throughput and job-completion time under online arrivals, tLoRA vs
+//! mLoRA vs Megatron vs the two ablations.
+//!
+//! Paper claims: +41% throughput vs mLoRA (1.2–1.8× across loads),
+//! 2.3–5.4× mean JCT reduction, mLoRA sometimes *below* Megatron.
+//!
+//! `--full` runs the paper-scale workload (slower).
+
+use tlora::cli::Args;
+use tlora::config::{ExperimentConfig, Policy};
+use tlora::metrics::{cdf_block, write_report, Table};
+use tlora::sim::{simulate, SimResult};
+use tlora::util::stats::Cdf;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let refs: Vec<&str> = argv.iter().map(String::as_str).collect();
+    let args = Args::parse_from(&refs).unwrap();
+    let full = args.has("full");
+
+    tlora::bench_util::section("Figure 5 — end-to-end performance");
+    let mut base = ExperimentConfig::default();
+    base.n_jobs = if full { 600 } else { 250 };
+    base.seed = args.get_u64("seed", 42).unwrap_or(42);
+
+    let mut results: Vec<(Policy, SimResult, f64)> = vec![];
+    for policy in Policy::all() {
+        let mut cfg = base.clone();
+        cfg.policy = policy;
+        let (r, wall) =
+            tlora::bench_util::time_once(|| simulate(&cfg));
+        results.push((policy, r, wall));
+    }
+
+    let mut t = Table::new(
+        &format!(
+            "Fig 5a/5b — {} jobs, {} GPUs (sim wall-clock per run shown)",
+            base.n_jobs,
+            base.cluster.total_gpus()
+        ),
+        &["policy", "thr (samples/s)", "mean JCT (s)", "p99 JCT (s)",
+          "util", "sim (s)"],
+    );
+    for (p, r, wall) in &results {
+        t.row(&[
+            p.name().to_string(),
+            format!("{:.2}", r.avg_throughput),
+            format!("{:.0}", r.mean_jct),
+            format!("{:.0}", r.p99_jct),
+            format!("{:.1}%", r.avg_gpu_util * 100.0),
+            format!("{wall:.2}"),
+        ]);
+    }
+    t.print();
+
+    let find = |p: Policy| results.iter().find(|(q, _, _)| *q == p).unwrap();
+    let (_, tl, _) = find(Policy::TLora);
+    let (_, ml, _) = find(Policy::MLora);
+    let (_, mg, _) = find(Policy::Megatron);
+
+    let mut c = Table::new(
+        "paper-vs-measured",
+        &["claim", "paper", "measured", "shape holds"],
+    );
+    let thr_gain = tl.avg_throughput / ml.avg_throughput;
+    tlora::metrics::compare_row(
+        &mut c,
+        "throughput vs mLoRA",
+        "+41% (1.2-1.8x)",
+        thr_gain,
+        "x",
+        thr_gain > 1.1,
+    );
+    let jct_gain = ml.mean_jct / tl.mean_jct;
+    tlora::metrics::compare_row(
+        &mut c,
+        "mean JCT vs mLoRA",
+        "2.3-5.4x better",
+        jct_gain,
+        "x",
+        jct_gain > 1.5,
+    );
+    let jct_mega = mg.mean_jct / tl.mean_jct;
+    tlora::metrics::compare_row(
+        &mut c,
+        "mean JCT vs Megatron",
+        "improved",
+        jct_mega,
+        "x",
+        jct_mega > 1.0,
+    );
+    tlora::metrics::compare_row(
+        &mut c,
+        "mLoRA can trail Megatron (thr)",
+        "observed",
+        ml.avg_throughput / mg.avg_throughput,
+        "x",
+        true, // informational: depends on load
+    );
+    c.print();
+
+    // Fig 5b CDFs → out/fig5b_jct_cdf.txt
+    let mut blocks = String::new();
+    for (p, r, _) in &results {
+        let cdf = Cdf::of(&r.jct_values(), 50);
+        blocks.push_str(&cdf_block(p.name(), &cdf));
+        blocks.push('\n');
+    }
+    if let Some(path) = write_report("fig5b_jct_cdf.txt", &blocks) {
+        println!("\nJCT CDF series -> {}", path.display());
+    }
+}

@@ -1,0 +1,92 @@
+//! Figure 6a: GPU utilization improvement from heterogeneity-aware
+//! co-location (paper: up to +37%).
+//! Figure 6b: grouping-ratio breakdown by job size class — which job
+//! sizes actually get co-located under tLoRA vs mLoRA's FIFO packing.
+
+use tlora::config::{ExperimentConfig, Policy};
+use tlora::metrics::Table;
+use tlora::sim::simulate;
+
+fn main() {
+    tlora::bench_util::section("Figure 6 — utilization & grouping");
+    let mut base = ExperimentConfig::default();
+    base.n_jobs = 200;
+
+    let mut util = Table::new(
+        "Fig 6a — average GPU utilization",
+        &["policy", "GPU util", "vs Megatron"],
+    );
+    let mut mega_util = 0.0;
+    let mut rows = vec![];
+    for policy in [Policy::Megatron, Policy::MLora, Policy::TLora] {
+        let mut cfg = base.clone();
+        cfg.policy = policy;
+        let r = simulate(&cfg);
+        if policy == Policy::Megatron {
+            mega_util = r.avg_gpu_util;
+        }
+        rows.push((policy, r));
+    }
+    for (policy, r) in &rows {
+        util.row(&[
+            policy.name().to_string(),
+            format!("{:.1}%", r.avg_gpu_util * 100.0),
+            format!(
+                "{}{:.0}%",
+                if r.avg_gpu_util >= mega_util { "+" } else { "" },
+                (r.avg_gpu_util / mega_util - 1.0) * 100.0
+            ),
+        ]);
+    }
+    util.print();
+    let tl = &rows.last().unwrap().1;
+    println!(
+        "paper: up to +37% utilization; measured tLoRA vs Megatron: \
+         {:+.0}%\n",
+        (tl.avg_gpu_util / mega_util - 1.0) * 100.0
+    );
+
+    let mut grp = Table::new(
+        "Fig 6b — fraction of running time spent co-located, by size class",
+        &["policy", "small", "medium", "large"],
+    );
+    for (policy, r) in &rows {
+        if *policy == Policy::Megatron {
+            continue;
+        }
+        let g = |k: &str| {
+            format!(
+                "{:.0}%",
+                r.grouping_ratio.get(k).copied().unwrap_or(0.0) * 100.0
+            )
+        };
+        grp.row(&[
+            policy.name().to_string(),
+            g("small"),
+            g("medium"),
+            g("large"),
+        ]);
+    }
+    grp.print();
+    let ratio = |r: &tlora::sim::SimResult, k: &str| {
+        r.grouping_ratio.get(k).copied().unwrap_or(0.0)
+    };
+    let small = ratio(tl, "small");
+    let med = ratio(tl, "medium");
+    let large = ratio(tl, "large");
+    println!(
+        "\npaper shape (saturated jobs offer the least co-location \
+         benefit and group least) -> {}",
+        if large <= small && large <= med {
+            "REPRODUCED"
+        } else {
+            "NOT reproduced"
+        }
+    );
+    println!(
+        "divergence note: the paper pairs small WITH large (elastic \
+         contribution); under our bounded-slowdown model a small job \
+         tied to a large job's cadence violates its Δ^max, so small \
+         jobs pair with small/medium instead — see EXPERIMENTS.md §Fig6b."
+    );
+}

@@ -1,0 +1,130 @@
+//! Figure 7: performance breakdown — what each tLoRA component
+//! contributes. Replacing the fused heterogeneous LoRA kernel with the
+//! per-adapter "PyTorch-native" path weakens co-location (kernel-launch
+//! overhead + poor reuse); replacing the Adapter Scheduler with mLoRA's
+//! FIFO packing loses the complementarity gains.
+//!
+//! Two levels: (a) trace-driven policy ablation on the simulator, and
+//! (b) *real* fused vs unfused kernel wall-clock on the PJRT runtime
+//! (the AOT'd kmicro programs), which grounds the simulator's kernel
+//! model in measured numbers.
+
+use tlora::config::{ExperimentConfig, Policy};
+use tlora::metrics::Table;
+use tlora::sim::simulate;
+
+fn main() {
+    tlora::bench_util::section("Figure 7 — component breakdown");
+    let mut base = ExperimentConfig::default();
+    base.n_jobs = 200;
+
+    let mut t = Table::new(
+        "Fig 7 — policy ablation (trace-driven)",
+        &["configuration", "thr (samples/s)", "mean JCT (s)",
+          "vs full tLoRA"],
+    );
+    let mut full_thr = 0.0;
+    for policy in [
+        Policy::TLora,
+        Policy::TLoraNoKernel,
+        Policy::TLoraNoSched,
+        Policy::MLora,
+    ] {
+        let mut cfg = base.clone();
+        cfg.policy = policy;
+        let r = simulate(&cfg);
+        if policy == Policy::TLora {
+            full_thr = r.avg_throughput;
+        }
+        t.row(&[
+            policy.name().to_string(),
+            format!("{:.2}", r.avg_throughput),
+            format!("{:.0}", r.mean_jct),
+            format!("{:.2}x", r.avg_throughput / full_thr),
+        ]);
+    }
+    t.print();
+
+    // (b) real kernel micro: measured on PJRT if artifacts are present
+    let dir = std::path::Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        real_kernel_micro(dir);
+    } else {
+        println!("\n(artifacts/ missing — skip real kernel micro; run \
+                  `make artifacts`)");
+    }
+}
+
+fn real_kernel_micro(dir: &std::path::Path) {
+    use tlora::runtime::Runtime;
+    let rt = match Runtime::new(dir) {
+        Ok(r) => r,
+        Err(e) => {
+            println!("runtime unavailable: {e:#}");
+            return;
+        }
+    };
+    let mut t = Table::new(
+        "Fig 7 (real numerics) — fused vs unfused LoRA kernel, PJRT CPU",
+        &["K adapters", "fused (ms)", "unfused (ms)", "speedup"],
+    );
+    for k in [1usize, 4, 16] {
+        let fused = time_kmicro(&rt, &format!("kmicro_fused_k{k}"));
+        let unfused = time_kmicro(&rt, &format!("kmicro_unfused_k{k}"));
+        if let (Some(f), Some(u)) = (fused, unfused) {
+            t.row(&[
+                k.to_string(),
+                format!("{:.2}", f * 1e3),
+                format!("{:.2}", u * 1e3),
+                format!("{:.2}x", u / f),
+            ]);
+        }
+    }
+    t.print();
+    println!(
+        "paper shape: unfused fragments into per-adapter launches; the \
+         gap widens with K"
+    );
+}
+
+fn time_kmicro(rt: &tlora::runtime::Runtime, name: &str) -> Option<f64> {
+    let meta = rt.manifest.kmicro_by_name(name)?.clone();
+    let exe = rt
+        .compile(&tlora::runtime::ProgramMeta {
+            file: meta.file.clone(),
+            inputs: meta.inputs.clone(),
+            outputs: meta.outputs.clone(),
+        })
+        .ok()?;
+    // build inputs from the manifest specs
+    let mut rng = tlora::util::rng::Rng::new(7);
+    let args: Vec<xla::Literal> = meta
+        .inputs
+        .iter()
+        .map(|spec| {
+            let n: usize = spec.elements();
+            if spec.dtype == "i32" {
+                let vals: Vec<i32> = (0..n)
+                    .map(|_| rng.below(meta.k.max(1)) as i32)
+                    .collect();
+                tlora::runtime::Runtime::literal_i32(&vals, &spec.shape)
+                    .unwrap()
+            } else {
+                let vals: Vec<f32> =
+                    (0..n).map(|_| rng.f64() as f32 - 0.5).collect();
+                tlora::runtime::Runtime::literal_f32(&vals, &spec.shape)
+                    .unwrap()
+            }
+        })
+        .collect();
+    // warmup + timed runs
+    for _ in 0..2 {
+        exe.run_literals(&args).ok()?;
+    }
+    let iters = 5;
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        exe.run_literals(&args).ok()?;
+    }
+    Some(t0.elapsed().as_secs_f64() / iters as f64)
+}

@@ -1,0 +1,69 @@
+//! Figure 9b (+ Figure 13): impact of cluster size — same workload on
+//! 32/64/128/256 GPUs. Paper: throughput scales with capacity, JCT
+//! curves shift right in consistent intervals as the cluster shrinks
+//! (no starvation / heavy-tail collapse at 32 GPUs).
+
+use tlora::config::ExperimentConfig;
+use tlora::metrics::{cdf_block, write_report, Table};
+use tlora::sim::simulate;
+use tlora::util::stats::Cdf;
+
+fn main() {
+    tlora::bench_util::section("Figure 9b / 13 — cluster size");
+    let sizes = [32usize, 64, 128, 256];
+
+    let mut t = Table::new(
+        "tLoRA across cluster sizes (100 jobs, month-1 trace)",
+        &["GPUs", "thr (samples/s)", "mean JCT (s)", "p99 JCT (s)",
+          "p99/mean", "util"],
+    );
+    let mut results = vec![];
+    for &n in &sizes {
+        let mut cfg = ExperimentConfig::default();
+        cfg.n_jobs = 200;
+        cfg.cluster = tlora::cluster::ClusterSpec::with_gpus(n);
+        let r = simulate(&cfg);
+        t.row(&[
+            n.to_string(),
+            format!("{:.2}", r.avg_throughput),
+            format!("{:.0}", r.mean_jct),
+            format!("{:.0}", r.p99_jct),
+            format!("{:.1}", r.p99_jct / r.mean_jct.max(1e-9)),
+            format!("{:.1}%", r.avg_gpu_util * 100.0),
+        ]);
+        results.push((n, r));
+    }
+    t.print();
+
+    // shape checks: throughput non-decreasing with size; JCT
+    // non-increasing; tails bounded (p99/mean stays sane at 32 GPUs)
+    let thr_monotone = results
+        .windows(2)
+        .all(|w| w[1].1.avg_throughput >= w[0].1.avg_throughput * 0.9);
+    let jct_monotone = results
+        .windows(2)
+        .all(|w| w[1].1.mean_jct <= w[0].1.mean_jct * 1.1);
+    let tail_bounded =
+        results[0].1.p99_jct / results[0].1.mean_jct.max(1e-9) < 20.0;
+    println!(
+        "\npaper shape: proportional scaling, consistent JCT shift, no \
+         heavy-tail collapse at 32 GPUs -> {}",
+        if thr_monotone && jct_monotone && tail_bounded {
+            "REPRODUCED"
+        } else {
+            "PARTIAL"
+        }
+    );
+
+    let mut blocks = String::new();
+    for (n, r) in &results {
+        blocks.push_str(&cdf_block(
+            &format!("{n}gpus"),
+            &Cdf::of(&r.jct_values(), 50),
+        ));
+        blocks.push('\n');
+    }
+    if let Some(p) = write_report("fig13_jct_by_cluster.txt", &blocks) {
+        println!("Fig 13 JCT CDFs -> {}", p.display());
+    }
+}

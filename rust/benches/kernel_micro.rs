@@ -1,0 +1,161 @@
+//! L1 kernel micro-benchmarks (the §Perf deliverable for the Pallas
+//! kernel): real fused vs unfused wall-clock on PJRT across adapter
+//! counts, plus the analytic VMEM-footprint / MXU-utilization estimates
+//! for the chosen BlockSpec (interpret=True timings are CPU-numpy, so
+//! TPU performance is *estimated* structurally — see DESIGN.md §Perf).
+
+use tlora::kernelsim::tile::{adapter_exec_time, AdapterLoad};
+use tlora::metrics::Table;
+
+fn main() {
+    tlora::bench_util::section("kernel_micro — fused LoRA kernel");
+
+    // --- analytic TPU-side estimates (BlockSpec structure) ---
+    let mut vmem = Table::new(
+        "VMEM footprint estimate per fwd grid step (tile_t x d_model)",
+        &["tile_t", "d=768", "d=4096 (8B)", "fits 16MB VMEM"],
+    );
+    for tile_t in [64usize, 128, 256, 512] {
+        let f = |d: usize| vmem_bytes(tile_t, d, 16, d) as f64 / 1e6;
+        let fits = vmem_bytes(tile_t, 4096, 16, 4096) < 16 * (1 << 20);
+        vmem.row(&[
+            tile_t.to_string(),
+            format!("{:.2} MB", f(768)),
+            format!("{:.2} MB", f(4096)),
+            if fits { "yes".into() } else { "NO".into() },
+        ]);
+    }
+    vmem.print();
+
+    let mut mxu = Table::new(
+        "MXU utilization estimate (rank-padding efficiency of the fused \
+         masked-accumulate schedule)",
+        &["group", "estimate"],
+    );
+    for (name, loads) in [
+        ("4 adapters, uniform r=16", vec![(16usize, 1024.0f64); 4]),
+        ("4 adapters, ranks 2/4/8/16", vec![
+            (2, 1024.0),
+            (4, 1024.0),
+            (8, 1024.0),
+            (16, 1024.0),
+        ]),
+        ("1 adapter, r=16", vec![(16, 4096.0)]),
+    ] {
+        let tokens: Vec<f64> = loads.iter().map(|&(_, t)| t).collect();
+        let ranks: Vec<usize> = loads.iter().map(|&(r, _)| r).collect();
+        let est = mxu_estimate(&tokens, &ranks, 16);
+        mxu.row(&[name.to_string(), format!("{:.1}%", est * 100.0)]);
+    }
+    mxu.print();
+
+    // --- analytic A100 model (drives the simulator) ---
+    let gpu = tlora::cluster::GpuSpec::a100_80g();
+    let mut model = Table::new(
+        "analytic kernel model — one fused layer invocation (A100 model)",
+        &["K", "fused (us)", "unfused (us)", "speedup"],
+    );
+    for k in [1usize, 2, 4, 8, 16, 32] {
+        let loads: Vec<AdapterLoad> = (0..k)
+            .map(|i| AdapterLoad {
+                rank: [2, 4, 8, 16][i % 4],
+                tokens: 512.0,
+            })
+            .collect();
+        let f = adapter_exec_time(&gpu, 4096, &loads, true);
+        let u = adapter_exec_time(&gpu, 4096, &loads, false);
+        model.row(&[
+            k.to_string(),
+            format!("{:.1}", f * 1e6),
+            format!("{:.1}", u * 1e6),
+            format!("{:.2}x", u / f),
+        ]);
+    }
+    model.print();
+
+    // --- real PJRT wall-clock (kmicro artifacts) ---
+    let dir = std::path::Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        if let Ok(rt) = tlora::runtime::Runtime::new(dir) {
+            let mut real = Table::new(
+                "real PJRT CPU wall-clock — kmicro programs (fwd+bwd, \
+                 T=512, d=256, r_max=16)",
+                &["K", "fused (ms)", "unfused (ms)", "speedup"],
+            );
+            for k in [1usize, 4, 16] {
+                let f = time_kmicro(&rt, &format!("kmicro_fused_k{k}"));
+                let u = time_kmicro(&rt, &format!("kmicro_unfused_k{k}"));
+                if let (Some(f), Some(u)) = (f, u) {
+                    real.row(&[
+                        k.to_string(),
+                        format!("{:.2}", f * 1e3),
+                        format!("{:.2}", u * 1e3),
+                        format!("{:.2}x", u / f),
+                    ]);
+                }
+            }
+            real.print();
+        }
+    } else {
+        println!("(artifacts missing — analytic tables only)");
+    }
+}
+
+fn vmem_bytes(tile_t: usize, d: usize, r: usize, o: usize) -> usize {
+    // mirrors python fused_lora.vmem_footprint_bytes
+    (tile_t * d + d * r + r * o + tile_t * r + tile_t * o) * 4
+}
+
+fn mxu_estimate(tokens: &[f64], ranks: &[usize], r_max: usize) -> f64 {
+    let d = 4096.0;
+    let o = 4096.0;
+    let total: f64 = tokens.iter().sum();
+    let useful: f64 = tokens
+        .iter()
+        .zip(ranks)
+        .map(|(&t, &r)| t * (d * r as f64 + r as f64 * o))
+        .sum();
+    let padded =
+        ranks.len() as f64 * total * (d * r_max as f64 + r_max as f64 * o);
+    useful / padded
+}
+
+fn time_kmicro(rt: &tlora::runtime::Runtime, name: &str) -> Option<f64> {
+    let meta = rt.manifest.kmicro_by_name(name)?.clone();
+    let exe = rt
+        .compile(&tlora::runtime::ProgramMeta {
+            file: meta.file.clone(),
+            inputs: meta.inputs.clone(),
+            outputs: meta.outputs.clone(),
+        })
+        .ok()?;
+    let mut rng = tlora::util::rng::Rng::new(3);
+    let args: Vec<xla::Literal> = meta
+        .inputs
+        .iter()
+        .map(|spec| {
+            let n = spec.elements();
+            if spec.dtype == "i32" {
+                let vals: Vec<i32> = (0..n)
+                    .map(|_| rng.below(meta.k.max(1)) as i32)
+                    .collect();
+                tlora::runtime::Runtime::literal_i32(&vals, &spec.shape)
+                    .unwrap()
+            } else {
+                let vals: Vec<f32> =
+                    (0..n).map(|_| rng.f64() as f32 - 0.5).collect();
+                tlora::runtime::Runtime::literal_f32(&vals, &spec.shape)
+                    .unwrap()
+            }
+        })
+        .collect();
+    for _ in 0..2 {
+        exe.run_literals(&args).ok()?;
+    }
+    let iters = 5;
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        exe.run_literals(&args).ok()?;
+    }
+    Some(t0.elapsed().as_secs_f64() / iters as f64)
+}

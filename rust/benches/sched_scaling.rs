@@ -1,0 +1,76 @@
+//! L3 scheduler scaling (§3.4 complexity claim + §Perf deliverable):
+//! one hierarchical-incremental-grouping round at K ∈ {100, 400, 1600}
+//! jobs must scale ~O(K log K), not quadratically, and the simulator's
+//! event loop must sustain a high horizon rate.
+
+use tlora::bench_util::{bench, section};
+use tlora::cluster::{Allocator, ClusterSpec};
+use tlora::config::SchedulerConfig;
+use tlora::metrics::Table;
+use tlora::planner::PlanOptions;
+use tlora::scheduler::predictor::Predictor;
+use tlora::scheduler::{schedule, Candidate};
+use tlora::workload::trace::{TraceGenerator, TraceProfile};
+
+fn mk_candidates(k: usize, n_gpus: usize) -> Vec<Candidate> {
+    let spec = ClusterSpec::with_gpus(n_gpus);
+    let mut alloc = Allocator::new(spec.clone());
+    let mut pred = Predictor::new(spec, PlanOptions::default());
+    let jobs =
+        TraceGenerator::new(TraceProfile::month1(), 7).generate(k);
+    jobs.into_iter()
+        .filter_map(|mut j| {
+            j.gpus = 1; // stress the grouping logic, not the allocator
+            let a = alloc.allocate(1)?;
+            let residual = pred.residual(&j, &a).unwrap_or(0.5);
+            Some(Candidate {
+                job: j,
+                alloc: a,
+                urgency: 0.0,
+                residual,
+            })
+        })
+        .collect()
+}
+
+fn main() {
+    section("sched_scaling — O(K log K) grouping round");
+    let mut t = Table::new(
+        "one scheduling round",
+        &["K jobs", "time (ms)", "ms/job", "probes", "probes/job"],
+    );
+    let mut per_job_times = vec![];
+    for k in [100usize, 400, 1600] {
+        let cands = mk_candidates(k, 2 * k);
+        let spec = ClusterSpec::with_gpus(2 * k);
+        let cfg = SchedulerConfig::default();
+        let mut probes = 0u64;
+        let r = bench(&format!("round K={k}"), 1, 3, || {
+            let mut pred =
+                Predictor::new(spec.clone(), PlanOptions::default());
+            let out = schedule(cands.clone(), &mut pred, &cfg);
+            probes = out.predictor_probes;
+            out.groups.len()
+        });
+        let ms_per_job = r.mean_ms() / k as f64;
+        per_job_times.push((k, ms_per_job));
+        t.row(&[
+            k.to_string(),
+            format!("{:.1}", r.mean_ms()),
+            format!("{ms_per_job:.3}"),
+            probes.to_string(),
+            format!("{:.1}", probes as f64 / k as f64),
+        ]);
+    }
+    t.print();
+
+    // O(K log K) means ms/job grows ~log K: going 100 -> 1600 (16x jobs)
+    // should grow per-job cost by far less than 16x (quadratic blowup)
+    let growth = per_job_times.last().unwrap().1
+        / per_job_times.first().unwrap().1.max(1e-9);
+    println!(
+        "\nper-job cost growth 100->1600 jobs: {growth:.1}x \
+         (quadratic would be ~16x) -> {}",
+        if growth < 8.0 { "quasi-linear OK" } else { "TOO STEEP" }
+    );
+}

@@ -1,0 +1,235 @@
+//! Baseline grouping policies (§4.1): mLoRA, Megatron, and the tLoRA
+//! ablations. Each exposes the same interface as the tLoRA Adapter
+//! Scheduler — a list of runnable candidates in, a set of executable
+//! groups out — so the simulator can swap policies freely.
+
+use crate::config::Policy;
+use crate::scheduler::grouping::{schedule, GroupState, ScheduleOutcome};
+use crate::scheduler::predictor::Predictor;
+use crate::scheduler::Candidate;
+use crate::config::SchedulerConfig;
+
+/// mLoRA-style grouping: first-come-first-served, pack jobs into a group
+/// "as long as memory capacity permits" — no heterogeneity awareness,
+/// no throughput prediction, no per-job slowdown guarantees.
+pub fn mlora_schedule(
+    mut candidates: Vec<Candidate>,
+    predictor: &mut Predictor,
+    cfg: &SchedulerConfig,
+) -> ScheduleOutcome {
+    let probes0 = predictor.probes;
+    // FIFO: submission order
+    candidates.sort_by(|a, b| {
+        crate::util::f64_cmp(a.job.submit_time, b.job.submit_time)
+    });
+
+    let mut groups: Vec<GroupState> = vec![];
+    'next: for c in candidates {
+        // try to append to the first open group with the same backbone
+        // whose memory still fits (the only check mLoRA performs).
+        // mLoRA batches adapters onto a shared pipeline, so appends are
+        // confined to groups it shares a node with — it does not gang
+        // arbitrary cross-node allocations together.
+        let c_nodes = c.alloc.nodes();
+        for g in groups.iter_mut() {
+            if g.jobs[0].base_model != c.job.base_model {
+                continue;
+            }
+            if g.jobs.len() >= cfg.max_group_size {
+                continue;
+            }
+            if !g.alloc.nodes().iter().any(|n| c_nodes.contains(n)) {
+                continue;
+            }
+            let mut jobs = g.jobs.clone();
+            jobs.push(c.job.clone());
+            let alloc = g.alloc.union(&c.alloc);
+            // memory feasibility == plan exists
+            if predictor.group_perf(&jobs, &alloc).is_some() {
+                g.jobs = jobs;
+                g.alloc = alloc;
+                continue 'next;
+            }
+        }
+        groups.push(GroupState {
+            jobs: vec![c.job],
+            alloc: c.alloc,
+            urgency: c.urgency,
+            residual: c.residual,
+        });
+    }
+
+    let merges = groups
+        .iter()
+        .map(|g| g.jobs.len().saturating_sub(1))
+        .sum::<usize>();
+    let mut out = vec![];
+    for g in groups {
+        if let Some(perf) = predictor.group_perf(&g.jobs, &g.alloc) {
+            out.push((g, perf));
+        }
+    }
+    ScheduleOutcome {
+        groups: out,
+        merges_intra: merges,
+        merges_inter: 0,
+        predictor_probes: predictor.probes - probes0,
+    }
+}
+
+/// Megatron baseline: every job runs isolated on its own allocation
+/// (efficient model parallelism, zero co-location).
+pub fn megatron_schedule(
+    candidates: Vec<Candidate>,
+    predictor: &mut Predictor,
+) -> ScheduleOutcome {
+    let probes0 = predictor.probes;
+    let mut out = vec![];
+    for c in candidates {
+        let g = GroupState {
+            jobs: vec![c.job],
+            alloc: c.alloc,
+            urgency: c.urgency,
+            residual: c.residual,
+        };
+        if let Some(perf) = predictor.group_perf(&g.jobs, &g.alloc) {
+            out.push((g, perf));
+        }
+    }
+    ScheduleOutcome {
+        groups: out,
+        merges_intra: 0,
+        merges_inter: 0,
+        predictor_probes: predictor.probes - probes0,
+    }
+}
+
+/// Dispatch a scheduling round for `policy`.
+///
+/// * tLoRA / tLoRA-w/o-Kernel-Fuser → the Adapter Scheduler (§3.4)
+/// * tLoRA-w/o-Scheduler / mLoRA → mLoRA's FIFO memory packing
+/// * Megatron → isolated
+///
+/// (The kernel choice — fused vs unfused — is carried by the
+/// `Predictor`'s [`crate::planner::PlanOptions::fused_kernel`].)
+pub fn dispatch(
+    policy: Policy,
+    candidates: Vec<Candidate>,
+    predictor: &mut Predictor,
+    cfg: &SchedulerConfig,
+) -> ScheduleOutcome {
+    if policy.uses_tlora_scheduler() {
+        schedule(candidates, predictor, cfg)
+    } else if policy.groups_jobs() {
+        mlora_schedule(candidates, predictor, cfg)
+    } else {
+        megatron_schedule(candidates, predictor)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Allocator, ClusterSpec};
+    use crate::planner::PlanOptions;
+    use crate::workload::JobSpec;
+
+    fn job(id: u64, rank: usize, batch: usize, gpus: usize) -> JobSpec {
+        JobSpec {
+            id,
+            base_model: "llama3-8b".into(),
+            rank,
+            batch_size: batch,
+            seq_len: 512,
+            gpus,
+            total_steps: 100,
+            submit_time: id as f64,
+            max_slowdown: 2.0,
+        }
+    }
+
+    fn mk(
+        jobs: Vec<JobSpec>,
+    ) -> (Vec<Candidate>, Predictor, SchedulerConfig) {
+        let spec = ClusterSpec::default_128();
+        let mut alloc = Allocator::new(spec.clone());
+        let mut pred = Predictor::new(spec, PlanOptions::default());
+        let cands = jobs
+            .into_iter()
+            .map(|j| {
+                let a = alloc.allocate(j.gpus).unwrap();
+                let residual = pred.residual(&j, &a).unwrap_or(0.5);
+                Candidate {
+                    job: j,
+                    alloc: a,
+                    urgency: 0.0,
+                    residual,
+                }
+            })
+            .collect();
+        (cands, pred, SchedulerConfig::default())
+    }
+
+    #[test]
+    fn megatron_never_groups() {
+        let (cands, mut pred, _) =
+            mk((0..5).map(|i| job(i, 8, 4, 1)).collect());
+        let out = megatron_schedule(cands, &mut pred);
+        assert_eq!(out.groups.len(), 5);
+        assert!(out.groups.iter().all(|(g, _)| g.jobs.len() == 1));
+    }
+
+    #[test]
+    fn mlora_groups_fifo_until_memory() {
+        let (cands, mut pred, cfg) =
+            mk((0..4).map(|i| job(i, 8, 4, 1)).collect());
+        let out = mlora_schedule(cands, &mut pred, &cfg);
+        // 8B model + small adapters easily fit: mLoRA packs everything
+        assert_eq!(out.groups.len(), 1);
+        assert_eq!(out.groups[0].0.jobs.len(), 4);
+        // FIFO order preserved inside the group
+        let ids: Vec<u64> =
+            out.groups[0].0.jobs.iter().map(|j| j.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn mlora_ignores_slowdown_constraints() {
+        // a tiny job packed with a heavy one: the tiny job's step is
+        // tied to the heavy job's cadence (huge slowdown). tLoRA's Δ^max
+        // guard refuses this; mLoRA happily packs it — the §4.2 "mLoRA
+        // often underperforms Megatron" mechanism
+        let mut a = job(0, 2, 1, 1);
+        a.seq_len = 256;
+        a.max_slowdown = 1.2;
+        let mut b = job(1, 16, 8, 1);
+        b.seq_len = 1024;
+        b.max_slowdown = 1.2;
+        let (cands, mut pred, cfg) = mk(vec![a, b]);
+        let out = mlora_schedule(cands, &mut pred, &cfg);
+        assert_eq!(out.groups.len(), 1, "mLoRA packs regardless");
+        let (g, perf) = &out.groups[0];
+        assert!(
+            !perf.within_slowdown(&g.jobs),
+            "expected a slowdown violation mLoRA cannot see"
+        );
+    }
+
+    #[test]
+    fn mlora_respects_base_model_boundary() {
+        let mut b = job(1, 8, 4, 1);
+        b.base_model = "qwen3-8b".into();
+        let (cands, mut pred, cfg) = mk(vec![job(0, 8, 4, 1), b]);
+        let out = mlora_schedule(cands, &mut pred, &cfg);
+        assert_eq!(out.groups.len(), 2);
+    }
+
+    #[test]
+    fn dispatch_routes_policies() {
+        let (cands, mut pred, cfg) =
+            mk((0..3).map(|i| job(i, 8, 4, 1)).collect());
+        let out =
+            dispatch(Policy::Megatron, cands, &mut pred, &cfg);
+        assert_eq!(out.groups.len(), 3);
+    }
+}

@@ -1,0 +1,103 @@
+//! Benchmark harness (criterion substitute) used by the `cargo bench`
+//! targets: warmup, repeated timed runs, mean/std/min reporting, and
+//! throughput rows. Deterministic workloads + wall-clock timing.
+
+use std::time::Instant;
+
+/// Timing result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_s * 1e3
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} {:>10.3} ms/iter (±{:.3} ms, min {:.3} ms, n={})",
+            self.name,
+            self.mean_s * 1e3,
+            self.std_s * 1e3,
+            self.min_s * 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Time `f` with `warmup` unmeasured runs then `iters` measured runs.
+pub fn bench<T>(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    mut f: impl FnMut() -> T,
+) -> BenchResult {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let var = samples
+        .iter()
+        .map(|s| (s - mean).powi(2))
+        .sum::<f64>()
+        / samples.len() as f64;
+    let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_s: mean,
+        std_s: var.sqrt(),
+        min_s: min,
+    }
+}
+
+/// Time a single long-running invocation (trace-driven sims).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Standard bench header so `cargo bench` output is navigable.
+pub fn section(title: &str) {
+    println!("\n########## {title} ##########");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("spin", 1, 5, || {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(r.mean_s > 0.0);
+        assert!(r.min_s <= r.mean_s);
+        assert_eq!(r.iters, 5);
+        assert!(r.report().contains("spin"));
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, t) = time_once(|| 42);
+        assert_eq!(v, 42);
+        assert!(t >= 0.0);
+    }
+}

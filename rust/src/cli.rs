@@ -1,0 +1,156 @@
+//! Zero-dependency CLI argument parser (clap substitute).
+//!
+//! Supports `tlora <subcommand> [--flag value] [--switch]` with typed
+//! accessors and helpful errors. Used by `main.rs` and the examples.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (tests) — tokens exclude argv[0].
+    pub fn parse_from(tokens: &[&str]) -> Result<Args, String> {
+        let mut flags = HashMap::new();
+        let mut switches = vec![];
+        let mut positional = vec![];
+        let mut subcommand = None;
+        let mut i = 0;
+        while i < tokens.len() {
+            let tok = tokens[i];
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < tokens.len()
+                    && !tokens[i + 1].starts_with("--")
+                {
+                    flags.insert(
+                        name.to_string(),
+                        tokens[i + 1].to_string(),
+                    );
+                    i += 1;
+                } else {
+                    switches.push(name.to_string());
+                }
+            } else if subcommand.is_none() && positional.is_empty() {
+                subcommand = Some(tok.to_string());
+            } else {
+                positional.push(tok.to_string());
+            }
+            i += 1;
+        }
+        Ok(Args {
+            subcommand,
+            flags,
+            switches,
+            positional,
+        })
+    }
+
+    /// Parse from the process environment.
+    pub fn parse() -> Result<Args, String> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        let refs: Vec<&str> = argv.iter().map(String::as_str).collect();
+        Args::parse_from(&refs)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize)
+        -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name}: expected integer, got {v}")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name}: expected number, got {v}")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name}: expected integer, got {v}")),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_subcommand_flags_switches() {
+        // note: a bare `--switch` must come last or be followed by
+        // another `--flag` (positional-after-switch is read as its
+        // value, as documented)
+        let a = Args::parse_from(&[
+            "simulate",
+            "extra",
+            "--n-jobs",
+            "50",
+            "--policy=mlora",
+            "--full",
+        ])
+        .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("simulate"));
+        assert_eq!(a.get("n-jobs"), Some("50"));
+        assert_eq!(a.get("policy"), Some("mlora"));
+        assert!(a.has("full"));
+        assert_eq!(a.positional(), &["extra".to_string()]);
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = Args::parse_from(&["x", "--n", "5", "--f", "2.5"]).unwrap();
+        assert_eq!(a.get_usize("n", 1).unwrap(), 5);
+        assert_eq!(a.get_f64("f", 0.0).unwrap(), 2.5);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        assert!(Args::parse_from(&["x", "--n", "abc"])
+            .unwrap()
+            .get_usize("n", 1)
+            .is_err());
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = Args::parse_from(&["run", "--verbose"]).unwrap();
+        assert!(a.has("verbose"));
+        assert_eq!(a.get("verbose"), None);
+    }
+
+    #[test]
+    fn empty() {
+        let a = Args::parse_from(&[]).unwrap();
+        assert!(a.subcommand.is_none());
+    }
+}

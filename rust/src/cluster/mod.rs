@@ -1,0 +1,397 @@
+//! Cluster topology model and gang allocator.
+//!
+//! Substitutes the paper's physical 12×A100 testbed / 128-GPU emulated
+//! cluster (§4.1): nodes of GPUs joined by NVLink intra-node and
+//! InfiniBand inter-node. The simulator and planner query bandwidth
+//! tiers and the allocator hands out gang allocations.
+
+use crate::util::rng::Rng;
+
+/// A GPU device model. Defaults model an NVIDIA A100-80GB.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuSpec {
+    pub name: String,
+    /// peak dense bf16 FLOP/s
+    pub peak_flops: f64,
+    /// HBM capacity in bytes
+    pub mem_bytes: f64,
+    /// HBM bandwidth bytes/s
+    pub hbm_bw: f64,
+    /// achievable fraction of peak on well-shaped GEMMs
+    pub mfu_cap: f64,
+    /// fixed kernel launch overhead (seconds)
+    pub launch_overhead_s: f64,
+}
+
+impl GpuSpec {
+    pub fn a100_80g() -> GpuSpec {
+        GpuSpec {
+            name: "A100-80G".into(),
+            peak_flops: 312e12,
+            mem_bytes: 80e9,
+            hbm_bw: 2.0e12,
+            mfu_cap: 0.55,
+            launch_overhead_s: 8e-6,
+        }
+    }
+}
+
+/// Cluster shape: `n_nodes` nodes × `gpus_per_node` GPUs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterSpec {
+    pub n_nodes: usize,
+    pub gpus_per_node: usize,
+    pub gpu: GpuSpec,
+    /// NVLink bytes/s between GPUs in a node
+    pub nvlink_bw: f64,
+    /// InfiniBand bytes/s between nodes (per link)
+    pub ib_bw: f64,
+    /// inter-node latency seconds
+    pub ib_latency_s: f64,
+}
+
+impl ClusterSpec {
+    /// The paper's default 128-GPU cluster: 16 nodes × 8 A100s.
+    pub fn default_128() -> ClusterSpec {
+        ClusterSpec::with_gpus(128)
+    }
+
+    /// A cluster with `n` GPUs in 8-GPU nodes (Fig. 9b sweeps this).
+    pub fn with_gpus(n: usize) -> ClusterSpec {
+        let gpus_per_node = 8.min(n.max(1));
+        ClusterSpec {
+            n_nodes: n.div_ceil(gpus_per_node),
+            gpus_per_node,
+            gpu: GpuSpec::a100_80g(),
+            nvlink_bw: 600e9,
+            ib_bw: 12.5e9, // 100 Gb/s
+            ib_latency_s: 5e-6,
+        }
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        self.n_nodes * self.gpus_per_node
+    }
+}
+
+/// Identifies one GPU as (node, local index).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct GpuId {
+    pub node: usize,
+    pub idx: usize,
+}
+
+/// Bandwidth tier between two GPUs — the hierarchy the scheduler's
+/// bottom-up grouping walks (§3.4 "node, then across nodes, then ranks").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    SameGpu,
+    IntraNode,
+    InterNode,
+}
+
+impl ClusterSpec {
+    pub fn tier(&self, a: GpuId, b: GpuId) -> Tier {
+        if a == b {
+            Tier::SameGpu
+        } else if a.node == b.node {
+            Tier::IntraNode
+        } else {
+            Tier::InterNode
+        }
+    }
+
+    /// Point-to-point bandwidth between two GPUs (bytes/s).
+    pub fn bandwidth(&self, a: GpuId, b: GpuId) -> f64 {
+        match self.tier(a, b) {
+            Tier::SameGpu => self.gpu.hbm_bw,
+            Tier::IntraNode => self.nvlink_bw,
+            Tier::InterNode => self.ib_bw,
+        }
+    }
+
+    /// Slowest link bandwidth across a set of GPUs — ring-collective
+    /// bottleneck.
+    pub fn bottleneck_bandwidth(&self, gpus: &[GpuId]) -> f64 {
+        let mut bw = self.gpu.hbm_bw;
+        for (i, &a) in gpus.iter().enumerate() {
+            for &b in gpus.iter().skip(i + 1) {
+                bw = bw.min(self.bandwidth(a, b));
+            }
+        }
+        bw
+    }
+
+    /// Time for a ring all-reduce of `bytes` across `gpus`.
+    pub fn allreduce_time(&self, gpus: &[GpuId], bytes: f64) -> f64 {
+        let n = gpus.len();
+        if n <= 1 {
+            return 0.0;
+        }
+        let bw = self.bottleneck_bandwidth(gpus);
+        let cross_node = gpus.iter().any(|g| g.node != gpus[0].node);
+        let lat = if cross_node { self.ib_latency_s } else { 1e-6 };
+        // ring: 2(n-1)/n * bytes over the bottleneck link + per-step lat
+        2.0 * (n as f64 - 1.0) / n as f64 * bytes / bw
+            + 2.0 * (n as f64 - 1.0) * lat
+    }
+
+    /// Time for a point-to-point activation transfer (pipeline edge).
+    pub fn p2p_time(&self, a: GpuId, b: GpuId, bytes: f64) -> f64 {
+        if a == b {
+            return 0.0;
+        }
+        let lat = if a.node == b.node {
+            1e-6
+        } else {
+            self.ib_latency_s
+        };
+        bytes / self.bandwidth(a, b) + lat
+    }
+}
+
+/// Gang allocator with node-packing preference: allocations avoid
+/// spanning nodes when a single node can hold them (keeps groups in the
+/// cheap bandwidth tier).
+#[derive(Debug, Clone)]
+pub struct Allocator {
+    spec: ClusterSpec,
+    /// free[node] = list of free local indices
+    free: Vec<Vec<usize>>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Allocation {
+    pub gpus: Vec<GpuId>,
+}
+
+impl Allocation {
+    pub fn n_gpus(&self) -> usize {
+        self.gpus.len()
+    }
+
+    pub fn nodes(&self) -> Vec<usize> {
+        let mut n: Vec<usize> = self.gpus.iter().map(|g| g.node).collect();
+        n.sort_unstable();
+        n.dedup();
+        n
+    }
+
+    pub fn spans_nodes(&self) -> bool {
+        self.nodes().len() > 1
+    }
+
+    /// Union of two allocations (group merge).
+    pub fn union(&self, other: &Allocation) -> Allocation {
+        let mut gpus = self.gpus.clone();
+        gpus.extend_from_slice(&other.gpus);
+        gpus.sort_unstable();
+        gpus.dedup();
+        Allocation { gpus }
+    }
+}
+
+impl Allocator {
+    pub fn new(spec: ClusterSpec) -> Allocator {
+        let free = (0..spec.n_nodes)
+            .map(|_| (0..spec.gpus_per_node).rev().collect())
+            .collect();
+        Allocator { spec, free }
+    }
+
+    pub fn spec(&self) -> &ClusterSpec {
+        &self.spec
+    }
+
+    pub fn free_gpus(&self) -> usize {
+        self.free.iter().map(|f| f.len()).sum()
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        self.spec.total_gpus()
+    }
+
+    /// Allocate `n` GPUs, preferring (1) the single node with the
+    /// tightest fit, then (2) spilling across the emptiest nodes.
+    pub fn allocate(&mut self, n: usize) -> Option<Allocation> {
+        if n == 0 || self.free_gpus() < n {
+            return None;
+        }
+        // best-fit single node
+        let mut best: Option<(usize, usize)> = None; // (node, slack)
+        for (node, f) in self.free.iter().enumerate() {
+            if f.len() >= n {
+                let slack = f.len() - n;
+                if best.map_or(true, |(_, s)| slack < s) {
+                    best = Some((node, slack));
+                }
+            }
+        }
+        let mut gpus = Vec::with_capacity(n);
+        if let Some((node, _)) = best {
+            for _ in 0..n {
+                let idx = self.free[node].pop().unwrap();
+                gpus.push(GpuId { node, idx });
+            }
+            return Some(Allocation { gpus });
+        }
+        // spill: fill from nodes with the most free capacity first
+        let mut order: Vec<usize> = (0..self.free.len()).collect();
+        order.sort_by_key(|&i| std::cmp::Reverse(self.free[i].len()));
+        let mut need = n;
+        for node in order {
+            while need > 0 {
+                match self.free[node].pop() {
+                    Some(idx) => {
+                        gpus.push(GpuId { node, idx });
+                        need -= 1;
+                    }
+                    None => break,
+                }
+            }
+            if need == 0 {
+                break;
+            }
+        }
+        debug_assert_eq!(need, 0);
+        Some(Allocation { gpus })
+    }
+
+    /// Return an allocation's GPUs to the free pool.
+    pub fn release(&mut self, alloc: &Allocation) {
+        for g in &alloc.gpus {
+            debug_assert!(
+                !self.free[g.node].contains(&g.idx),
+                "double free of {g:?}"
+            );
+            self.free[g.node].push(g.idx);
+        }
+    }
+
+    /// Randomized allocation order (trace replay uses this to model
+    /// fragmented production clusters).
+    pub fn allocate_random(&mut self, n: usize, rng: &mut Rng)
+        -> Option<Allocation> {
+        if self.free_gpus() < n || n == 0 {
+            return None;
+        }
+        let mut candidates: Vec<GpuId> = vec![];
+        for (node, f) in self.free.iter().enumerate() {
+            for &idx in f {
+                candidates.push(GpuId { node, idx });
+            }
+        }
+        rng.shuffle(&mut candidates);
+        let chosen: Vec<GpuId> = candidates.into_iter().take(n).collect();
+        for g in &chosen {
+            self.free[g.node].retain(|&i| i != g.idx);
+        }
+        Some(Allocation { gpus: chosen })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec4x4() -> ClusterSpec {
+        let mut s = ClusterSpec::with_gpus(16);
+        s.n_nodes = 4;
+        s.gpus_per_node = 4;
+        s
+    }
+
+    #[test]
+    fn tiers() {
+        let s = spec4x4();
+        let a = GpuId { node: 0, idx: 0 };
+        let b = GpuId { node: 0, idx: 1 };
+        let c = GpuId { node: 1, idx: 0 };
+        assert_eq!(s.tier(a, a), Tier::SameGpu);
+        assert_eq!(s.tier(a, b), Tier::IntraNode);
+        assert_eq!(s.tier(a, c), Tier::InterNode);
+        assert!(s.bandwidth(a, b) > s.bandwidth(a, c));
+    }
+
+    #[test]
+    fn allreduce_zero_for_single() {
+        let s = spec4x4();
+        assert_eq!(s.allreduce_time(&[GpuId { node: 0, idx: 0 }], 1e9), 0.0);
+    }
+
+    #[test]
+    fn allreduce_slower_across_nodes() {
+        let s = spec4x4();
+        let intra = vec![GpuId { node: 0, idx: 0 }, GpuId { node: 0, idx: 1 }];
+        let inter = vec![GpuId { node: 0, idx: 0 }, GpuId { node: 1, idx: 0 }];
+        assert!(s.allreduce_time(&inter, 1e8) > s.allreduce_time(&intra, 1e8));
+    }
+
+    #[test]
+    fn allocator_prefers_single_node() {
+        let mut a = Allocator::new(spec4x4());
+        let alloc = a.allocate(4).unwrap();
+        assert!(!alloc.spans_nodes());
+        assert_eq!(a.free_gpus(), 12);
+    }
+
+    #[test]
+    fn allocator_best_fit() {
+        let mut a = Allocator::new(spec4x4());
+        let two = a.allocate(2).unwrap(); // node X now has 2 free
+        let four = a.allocate(4).unwrap(); // must use a different full node
+        assert!(!four.spans_nodes());
+        assert_ne!(four.gpus[0].node, two.gpus[0].node);
+        // 2-gpu ask should best-fit into the half-empty node
+        let two2 = a.allocate(2).unwrap();
+        assert_eq!(two2.gpus[0].node, two.gpus[0].node);
+    }
+
+    #[test]
+    fn allocator_spills_when_needed() {
+        let mut a = Allocator::new(spec4x4());
+        let alloc = a.allocate(6).unwrap();
+        assert!(alloc.spans_nodes());
+        assert_eq!(alloc.n_gpus(), 6);
+        assert_eq!(a.free_gpus(), 10);
+    }
+
+    #[test]
+    fn allocator_exhaustion() {
+        let mut a = Allocator::new(spec4x4());
+        assert!(a.allocate(17).is_none());
+        let x = a.allocate(16).unwrap();
+        assert!(a.allocate(1).is_none());
+        a.release(&x);
+        assert_eq!(a.free_gpus(), 16);
+    }
+
+    #[test]
+    fn release_restores_exact_capacity() {
+        let mut a = Allocator::new(spec4x4());
+        let x = a.allocate(3).unwrap();
+        let y = a.allocate(5).unwrap();
+        a.release(&x);
+        a.release(&y);
+        assert_eq!(a.free_gpus(), 16);
+        assert!(a.allocate(16).is_some());
+    }
+
+    #[test]
+    fn union_dedups() {
+        let a = Allocation {
+            gpus: vec![GpuId { node: 0, idx: 0 }, GpuId { node: 0, idx: 1 }],
+        };
+        let b = Allocation {
+            gpus: vec![GpuId { node: 0, idx: 1 }, GpuId { node: 1, idx: 0 }],
+        };
+        assert_eq!(a.union(&b).n_gpus(), 3);
+    }
+
+    #[test]
+    fn default_cluster_shape() {
+        let s = ClusterSpec::default_128();
+        assert_eq!(s.total_gpus(), 128);
+        assert_eq!(s.gpus_per_node, 8);
+    }
+}

@@ -1,0 +1,347 @@
+//! Typed experiment configuration with JSON I/O and validation.
+//!
+//! Everything a run needs — cluster shape, workload profile, scheduler
+//! policy, kernel/AIMD knobs — in one validated struct, loadable from a
+//! JSON file (`tlora simulate --config run.json`) and overridable from
+//! the CLI. Defaults reproduce the paper's §4.1 setup.
+
+use crate::cluster::ClusterSpec;
+use crate::util::json::Json;
+use crate::workload::trace::TraceProfile;
+
+/// Which end-to-end policy stack to run (§4.1 baselines).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Policy {
+    /// full tLoRA: Adapter Scheduler + Model Fuser + Kernel Fuser
+    TLora,
+    /// ablation: mLoRA's memory-only grouping + tLoRA kernels
+    TLoraNoSched,
+    /// ablation: tLoRA scheduler + unfused per-adapter kernels
+    TLoraNoKernel,
+    /// mLoRA baseline: FIFO memory-capacity grouping, unfused kernels
+    MLora,
+    /// Megatron baseline: every job isolated on its own allocation
+    Megatron,
+}
+
+impl Policy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::TLora => "tLoRA",
+            Policy::TLoraNoSched => "tLoRA w/o Scheduler",
+            Policy::TLoraNoKernel => "tLoRA w/o Kernel Fuser",
+            Policy::MLora => "mLoRA",
+            Policy::Megatron => "Megatron",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Policy> {
+        match s.to_ascii_lowercase().as_str() {
+            "tlora" => Some(Policy::TLora),
+            "tlora-no-sched" | "no-sched" => Some(Policy::TLoraNoSched),
+            "tlora-no-kernel" | "no-kernel" => Some(Policy::TLoraNoKernel),
+            "mlora" => Some(Policy::MLora),
+            "megatron" => Some(Policy::Megatron),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [Policy; 5] {
+        [
+            Policy::TLora,
+            Policy::TLoraNoSched,
+            Policy::TLoraNoKernel,
+            Policy::MLora,
+            Policy::Megatron,
+        ]
+    }
+
+    /// Does this policy group jobs with the tLoRA Adapter Scheduler?
+    pub fn uses_tlora_scheduler(&self) -> bool {
+        matches!(self, Policy::TLora | Policy::TLoraNoKernel)
+    }
+
+    /// Does this policy execute groups with the fused kernel + AIMD
+    /// nano-batching?
+    pub fn uses_kernel_fuser(&self) -> bool {
+        matches!(self, Policy::TLora | Policy::TLoraNoSched)
+    }
+
+    /// Does this policy group at all?
+    pub fn groups_jobs(&self) -> bool {
+        !matches!(self, Policy::Megatron)
+    }
+}
+
+/// AIMD controller knobs (§3.3 Eq. 2; α=4, β=1/2 are the paper defaults).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AimdConfig {
+    pub alpha: usize,
+    pub beta: f64,
+    /// stability margin τ as a fraction of the previous step time
+    pub tau_frac: f64,
+    /// initial nano-batch count
+    pub n0: usize,
+    pub n_max: usize,
+}
+
+impl Default for AimdConfig {
+    fn default() -> Self {
+        AimdConfig {
+            alpha: 4,
+            beta: 0.5,
+            // τ as a fraction of the previous step time. Tight enough
+            // that the shallow slope near the optimum still registers
+            // as regression (a looser margin lets exploratory probes
+            // ratchet N upward); the EMA of real step times supplies
+            // the actual noise floor.
+            tau_frac: 0.005,
+            n0: 1,
+            n_max: 64,
+        }
+    }
+}
+
+/// Adapter Scheduler knobs (§3.4).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SchedulerConfig {
+    /// scheduling horizon in seconds (regroup cadence)
+    pub horizon_s: f64,
+    /// default Δ^max when a job does not specify one
+    pub default_max_slowdown: f64,
+    /// max jobs per fused group (memory/compile guardrail)
+    pub max_group_size: usize,
+    /// minimum predicted throughput gain to accept a merge
+    pub min_merge_gain: f64,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            horizon_s: 60.0,
+            default_max_slowdown: 1.5,
+            max_group_size: 8,
+            min_merge_gain: 1.02,
+        }
+    }
+}
+
+/// Full experiment configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentConfig {
+    pub policy: Policy,
+    pub cluster: ClusterSpec,
+    pub trace: TraceProfile,
+    pub n_jobs: usize,
+    pub seed: u64,
+    pub scheduler: SchedulerConfig,
+    pub aimd: AimdConfig,
+    /// global concurrency cap (§A.1: 128 runnable jobs)
+    pub max_concurrent_jobs: usize,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            policy: Policy::TLora,
+            cluster: ClusterSpec::default_128(),
+            trace: TraceProfile::month1(),
+            n_jobs: 200,
+            seed: 42,
+            scheduler: SchedulerConfig::default(),
+            aimd: AimdConfig::default(),
+            max_concurrent_jobs: 128,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.cluster.total_gpus() == 0 {
+            return Err("cluster has zero GPUs".into());
+        }
+        if self.n_jobs == 0 {
+            return Err("n_jobs must be > 0".into());
+        }
+        if !(0.0..1.0).contains(&self.aimd.beta) {
+            return Err(format!("aimd.beta {} not in (0,1)", self.aimd.beta));
+        }
+        if self.aimd.n0 == 0 || self.aimd.n_max < self.aimd.n0 {
+            return Err("aimd n0/n_max invalid".into());
+        }
+        if self.scheduler.horizon_s <= 0.0 {
+            return Err("scheduler horizon must be positive".into());
+        }
+        if self.scheduler.max_group_size == 0 {
+            return Err("max_group_size must be > 0".into());
+        }
+        if self.trace.rate <= 0.0 {
+            return Err("trace rate must be positive".into());
+        }
+        Ok(())
+    }
+
+    // ---------------- JSON ----------------
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("policy", self.policy.name().to_ascii_lowercase()
+                .replace(' ', "-").replace("w/o", "no"))
+            .set("n_gpus", self.cluster.total_gpus())
+            .set("n_jobs", self.n_jobs)
+            .set("seed", self.seed)
+            .set("trace_rate", self.trace.rate)
+            .set("burst_prob", self.trace.burst_prob)
+            .set("horizon_s", self.scheduler.horizon_s)
+            .set("max_group_size", self.scheduler.max_group_size)
+            .set("min_merge_gain", self.scheduler.min_merge_gain)
+            .set("default_max_slowdown",
+                 self.scheduler.default_max_slowdown)
+            .set("aimd_alpha", self.aimd.alpha)
+            .set("aimd_beta", self.aimd.beta)
+            .set("aimd_tau_frac", self.aimd.tau_frac)
+            .set("aimd_n0", self.aimd.n0)
+            .set("aimd_n_max", self.aimd.n_max)
+            .set("max_concurrent_jobs", self.max_concurrent_jobs)
+    }
+
+    /// Apply JSON overrides onto `self` (missing keys keep defaults).
+    pub fn apply_json(&mut self, j: &Json) -> Result<(), String> {
+        if let Some(p) = j.get("policy").and_then(Json::as_str) {
+            self.policy = Policy::parse(p)
+                .ok_or_else(|| format!("unknown policy {p}"))?;
+        }
+        if let Some(n) = j.get("n_gpus").and_then(Json::as_usize) {
+            self.cluster = ClusterSpec::with_gpus(n);
+        }
+        if let Some(n) = j.get("n_jobs").and_then(Json::as_usize) {
+            self.n_jobs = n;
+        }
+        if let Some(s) = j.get("seed").and_then(Json::as_i64) {
+            self.seed = s as u64;
+        }
+        if let Some(r) = j.get("trace_rate").and_then(Json::as_f64) {
+            self.trace.rate = r;
+        }
+        if let Some(p) = j.get("burst_prob").and_then(Json::as_f64) {
+            self.trace.burst_prob = p;
+        }
+        if let Some(h) = j.get("horizon_s").and_then(Json::as_f64) {
+            self.scheduler.horizon_s = h;
+        }
+        if let Some(m) = j.get("max_group_size").and_then(Json::as_usize) {
+            self.scheduler.max_group_size = m;
+        }
+        if let Some(g) = j.get("min_merge_gain").and_then(Json::as_f64) {
+            self.scheduler.min_merge_gain = g;
+        }
+        if let Some(d) = j.get("default_max_slowdown").and_then(Json::as_f64)
+        {
+            self.scheduler.default_max_slowdown = d;
+        }
+        if let Some(a) = j.get("aimd_alpha").and_then(Json::as_usize) {
+            self.aimd.alpha = a;
+        }
+        if let Some(b) = j.get("aimd_beta").and_then(Json::as_f64) {
+            self.aimd.beta = b;
+        }
+        if let Some(t) = j.get("aimd_tau_frac").and_then(Json::as_f64) {
+            self.aimd.tau_frac = t;
+        }
+        if let Some(n) = j.get("aimd_n0").and_then(Json::as_usize) {
+            self.aimd.n0 = n;
+        }
+        if let Some(n) = j.get("aimd_n_max").and_then(Json::as_usize) {
+            self.aimd.n_max = n;
+        }
+        if let Some(m) =
+            j.get("max_concurrent_jobs").and_then(Json::as_usize)
+        {
+            self.max_concurrent_jobs = m;
+        }
+        self.validate()
+    }
+
+    pub fn from_json(j: &Json) -> Result<ExperimentConfig, String> {
+        let mut c = ExperimentConfig::default();
+        c.apply_json(j)?;
+        Ok(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn default_is_valid() {
+        assert!(ExperimentConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in Policy::all() {
+            let s = match p {
+                Policy::TLora => "tlora",
+                Policy::TLoraNoSched => "tlora-no-sched",
+                Policy::TLoraNoKernel => "tlora-no-kernel",
+                Policy::MLora => "mlora",
+                Policy::Megatron => "megatron",
+            };
+            assert_eq!(Policy::parse(s), Some(p));
+        }
+        assert_eq!(Policy::parse("nonsense"), None);
+    }
+
+    #[test]
+    fn policy_capability_matrix() {
+        assert!(Policy::TLora.uses_tlora_scheduler());
+        assert!(Policy::TLora.uses_kernel_fuser());
+        assert!(!Policy::MLora.uses_tlora_scheduler());
+        assert!(!Policy::MLora.uses_kernel_fuser());
+        assert!(Policy::TLoraNoSched.uses_kernel_fuser());
+        assert!(!Policy::TLoraNoSched.uses_tlora_scheduler());
+        assert!(Policy::TLoraNoKernel.uses_tlora_scheduler());
+        assert!(!Policy::TLoraNoKernel.uses_kernel_fuser());
+        assert!(!Policy::Megatron.groups_jobs());
+    }
+
+    #[test]
+    fn json_roundtrip_overrides() {
+        let text = r#"{"policy": "mlora", "n_gpus": 32, "n_jobs": 10,
+                       "aimd_beta": 0.25, "horizon_s": 30.0}"#;
+        let j = json::parse(text).unwrap();
+        let c = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(c.policy, Policy::MLora);
+        assert_eq!(c.cluster.total_gpus(), 32);
+        assert_eq!(c.n_jobs, 10);
+        assert_eq!(c.aimd.beta, 0.25);
+        assert_eq!(c.scheduler.horizon_s, 30.0);
+        // untouched keys keep defaults
+        assert_eq!(c.aimd.alpha, 4);
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut c = ExperimentConfig::default();
+        c.aimd.beta = 1.5;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.n_jobs = 0;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.scheduler.horizon_s = -1.0;
+        assert!(c.validate().is_err());
+        let j = json::parse(r#"{"policy": "bogus"}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn to_json_parses_back() {
+        let c = ExperimentConfig::default();
+        let j = c.to_json();
+        let j2 = json::parse(&j.to_string()).unwrap();
+        assert_eq!(j2.get("aimd_alpha").unwrap().as_usize().unwrap(), 4);
+    }
+}

@@ -1,0 +1,233 @@
+//! L3 leader: owns the event loop and process topology for *real*
+//! (non-simulated) fused training.
+//!
+//! The PJRT handles are thread-local by construction (raw C pointers, not
+//! `Send`), so the coordinator spawns a dedicated executor thread that
+//! builds the `Runtime`/`Trainer` in place; the leader talks to it over
+//! channels. Job streams submit per-adapter work, the leader composes
+//! round-robin fused batches (the nano-batch-friendly layout), and jobs
+//! retire independently as their step budgets complete — the "elastic"
+//! part of the Shared Super-Model: remaining jobs keep the fused
+//! executable warm and simply mask retired slots.
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::StepStats;
+use crate::train::data::SyntheticCorpus;
+
+enum Request {
+    Step {
+        tokens: Vec<i32>,
+        adapter_ids: Vec<i32>,
+        reply: mpsc::Sender<Result<StepStats>>,
+    },
+    VariantInfo {
+        reply: mpsc::Sender<VariantInfo>,
+    },
+    Shutdown,
+}
+
+/// Static info the leader needs from the executor side.
+#[derive(Debug, Clone)]
+pub struct VariantInfo {
+    pub num_adapters: usize,
+    pub batch_sizes: Vec<usize>,
+    pub seq_len: usize,
+    pub vocab: usize,
+}
+
+/// Handle to the executor thread.
+pub struct Coordinator {
+    tx: mpsc::Sender<Request>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Spawn the executor thread for `variant`; the PJRT client, the
+    /// compiled step, and all device state live on that thread.
+    pub fn spawn(artifacts_dir: PathBuf, variant: String, seed: i32)
+        -> Result<Coordinator> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let handle = std::thread::spawn(move || {
+            let built = (|| -> Result<_> {
+                let rt = crate::runtime::Runtime::new(&artifacts_dir)?;
+                let trainer =
+                    crate::runtime::Trainer::new(&rt, &variant, seed)?;
+                Ok(trainer)
+            })();
+            let mut trainer = match built {
+                Ok(t) => {
+                    let _ = ready_tx.send(Ok(()));
+                    t
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            while let Ok(req) = rx.recv() {
+                match req {
+                    Request::Step {
+                        tokens,
+                        adapter_ids,
+                        reply,
+                    } => {
+                        let r = trainer.step(&tokens, &adapter_ids);
+                        let _ = reply.send(r);
+                    }
+                    Request::VariantInfo { reply } => {
+                        let cfg = &trainer.variant().config;
+                        let _ = reply.send(VariantInfo {
+                            num_adapters: cfg.num_adapters,
+                            batch_sizes: cfg.batch_sizes.clone(),
+                            seq_len: cfg.seq_len,
+                            vocab: cfg.vocab,
+                        });
+                    }
+                    Request::Shutdown => break,
+                }
+            }
+        });
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("executor thread died during init"))??;
+        Ok(Coordinator {
+            tx,
+            handle: Some(handle),
+        })
+    }
+
+    pub fn variant_info(&self) -> Result<VariantInfo> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::VariantInfo { reply })
+            .map_err(|_| anyhow!("executor gone"))?;
+        rx.recv().map_err(|_| anyhow!("executor gone"))
+    }
+
+    /// Synchronous fused step RPC.
+    pub fn step(&self, tokens: Vec<i32>, adapter_ids: Vec<i32>)
+        -> Result<StepStats> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Step {
+                tokens,
+                adapter_ids,
+                reply,
+            })
+            .map_err(|_| anyhow!("executor gone"))?;
+        rx.recv().map_err(|_| anyhow!("executor gone"))?
+    }
+
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One client job in a fused run: an adapter slot + a step budget.
+#[derive(Debug, Clone)]
+pub struct FusedJob {
+    pub adapter_slot: usize,
+    pub steps: u64,
+}
+
+/// Outcome of [`run_fused_jobs`].
+#[derive(Debug, Clone)]
+pub struct FusedRunReport {
+    /// per job: (slot, steps executed, final per-adapter loss)
+    pub jobs: Vec<(usize, u64, f32)>,
+    pub fused_steps: u64,
+    pub mean_step_s: f64,
+    /// (fused step, per-adapter losses)
+    pub loss_log: Vec<(u64, Vec<f32>)>,
+}
+
+/// Drive K jobs with heterogeneous step budgets through one SSM.
+/// Jobs retire independently (elastic): once a job's budget is done its
+/// slot is masked (adapter id -1 ⇒ zero contribution, frozen adapter).
+pub fn run_fused_jobs(
+    coord: &Coordinator,
+    jobs: &[FusedJob],
+    seed: u64,
+    log_every: u64,
+) -> Result<FusedRunReport> {
+    let info = coord.variant_info()?;
+    let mut remaining: Vec<u64> = vec![0; info.num_adapters];
+    for j in jobs {
+        if j.adapter_slot >= info.num_adapters {
+            return Err(anyhow!(
+                "job slot {} out of range (K={})",
+                j.adapter_slot,
+                info.num_adapters
+            ));
+        }
+        remaining[j.adapter_slot] = j.steps;
+    }
+    let mut corpus = SyntheticCorpus::new(
+        info.vocab,
+        info.seq_len,
+        info.num_adapters,
+        seed,
+    );
+    let mut executed: Vec<u64> = vec![0; info.num_adapters];
+    let mut last_per: Vec<f32> = vec![f32::NAN; info.num_adapters];
+    let mut loss_log = vec![];
+    let mut fused_steps = 0u64;
+    let t0 = std::time::Instant::now();
+
+    while remaining.iter().any(|&r| r > 0) {
+        let (tokens, mut ids) = corpus.fused_batch(&info.batch_sizes);
+        // mask retired jobs' slots
+        for id in ids.iter_mut() {
+            let slot = *id as usize;
+            if remaining[slot] == 0 {
+                *id = -1;
+            }
+        }
+        let stats = coord.step(tokens, ids)?;
+        for slot in 0..info.num_adapters {
+            if remaining[slot] > 0 {
+                remaining[slot] -= 1;
+                executed[slot] += 1;
+                last_per[slot] = stats.per_adapter_loss[slot];
+            }
+        }
+        if fused_steps % log_every.max(1) == 0 {
+            loss_log.push((fused_steps, stats.per_adapter_loss.clone()));
+        }
+        fused_steps += 1;
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    Ok(FusedRunReport {
+        jobs: jobs
+            .iter()
+            .map(|j| {
+                (
+                    j.adapter_slot,
+                    executed[j.adapter_slot],
+                    last_per[j.adapter_slot],
+                )
+            })
+            .collect(),
+        fused_steps,
+        mean_step_s: elapsed / fused_steps.max(1) as f64,
+        loss_log,
+    })
+}

@@ -1,0 +1,274 @@
+//! AIMD nano-batch controller (§3.3, Eq. 2).
+//!
+//! ```text
+//! N_{t+1} = N_t + α            if T_t <= T_{t-1} - τ
+//!         = max(1, ⌊β N_t⌋)    otherwise
+//! ```
+//!
+//! α = 4, β = 1/2 by default; τ filters measurement noise. The
+//! controller only consumes end-to-end step times, so it adapts to
+//! whatever the real bottleneck is (accelerator, interconnect,
+//! contention) without a cost model — and each probe step still makes
+//! training progress.
+
+use crate::config::AimdConfig;
+
+#[derive(Debug, Clone)]
+pub struct AimdController {
+    cfg: AimdConfig,
+    n: usize,
+    prev_t: Option<f64>,
+    /// best (time, n) seen — used for reporting and for re-anchoring
+    /// after backoff
+    best: Option<(f64, usize)>,
+    adjustments: u64,
+    /// consecutive observations with |T_t - T_{t-1}| <= τ (plateau)
+    plateau: u32,
+}
+
+/// Plateau length that triggers an exploratory +α probe. Eq. 2 as
+/// written assumes noisy T_t; on a quiet system T_t == T_{t-1} forever
+/// and the controller would park (worst case at N=1). Periodic probing
+/// restores the classic AIMD sawtooth around the optimum; probing every
+/// 8th plateau step keeps the exploration tax under a few percent
+/// (§Perf log in EXPERIMENTS.md).
+const PROBE_AFTER_PLATEAU: u32 = 8;
+
+impl AimdController {
+    pub fn new(cfg: AimdConfig) -> AimdController {
+        let n = cfg.n0.max(1);
+        AimdController {
+            cfg,
+            n,
+            prev_t: None,
+            best: None,
+            adjustments: 0,
+            plateau: 0,
+        }
+    }
+
+    /// Current nano-batch count to use for the next step.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn adjustments(&self) -> u64 {
+        self.adjustments
+    }
+
+    pub fn best(&self) -> Option<(f64, usize)> {
+        self.best
+    }
+
+    /// Feed the observed end-to-end time of the step that ran with the
+    /// current `n`; returns the `n` for the next step.
+    pub fn observe(&mut self, t: f64) -> usize {
+        if self
+            .best
+            .map_or(true, |(bt, _)| t < bt)
+        {
+            self.best = Some((t, self.n));
+        }
+        let next = match self.prev_t {
+            None => self.n + self.cfg.alpha, // first probe: explore up
+            Some(prev) => {
+                let tau = self.cfg.tau_frac * prev;
+                if t <= prev - tau {
+                    // improvement: additive increase
+                    self.plateau = 0;
+                    self.n + self.cfg.alpha
+                } else if t >= prev + tau {
+                    // regression: multiplicative decrease, re-anchored
+                    // to the best N seen when that lies below us — a
+                    // failed probe returns directly to the optimum
+                    // instead of paying the sawtooth ramp again
+                    self.plateau = 0;
+                    let backoff = ((self.n as f64 * self.cfg.beta)
+                        .floor() as usize)
+                        .max(1);
+                    match self.best {
+                        Some((_, bn)) if bn >= backoff && bn < self.n => {
+                            bn
+                        }
+                        _ => backoff,
+                    }
+                } else {
+                    // within the noise margin: hold, then probe — see
+                    // PROBE_AFTER_PLATEAU
+                    self.plateau += 1;
+                    if self.plateau >= PROBE_AFTER_PLATEAU {
+                        self.plateau = 0;
+                        self.n + self.cfg.alpha
+                    } else {
+                        self.n
+                    }
+                }
+            }
+        };
+        self.prev_t = Some(t);
+        self.n = next.clamp(1, self.cfg.n_max);
+        self.adjustments += 1;
+        self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernelsim::overlap::iter_time;
+
+    fn cfg() -> AimdConfig {
+        AimdConfig::default()
+    }
+
+    /// Synthetic step-time curve with a clear interior optimum.
+    fn t_of(n: usize) -> f64 {
+        iter_time(1.0, 0.8, n, 0.01, 0.002)
+    }
+
+    #[test]
+    fn additive_increase_on_improvement() {
+        let mut c = AimdController::new(cfg());
+        let n0 = c.n();
+        let n1 = c.observe(1.0); // first probe explores upward
+        assert_eq!(n1, n0 + 4);
+        let n2 = c.observe(0.8); // improved: increase again
+        assert_eq!(n2, n1 + 4);
+    }
+
+    #[test]
+    fn multiplicative_decrease_on_regression() {
+        let mut c = AimdController::new(cfg());
+        c.observe(1.0);
+        c.observe(0.5);
+        let n = c.n();
+        let best_n = c.best().unwrap().1;
+        let n_after = c.observe(0.9); // worse: back off
+        // Eq. 2 backoff, re-anchored to the best-seen N when that lies
+        // in [βN, N)
+        let backoff = (n / 2).max(1);
+        let expect = if best_n >= backoff && best_n < n {
+            best_n
+        } else {
+            backoff
+        };
+        assert_eq!(n_after, expect);
+        assert!(n_after < n);
+    }
+
+    #[test]
+    fn never_below_one_or_above_max(){
+        let mut c = AimdController::new(cfg());
+        for i in 0..200 {
+            // alternate improving/worsening wildly
+            let t = if i % 2 == 0 { 0.1 } else { 10.0 };
+            let n = c.observe(t);
+            assert!(n >= 1 && n <= AimdConfig::default().n_max);
+        }
+    }
+
+    #[test]
+    fn converges_near_optimum_of_synthetic_curve() {
+        // run the controller against the Eq.-1 overlap curve and check
+        // it spends late steps near the best fixed N
+        let (best_n, _) = (1..=64)
+            .map(|n| (n, t_of(n)))
+            .min_by(|a, b| crate::util::f64_cmp(a.1, b.1))
+            .unwrap();
+        let mut c = AimdController::new(cfg());
+        let mut visits = vec![];
+        for _ in 0..300 {
+            let n = c.n();
+            visits.push(n);
+            c.observe(t_of(n));
+        }
+        // average N over the last half should bracket the optimum
+        let tail = &visits[150..];
+        let mean_n =
+            tail.iter().sum::<usize>() as f64 / tail.len() as f64;
+        assert!(
+            (mean_n - best_n as f64).abs() <= best_n as f64,
+            "mean {mean_n} vs best {best_n}"
+        );
+        // and the best time seen should be within 15% of the true best
+        let best_seen = c.best().unwrap().0;
+        assert!(best_seen <= t_of(best_n) * 1.15);
+    }
+
+    #[test]
+    fn backoff_is_logarithmic() {
+        // from n_max, consecutive regressions reach 1 in O(log N) steps
+        let mut c = AimdController::new(AimdConfig {
+            n0: 64,
+            ..cfg()
+        });
+        c.observe(1.0);
+        let mut steps = 0;
+        let mut t = 100.0;
+        while c.n() > 1 {
+            t *= 1.1; // clearly worse each step (beyond the τ margin)
+            c.observe(t);
+            steps += 1;
+            assert!(steps < 20, "backoff too slow");
+        }
+        assert!(steps <= 8, "{steps} steps to reach 1 from 64+");
+    }
+
+    #[test]
+    fn noise_within_tau_holds_instead_of_oscillating() {
+        let mut c = AimdController::new(cfg());
+        c.observe(1.0);
+        // change below tau: neither increase nor multiplicative backoff
+        let n_before = c.n();
+        let n_after = c.observe(0.9999);
+        assert_eq!(n_after, n_before);
+    }
+
+    #[test]
+    fn plateau_triggers_probe() {
+        // a perfectly quiet system must not park forever: after a few
+        // same-time observations the controller probes upward
+        let mut c = AimdController::new(cfg());
+        c.observe(1.0);
+        c.observe(5.0); // force a backoff toward small N
+        c.observe(5.0);
+        let parked = c.n();
+        let mut n = parked;
+        for _ in 0..2 * super::PROBE_AFTER_PLATEAU {
+            n = c.observe(3.0); // constant plateau at the new level
+            if n > parked {
+                break;
+            }
+        }
+        assert!(n > parked, "controller never probed out of plateau");
+    }
+
+    #[test]
+    fn tracks_bandwidth_change() {
+        // optimum shifts when comm grows; the controller must follow
+        let mut c = AimdController::new(cfg());
+        for _ in 0..100 {
+            let t = iter_time(1.0, 0.3, c.n(), 0.004, 0.001);
+            c.observe(t);
+        }
+        let (best1, _) = (1..=64)
+            .map(|n| (n, iter_time(1.0, 0.3, n, 0.004, 0.001)))
+            .min_by(|a, b| crate::util::f64_cmp(a.1, b.1))
+            .unwrap();
+        let t_now = iter_time(1.0, 0.3, c.n(), 0.004, 0.001);
+        let t_best = iter_time(1.0, 0.3, best1, 0.004, 0.001);
+        assert!(t_now <= t_best * 1.25, "{t_now} vs {t_best}");
+        // congestion: comm jumps 4x
+        for _ in 0..100 {
+            let t = iter_time(1.0, 1.2, c.n(), 0.004, 0.001);
+            c.observe(t);
+        }
+        let (best2, _) = (1..=64)
+            .map(|n| (n, iter_time(1.0, 1.2, n, 0.004, 0.001)))
+            .min_by(|a, b| crate::util::f64_cmp(a.1, b.1))
+            .unwrap();
+        let t_now = iter_time(1.0, 1.2, c.n(), 0.004, 0.001);
+        let t_best = iter_time(1.0, 1.2, best2, 0.004, 0.001);
+        assert!(t_now <= t_best * 1.25, "{t_now} vs {t_best}");
+    }
+}

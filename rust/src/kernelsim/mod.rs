@@ -1,0 +1,19 @@
+//! Kernel Fuser runtime model (§3.3): fused-kernel execution time,
+//! nano-batch partitioning, the AIMD controller, and the Eq.-1
+//! computation/communication overlap engine.
+//!
+//! The *numerics* of the fused kernel live in Pallas
+//! (`python/compile/kernels/fused_lora.py`, validated against `ref.py`);
+//! this module is the performance model the simulator and scheduler use
+//! to predict how a fused group executes on the modeled GPUs — the same
+//! role the paper's profiling pass plays for its Triton kernel.
+
+pub mod tile;
+pub mod nano;
+pub mod aimd;
+pub mod overlap;
+
+pub use aimd::AimdController;
+pub use nano::{nano_sizes, NanoLayout};
+pub use overlap::iter_time;
+pub use tile::{adapter_exec_time, AdapterLoad};

@@ -1,0 +1,142 @@
+//! Nano-batch partitioning (§3.3).
+//!
+//! A nano-batch splits the current fused batch along the batch dimension
+//! into N execution units; samples in a nano-batch are processed together
+//! by the fused kernel before the next nano-batch starts, exposing
+//! fine-grained comm/comp overlap. The coordinator lays sequences out
+//! round-robin across jobs so each nano-batch has the same per-job
+//! composition (which is what keeps nano-batched gradients identical to
+//! the full-batch step — see `train_step_nano` in model.py).
+
+/// Balanced split of `total` samples into `n` nano-batches:
+/// sizes differ by at most one and sum exactly to `total`.
+pub fn nano_sizes(total: usize, n: usize) -> Vec<usize> {
+    let n = n.clamp(1, total.max(1));
+    let base = total / n;
+    let rem = total % n;
+    (0..n)
+        .map(|i| base + usize::from(i < rem))
+        .collect()
+}
+
+/// Round-robin assignment of each job's sequences to nano-batches.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NanoLayout {
+    /// per nano-batch: list of (job index, sequence count)
+    pub slices: Vec<Vec<(usize, usize)>>,
+}
+
+impl NanoLayout {
+    /// Distribute `batch_sizes[j]` sequences of each job j across `n`
+    /// nano-batches as evenly as possible.
+    pub fn round_robin(batch_sizes: &[usize], n: usize) -> NanoLayout {
+        let total: usize = batch_sizes.iter().sum();
+        let n = n.clamp(1, total.max(1));
+        let mut slices = vec![vec![]; n];
+        for (j, &b) in batch_sizes.iter().enumerate() {
+            for (i, slice) in slices.iter_mut().enumerate() {
+                let cnt = b / n + usize::from(i < b % n);
+                if cnt > 0 {
+                    slice.push((j, cnt));
+                }
+            }
+        }
+        NanoLayout { slices }
+    }
+
+    pub fn n(&self) -> usize {
+        self.slices.len()
+    }
+
+    /// Total sequences in nano-batch `i`.
+    pub fn slice_size(&self, i: usize) -> usize {
+        self.slices[i].iter().map(|&(_, c)| c).sum()
+    }
+
+    /// Check conservation: every job's sequences appear exactly once.
+    pub fn validate(&self, batch_sizes: &[usize]) -> Result<(), String> {
+        let mut per_job = vec![0usize; batch_sizes.len()];
+        for slice in &self.slices {
+            for &(j, c) in slice {
+                if j >= batch_sizes.len() {
+                    return Err(format!("slice references job {j}"));
+                }
+                per_job[j] += c;
+            }
+        }
+        for (j, (&got, &want)) in
+            per_job.iter().zip(batch_sizes).enumerate()
+        {
+            if got != want {
+                return Err(format!("job {j}: {got} sequences, want {want}"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Max/min slice-size imbalance (1.0 = perfectly balanced).
+    pub fn imbalance(&self) -> f64 {
+        let sizes: Vec<usize> =
+            (0..self.n()).map(|i| self.slice_size(i)).collect();
+        let mx = *sizes.iter().max().unwrap_or(&1) as f64;
+        let mn = *sizes.iter().min().unwrap_or(&1) as f64;
+        if mn > 0.0 {
+            mx / mn
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_sum_and_balance() {
+        for total in [1usize, 7, 16, 33] {
+            for n in [1usize, 2, 3, 8, 64] {
+                let s = nano_sizes(total, n);
+                assert_eq!(s.iter().sum::<usize>(), total);
+                let mx = *s.iter().max().unwrap();
+                let mn = *s.iter().min().unwrap();
+                assert!(mx - mn <= 1, "total={total} n={n} {s:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn n_clamped_to_total() {
+        assert_eq!(nano_sizes(3, 10).len(), 3);
+        assert_eq!(nano_sizes(5, 0).len(), 1);
+    }
+
+    #[test]
+    fn round_robin_conserves_sequences() {
+        let batches = [1usize, 2, 4, 8];
+        for n in [1usize, 2, 3, 5] {
+            let l = NanoLayout::round_robin(&batches, n);
+            l.validate(&batches).unwrap();
+        }
+    }
+
+    #[test]
+    fn round_robin_balanced_when_divisible() {
+        let l = NanoLayout::round_robin(&[2, 2, 2], 2);
+        assert_eq!(l.n(), 2);
+        assert_eq!(l.slice_size(0), 3);
+        assert_eq!(l.slice_size(1), 3);
+        assert_eq!(l.imbalance(), 1.0);
+        // each slice holds one sequence of every job
+        for i in 0..2 {
+            assert_eq!(l.slices[i].len(), 3);
+        }
+    }
+
+    #[test]
+    fn imbalance_bounded() {
+        let l = NanoLayout::round_robin(&[1, 2, 4, 8], 4);
+        l.validate(&[1, 2, 4, 8]).unwrap();
+        assert!(l.imbalance() <= 2.0, "{}", l.imbalance());
+    }
+}

@@ -1,0 +1,124 @@
+//! Eq.-1 computation/communication overlap engine (§3.3).
+//!
+//! With the batch split into N nano-batches, communication for nano-batch
+//! i can start as soon as its compute finishes, so
+//!
+//! ```text
+//! T_iter(N) = comp/N + oh                       (first nano's compute)
+//!           + max( (N-1)/N·comp + (N-1)·oh ,    (remaining compute)
+//!                  comm + N·lat )               (all communication)
+//! ```
+//!
+//! which reduces to the paper's `max(ΣT_comp, ΣT_comm)` ideal when the
+//! per-nano overheads (kernel launch `oh`, per-message latency `lat`)
+//! vanish. Too few nano-batches delay communication behind long compute
+//! phases; too many pay `N·(oh + lat)` — exactly the trade-off the AIMD
+//! controller searches.
+
+/// End-to-end iteration time for compute `comp` seconds and
+/// communication `comm` seconds split into `n` nano-batches, with
+/// per-nano kernel-launch overhead `oh` and per-message latency `lat`.
+pub fn iter_time(comp: f64, comm: f64, n: usize, oh: f64, lat: f64) -> f64 {
+    let n = n.max(1) as f64;
+    let first = comp / n + oh;
+    let rest_comp = comp * (n - 1.0) / n + oh * (n - 1.0);
+    let all_comm = comm + lat * n;
+    first + rest_comp.max(all_comm)
+}
+
+/// The no-overlap execution (what a policy without the Kernel Fuser
+/// pays): strictly serial compute then communicate.
+pub fn serial_time(comp: f64, comm: f64, oh: f64, lat: f64) -> f64 {
+    iter_time(comp, comm, 1, oh, lat)
+}
+
+/// Best fixed nano-batch count by exhaustive scan (oracle for Fig. 8a
+/// and for tests; the online system uses AIMD instead).
+pub fn best_fixed_n(
+    comp: f64,
+    comm: f64,
+    n_max: usize,
+    oh: f64,
+    lat: f64,
+) -> (usize, f64) {
+    (1..=n_max.max(1))
+        .map(|n| (n, iter_time(comp, comm, n, oh, lat)))
+        .min_by(|a, b| crate::util::f64_cmp(a.1, b.1))
+        .unwrap()
+}
+
+/// Lower bound: perfect overlap with zero overheads (paper Eq. 1).
+pub fn ideal_time(comp: f64, comm: f64) -> f64 {
+    comp.max(comm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn n1_is_serial() {
+        let t = iter_time(2.0, 1.0, 1, 0.0, 0.0);
+        assert!((t - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overlap_improves_over_serial() {
+        let serial = serial_time(1.0, 1.0, 0.001, 0.0001);
+        let (best_n, best_t) = best_fixed_n(1.0, 1.0, 64, 0.001, 0.0001);
+        assert!(best_t < serial, "{best_t} vs {serial}");
+        assert!(best_n > 1);
+    }
+
+    #[test]
+    fn approaches_ideal_with_zero_overheads() {
+        let (_, t) = best_fixed_n(1.0, 0.9, 4096, 0.0, 0.0);
+        assert!(t < ideal_time(1.0, 0.9) * 1.01, "{t}");
+        assert!(t >= ideal_time(1.0, 0.9) - 1e-9);
+    }
+
+    #[test]
+    fn never_beats_ideal() {
+        for &(comp, comm) in
+            &[(1.0, 0.5), (0.5, 1.0), (2.0, 2.0), (0.1, 3.0)]
+        {
+            for n in 1..64 {
+                assert!(
+                    iter_time(comp, comm, n, 0.001, 0.0001)
+                        >= ideal_time(comp, comm) - 1e-12
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn large_n_penalized_by_overheads() {
+        let t8 = iter_time(1.0, 0.8, 8, 0.01, 0.002);
+        let t512 = iter_time(1.0, 0.8, 512, 0.01, 0.002);
+        assert!(t512 > t8);
+    }
+
+    #[test]
+    fn interior_optimum_exists() {
+        let (n, _) = best_fixed_n(1.0, 0.8, 256, 0.01, 0.002);
+        assert!(n > 1 && n < 256, "optimum at boundary: {n}");
+    }
+
+    #[test]
+    fn compute_bound_prefers_small_n() {
+        // with negligible comm there is nothing to overlap: larger N
+        // only adds launch overhead
+        let (n, _) = best_fixed_n(1.0, 0.001, 64, 0.01, 0.002);
+        assert_eq!(n, 1);
+    }
+
+    #[test]
+    fn optimum_depends_on_bandwidth() {
+        // §3.3: "the optimal nano-batch size … vary depending on the
+        // inter-GPU connection bandwidth" — slower network (bigger comm)
+        // shifts the optimum
+        let (n_fast, _) = best_fixed_n(1.0, 0.2, 128, 0.005, 0.001);
+        let (n_slow, _) = best_fixed_n(1.0, 0.9, 128, 0.005, 0.001);
+        assert_ne!(n_fast, n_slow);
+    }
+}

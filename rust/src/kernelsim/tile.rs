@@ -1,0 +1,199 @@
+//! Fused vs. unfused LoRA kernel execution-time model.
+//!
+//! §3.3: "a naïve design that processes each adapter independently
+//! launches one kernel per adapter, … incurring excessive overhead, poor
+//! occupancy". The model captures exactly those effects:
+//!
+//! * **fused** — three launches per layer invocation (fwd, dx, dA/dB),
+//!   one pass over the token stream, rank-aware tiles. Efficiency is the
+//!   low-rank-GEMM cap discounted by rank-padding waste (mirrors
+//!   `mxu_utilization_estimate` in the Pallas kernel).
+//! * **unfused** — per-adapter GEMM pairs (6 launches per adapter per
+//!   layer), per-adapter efficiency degraded for small token counts, and
+//!   extra HBM traffic from materialized `(t_i, r)` / `(t_i, d)`
+//!   temporaries.
+
+use crate::cluster::GpuSpec;
+
+/// One adapter's load on a layer: its rank and the tokens it owns.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdapterLoad {
+    pub rank: usize,
+    pub tokens: f64,
+}
+
+/// Low-rank GEMMs cannot reach the dense-GEMM MFU cap: the rank-r inner
+/// dimension starves the MMA pipelines.
+const LOW_RANK_MFU: f64 = 0.30;
+
+/// Token count below which a lone per-adapter kernel underutilizes SMs.
+const SMALL_KERNEL_TOKENS: f64 = 512.0;
+
+/// FLOPs of one adapter's LoRA branches on one layer, fwd+bwd
+/// (q and v targets; wgrad + dgrad on the backward).
+fn adapter_flops(d: f64, load: &AdapterLoad) -> f64 {
+    let fwd = 2.0 * (2.0 * load.tokens * d * load.rank as f64) * 2.0;
+    fwd * 3.0 // fwd + dgrad + wgrad
+}
+
+/// Execution time of all adapter branches of ONE fused layer invocation
+/// on one GPU (the planner divides by the tensor-parallel degree).
+pub fn adapter_exec_time(
+    gpu: &GpuSpec,
+    d_model: usize,
+    adapters: &[AdapterLoad],
+    fused: bool,
+) -> f64 {
+    if adapters.is_empty() {
+        return 0.0;
+    }
+    let d = d_model as f64;
+    let total_tokens: f64 = adapters.iter().map(|a| a.tokens).sum();
+    if fused {
+        // one fused pass: fwd kernel + dx kernel + dA/dB kernel
+        let launches = 3.0;
+        let flops: f64 =
+            adapters.iter().map(|a| adapter_flops(d, a)).sum();
+        // rank-padding waste: tiles padded to r_max (the static-shape
+        // trick that makes heterogeneous ranks share one kernel)
+        let r_max = adapters.iter().map(|a| a.rank).max().unwrap() as f64;
+        let useful: f64 = adapters
+            .iter()
+            .map(|a| a.tokens * a.rank as f64)
+            .sum::<f64>();
+        let padded: f64 = total_tokens * r_max;
+        let pad_eff = (useful / padded).clamp(0.05, 1.0);
+        let eff = LOW_RANK_MFU * (0.5 + 0.5 * pad_eff);
+        // memory: x read + output accumulate per kernel pass; compact
+        // (t, r) intermediates stay in shared memory / VMEM
+        let bytes = 3.0 * (2.0 * total_tokens * d * 2.0);
+        let compute = flops / (gpu.peak_flops * eff);
+        let memory = bytes / gpu.hbm_bw;
+        launches * gpu.launch_overhead_s + compute.max(memory)
+    } else {
+        // per-adapter unfused path: gather + 2 GEMMs fwd, 4 GEMMs bwd
+        let mut t = 0.0;
+        for a in adapters {
+            let launches = 6.0 * 2.0; // per target (q, v)
+            let flops = adapter_flops(d, a);
+            let occupancy =
+                (a.tokens / SMALL_KERNEL_TOKENS).clamp(0.05, 1.0);
+            let eff = LOW_RANK_MFU * occupancy;
+            // materialized temporaries round-trip HBM: gathered x,
+            // (t, r) intermediate, (t, d) output, read back for bwd
+            let bytes = 3.0
+                * (2.0 * a.tokens * d * 2.0
+                    + 2.0 * a.tokens * a.rank as f64 * 4.0)
+                + 2.0 * a.tokens * d * 4.0;
+            let compute = flops / (gpu.peak_flops * eff);
+            let memory = bytes / gpu.hbm_bw;
+            t += launches * gpu.launch_overhead_s + compute.max(memory);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::GpuSpec;
+
+    fn gpu() -> GpuSpec {
+        GpuSpec::a100_80g()
+    }
+
+    fn loads(n: usize, rank: usize, tokens: f64) -> Vec<AdapterLoad> {
+        (0..n).map(|_| AdapterLoad { rank, tokens }).collect()
+    }
+
+    #[test]
+    fn empty_is_free() {
+        assert_eq!(adapter_exec_time(&gpu(), 4096, &[], true), 0.0);
+    }
+
+    #[test]
+    fn fused_beats_unfused_for_many_small_adapters() {
+        // the Fig. 7 effect: 8 small adapters, launch overhead dominates
+        // the unfused path
+        let a = loads(8, 8, 128.0);
+        let fused = adapter_exec_time(&gpu(), 4096, &a, true);
+        let unfused = adapter_exec_time(&gpu(), 4096, &a, false);
+        assert!(
+            unfused > 2.0 * fused,
+            "unfused {unfused:.2e} fused {fused:.2e}"
+        );
+    }
+
+    #[test]
+    fn fused_advantage_grows_with_adapter_count() {
+        let gain = |k: usize| {
+            let a = loads(k, 8, 256.0);
+            adapter_exec_time(&gpu(), 4096, &a, false)
+                / adapter_exec_time(&gpu(), 4096, &a, true)
+        };
+        assert!(gain(16) > gain(4));
+        assert!(gain(4) > gain(1) * 0.99);
+    }
+
+    #[test]
+    fn time_scales_with_tokens() {
+        let small = loads(2, 8, 1024.0);
+        let big = loads(2, 8, 64.0 * 1024.0);
+        assert!(
+            adapter_exec_time(&gpu(), 4096, &big, true)
+                > adapter_exec_time(&gpu(), 4096, &small, true) * 4.0
+        );
+    }
+
+    #[test]
+    fn low_rank_kernel_is_memory_bound_so_padding_is_free() {
+        // arithmetic intensity of the LoRA kernel is ~2r flops/byte,
+        // far below an A100's ~47: the fused kernel is memory-bound at
+        // realistic ranks, so zero-padding heterogeneous ranks to r_max
+        // costs nothing — the property that makes the static-shape
+        // trick cheap (§3.3 / DESIGN.md §Hardware-Adaptation)
+        let homo = vec![
+            AdapterLoad { rank: 8, tokens: 4096.0 },
+            AdapterLoad { rank: 8, tokens: 4096.0 },
+        ];
+        let hetero = vec![
+            AdapterLoad { rank: 2, tokens: 4096.0 },
+            AdapterLoad { rank: 16, tokens: 4096.0 },
+        ];
+        let t_homo = adapter_exec_time(&gpu(), 4096, &homo, true);
+        let t_het = adapter_exec_time(&gpu(), 4096, &hetero, true);
+        assert!((t_homo - t_het).abs() / t_homo < 0.05,
+                "{t_homo:.3e} vs {t_het:.3e}");
+    }
+
+    #[test]
+    fn rank_padding_penalizes_when_compute_bound() {
+        // with memory bandwidth and launch overhead taken out of the
+        // picture, the rank-padding waste shows up as lost efficiency
+        let mut g = gpu();
+        g.hbm_bw = 1e18;
+        g.launch_overhead_s = 0.0;
+        let homo = vec![
+            AdapterLoad { rank: 8, tokens: 4096.0 },
+            AdapterLoad { rank: 8, tokens: 4096.0 },
+        ];
+        let hetero = vec![
+            AdapterLoad { rank: 2, tokens: 4096.0 },
+            AdapterLoad { rank: 16, tokens: 4096.0 },
+        ];
+        let f = |ls: &[AdapterLoad]| -> f64 {
+            ls.iter().map(|a| super::adapter_flops(4096.0, a)).sum()
+        };
+        let eff_homo = f(&homo) / adapter_exec_time(&g, 4096, &homo, true);
+        let eff_het =
+            f(&hetero) / adapter_exec_time(&g, 4096, &hetero, true);
+        assert!(eff_homo > eff_het, "{eff_homo:.3e} vs {eff_het:.3e}");
+    }
+
+    #[test]
+    fn unfused_linear_in_adapters() {
+        let t4 = adapter_exec_time(&gpu(), 4096, &loads(4, 8, 256.0), false);
+        let t8 = adapter_exec_time(&gpu(), 4096, &loads(8, 8, 256.0), false);
+        assert!((t8 / t4 - 2.0).abs() < 0.05);
+    }
+}

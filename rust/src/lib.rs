@@ -1,0 +1,56 @@
+//! # tLoRA — Efficient Multi-LoRA Training with Elastic Shared Super-Models
+//!
+//! Rust + JAX + Pallas reproduction of the tLoRA paper (Li et al., 2026).
+//!
+//! tLoRA batches heterogeneous LoRA fine-tuning jobs that share a frozen
+//! backbone into an *elastic Shared Super-Model* (SSM), executes them with
+//! a fused rank-aware LoRA kernel plus adaptive nano-batching, and groups
+//! jobs online with a residual-capacity-aware scheduler.
+//!
+//! The crate is Layer 3 of a three-layer stack:
+//!
+//! * **L1** — Pallas fused multi-LoRA kernel (`python/compile/kernels/`),
+//!   AOT-lowered to HLO text at build time.
+//! * **L2** — JAX Shared Super-Model train step (`python/compile/model.py`).
+//! * **L3** — this crate: the coordinator, the Adapter Scheduler, the
+//!   Model/Kernel Fuser cost models, the discrete-event cluster simulator,
+//!   and the PJRT runtime that executes the AOT artifacts. Python never
+//!   runs on the training path.
+//!
+//! Module map (see DESIGN.md for the paper-section correspondence):
+//!
+//! | module | role |
+//! |---|---|
+//! | [`util`] | zero-dependency substrates: JSON, RNG, stats, prop-testing |
+//! | [`config`] | typed configuration + JSON I/O |
+//! | [`cluster`] | GPU/node/cluster topology model + gang allocator |
+//! | [`model`] | transformer + LoRA cost model (FLOPs/bytes/memory) |
+//! | [`workload`] | job specs, ACMETrace-like trace generation |
+//! | [`ssm`] | Shared Super-Model graph + Model Fuser (§3.2) |
+//! | [`planner`] | pipeline/TP parallelism planner over SSM (§3.2) |
+//! | [`kernelsim`] | fused-kernel + nano-batch AIMD overlap model (§3.3) |
+//! | [`scheduler`] | residual-capacity-aware Adapter Scheduler (§3.4) |
+//! | [`sim`] | discrete-event cluster simulator (trace-driven eval) |
+//! | [`baselines`] | mLoRA, Megatron-independent, tLoRA ablations |
+//! | [`runtime`] | PJRT executor for `artifacts/*.hlo.txt` |
+//! | [`train`] | real end-to-end training driver + micro-benchmarks |
+//! | [`coordinator`] | leader event loop tying everything together |
+//! | [`metrics`] | table/CSV/CDF reporters shared by benches |
+
+pub mod util;
+pub mod config;
+pub mod cluster;
+pub mod model;
+pub mod workload;
+pub mod ssm;
+pub mod planner;
+pub mod kernelsim;
+pub mod scheduler;
+pub mod sim;
+pub mod baselines;
+pub mod runtime;
+pub mod train;
+pub mod coordinator;
+pub mod metrics;
+pub mod cli;
+pub mod bench_util;

@@ -1,0 +1,328 @@
+//! tLoRA command-line interface.
+//!
+//! ```text
+//! tlora simulate  [--policy tlora|mlora|megatron|...] [--n-jobs N]
+//!                 [--n-gpus N] [--seed S] [--month 1|2|3] [--rate-scale F]
+//! tlora compare   [--n-jobs N] [--n-gpus N] [--seed S]     # all policies
+//! tlora train     [--variant tiny|small|...] [--steps N] [--seed S]
+//! tlora microbench [--steps N]
+//! tlora trace-gen [--n-jobs N] [--month M] [--seed S] [--out file.csv]
+//! ```
+
+use std::path::PathBuf;
+
+use tlora::cli::Args;
+use tlora::config::{ExperimentConfig, Policy};
+use tlora::metrics::Table;
+use tlora::sim::simulate;
+use tlora::workload::trace::{save_csv, TraceGenerator, TraceProfile};
+
+fn main() -> std::process::ExitCode {
+    let args = match Args::parse() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            return std::process::ExitCode::from(2);
+        }
+    };
+    let code = match args.subcommand.as_deref() {
+        Some("simulate") => cmd_simulate(&args),
+        Some("compare") => cmd_compare(&args),
+        Some("train") => cmd_train(&args),
+        Some("microbench") => cmd_microbench(&args),
+        Some("trace-gen") => cmd_trace_gen(&args),
+        _ => {
+            print!("{}", HELP);
+            0
+        }
+    };
+    // NOTE: returning (instead of process::exit) flushes stdout and runs
+    // PJRT drop order cleanly.
+    use std::io::Write;
+    let _ = std::io::stdout().flush();
+    std::process::ExitCode::from(code as u8)
+}
+
+const HELP: &str = "\
+tLoRA — efficient multi-LoRA training with elastic shared super-models
+
+USAGE: tlora <subcommand> [flags]
+
+  simulate     trace-driven cluster simulation for one policy
+  compare      run all policies on the same trace, print §4.2 metrics
+  train        real fused training via PJRT on an AOT'd SSM variant
+  microbench   measure step times + simulator calibration (Fig. 10)
+  trace-gen    emit a synthetic ACMETrace-style CSV
+
+Common flags: --n-jobs N --n-gpus N --seed S --month 1|2|3
+              --rate-scale F --policy NAME --artifacts DIR
+";
+
+fn build_config(args: &Args) -> Result<ExperimentConfig, String> {
+    let mut cfg = ExperimentConfig::default();
+    if let Some(p) = args.get("policy") {
+        cfg.policy =
+            Policy::parse(p).ok_or_else(|| format!("unknown policy {p}"))?;
+    }
+    cfg.n_jobs = args.get_usize("n-jobs", 100)?;
+    let n_gpus = args.get_usize("n-gpus", 128)?;
+    cfg.cluster = tlora::cluster::ClusterSpec::with_gpus(n_gpus);
+    cfg.seed = args.get_u64("seed", 42)?;
+    cfg.trace = match args.get_usize("month", 1)? {
+        2 => TraceProfile::month2(),
+        3 => TraceProfile::month3(),
+        _ => TraceProfile::month1(),
+    };
+    let scale = args.get_f64("rate-scale", 1.0)?;
+    cfg.trace = cfg.trace.scaled(scale);
+    if let Some(path) = args.get("config") {
+        let j = tlora::util::json::parse_file(std::path::Path::new(path))?;
+        cfg.apply_json(&j)?;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get_or("artifacts", "artifacts"))
+}
+
+fn cmd_simulate(args: &Args) -> i32 {
+    let cfg = match build_config(args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("config error: {e}");
+            return 2;
+        }
+    };
+    // --trace file.csv replays an explicit (real or generated) trace
+    // instead of sampling from the synthetic profile
+    let r = if let Some(path) = args.get("trace") {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("read {path}: {e}");
+                return 2;
+            }
+        };
+        match tlora::workload::trace::load_csv(&text) {
+            Ok(jobs) => tlora::sim::simulate_jobs(&cfg, jobs),
+            Err(e) => {
+                eprintln!("parse {path}: {e}");
+                return 2;
+            }
+        }
+    } else {
+        simulate(&cfg)
+    };
+    let mut t = Table::new(
+        &format!(
+            "simulate: {} ({} jobs, {} GPUs)",
+            cfg.policy.name(),
+            cfg.n_jobs,
+            cfg.cluster.total_gpus()
+        ),
+        &["metric", "value"],
+    );
+    t.row(&["completed jobs".into(), r.jct.len().to_string()]);
+    t.row(&["mean JCT (s)".into(), format!("{:.1}", r.mean_jct)]);
+    t.row(&["p99 JCT (s)".into(), format!("{:.1}", r.p99_jct)]);
+    t.row(&[
+        "avg throughput (samples/s)".into(),
+        format!("{:.2}", r.avg_throughput),
+    ]);
+    t.row(&[
+        "avg GPU utilization".into(),
+        format!("{:.1}%", r.avg_gpu_util * 100.0),
+    ]);
+    t.row(&["makespan (s)".into(), format!("{:.0}", r.makespan)]);
+    t.row(&["mean slowdown".into(), format!("{:.3}", r.mean_slowdown)]);
+    t.print();
+    0
+}
+
+fn cmd_compare(args: &Args) -> i32 {
+    let base = match build_config(args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("config error: {e}");
+            return 2;
+        }
+    };
+    let mut t = Table::new(
+        &format!(
+            "policy comparison ({} jobs, {} GPUs, seed {})",
+            base.n_jobs,
+            base.cluster.total_gpus(),
+            base.seed
+        ),
+        &["policy", "thr (samples/s)", "mean JCT (s)", "p99 JCT (s)",
+          "GPU util"],
+    );
+    for policy in Policy::all() {
+        let mut cfg = base.clone();
+        cfg.policy = policy;
+        let r = simulate(&cfg);
+        t.row(&[
+            policy.name().to_string(),
+            format!("{:.2}", r.avg_throughput),
+            format!("{:.1}", r.mean_jct),
+            format!("{:.1}", r.p99_jct),
+            format!("{:.1}%", r.avg_gpu_util * 100.0),
+        ]);
+    }
+    t.print();
+    0
+}
+
+fn cmd_train(args: &Args) -> i32 {
+    let variant = args.get_or("variant", "tiny").to_string();
+    let steps = args.get_u64("steps", 50).unwrap_or(50);
+    let seed = args.get_u64("seed", 0).unwrap_or(0);
+    let log_every = args.get_u64("log-every", 10).unwrap_or(10);
+    // --resume file.ckpt / --save file.ckpt go through the lower-level
+    // trainer path; the plain run uses the driver
+    if args.get("resume").is_some() || args.get("save").is_some() {
+        return cmd_train_ckpt(args, &variant, steps, seed);
+    }
+    match tlora::train::train_variant(
+        &artifacts_dir(args),
+        &variant,
+        steps,
+        seed,
+        log_every,
+    ) {
+        Ok(report) => {
+            print!("{}", report.render());
+            if report.converged() {
+                println!("loss decreased: OK");
+                0
+            } else {
+                println!("WARNING: loss did not decrease");
+                1
+            }
+        }
+        Err(e) => {
+            eprintln!("train failed: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_train_ckpt(args: &Args, variant: &str, steps: u64, seed: u64)
+    -> i32 {
+    let run = || -> anyhow::Result<()> {
+        use tlora::runtime::{Checkpoint, Runtime, Trainer};
+        use tlora::train::data::SyntheticCorpus;
+        let rt = Runtime::new(&artifacts_dir(args))?;
+        let mut trainer = match args.get("resume") {
+            Some(path) => {
+                let ck = Checkpoint::load(std::path::Path::new(path))?;
+                println!(
+                    "resumed {} at step {} from {path}",
+                    ck.variant, ck.steps_done
+                );
+                ck.restore(&rt)?
+            }
+            None => Trainer::new(&rt, variant, seed as i32)?,
+        };
+        let cfg = trainer.variant().config.clone();
+        let mut corpus = SyntheticCorpus::new(
+            cfg.vocab,
+            cfg.seq_len,
+            cfg.num_adapters,
+            seed ^ 0xDA7A,
+        );
+        // replay the corpus to the current step so resume continues the
+        // same data stream
+        for _ in 0..trainer.steps_done {
+            let _ = corpus.fused_batch(&cfg.batch_sizes);
+        }
+        let mut last = f32::NAN;
+        for s in 0..steps {
+            let (tokens, ids) = corpus.fused_batch(&cfg.batch_sizes);
+            let st = trainer.step(&tokens, &ids)?;
+            last = st.loss;
+            if s % 10 == 0 {
+                println!("step {:>6} loss {:.4}", trainer.steps_done,
+                         st.loss);
+            }
+        }
+        println!("final loss {last:.4} at step {}", trainer.steps_done);
+        if let Some(path) = args.get("save") {
+            Checkpoint::capture(&trainer, seed as i32)?
+                .save(std::path::Path::new(path))?;
+            println!("checkpoint -> {path}");
+        }
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("train failed: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_microbench(args: &Args) -> i32 {
+    let steps = args.get_u64("steps", 5).unwrap_or(5);
+    let variants = ["tiny", "small", "med"];
+    match tlora::train::calibrate(
+        &artifacts_dir(args),
+        &variants,
+        &["tiny", "small"],
+        2,
+        steps,
+    ) {
+        Ok(results) => {
+            let mut t = Table::new(
+                "microbench: measured vs simulator-extrapolated step time",
+                &["variant", "measured (ms)", "predicted (ms)", "error",
+                  "role"],
+            );
+            for r in &results {
+                t.row(&[
+                    r.variant.clone(),
+                    format!("{:.1}", r.measured_step_s * 1e3),
+                    format!("{:.1}", r.predicted_step_s * 1e3),
+                    format!("{:.1}%", r.error * 100.0),
+                    if r.is_calibration {
+                        "calibration".into()
+                    } else {
+                        "held-out".into()
+                    },
+                ]);
+            }
+            t.print();
+            0
+        }
+        Err(e) => {
+            eprintln!("microbench failed: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_trace_gen(args: &Args) -> i32 {
+    let n = args.get_usize("n-jobs", 100).unwrap_or(100);
+    let seed = args.get_u64("seed", 42).unwrap_or(42);
+    let profile = match args.get_usize("month", 1).unwrap_or(1) {
+        2 => TraceProfile::month2(),
+        3 => TraceProfile::month3(),
+        _ => TraceProfile::month1(),
+    };
+    let jobs = TraceGenerator::new(profile, seed).generate(n);
+    let csv = save_csv(&jobs);
+    match args.get("out") {
+        Some(path) => {
+            if let Err(e) = std::fs::write(path, &csv) {
+                eprintln!("write {path}: {e}");
+                return 1;
+            }
+            println!("wrote {n} jobs to {path}");
+        }
+        None => print!("{csv}"),
+    }
+    0
+}

@@ -1,0 +1,157 @@
+//! Reporters shared by the benches and the CLI: aligned tables, CSV
+//! dumps, CDF series, and paper-vs-measured comparison rows.
+
+use crate::util::stats::Cdf;
+
+/// A simple aligned-column table printer.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "column mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn rowf(&mut self, cells: &[&dyn std::fmt::Display]) -> &mut Self {
+        let v: Vec<String> = cells.iter().map(|c| c.to_string()).collect();
+        self.row(&v)
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let sep: String = widths
+            .iter()
+            .map(|w| "-".repeat(w + 2))
+            .collect::<Vec<_>>()
+            .join("+");
+        let fmt_row = |cells: &[String]| -> String {
+            (0..ncols)
+                .map(|i| format!(" {:<width$} ", cells[i], width = widths[i]))
+                .collect::<Vec<_>>()
+                .join("|")
+        };
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = self.headers.join(",");
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Paper-vs-measured comparison row: the benches print these so
+/// EXPERIMENTS.md can quote them directly.
+pub fn compare_row(
+    table: &mut Table,
+    label: &str,
+    paper: &str,
+    measured: f64,
+    unit: &str,
+    shape_holds: bool,
+) {
+    table.row(&[
+        label.to_string(),
+        paper.to_string(),
+        format!("{measured:.3} {unit}"),
+        if shape_holds { "yes".into() } else { "NO".into() },
+    ]);
+}
+
+/// Render a CDF as a gnuplot-ready two-column block.
+pub fn cdf_block(name: &str, cdf: &Cdf) -> String {
+    let mut out = format!("# CDF {name}\n");
+    for &(v, q) in &cdf.points {
+        out.push_str(&format!("{v:.4} {q:.4}\n"));
+    }
+    out
+}
+
+/// Write a report file under `out/` (created on demand); returns the
+/// path. Failures are soft (benches still print to stdout).
+pub fn write_report(name: &str, content: &str) -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new("out");
+    std::fs::create_dir_all(dir).ok()?;
+    let path = dir.join(name);
+    std::fs::write(&path, content).ok()?;
+    Some(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["name", "value"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["long-name".into(), "2.5".into()]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        assert!(s.contains("long-name"));
+        // all data lines equal width
+        let lines: Vec<&str> = s.lines().skip(1).collect();
+        assert_eq!(lines[0].len(), lines[2].len());
+    }
+
+    #[test]
+    #[should_panic(expected = "column mismatch")]
+    fn table_checks_columns() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn csv_output() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        assert_eq!(t.to_csv(), "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn cdf_block_format() {
+        let cdf = Cdf::of(&[1.0, 2.0, 3.0, 4.0], 4);
+        let s = cdf_block("jct", &cdf);
+        assert!(s.starts_with("# CDF jct\n"));
+        assert_eq!(s.lines().count(), 5);
+    }
+}

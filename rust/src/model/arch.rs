@@ -1,0 +1,181 @@
+//! Model architecture registry.
+
+/// A decoder-only transformer architecture (the frozen backbone of an
+/// SSM). Dimensions follow the usual GPT/Llama conventions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelArch {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    /// bytes per parameter (2 = bf16, 4 = f32)
+    pub dtype_bytes: usize,
+}
+
+impl ModelArch {
+    pub fn params_per_layer(&self) -> u64 {
+        let d = self.d_model as u64;
+        let f = self.d_ff as u64;
+        // 4 attention projections + 2 MLP mats + 2 norm scales
+        4 * d * d + 2 * d * f + 2 * d
+    }
+
+    pub fn params_total(&self) -> u64 {
+        self.vocab as u64 * self.d_model as u64
+            + self.n_layers as u64 * self.params_per_layer()
+            + self.d_model as u64
+    }
+
+    pub fn weight_bytes(&self) -> u64 {
+        self.params_total() * self.dtype_bytes as u64
+    }
+
+    pub fn weight_bytes_per_layer(&self) -> u64 {
+        self.params_per_layer() * self.dtype_bytes as u64
+    }
+}
+
+/// A LoRA adapter attached to the q and v projections of every layer
+/// (the standard placement, matching `python/compile/model.py`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LoraSpec {
+    pub rank: usize,
+    pub alpha: f64,
+}
+
+impl LoraSpec {
+    pub fn new(rank: usize) -> LoraSpec {
+        LoraSpec {
+            rank,
+            alpha: 16.0,
+        }
+    }
+
+    /// Trainable parameters for one adapter on `arch` (A and B on q and
+    /// v of every layer).
+    pub fn params(&self, arch: &ModelArch) -> u64 {
+        let d = arch.d_model as u64;
+        let r = self.rank as u64;
+        arch.n_layers as u64 * 2 * (d * r + r * d)
+    }
+
+    /// Adapter + Adam state bytes (param + m + v, f32).
+    pub fn train_state_bytes(&self, arch: &ModelArch) -> u64 {
+        self.params(arch) * 4 * 3
+    }
+}
+
+/// Architectures used by the paper's evaluation (§4.1) plus the AOT'd
+/// small variants (python/compile/aot.py VARIANTS must stay in sync —
+/// checked by integration tests against artifacts/manifest.json).
+pub fn known_archs() -> Vec<ModelArch> {
+    vec![
+        ModelArch {
+            name: "llama3-8b".into(),
+            vocab: 128_256,
+            d_model: 4096,
+            n_layers: 32,
+            n_heads: 32,
+            d_ff: 14_336,
+            dtype_bytes: 2,
+        },
+        ModelArch {
+            name: "qwen3-8b".into(),
+            vocab: 151_936,
+            d_model: 4096,
+            n_layers: 36,
+            n_heads: 32,
+            d_ff: 12_288,
+            dtype_bytes: 2,
+        },
+        ModelArch {
+            name: "e2e100m".into(),
+            vocab: 16_384,
+            d_model: 768,
+            n_layers: 12,
+            n_heads: 12,
+            d_ff: 3072,
+            dtype_bytes: 4,
+        },
+        ModelArch {
+            name: "med".into(),
+            vocab: 8192,
+            d_model: 512,
+            n_layers: 8,
+            n_heads: 8,
+            d_ff: 2048,
+            dtype_bytes: 4,
+        },
+        ModelArch {
+            name: "small".into(),
+            vocab: 2048,
+            d_model: 256,
+            n_layers: 4,
+            n_heads: 8,
+            d_ff: 1024,
+            dtype_bytes: 4,
+        },
+        ModelArch {
+            name: "tiny".into(),
+            vocab: 256,
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 4,
+            d_ff: 256,
+            dtype_bytes: 4,
+        },
+    ]
+}
+
+/// Look up an architecture by name.
+pub fn arch_by_name(name: &str) -> Option<ModelArch> {
+    known_archs().into_iter().find(|a| a.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llama3_8b_param_count_plausible() {
+        let a = arch_by_name("llama3-8b").unwrap();
+        // MHA approximation of the GQA model: slightly under 8B is fine
+        let p = a.params_total() as f64 / 1e9;
+        assert!((6.0..9.0).contains(&p), "{p}B");
+    }
+
+    #[test]
+    fn e2e100m_is_about_100m() {
+        let a = arch_by_name("e2e100m").unwrap();
+        let p = a.params_total() as f64 / 1e6;
+        assert!((90.0..115.0).contains(&p), "{p}M");
+    }
+
+    #[test]
+    fn lora_params_small_fraction() {
+        let a = arch_by_name("llama3-8b").unwrap();
+        let l = LoraSpec::new(16);
+        let frac = l.params(a_ref(&a)) as f64 / a.params_total() as f64;
+        assert!(frac < 0.01, "{frac}");
+    }
+
+    fn a_ref(a: &ModelArch) -> &ModelArch {
+        a
+    }
+
+    #[test]
+    fn lora_params_scale_with_rank() {
+        let a = arch_by_name("tiny").unwrap();
+        assert_eq!(
+            LoraSpec::new(8).params(&a),
+            2 * LoraSpec::new(4).params(&a)
+        );
+    }
+
+    #[test]
+    fn unknown_arch_is_none() {
+        assert!(arch_by_name("gpt5").is_none());
+    }
+}

@@ -1,0 +1,217 @@
+//! Analytic FLOPs / bytes / memory cost model.
+//!
+//! Standard transformer accounting (Megatron-style): per layer and per
+//! token, forward matmul FLOPs are `2 * params_per_layer` plus the
+//! attention score/value terms that scale with sequence length; backward
+//! is 2x forward (dgrad + wgrad). For *frozen* backbone layers the wgrad
+//! is skipped, so backbone backward is ~1x forward (dgrad only) — the key
+//! asymmetry that makes LoRA training cheap and co-location attractive.
+
+use super::arch::{LoraSpec, ModelArch};
+
+/// Cost of one transformer layer for a given token count.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LayerCost {
+    /// forward FLOPs
+    pub fwd_flops: f64,
+    /// backward FLOPs (frozen backbone: dgrad only)
+    pub bwd_flops: f64,
+    /// activation bytes that cross a pipeline-stage boundary per
+    /// microbatch (d_model * tokens * dtype)
+    pub boundary_bytes: f64,
+    /// activation memory resident per microbatch
+    pub act_bytes: f64,
+}
+
+impl LayerCost {
+    pub fn total_flops(&self) -> f64 {
+        self.fwd_flops + self.bwd_flops
+    }
+}
+
+/// Per-layer backbone cost for `tokens` tokens of sequence length `seq`.
+pub fn layer_cost(arch: &ModelArch, tokens: f64, seq: f64) -> LayerCost {
+    let d = arch.d_model as f64;
+    let f = arch.d_ff as f64;
+    // projections + MLP: 2 FLOPs per MAC
+    let matmul = 2.0 * tokens * (4.0 * d * d + 2.0 * d * f);
+    // attention scores + weighted values: 2 * 2 * tokens * seq * d
+    let attn = 4.0 * tokens * seq * d;
+    let fwd = matmul + attn;
+    LayerCost {
+        fwd_flops: fwd,
+        // frozen backbone: activation-gradient path only (~1x fwd)
+        bwd_flops: fwd,
+        boundary_bytes: tokens * d * arch.dtype_bytes as f64,
+        // rough: ~8 activation tensors of (tokens, d) + attention probs
+        act_bytes: tokens * d * 8.0 * arch.dtype_bytes as f64
+            + tokens * seq * arch.n_heads as f64 * arch.dtype_bytes as f64
+                / arch.n_heads as f64,
+    }
+}
+
+/// Extra cost of one LoRA adapter branch on one layer (q and v targets),
+/// for `tokens` tokens owned by that adapter. Trainable => full fwd +
+/// dgrad + wgrad (3x fwd).
+pub fn lora_layer_cost(arch: &ModelArch, rank: usize, tokens: f64)
+    -> LayerCost {
+    let d = arch.d_model as f64;
+    let r = rank as f64;
+    // per target: X@A (2*t*d*r) + (XA)@B (2*t*r*d); two targets (q, v)
+    let fwd = 2.0 * (2.0 * tokens * d * r + 2.0 * tokens * r * d);
+    LayerCost {
+        fwd_flops: fwd,
+        bwd_flops: 2.0 * fwd, // dgrad + wgrad
+        boundary_bytes: 0.0,
+        act_bytes: tokens * r * 2.0 * 4.0, // (t, r) intermediates, f32
+    }
+}
+
+/// Whole-model cost for one training step of one job.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModelCost {
+    pub fwd_flops: f64,
+    pub bwd_flops: f64,
+    pub total_flops: f64,
+    /// all-reduce bytes for the adapter gradients (what DP syncs)
+    pub grad_sync_bytes: f64,
+}
+
+/// Cost of one job's step: `batch * seq` tokens through the backbone +
+/// its adapter branches.
+pub fn cost_of(arch: &ModelArch, lora: &LoraSpec, batch: usize, seq: usize)
+    -> ModelCost {
+    let tokens = (batch * seq) as f64;
+    let lc = layer_cost(arch, tokens, seq as f64);
+    let ac = lora_layer_cost(arch, lora.rank, tokens);
+    let n = arch.n_layers as f64;
+    // embedding + lm head: 2 * tokens * vocab * d each way
+    let head = 2.0 * tokens * arch.vocab as f64 * arch.d_model as f64;
+    let fwd = n * (lc.fwd_flops + ac.fwd_flops) + head;
+    let bwd = n * (lc.bwd_flops + ac.bwd_flops) + head;
+    ModelCost {
+        fwd_flops: fwd,
+        bwd_flops: bwd,
+        total_flops: fwd + bwd,
+        grad_sync_bytes: lora.params(arch) as f64 * 4.0,
+    }
+}
+
+/// Memory model for placement feasibility (used by the planner and by
+/// mLoRA's memory-capacity grouping rule).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MemoryModel {
+    pub weight_bytes: f64,
+    pub adapter_state_bytes: f64,
+    pub activation_bytes: f64,
+}
+
+impl MemoryModel {
+    pub fn total(&self) -> f64 {
+        self.weight_bytes + self.adapter_state_bytes + self.activation_bytes
+    }
+}
+
+/// Memory for a set of co-located jobs sharing one backbone replica,
+/// with per-stage weights divided across `pp * tp` model-parallel ways.
+pub fn memory_of(
+    arch: &ModelArch,
+    jobs: &[(LoraSpec, usize, usize)], // (lora, batch, seq)
+    model_parallel_ways: usize,
+) -> MemoryModel {
+    let weight = arch.weight_bytes() as f64
+        / model_parallel_ways.max(1) as f64;
+    let mut adapter = 0.0;
+    let mut act = 0.0;
+    for (lora, batch, seq) in jobs {
+        adapter += lora.train_state_bytes(arch) as f64
+            / model_parallel_ways.max(1) as f64;
+        let tokens = (batch * seq) as f64;
+        let lc = layer_cost(arch, tokens, *seq as f64);
+        // activations for layers resident on one device
+        act += lc.act_bytes
+            * (arch.n_layers as f64 / model_parallel_ways.max(1) as f64);
+    }
+    MemoryModel {
+        weight_bytes: weight,
+        adapter_state_bytes: adapter,
+        activation_bytes: act,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::arch::arch_by_name;
+
+    #[test]
+    fn flops_scale_linearly_with_batch() {
+        let a = arch_by_name("llama3-8b").unwrap();
+        let l = LoraSpec::new(8);
+        let c1 = cost_of(&a, &l, 1, 512);
+        let c4 = cost_of(&a, &l, 4, 512);
+        let ratio = c4.total_flops / c1.total_flops;
+        assert!((ratio - 4.0).abs() < 0.05, "{ratio}");
+    }
+
+    #[test]
+    fn fwd_flops_match_6nd_rule() {
+        // fwd ≈ 2 * params * tokens for big models (ignoring attention)
+        let a = arch_by_name("llama3-8b").unwrap();
+        let l = LoraSpec::new(8);
+        let c = cost_of(&a, &l, 1, 512);
+        let approx = 2.0 * a.params_total() as f64 * 512.0;
+        let ratio = c.fwd_flops / approx;
+        assert!((0.8..1.3).contains(&ratio), "{ratio}");
+    }
+
+    #[test]
+    fn lora_cost_small_vs_backbone() {
+        let a = arch_by_name("llama3-8b").unwrap();
+        let lc = layer_cost(&a, 512.0, 512.0);
+        let ac = lora_layer_cost(&a, 16, 512.0);
+        assert!(ac.total_flops() < 0.02 * lc.total_flops());
+    }
+
+    #[test]
+    fn backbone_bwd_cheaper_than_trainable() {
+        // frozen backbone: bwd == fwd; trainable adapter: bwd == 2x fwd
+        let a = arch_by_name("tiny").unwrap();
+        let lc = layer_cost(&a, 64.0, 32.0);
+        assert_eq!(lc.bwd_flops, lc.fwd_flops);
+        let ac = lora_layer_cost(&a, 4, 64.0);
+        assert_eq!(ac.bwd_flops, 2.0 * ac.fwd_flops);
+    }
+
+    #[test]
+    fn memory_shrinks_with_model_parallel() {
+        let a = arch_by_name("llama3-8b").unwrap();
+        let jobs = vec![(LoraSpec::new(8), 4usize, 512usize)];
+        let m1 = memory_of(&a, &jobs, 1);
+        let m4 = memory_of(&a, &jobs, 4);
+        assert!(m4.weight_bytes < m1.weight_bytes / 3.9);
+        assert!(m4.total() < m1.total());
+    }
+
+    #[test]
+    fn memory_grows_with_jobs() {
+        let a = arch_by_name("llama3-8b").unwrap();
+        let one = memory_of(&a, &[(LoraSpec::new(8), 4, 512)], 1);
+        let two = memory_of(
+            &a,
+            &[(LoraSpec::new(8), 4, 512), (LoraSpec::new(16), 8, 512)],
+            1,
+        );
+        // backbone shared: grows by adapter+activation only
+        assert!(two.total() > one.total());
+        assert_eq!(two.weight_bytes, one.weight_bytes);
+    }
+
+    #[test]
+    fn grad_sync_bytes_match_lora_params() {
+        let a = arch_by_name("tiny").unwrap();
+        let l = LoraSpec::new(4);
+        let c = cost_of(&a, &l, 2, 32);
+        assert_eq!(c.grad_sync_bytes, l.params(&a) as f64 * 4.0);
+    }
+}

@@ -1,0 +1,16 @@
+//! Transformer + LoRA architecture descriptions and analytic cost model.
+//!
+//! The paper's planner and scheduler reason about per-layer compute,
+//! communication, and memory (§3.2: "standard layer-wise profiling and
+//! cost modeling"). This module provides those costs analytically,
+//! calibrated against real PJRT step measurements by
+//! [`crate::train::microbench`] (the Fig. 10 accuracy check).
+//!
+//! Conventions: FLOPs are multiply-accumulate*2; bytes are parameter
+//! bytes at `dtype_bytes`; "tokens" means `batch_size * seq_len`.
+
+pub mod arch;
+pub mod cost;
+
+pub use arch::{ModelArch, LoraSpec, known_archs};
+pub use cost::{LayerCost, ModelCost, MemoryModel, cost_of};

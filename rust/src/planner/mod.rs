@@ -1,0 +1,534 @@
+//! Parallelism planner over the Shared Super-Model (§3.2).
+//!
+//! The paper hands the fused SSM to "existing planning frameworks"
+//! (Megatron-LM, Metis) whose layer-wise profiling internalizes adapter
+//! heterogeneity. No such framework exists in this Rust world, so this
+//! module implements the part those planners contribute:
+//!
+//! 1. per-layer cost profiles from the SSM (+ the Kernel Fuser's adapter
+//!    execution model),
+//! 2. a dynamic-programming pipeline partitioner (contiguous layers →
+//!    stages, minimizing the bottleneck stage),
+//! 3. tensor-parallel degree selection with memory-feasibility checks,
+//! 4. 1F1B microbatch schedule + bubble accounting,
+//! 5. the Eq.-1 nano-batch overlap applied to the step's comm/comp split.
+//!
+//! Output is a [`ParallelPlan`] with the predicted step time, per-GPU
+//! memory, utilization, and the comm/comp decomposition the scheduler's
+//! throughput predictor T̂(G) consumes.
+
+use crate::cluster::{Allocation, ClusterSpec};
+use crate::kernelsim::overlap;
+use crate::kernelsim::tile::{adapter_exec_time, AdapterLoad};
+use crate::model::cost::memory_of;
+use crate::model::arch::LoraSpec;
+use crate::ssm::Ssm;
+
+/// One pipeline stage: a contiguous slice of the SSM's layer chain.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Stage {
+    /// [begin, end) indices into the SSM layer chain (0 = embed,
+    /// 1..=L = transformer layers, L+1 = head)
+    pub begin: usize,
+    pub end: usize,
+    /// full-batch compute seconds on this stage (at chosen tp)
+    pub compute_s: f64,
+}
+
+/// A complete execution plan for one fused group.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParallelPlan {
+    pub pp: usize,
+    pub tp: usize,
+    pub n_microbatches: usize,
+    pub stages: Vec<Stage>,
+    /// end-to-end step time (seconds), including pipeline bubble and
+    /// nano-batch-overlapped communication
+    pub step_time_s: f64,
+    /// total per-step compute seconds (bottleneck path)
+    pub comp_s: f64,
+    /// total per-step communication seconds (TP allreduce + stage p2p)
+    pub comm_s: f64,
+    /// 1F1B bubble fraction (S-1)/(M+S-1)
+    pub bubble_frac: f64,
+    /// peak bytes per GPU
+    pub mem_per_gpu: f64,
+    /// useful FLOPs / (gpus * peak * step_time) — the Fig.-6a metric
+    pub compute_util: f64,
+    /// nano-batch count used for the overlap (1 when fuser disabled)
+    pub n_nano: usize,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum PlanError {
+    NoGpus,
+    OutOfMemory { need: f64, have: f64 },
+}
+
+impl std::fmt::Display for PlanError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PlanError::NoGpus => write!(f, "allocation has no GPUs"),
+            PlanError::OutOfMemory { need, have } => write!(
+                f,
+                "plan infeasible: needs {:.1} GiB/GPU, have {:.1} GiB",
+                need / 1e9,
+                have / 1e9
+            ),
+        }
+    }
+}
+
+impl std::error::Error for PlanError {}
+
+/// Planner knobs.
+#[derive(Debug, Clone)]
+pub struct PlanOptions {
+    /// use the fused LoRA kernel model (§3.3) for adapter branches
+    pub fused_kernel: bool,
+    /// apply nano-batch overlap with this N (the simulator feeds the
+    /// AIMD-controlled value; `None` = pick the oracle-best fixed N,
+    /// used by the ablation benches)
+    pub n_nano: Option<usize>,
+    pub n_nano_max: usize,
+}
+
+impl Default for PlanOptions {
+    fn default() -> Self {
+        PlanOptions {
+            fused_kernel: true,
+            n_nano: None,
+            n_nano_max: 64,
+        }
+    }
+}
+
+/// Derive the execution plan for `ssm` on `alloc`.
+pub fn plan(
+    ssm: &Ssm,
+    alloc: &Allocation,
+    spec: &ClusterSpec,
+    opts: &PlanOptions,
+) -> Result<ParallelPlan, PlanError> {
+    let n = alloc.n_gpus();
+    if n == 0 {
+        return Err(PlanError::NoGpus);
+    }
+    let mut best: Option<ParallelPlan> = None;
+    let mut any_oom: Option<PlanError> = None;
+    for (pp, tp) in factorizations(n, ssm.arch.n_layers + 2) {
+        match plan_fixed(ssm, alloc, spec, opts, pp, tp) {
+            Ok(p) => {
+                if best
+                    .as_ref()
+                    .map_or(true, |b| p.step_time_s < b.step_time_s)
+                {
+                    best = Some(p);
+                }
+            }
+            Err(e @ PlanError::OutOfMemory { .. }) => any_oom = Some(e),
+            Err(e) => return Err(e),
+        }
+    }
+    best.ok_or_else(|| any_oom.unwrap_or(PlanError::NoGpus))
+}
+
+/// All (pp, tp) with pp*tp == n, pp bounded by the layer-chain length.
+fn factorizations(n: usize, max_pp: usize) -> Vec<(usize, usize)> {
+    let mut out = vec![];
+    for pp in 1..=n {
+        if n % pp == 0 && pp <= max_pp {
+            let tp = n / pp;
+            // tensor parallel beyond 8 ways is unrealistic for attention
+            // heads; planners cap it at the node width
+            if tp <= 8 {
+                out.push((pp, tp));
+            }
+        }
+    }
+    out
+}
+
+/// GEMM efficiency saturates with per-microbatch token count: small
+/// fused batches cannot fill the device (the §2 residual capacity that
+/// makes co-location profitable). Michaelis–Menten with half-saturation
+/// at `512 * sqrt(tp)` tokens — tensor parallelism narrows per-GPU GEMMs
+/// (mild penalty) but the token rows still amortize the per-wave fixed
+/// costs, which is precisely why fusing under-utilized jobs wins.
+fn saturating_eff(mfu_cap: f64, tokens_per_microbatch: f64, tp: usize)
+    -> f64 {
+    let half = 1024.0 * (tp as f64).sqrt();
+    mfu_cap * tokens_per_microbatch / (tokens_per_microbatch + half)
+}
+
+fn plan_fixed(
+    ssm: &Ssm,
+    alloc: &Allocation,
+    spec: &ClusterSpec,
+    opts: &PlanOptions,
+    pp: usize,
+    tp: usize,
+) -> Result<ParallelPlan, PlanError> {
+    let gpu = &spec.gpu;
+    let ways = pp * tp;
+
+    // ---- memory feasibility ----
+    let jobs: Vec<(LoraSpec, usize, usize)> = ssm
+        .adapters
+        .iter()
+        .map(|a| (LoraSpec::new(a.rank), a.batch_size, a.seq_len))
+        .collect();
+    let mem = memory_of(&ssm.arch, &jobs, ways).total();
+    if mem > gpu.mem_bytes {
+        return Err(PlanError::OutOfMemory {
+            need: mem,
+            have: gpu.mem_bytes,
+        });
+    }
+
+    // ---- microbatch count (needed for the efficiency model) ----
+    // pp == 1 needs no splitting; pipelines fill with up to 4 in-flight
+    // microbatches per stage
+    let total_batch = ssm.total_batch().max(1);
+    let m = if pp == 1 {
+        1
+    } else {
+        total_batch.clamp(1, 4 * pp)
+    };
+
+    // ---- per-layer compute profile (full batch, divided over tp) ----
+    let tokens_mb = ssm.total_tokens() / m as f64;
+    let eff_flops =
+        gpu.peak_flops * saturating_eff(gpu.mfu_cap, tokens_mb, tp);
+    // per-microbatch per-layer kernel launches (fwd+bwd chain)
+    let layer_fixed = m as f64 * 6.0 * gpu.launch_overhead_s;
+    let adapter_loads: Vec<AdapterLoad> = ssm
+        .adapters
+        .iter()
+        .map(|a| AdapterLoad {
+            rank: a.rank,
+            tokens: a.tokens(),
+        })
+        .collect();
+    // adapter kernel time on one fused layer invocation (per GPU slice)
+    let adapter_t = adapter_exec_time(
+        gpu,
+        ssm.arch.d_model,
+        &adapter_loads,
+        opts.fused_kernel,
+    ) / tp as f64;
+
+    let layer_flops = ssm.layer_flops();
+    let n_chain = layer_flops.len();
+    // index 0 (embed) and n-1 (head) carry no adapters
+    let layer_times: Vec<f64> = layer_flops
+        .iter()
+        .enumerate()
+        .map(|(i, &f)| {
+            let backbone = f / (tp as f64 * eff_flops) + layer_fixed;
+            if i == 0 || i == n_chain - 1 {
+                backbone
+            } else {
+                backbone + adapter_t
+            }
+        })
+        .collect();
+
+    // ---- TP communication: 4 allreduces of the activation slice per
+    // layer per step (2 fwd + 2 bwd), over the tp subgroup ----
+    let tp_comm = if tp > 1 {
+        let sub: Vec<_> = alloc.gpus.iter().take(tp).cloned().collect();
+        let bytes = ssm.boundary_bytes();
+        4.0 * (ssm.arch.n_layers as f64)
+            * spec.allreduce_time(&sub, bytes)
+    } else {
+        0.0
+    };
+
+    // ---- pipeline partition (DP over contiguous stages) ----
+    let stages_cut = partition_dp(&layer_times, pp);
+    let stages: Vec<Stage> = stages_cut
+        .iter()
+        .map(|&(b, e)| Stage {
+            begin: b,
+            end: e,
+            compute_s: layer_times[b..e].iter().sum(),
+        })
+        .collect();
+    let max_stage = stages
+        .iter()
+        .map(|s| s.compute_s)
+        .fold(0.0f64, f64::max);
+
+    // ---- p2p traffic across stage boundaries ----
+    let p2p_comm = if pp > 1 {
+        // boundary bytes cross each of the pp-1 cuts fwd + bwd
+        let cut_bytes = ssm.boundary_bytes();
+        let (a, b) = (alloc.gpus[0], alloc.gpus[alloc.n_gpus() - 1]);
+        2.0 * (pp as f64 - 1.0) * spec.p2p_time(a, b, cut_bytes)
+    } else {
+        0.0
+    };
+
+    // ---- assemble compute & comm totals ----
+    // fixed per-step costs: optimizer update + host sync
+    let step_fixed = 5e-4;
+    let comp: f64 =
+        stages.iter().map(|s| s.compute_s).sum::<f64>() + step_fixed;
+    let comm = tp_comm + p2p_comm;
+    // 1F1B bubble: the pipeline multiplies the bottleneck stage
+    let bubble_frac = if pp > 1 {
+        (pp as f64 - 1.0) / (m as f64 + pp as f64 - 1.0)
+    } else {
+        0.0
+    };
+    // pipeline-extended compute: bottleneck stage repeated over the ramp
+    let pipeline_comp =
+        comp + (pp as f64 - 1.0) * (max_stage / m as f64);
+
+    // ---- nano-batch overlap (Eq. 1) ----
+    let oh = gpu.launch_overhead_s * 4.0; // per-nano relaunch of the chain
+    let lat = if alloc.spans_nodes() {
+        spec.ib_latency_s
+    } else {
+        1e-6
+    };
+    let (n_nano, step_time) = if opts.fused_kernel {
+        match opts.n_nano {
+            Some(n) => (
+                n,
+                overlap::iter_time(pipeline_comp, comm, n, oh, lat),
+            ),
+            None => {
+                let cap = opts.n_nano_max.min(total_batch.max(1));
+                overlap::best_fixed_n(pipeline_comp, comm, cap, oh, lat)
+            }
+        }
+    } else {
+        (1, overlap::serial_time(pipeline_comp, comm, oh, lat))
+    };
+
+    // ---- utilization ----
+    let useful_flops: f64 = layer_flops.iter().sum::<f64>();
+    let compute_util = useful_flops
+        / (alloc.n_gpus() as f64 * gpu.peak_flops * step_time);
+
+    Ok(ParallelPlan {
+        pp,
+        tp,
+        n_microbatches: m,
+        stages,
+        step_time_s: step_time,
+        comp_s: pipeline_comp,
+        comm_s: comm,
+        bubble_frac,
+        mem_per_gpu: mem,
+        compute_util,
+        n_nano,
+    })
+}
+
+/// Partition `times` into `k` contiguous stages minimizing the maximum
+/// stage sum. Classic DP, O(L²·k). Returns [begin, end) ranges.
+fn partition_dp(times: &[f64], k: usize) -> Vec<(usize, usize)> {
+    let l = times.len();
+    let k = k.min(l).max(1);
+    // prefix sums
+    let mut pre = vec![0.0; l + 1];
+    for i in 0..l {
+        pre[i + 1] = pre[i] + times[i];
+    }
+    let seg = |a: usize, b: usize| pre[b] - pre[a]; // [a, b)
+
+    // dp[s][i] = min over cuts of max-stage cost for first i layers in s
+    // stages; cut[s][i] = where stage s starts
+    let inf = f64::INFINITY;
+    let mut dp = vec![vec![inf; l + 1]; k + 1];
+    let mut cut = vec![vec![0usize; l + 1]; k + 1];
+    dp[0][0] = 0.0;
+    for s in 1..=k {
+        for i in s..=l {
+            for j in (s - 1)..i {
+                let cost = dp[s - 1][j].max(seg(j, i));
+                if cost < dp[s][i] {
+                    dp[s][i] = cost;
+                    cut[s][i] = j;
+                }
+            }
+        }
+    }
+    // backtrack
+    let mut bounds = vec![];
+    let mut i = l;
+    for s in (1..=k).rev() {
+        let j = cut[s][i];
+        bounds.push((j, i));
+        i = j;
+    }
+    bounds.reverse();
+    bounds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Allocator, ClusterSpec};
+    use crate::ssm::Ssm;
+    use crate::workload::JobSpec;
+
+    fn job(id: u64, rank: usize, batch: usize, seq: usize) -> JobSpec {
+        JobSpec {
+            id,
+            base_model: "llama3-8b".into(),
+            rank,
+            batch_size: batch,
+            seq_len: seq,
+            gpus: 2,
+            total_steps: 100,
+            submit_time: 0.0,
+            max_slowdown: 1.5,
+        }
+    }
+
+    fn setup(n_gpus: usize) -> (ClusterSpec, Allocation) {
+        let spec = ClusterSpec::default_128();
+        let mut a = Allocator::new(spec.clone());
+        let alloc = a.allocate(n_gpus).unwrap();
+        (spec, alloc)
+    }
+
+    #[test]
+    fn partition_dp_balances() {
+        let times = vec![1.0, 1.0, 1.0, 1.0, 4.0, 1.0, 1.0, 1.0];
+        let cuts = partition_dp(&times, 3);
+        assert_eq!(cuts.len(), 3);
+        assert_eq!(cuts[0].0, 0);
+        assert_eq!(cuts.last().unwrap().1, times.len());
+        // contiguous, non-overlapping
+        for w in cuts.windows(2) {
+            assert_eq!(w[0].1, w[1].0);
+        }
+        // bottleneck should be the 4.0 layer alone-ish
+        let max: f64 = cuts
+            .iter()
+            .map(|&(a, b)| times[a..b].iter().sum::<f64>())
+            .fold(0.0, f64::max);
+        assert!(max <= 5.0, "{max}");
+    }
+
+    #[test]
+    fn partition_dp_degenerate() {
+        assert_eq!(partition_dp(&[1.0], 4), vec![(0, 1)]);
+        assert_eq!(partition_dp(&[1.0, 2.0], 1), vec![(0, 2)]);
+    }
+
+    #[test]
+    fn plan_single_gpu_single_job() {
+        let (spec, alloc) = setup(1);
+        let ssm = Ssm::fuse(&[job(0, 8, 4, 512)]).unwrap();
+        let p = plan(&ssm, &alloc, &spec, &PlanOptions::default()).unwrap();
+        assert_eq!(p.pp, 1);
+        assert_eq!(p.tp, 1);
+        assert!(p.step_time_s > 0.0);
+        assert!(p.comm_s == 0.0);
+        assert!(p.compute_util > 0.0 && p.compute_util <= 1.0);
+    }
+
+    #[test]
+    fn plan_multi_gpu_reduces_step_time() {
+        let ssm = Ssm::fuse(&[job(0, 8, 8, 1024), job(1, 8, 8, 1024)])
+            .unwrap();
+        let (spec, a1) = setup(1);
+        let p1 = plan(&ssm, &a1, &spec, &PlanOptions::default()).unwrap();
+        let (_, a4) = setup(4);
+        let p4 = plan(&ssm, &a4, &spec, &PlanOptions::default()).unwrap();
+        assert!(
+            p4.step_time_s < p1.step_time_s,
+            "{} vs {}",
+            p4.step_time_s,
+            p1.step_time_s
+        );
+    }
+
+    #[test]
+    fn plan_oom_for_tiny_gpu() {
+        let mut spec = ClusterSpec::default_128();
+        spec.gpu.mem_bytes = 1e9; // 1 GB cannot hold an 8B model
+        let mut a = Allocator::new(spec.clone());
+        let alloc = a.allocate(1).unwrap();
+        let ssm = Ssm::fuse(&[job(0, 8, 4, 512)]).unwrap();
+        assert!(matches!(
+            plan(&ssm, &alloc, &spec, &PlanOptions::default()),
+            Err(PlanError::OutOfMemory { .. })
+        ));
+    }
+
+    #[test]
+    fn fused_plan_no_slower_than_unfused() {
+        let ssm = Ssm::fuse(&[
+            job(0, 2, 1, 256),
+            job(1, 4, 2, 256),
+            job(2, 8, 1, 512),
+            job(3, 16, 2, 512),
+        ])
+        .unwrap();
+        let (spec, alloc) = setup(2);
+        let fused = plan(&ssm, &alloc, &spec, &PlanOptions::default())
+            .unwrap();
+        let unfused = plan(
+            &ssm,
+            &alloc,
+            &spec,
+            &PlanOptions {
+                fused_kernel: false,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(fused.step_time_s <= unfused.step_time_s);
+    }
+
+    #[test]
+    fn bubble_fraction_formula() {
+        let ssm = Ssm::fuse(&[job(0, 8, 8, 512)]).unwrap();
+        let (spec, alloc) = setup(4);
+        let p = plan(&ssm, &alloc, &spec, &PlanOptions::default()).unwrap();
+        if p.pp > 1 {
+            let expect = (p.pp as f64 - 1.0)
+                / (p.n_microbatches as f64 + p.pp as f64 - 1.0);
+            assert!((p.bubble_frac - expect).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn stages_cover_chain_exactly() {
+        let ssm = Ssm::fuse(&[job(0, 8, 4, 512)]).unwrap();
+        let (spec, alloc) = setup(8);
+        let p = plan(&ssm, &alloc, &spec, &PlanOptions::default()).unwrap();
+        assert_eq!(p.stages.first().unwrap().begin, 0);
+        assert_eq!(
+            p.stages.last().unwrap().end,
+            ssm.arch.n_layers + 2
+        );
+        for w in p.stages.windows(2) {
+            assert_eq!(w[0].end, w[1].begin);
+        }
+    }
+
+    #[test]
+    fn explicit_nano_count_respected() {
+        let ssm = Ssm::fuse(&[job(0, 8, 8, 512)]).unwrap();
+        let (spec, alloc) = setup(2);
+        let p = plan(
+            &ssm,
+            &alloc,
+            &spec,
+            &PlanOptions {
+                n_nano: Some(4),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(p.n_nano, 4);
+    }
+}

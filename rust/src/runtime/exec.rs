@@ -1,0 +1,344 @@
+//! PJRT execution: compile HLO text, manage device-resident state, and
+//! drive fused SSM training steps.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::{Manifest, ProgramMeta, VariantMeta};
+
+/// Wraps the PJRT CPU client and the loaded manifest.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+}
+
+/// A compiled program with its I/O contract.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub meta: ProgramMeta,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load `dir/manifest.json`.
+    pub fn new(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)
+            .map_err(|e| anyhow!("manifest: {e}"))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime { client, manifest })
+    }
+
+    /// Compile one program from its HLO text file.
+    pub fn compile(&self, meta: &ProgramMeta) -> Result<Executable> {
+        let path = self.manifest.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?;
+        Ok(Executable {
+            exe,
+            meta: meta.clone(),
+        })
+    }
+
+    /// Upload a host literal to the device.
+    pub fn upload(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_literal(None, lit)
+            .map_err(|e| anyhow!("upload: {e:?}"))
+    }
+
+    /// Build an i32 literal of the given shape.
+    pub fn literal_i32(values: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+        let expect: usize = shape.iter().product();
+        if values.len() != expect {
+            bail!("literal_i32: {} values for shape {shape:?}", values.len());
+        }
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        xla::Literal::vec1(values)
+            .reshape(&dims)
+            .map_err(|e| anyhow!("reshape: {e:?}"))
+    }
+
+    /// Build an f32 literal of the given shape.
+    pub fn literal_f32(values: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        xla::Literal::vec1(values)
+            .reshape(&dims)
+            .map_err(|e| anyhow!("reshape: {e:?}"))
+    }
+}
+
+impl Executable {
+    /// Execute with host literals; returns the decomposed output tuple.
+    pub fn run_literals(&self, args: &[xla::Literal])
+        -> Result<Vec<xla::Literal>> {
+        if args.len() != self.meta.inputs.len() {
+            bail!(
+                "expected {} args, got {}",
+                self.meta.inputs.len(),
+                args.len()
+            );
+        }
+        let out = self
+            .exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        let tuple = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple: {e:?}"))
+    }
+
+    /// Execute with device buffers; returns the raw output tuple literal
+    /// (callers decompose as needed).
+    pub fn run_buffers(&self, args: &[&xla::PjRtBuffer])
+        -> Result<Vec<xla::Literal>> {
+        if args.len() != self.meta.inputs.len() {
+            bail!(
+                "expected {} args, got {}",
+                self.meta.inputs.len(),
+                args.len()
+            );
+        }
+        let out = self
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(args)
+            .map_err(|e| anyhow!("execute_b: {e:?}"))?;
+        let tuple = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple: {e:?}"))
+    }
+}
+
+/// Per-step training statistics.
+#[derive(Debug, Clone)]
+pub struct StepStats {
+    pub loss: f32,
+    pub per_adapter_loss: Vec<f32>,
+}
+
+/// A device buffer paired with the host literal it was copied from.
+///
+/// SAFETY-CRITICAL: `buffer_from_host_literal` enqueues the host→device
+/// copy on a PJRT worker thread and returns immediately; dropping the
+/// source literal while the copy is in flight is a use-after-free (it
+/// segfaults inside `AbstractTfrtCpuBuffer::CopyFromLiteral`). Holding
+/// the literal for the buffer's lifetime makes the pair sound.
+pub struct DeviceTensor {
+    pub buf: xla::PjRtBuffer,
+    _src: xla::Literal,
+}
+
+/// Drives one SSM variant: initializes device-resident state from the
+/// AOT init program and advances fused training steps. The backbone
+/// buffers are uploaded once and never touched again (they are frozen);
+/// only the small adapter/optimizer tensors round-trip each step.
+pub struct Trainer {
+    step_exe: Executable,
+    variant: VariantMeta,
+    /// device state in manifest order: backbone ++ lora ++ m ++ v ++ t
+    state: Vec<DeviceTensor>,
+    client_handle: RuntimeHandle,
+    pub steps_done: u64,
+}
+
+/// Cheap clone of the pieces of [`Runtime`] the trainer needs.
+struct RuntimeHandle {
+    client: xla::PjRtClient,
+}
+
+impl RuntimeHandle {
+    /// Upload, keeping the source literal alive with the buffer (see
+    /// [`DeviceTensor`]).
+    fn upload(&self, lit: xla::Literal) -> Result<DeviceTensor> {
+        let buf = self
+            .client
+            .buffer_from_host_literal(None, &lit)
+            .map_err(|e| anyhow!("upload: {e:?}"))?;
+        Ok(DeviceTensor {
+            buf,
+            _src: lit,
+        })
+    }
+}
+
+impl Trainer {
+    /// Compile init+step for `variant`, run init with `seed`, upload the
+    /// state.
+    pub fn new(runtime: &Runtime, variant: &str, seed: i32)
+        -> Result<Trainer> {
+        Trainer::new_with_init_from(runtime, variant, variant, seed)
+    }
+
+    /// Like [`Trainer::new`] but borrow the init program from another
+    /// variant that shares the same state layout (nano-batched step
+    /// programs reuse their base variant's init).
+    pub fn new_with_init_from(
+        runtime: &Runtime,
+        variant: &str,
+        init_variant: &str,
+        seed: i32,
+    ) -> Result<Trainer> {
+        let vmeta = runtime
+            .manifest
+            .variant(variant)
+            .with_context(|| format!("unknown variant {variant}"))?
+            .clone();
+        let init_owner = runtime
+            .manifest
+            .variant(init_variant)
+            .with_context(|| format!("unknown variant {init_variant}"))?;
+        let init_meta = init_owner
+            .init
+            .as_ref()
+            .with_context(|| format!("variant {init_variant} has no init"))?;
+        let init_exe = runtime.compile(init_meta)?;
+        let step_exe = runtime.compile(&vmeta.step)?;
+
+        let seed_lit = xla::Literal::scalar(seed);
+        let state_lits = init_exe.run_literals(&[seed_lit])?;
+        if state_lits.len() != vmeta.n_state() {
+            bail!(
+                "init returned {} tensors, expected {}",
+                state_lits.len(),
+                vmeta.n_state()
+            );
+        }
+        let handle = RuntimeHandle {
+            client: runtime_client(runtime),
+        };
+        let state = state_lits
+            .into_iter()
+            .map(|l| handle.upload(l))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Trainer {
+            step_exe,
+            variant: vmeta,
+            state,
+            client_handle: handle,
+            steps_done: 0,
+        })
+    }
+
+    pub fn variant(&self) -> &VariantMeta {
+        &self.variant
+    }
+
+    /// One fused training step over `tokens` (row-major [B, S]) with
+    /// per-sequence `adapter_ids` (len B).
+    pub fn step(&mut self, tokens: &[i32], adapter_ids: &[i32])
+        -> Result<StepStats> {
+        let cfg = &self.variant.config;
+        let b = cfg.total_batch();
+        let s = cfg.seq_len;
+        if tokens.len() != b * s {
+            bail!("tokens: got {}, want {}", tokens.len(), b * s);
+        }
+        if adapter_ids.len() != b {
+            bail!("adapter_ids: got {}, want {b}", adapter_ids.len());
+        }
+        let tok_buf = self
+            .client_handle
+            .upload(Runtime::literal_i32(tokens, &[b, s])?)?;
+        let aid_buf = self
+            .client_handle
+            .upload(Runtime::literal_i32(adapter_ids, &[b])?)?;
+
+        let mut args: Vec<&xla::PjRtBuffer> =
+            self.state.iter().map(|t| &t.buf).collect();
+        args.push(&tok_buf.buf);
+        args.push(&aid_buf.buf);
+        let mut outs = self.step_exe.run_buffers(&args)?;
+        // outputs: lora(n) ++ m(n) ++ v(n) ++ t ++ loss ++ per_adapter
+        let n_l = self.variant.n_lora;
+        let expect = 3 * n_l + 3;
+        if outs.len() != expect {
+            bail!("step returned {} tensors, expected {expect}", outs.len());
+        }
+        let per_adapter_lit = outs.pop().unwrap();
+        let loss_lit = outs.pop().unwrap();
+        // re-upload the updated adapter/optimizer state (backbone fixed)
+        for (i, lit) in outs.into_iter().enumerate() {
+            self.state[self.variant.n_backbone + i] =
+                self.client_handle.upload(lit)?;
+        }
+        let loss = loss_lit
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("loss: {e:?}"))?[0];
+        let per_adapter_loss = per_adapter_lit
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("per-adapter loss: {e:?}"))?;
+        self.steps_done += 1;
+        Ok(StepStats {
+            loss,
+            per_adapter_loss,
+        })
+    }
+
+    /// Download the current LoRA parameter tensors (inspection/tests).
+    pub fn lora_state(&self) -> Result<Vec<Vec<f32>>> {
+        let n0 = self.variant.n_backbone;
+        (n0..n0 + self.variant.n_lora)
+            .map(|i| self.download_f32(i))
+            .collect()
+    }
+
+    /// Download the full trainable state — lora ++ m ++ v ++ t — in
+    /// manifest order (checkpointing).
+    pub fn trainable_state(&self) -> Result<Vec<Vec<f32>>> {
+        (self.variant.n_backbone..self.variant.n_state())
+            .map(|i| self.download_f32(i))
+            .collect()
+    }
+
+    /// Overwrite the trainable state from flattened f32 tensors (the
+    /// counterpart of [`Self::trainable_state`]; checkpoint restore).
+    pub fn load_trainable_state(&mut self, tensors: &[Vec<f32>])
+        -> Result<()> {
+        let n0 = self.variant.n_backbone;
+        let expect = self.variant.n_state() - n0;
+        if tensors.len() != expect {
+            bail!("expected {expect} trainable tensors, got {}",
+                  tensors.len());
+        }
+        for (k, vals) in tensors.iter().enumerate() {
+            let spec = &self.variant.step.inputs[n0 + k];
+            if spec.elements() != vals.len() {
+                bail!(
+                    "tensor {k}: {} values for shape {:?}",
+                    vals.len(),
+                    spec.shape
+                );
+            }
+            let lit = Runtime::literal_f32(vals, &spec.shape)?;
+            self.state[n0 + k] = self.client_handle.upload(lit)?;
+        }
+        Ok(())
+    }
+
+    fn download_f32(&self, i: usize) -> Result<Vec<f32>> {
+        self.state[i]
+            .buf
+            .to_literal_sync()
+            .map_err(|e| anyhow!("download: {e:?}"))?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+}
+
+/// The xla client is an Rc-style handle internally; cloning shares it.
+fn runtime_client(rt: &Runtime) -> xla::PjRtClient {
+    rt.client.clone()
+}

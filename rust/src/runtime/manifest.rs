@@ -1,0 +1,389 @@
+//! `artifacts/manifest.json` parsing: the contract between `aot.py` and
+//! the Rust runtime. The manifest pins every program's positional buffer
+//! layout (shapes + dtypes in argument order), so binding is fully
+//! static — no Python, no reflection, no shape inference at run time.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{self, Json};
+
+/// Shape + dtype of one program argument/result.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn byte_size(&self) -> usize {
+        let per = match self.dtype.as_str() {
+            "f32" | "i32" => 4,
+            "bf16" | "f16" => 2,
+            _ => 4,
+        };
+        self.elements() * per
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec, String> {
+        Ok(TensorSpec {
+            shape: j
+                .get("shape")
+                .and_then(Json::as_usize_vec)
+                .ok_or("tensor spec missing shape")?,
+            dtype: j
+                .get("dtype")
+                .and_then(Json::as_str)
+                .ok_or("tensor spec missing dtype")?
+                .to_string(),
+        })
+    }
+}
+
+/// One AOT program (init or step) with its I/O layout.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProgramMeta {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ProgramMeta {
+    fn from_json(j: &Json) -> Result<ProgramMeta, String> {
+        let specs = |key: &str| -> Result<Vec<TensorSpec>, String> {
+            j.get(key)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| format!("program missing {key}"))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect()
+        };
+        Ok(ProgramMeta {
+            file: j
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or("program missing file")?
+                .to_string(),
+            inputs: specs("inputs")?,
+            outputs: specs("outputs")?,
+        })
+    }
+}
+
+/// Key SSM configuration echoed into the manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VariantConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub seq_len: usize,
+    pub num_adapters: usize,
+    pub r_max: usize,
+    pub ranks: Vec<usize>,
+    pub batch_sizes: Vec<usize>,
+    pub fused: bool,
+}
+
+impl VariantConfig {
+    pub fn total_batch(&self) -> usize {
+        self.batch_sizes.iter().sum()
+    }
+
+    fn from_json(j: &Json) -> Result<VariantConfig, String> {
+        let u = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| format!("config missing {k}"))
+        };
+        Ok(VariantConfig {
+            vocab: u("vocab")?,
+            d_model: u("d_model")?,
+            n_layers: u("n_layers")?,
+            seq_len: u("seq_len")?,
+            num_adapters: u("num_adapters")?,
+            r_max: u("r_max")?,
+            ranks: j
+                .get("ranks")
+                .and_then(Json::as_usize_vec)
+                .ok_or("config missing ranks")?,
+            batch_sizes: j
+                .get("batch_sizes")
+                .and_then(Json::as_usize_vec)
+                .ok_or("config missing batch_sizes")?,
+            fused: j
+                .get("fused")
+                .and_then(Json::as_bool)
+                .unwrap_or(true),
+        })
+    }
+}
+
+/// One SSM variant: an optional init program + the train-step program.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VariantMeta {
+    pub name: String,
+    pub n_nano: usize,
+    pub config: VariantConfig,
+    pub init: Option<ProgramMeta>,
+    pub step: ProgramMeta,
+    pub n_backbone: usize,
+    pub n_lora: usize,
+    pub param_count: u64,
+    pub lora_param_count: u64,
+    pub flops_per_step: f64,
+}
+
+impl VariantMeta {
+    /// Number of state tensors (backbone + lora + m + v + t).
+    pub fn n_state(&self) -> usize {
+        self.n_backbone + 3 * self.n_lora + 1
+    }
+
+    fn from_json(j: &Json) -> Result<VariantMeta, String> {
+        let layout = j.get("state_layout").ok_or("missing state_layout")?;
+        Ok(VariantMeta {
+            name: j
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or("variant missing name")?
+                .to_string(),
+            n_nano: j.get("n_nano").and_then(Json::as_usize).unwrap_or(1),
+            config: VariantConfig::from_json(
+                j.get("config").ok_or("variant missing config")?,
+            )?,
+            init: match j.get("init") {
+                Some(p) => Some(ProgramMeta::from_json(p)?),
+                None => None,
+            },
+            step: ProgramMeta::from_json(
+                j.get("step").ok_or("variant missing step")?,
+            )?,
+            n_backbone: layout
+                .get("n_backbone")
+                .and_then(Json::as_usize)
+                .ok_or("layout missing n_backbone")?,
+            n_lora: layout
+                .get("n_lora")
+                .and_then(Json::as_usize)
+                .ok_or("layout missing n_lora")?,
+            param_count: j
+                .get("param_count")
+                .and_then(Json::as_i64)
+                .unwrap_or(0) as u64,
+            lora_param_count: j
+                .get("lora_param_count")
+                .and_then(Json::as_i64)
+                .unwrap_or(0) as u64,
+            flops_per_step: j
+                .get("flops_per_step")
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0),
+        })
+    }
+}
+
+/// Kernel micro-bench program (fused vs unfused, Fig. 7 / kernel_micro).
+#[derive(Debug, Clone, PartialEq)]
+pub struct KmicroMeta {
+    pub name: String,
+    pub file: String,
+    pub fused: bool,
+    pub k: usize,
+    pub t: usize,
+    pub d: usize,
+    pub r: usize,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl KmicroMeta {
+    fn from_json(j: &Json) -> Result<KmicroMeta, String> {
+        let u = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| format!("kmicro missing {k}"))
+        };
+        Ok(KmicroMeta {
+            name: j
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or("kmicro missing name")?
+                .to_string(),
+            file: j
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or("kmicro missing file")?
+                .to_string(),
+            fused: j
+                .get("fused")
+                .and_then(Json::as_bool)
+                .unwrap_or(true),
+            k: u("k")?,
+            t: u("t")?,
+            d: u("d")?,
+            r: u("r")?,
+            inputs: j
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or("kmicro missing inputs")?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<_, _>>()?,
+            outputs: j
+                .get("outputs")
+                .and_then(Json::as_arr)
+                .ok_or("kmicro missing outputs")?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<_, _>>()?,
+        })
+    }
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub variants: Vec<VariantMeta>,
+    pub nano: Vec<VariantMeta>,
+    pub kmicro: Vec<KmicroMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let j = json::parse_file(&dir.join("manifest.json"))?;
+        Manifest::from_json(dir, &j)
+    }
+
+    pub fn from_json(dir: &Path, j: &Json) -> Result<Manifest, String> {
+        let arr = |key: &str| -> Vec<Json> {
+            j.get(key)
+                .and_then(Json::as_arr)
+                .map(|a| a.to_vec())
+                .unwrap_or_default()
+        };
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            variants: arr("variants")
+                .iter()
+                .map(VariantMeta::from_json)
+                .collect::<Result<_, _>>()?,
+            nano: arr("nano")
+                .iter()
+                .map(VariantMeta::from_json)
+                .collect::<Result<_, _>>()?,
+            kmicro: arr("kmicro")
+                .iter()
+                .map(KmicroMeta::from_json)
+                .collect::<Result<_, _>>()?,
+        })
+    }
+
+    pub fn variant(&self, name: &str) -> Option<&VariantMeta> {
+        self.variants
+            .iter()
+            .chain(self.nano.iter())
+            .find(|v| v.name == name)
+    }
+
+    pub fn kmicro_by_name(&self, name: &str) -> Option<&KmicroMeta> {
+        self.kmicro.iter().find(|k| k.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Json {
+        json::parse(
+            r#"{
+            "format": 1,
+            "variants": [{
+                "name": "tiny", "n_nano": 1,
+                "config": {"vocab": 256, "d_model": 64, "n_layers": 2,
+                           "seq_len": 32, "num_adapters": 4, "r_max": 8,
+                           "ranks": [2,4,8,8], "batch_sizes": [2,2,2,2],
+                           "fused": true},
+                "param_count": 100000, "lora_param_count": 8192,
+                "flops_per_step": 1e9,
+                "state_layout": {"n_backbone": 10, "n_lora": 4},
+                "init": {"file": "tiny.init.hlo.txt",
+                         "inputs": [{"shape": [], "dtype": "i32"}],
+                         "outputs": [{"shape": [256,64], "dtype": "f32"}]},
+                "step": {"file": "tiny.step.hlo.txt",
+                         "inputs": [{"shape": [8,32], "dtype": "i32"}],
+                         "outputs": [{"shape": [], "dtype": "f32"}]}
+            }],
+            "nano": [],
+            "kmicro": [{
+                "name": "kmicro_fused_k4", "file": "k.hlo.txt",
+                "fused": true, "k": 4, "t": 512, "d": 256, "r": 16,
+                "inputs": [{"shape": [512,256], "dtype": "f32"}],
+                "outputs": [{"shape": [512,256], "dtype": "f32"}]
+            }]
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::from_json(Path::new("/tmp"), &sample()).unwrap();
+        assert_eq!(m.variants.len(), 1);
+        let v = m.variant("tiny").unwrap();
+        assert_eq!(v.config.total_batch(), 8);
+        assert_eq!(v.n_state(), 10 + 12 + 1);
+        assert!(v.init.is_some());
+        assert_eq!(m.kmicro.len(), 1);
+        assert!(m.kmicro_by_name("kmicro_fused_k4").is_some());
+        assert!(m.variant("nope").is_none());
+    }
+
+    #[test]
+    fn tensor_spec_sizes() {
+        let t = TensorSpec {
+            shape: vec![4, 8],
+            dtype: "f32".into(),
+        };
+        assert_eq!(t.elements(), 32);
+        assert_eq!(t.byte_size(), 128);
+        let b = TensorSpec {
+            shape: vec![2],
+            dtype: "bf16".into(),
+        };
+        assert_eq!(b.byte_size(), 4);
+        let s = TensorSpec {
+            shape: vec![],
+            dtype: "f32".into(),
+        };
+        assert_eq!(s.elements(), 1);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        let j = json::parse(r#"{"variants": [{"name": "x"}]}"#).unwrap();
+        assert!(Manifest::from_json(Path::new("/tmp"), &j).is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_if_built() {
+        // integration-level check against the actual artifacts dir when
+        // `make artifacts` has run (skipped otherwise)
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            let tiny = m.variant("tiny").expect("tiny variant");
+            assert_eq!(tiny.n_backbone, 10);
+            assert_eq!(tiny.n_lora, 4);
+            assert_eq!(
+                tiny.step.inputs.len(),
+                tiny.n_state() + 2,
+                "state + tokens + adapter_ids"
+            );
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) and
+//! executes them from Rust — Python never runs on the training path.
+//!
+//! Pipeline: `HloModuleProto::from_text_file` → `XlaComputation` →
+//! `PjRtClient::compile` → `execute_b` over device-resident buffers.
+//! HLO *text* is the interchange format because the crate's pinned
+//! xla_extension (0.5.1) rejects jax≥0.5's 64-bit-id serialized protos;
+//! the text parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod manifest;
+pub mod exec;
+pub mod checkpoint;
+
+pub use checkpoint::Checkpoint;
+pub use exec::{Executable, Runtime, Trainer, StepStats};
+pub use manifest::{Manifest, ProgramMeta, TensorSpec, VariantMeta,
+                   KmicroMeta};

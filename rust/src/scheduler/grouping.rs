@@ -1,0 +1,438 @@
+//! Hierarchical incremental grouping (Algorithm 1, §3.4).
+
+use super::predictor::{GroupPerf, Predictor};
+use super::Candidate;
+use crate::cluster::Allocation;
+use crate::config::SchedulerConfig;
+use crate::util::f64_cmp;
+use crate::workload::JobSpec;
+
+/// A (possibly singleton) group under construction or finalized.
+#[derive(Debug, Clone)]
+pub struct GroupState {
+    pub jobs: Vec<JobSpec>,
+    pub alloc: Allocation,
+    pub urgency: f64,
+    pub residual: f64,
+}
+
+impl GroupState {
+    fn from_candidate(c: Candidate) -> GroupState {
+        GroupState {
+            jobs: vec![c.job],
+            alloc: c.alloc,
+            urgency: c.urgency,
+            residual: c.residual,
+        }
+    }
+
+    fn merged_with(&self, other: &GroupState, residual: f64) -> GroupState {
+        let mut jobs = self.jobs.clone();
+        jobs.extend(other.jobs.iter().cloned());
+        GroupState {
+            jobs,
+            alloc: self.alloc.union(&other.alloc),
+            urgency: self.urgency.max(other.urgency),
+            residual,
+        }
+    }
+
+    fn nodes(&self) -> Vec<usize> {
+        self.alloc.nodes()
+    }
+
+    fn shares_node(&self, other: &GroupState) -> bool {
+        let mine = self.nodes();
+        other.nodes().iter().any(|n| mine.contains(n))
+    }
+}
+
+/// Result of a scheduling round.
+#[derive(Debug)]
+pub struct ScheduleOutcome {
+    pub groups: Vec<(GroupState, GroupPerf)>,
+    /// merges accepted per tier (intra-node, inter-node) — Fig. 6b data
+    pub merges_intra: usize,
+    pub merges_inter: usize,
+    pub predictor_probes: u64,
+}
+
+/// One round of Algorithm 1 over the runnable jobs.
+///
+/// Tiers run bottom-up: merges whose members share a node first (cheap
+/// NVLink communication), then cross-node merges (IB). Within a tier the
+/// incremental pack-and-reinsert loop repeats until no merge improves
+/// predicted aggregate throughput by at least `cfg.min_merge_gain` while
+/// keeping every member within its Δ^max.
+pub fn schedule(
+    candidates: Vec<Candidate>,
+    predictor: &mut Predictor,
+    cfg: &SchedulerConfig,
+) -> ScheduleOutcome {
+    let probes0 = predictor.probes;
+    let mut queue: Vec<GroupState> = candidates
+        .into_iter()
+        .map(GroupState::from_candidate)
+        .collect();
+
+    let mut merges_intra = 0usize;
+    let mut merges_inter = 0usize;
+
+    // tier 0: intra-node, tier 1: cross-node ("then across ranks" —
+    // our topology has two tiers). Within a tier, a single
+    // pack-and-finalize pass: each seed (most urgent / most constrained
+    // first) absorbs beneficial partners via binary-cut probes until no
+    // merge helps, then is finalized. Every job is absorbed at most
+    // once, so the whole round costs O(K log K) predictor probes —
+    // the §3.4 complexity claim, measured by the sched_scaling bench.
+    for tier in 0..2 {
+        // Alg. 1 line 5: sort by urgency desc, residual asc.
+        queue.sort_by(|a, b| {
+            f64_cmp(b.urgency, a.urgency)
+                .then(f64_cmp(a.residual, b.residual))
+        });
+        let mut seed_idx = 0;
+        while seed_idx < queue.len() {
+            match try_merge_for_seed(
+                &mut queue, seed_idx, predictor, cfg, tier,
+            ) {
+                true => {
+                    if tier == 0 {
+                        merges_intra += 1;
+                    } else {
+                        merges_inter += 1;
+                    }
+                    // seed absorbed a partner: keep packing this seed
+                }
+                false => seed_idx += 1, // finalized; lift to next seed
+            }
+        }
+    }
+
+    // finalize: compute per-group perf for the simulator
+    let mut groups = vec![];
+    for g in queue {
+        if let Some(perf) = predictor.group_perf(&g.jobs, &g.alloc) {
+            groups.push((g, perf));
+        }
+    }
+    ScheduleOutcome {
+        groups,
+        merges_intra,
+        merges_inter,
+        predictor_probes: predictor.probes - probes0,
+    }
+}
+
+/// Attempt the best merge for the seed at `seed_idx` within this tier;
+/// `true` if a partner was absorbed (the packed group stays the seed for
+/// further absorption), `false` when no beneficial merge exists and the
+/// seed is finalized.
+fn try_merge_for_seed(
+    queue: &mut Vec<GroupState>,
+    seed_idx: usize,
+    predictor: &mut Predictor,
+    cfg: &SchedulerConfig,
+    tier: usize,
+) -> bool {
+    let seed = &queue[seed_idx];
+    if seed.jobs.len() >= cfg.max_group_size {
+        return false;
+    }
+    // candidate partners: complementary = large residual first
+    // (the binary-cut walks this sorted list, §3.4). Only unfinalized
+    // entries (those after the seed) are eligible.
+    let mut partners: Vec<usize> = (seed_idx + 1..queue.len())
+        .filter(|&i| {
+            queue[i].jobs[0].base_model == seed.jobs[0].base_model
+        })
+        .filter(|&i| {
+            queue[i].jobs.len() + seed.jobs.len() <= cfg.max_group_size
+        })
+        .filter(|&i| match tier {
+            0 => queue[i].shares_node(seed),
+            _ => true,
+        })
+        .collect();
+    if partners.is_empty() {
+        return false;
+    }
+    partners.sort_by(|&a, &b| {
+        f64_cmp(queue[b].residual, queue[a].residual)
+    });
+
+    if let Some((best_partner, gain)) =
+        binary_cut_best(queue, seed_idx, &partners, predictor, cfg)
+    {
+        if gain >= cfg.min_merge_gain {
+            do_merge(queue, seed_idx, best_partner, predictor);
+            return true;
+        }
+    }
+    false
+}
+
+/// Binary-cut search (§3.4): on the residual-sorted partner list, probe a
+/// logarithmic set of prefixes to locate the cutoff past which adding
+/// jobs stops improving efficiency, then return the best single partner
+/// in the retained region with the gain it delivers.
+///
+/// Evaluations are throughput ratios:
+/// `gain = T̂(seed ∪ p) / (T̂(seed) + T̂(p))`, constrained to groupings
+/// where every member stays within Δ^max.
+fn binary_cut_best(
+    queue: &[GroupState],
+    seed_idx: usize,
+    partners: &[usize],
+    predictor: &mut Predictor,
+    _cfg: &SchedulerConfig,
+) -> Option<(usize, f64)> {
+    let seed = &queue[seed_idx];
+    let seed_tp = predictor
+        .group_perf(&seed.jobs, &seed.alloc)?
+        .throughput_samples_s;
+
+    let gain_of = |p_idx: usize, predictor: &mut Predictor| -> Option<f64> {
+        let partner = &queue[p_idx];
+        let p_tp = predictor
+            .group_perf(&partner.jobs, &partner.alloc)?
+            .throughput_samples_s;
+        let merged_alloc = seed.alloc.union(&partner.alloc);
+        let mut jobs = seed.jobs.clone();
+        jobs.extend(partner.jobs.iter().cloned());
+        let g = predictor.group_perf(&jobs, &merged_alloc)?;
+        if !g.within_slowdown(&jobs) {
+            return None;
+        }
+        Some(g.throughput_samples_s / (seed_tp + p_tp))
+    };
+
+    // binary cut: shrink the candidate window [0, hi) while the midpoint
+    // probe is not better than the best seen in the left half
+    let mut lo = 0usize;
+    let mut hi = partners.len();
+    let mut best: Option<(usize, f64)> = None;
+    let probe = |i: usize,
+                     best: &mut Option<(usize, f64)>,
+                     predictor: &mut Predictor| {
+        if let Some(g) = gain_of(partners[i], predictor) {
+            if best.map_or(true, |(_, bg)| g > bg) {
+                *best = Some((partners[i], g));
+            }
+        }
+    };
+    probe(0, &mut best, predictor);
+    while hi - lo > 1 {
+        let mid = (lo + hi) / 2;
+        let before = best;
+        probe(mid, &mut best, predictor);
+        if best == before {
+            // midpoint didn't help: cut the right portion
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    best
+}
+
+/// Absorb `partner_idx` into the seed in place (the seed keeps its
+/// queue position so the pack-and-finalize pass stays single-pass).
+fn do_merge(
+    queue: &mut Vec<GroupState>,
+    seed_idx: usize,
+    partner_idx: usize,
+    predictor: &mut Predictor,
+) {
+    debug_assert_ne!(seed_idx, partner_idx);
+    let partner = queue.remove(partner_idx);
+    let seed_idx = if partner_idx < seed_idx {
+        seed_idx - 1
+    } else {
+        seed_idx
+    };
+    let seed = queue[seed_idx].clone();
+    let merged_alloc = seed.alloc.union(&partner.alloc);
+    let mut jobs = seed.jobs.clone();
+    jobs.extend(partner.jobs.iter().cloned());
+    let residual = predictor
+        .group_perf(&jobs, &merged_alloc)
+        .map(|p| (1.0 - p.compute_util).clamp(0.0, 1.0))
+        .unwrap_or(0.0);
+    queue[seed_idx] = seed.merged_with(&partner, residual);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Allocator, ClusterSpec};
+    use crate::planner::PlanOptions;
+
+    fn job(id: u64, rank: usize, batch: usize, seq: usize, gpus: usize)
+        -> JobSpec {
+        JobSpec {
+            id,
+            base_model: "llama3-8b".into(),
+            rank,
+            batch_size: batch,
+            seq_len: seq,
+            gpus,
+            total_steps: 1000,
+            submit_time: 0.0,
+            max_slowdown: 2.0,
+        }
+    }
+
+    fn mk_candidates(
+        jobs: Vec<JobSpec>,
+        alloc: &mut Allocator,
+        pred: &mut Predictor,
+    ) -> Vec<Candidate> {
+        jobs.into_iter()
+            .map(|j| {
+                let a = alloc.allocate(j.gpus).unwrap();
+                let residual = pred.residual(&j, &a).unwrap_or(0.5);
+                Candidate {
+                    job: j,
+                    alloc: a,
+                    urgency: 0.0,
+                    residual,
+                }
+            })
+            .collect()
+    }
+
+    fn setup() -> (Predictor, Allocator, SchedulerConfig) {
+        let spec = ClusterSpec::default_128();
+        (
+            Predictor::new(spec.clone(), PlanOptions::default()),
+            Allocator::new(spec),
+            SchedulerConfig::default(),
+        )
+    }
+
+    #[test]
+    fn groups_complementary_jobs() {
+        let (mut pred, mut alloc, cfg) = setup();
+        let jobs = vec![
+            job(0, 4, 2, 512, 1), // both leave residual capacity:
+            job(1, 8, 4, 512, 1), // fusing amortizes the backbone pass
+        ];
+        let cands = mk_candidates(jobs, &mut alloc, &mut pred);
+        let out = schedule(cands, &mut pred, &cfg);
+        assert_eq!(out.groups.len(), 1, "should merge into one group");
+        assert_eq!(out.groups[0].0.jobs.len(), 2);
+        assert_eq!(out.merges_intra + out.merges_inter, 1);
+    }
+
+    #[test]
+    fn respects_max_group_size() {
+        let (mut pred, mut alloc, mut cfg) = setup();
+        cfg.max_group_size = 2;
+        let jobs: Vec<JobSpec> =
+            (0..4).map(|i| job(i, 2, 1, 256, 1)).collect();
+        let cands = mk_candidates(jobs, &mut alloc, &mut pred);
+        let out = schedule(cands, &mut pred, &cfg);
+        for (g, _) in &out.groups {
+            assert!(g.jobs.len() <= 2);
+        }
+    }
+
+    #[test]
+    fn never_mixes_base_models() {
+        let (mut pred, mut alloc, cfg) = setup();
+        let mut j1 = job(1, 2, 1, 256, 1);
+        j1.base_model = "qwen3-8b".into();
+        let jobs = vec![job(0, 2, 1, 256, 1), j1];
+        let cands = mk_candidates(jobs, &mut alloc, &mut pred);
+        let out = schedule(cands, &mut pred, &cfg);
+        assert_eq!(out.groups.len(), 2);
+    }
+
+    #[test]
+    fn enforces_slowdown_constraint() {
+        let (mut pred, mut alloc, cfg) = setup();
+        // two big saturated jobs with a *tight* slowdown budget: a merge
+        // would push each past Δ^max, so both must stay isolated
+        let mut a = job(0, 16, 8, 1024, 1);
+        let mut b = job(1, 16, 8, 1024, 1);
+        a.max_slowdown = 1.01;
+        b.max_slowdown = 1.01;
+        let cands = mk_candidates(vec![a, b], &mut alloc, &mut pred);
+        let out = schedule(cands, &mut pred, &cfg);
+        for (g, perf) in &out.groups {
+            assert!(perf.within_slowdown(&g.jobs));
+        }
+    }
+
+    #[test]
+    fn all_members_within_slowdown_after_scheduling() {
+        let (mut pred, mut alloc, cfg) = setup();
+        let jobs: Vec<JobSpec> = (0..6)
+            .map(|i| {
+                job(i, [2, 4, 8, 16][i as usize % 4],
+                    [1, 2, 4, 8][(i as usize + 1) % 4], 512, 1)
+            })
+            .collect();
+        let cands = mk_candidates(jobs, &mut alloc, &mut pred);
+        let out = schedule(cands, &mut pred, &cfg);
+        for (g, perf) in &out.groups {
+            assert!(perf.within_slowdown(&g.jobs), "{:?}", perf.slowdowns);
+        }
+    }
+
+    #[test]
+    fn grouping_beats_isolated_aggregate_throughput() {
+        let (mut pred, mut alloc, cfg) = setup();
+        let jobs: Vec<JobSpec> = vec![
+            job(0, 2, 1, 256, 1),
+            job(1, 16, 8, 1024, 1),
+            job(2, 4, 2, 512, 1),
+            job(3, 8, 4, 512, 1),
+        ];
+        // isolated aggregate
+        let mut iso_total = 0.0;
+        let mut iso_alloc = Allocator::new(ClusterSpec::default_128());
+        for j in &jobs {
+            let a = iso_alloc.allocate(j.gpus).unwrap();
+            let t = pred.isolated_step_time(j, &a).unwrap();
+            iso_total += j.batch_size as f64 / t;
+        }
+        let cands = mk_candidates(jobs, &mut alloc, &mut pred);
+        let out = schedule(cands, &mut pred, &cfg);
+        let grouped: f64 = out
+            .groups
+            .iter()
+            .map(|(_, p)| p.throughput_samples_s)
+            .sum();
+        assert!(
+            grouped >= iso_total,
+            "grouped {grouped} < isolated {iso_total}"
+        );
+    }
+
+    #[test]
+    fn empty_input() {
+        let (mut pred, _, cfg) = setup();
+        let out = schedule(vec![], &mut pred, &cfg);
+        assert!(out.groups.is_empty());
+    }
+
+    #[test]
+    fn probe_count_scales_quasilinearly() {
+        // O(K log K): probes per job should not explode with K
+        let (mut pred, mut alloc, cfg) = setup();
+        let jobs: Vec<JobSpec> = (0..24)
+            .map(|i| {
+                job(i, [2, 4, 8, 16][i as usize % 4],
+                    [1, 2, 4, 8][i as usize % 4], 256, 1)
+            })
+            .collect();
+        let k = jobs.len() as f64;
+        let cands = mk_candidates(jobs, &mut alloc, &mut pred);
+        let out = schedule(cands, &mut pred, &cfg);
+        let per_job = out.predictor_probes as f64 / k;
+        // generous bound: probes/job stays well under K (quadratic blowup)
+        assert!(per_job < k, "probes/job {per_job} vs K {k}");
+    }
+}

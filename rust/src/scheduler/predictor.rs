@@ -1,0 +1,297 @@
+//! Throughput predictor T̂(G): composes the Model Fuser, the planner and
+//! the Kernel Fuser model into per-group performance estimates, with a
+//! memoization cache keyed by (job ids, allocation) so the scheduler's
+//! repeated probes are cheap.
+
+use std::collections::HashMap;
+
+use crate::cluster::{Allocation, ClusterSpec};
+use crate::planner::{plan, ParallelPlan, PlanError, PlanOptions};
+use crate::ssm::Ssm;
+use crate::workload::JobSpec;
+
+/// Predicted performance of a fused group.
+#[derive(Debug, Clone)]
+pub struct GroupPerf {
+    /// group step time (all members step together)
+    pub step_time_s: f64,
+    /// Σ_j batch_j / step_time — cluster-throughput contribution
+    pub throughput_samples_s: f64,
+    /// per member (job id, Δ_j(G) = isolated progress rate / grouped)
+    pub slowdowns: Vec<(u64, f64)>,
+    /// compute utilization over the group's GPUs (Fig. 6a metric)
+    pub compute_util: f64,
+    pub plan: ParallelPlan,
+}
+
+impl GroupPerf {
+    /// Does every member respect its Δ^max?
+    pub fn within_slowdown(&self, jobs: &[JobSpec]) -> bool {
+        self.slowdowns.iter().all(|(id, s)| {
+            jobs.iter()
+                .find(|j| j.id == *id)
+                .map_or(true, |j| *s <= j.max_slowdown)
+        })
+    }
+}
+
+/// Memoizing predictor.
+pub struct Predictor {
+    spec: ClusterSpec,
+    opts: PlanOptions,
+    iso_cache: HashMap<(u64, Vec<(usize, usize)>), f64>,
+    group_cache: HashMap<CacheKey, Option<GroupPerf>>,
+    pub probes: u64,
+}
+
+type CacheKey = (Vec<u64>, Vec<(usize, usize)>);
+
+fn key_of(jobs: &[JobSpec], alloc: &Allocation) -> CacheKey {
+    let mut ids: Vec<u64> = jobs.iter().map(|j| j.id).collect();
+    ids.sort_unstable();
+    let mut gpus: Vec<(usize, usize)> =
+        alloc.gpus.iter().map(|g| (g.node, g.idx)).collect();
+    gpus.sort_unstable();
+    (ids, gpus)
+}
+
+impl Predictor {
+    pub fn new(spec: ClusterSpec, opts: PlanOptions) -> Predictor {
+        Predictor {
+            spec,
+            opts,
+            iso_cache: HashMap::new(),
+            group_cache: HashMap::new(),
+            probes: 0,
+        }
+    }
+
+    pub fn spec(&self) -> &ClusterSpec {
+        &self.spec
+    }
+
+    /// Step time of `job` running alone on `alloc`.
+    pub fn isolated_step_time(
+        &mut self,
+        job: &JobSpec,
+        alloc: &Allocation,
+    ) -> Result<f64, PlanError> {
+        let gkey: Vec<(usize, usize)> =
+            alloc.gpus.iter().map(|g| (g.node, g.idx)).collect();
+        if let Some(&t) = self.iso_cache.get(&(job.id, gkey.clone())) {
+            return Ok(t);
+        }
+        self.probes += 1;
+        let ssm = Ssm::fuse(std::slice::from_ref(job))
+            .map_err(|_| PlanError::NoGpus)?;
+        let p = plan(&ssm, alloc, &self.spec, &self.opts)?;
+        self.iso_cache.insert((job.id, gkey), p.step_time_s);
+        Ok(p.step_time_s)
+    }
+
+    /// Residual capacity of `job` on its allocation: 1 - isolated
+    /// compute utilization.
+    pub fn residual(
+        &mut self,
+        job: &JobSpec,
+        alloc: &Allocation,
+    ) -> Result<f64, PlanError> {
+        self.probes += 1;
+        let ssm = Ssm::fuse(std::slice::from_ref(job))
+            .map_err(|_| PlanError::NoGpus)?;
+        let p = plan(&ssm, alloc, &self.spec, &self.opts)?;
+        Ok((1.0 - p.compute_util).clamp(0.0, 1.0))
+    }
+
+    /// Full group performance on a (merged) allocation. `None` when the
+    /// group does not fit (mixed base models, OOM, …).
+    pub fn group_perf(
+        &mut self,
+        jobs: &[JobSpec],
+        alloc: &Allocation,
+    ) -> Option<GroupPerf> {
+        let key = key_of(jobs, alloc);
+        if let Some(cached) = self.group_cache.get(&key) {
+            return cached.clone();
+        }
+        self.probes += 1;
+        let ssm = match Ssm::fuse(jobs) {
+            Ok(s) => s,
+            Err(_) => {
+                self.group_cache.insert(key, None);
+                return None;
+            }
+        };
+        let p = match plan(&ssm, alloc, &self.spec, &self.opts) {
+            Ok(p) => p,
+            Err(_) => {
+                self.group_cache.insert(key, None);
+                return None;
+            }
+        };
+        let mut slowdowns = vec![];
+        for j in jobs {
+            // compare against the job's own provisioned allocation
+            let iso_alloc = sub_alloc(alloc, j.gpus);
+            let iso = self
+                .isolated_step_time(j, &iso_alloc)
+                .unwrap_or(f64::INFINITY);
+            slowdowns.push((j.id, p.step_time_s / iso));
+        }
+        let throughput = jobs
+            .iter()
+            .map(|j| j.batch_size as f64)
+            .sum::<f64>()
+            / p.step_time_s;
+        let perf = GroupPerf {
+            step_time_s: p.step_time_s,
+            throughput_samples_s: throughput,
+            slowdowns,
+            compute_util: p.compute_util,
+            plan: p,
+        };
+        self.group_cache.insert(key, Some(perf.clone()));
+        Some(perf)
+    }
+
+    /// Aggregate throughput if each of `groups` runs independently —
+    /// the quantity hierarchical grouping tries to beat.
+    pub fn sum_throughput(
+        &mut self,
+        groups: &[(&[JobSpec], &Allocation)],
+    ) -> f64 {
+        groups
+            .iter()
+            .filter_map(|(jobs, alloc)| {
+                self.group_perf(jobs, alloc)
+                    .map(|p| p.throughput_samples_s)
+            })
+            .sum()
+    }
+}
+
+/// First `n` GPUs of an allocation (a job's nominal share of a merged
+/// gang, used for isolated-baseline comparisons).
+fn sub_alloc(alloc: &Allocation, n: usize) -> Allocation {
+    Allocation {
+        gpus: alloc
+            .gpus
+            .iter()
+            .take(n.max(1).min(alloc.gpus.len()))
+            .cloned()
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Allocator;
+
+    fn job(id: u64, rank: usize, batch: usize, seq: usize, gpus: usize)
+        -> JobSpec {
+        JobSpec {
+            id,
+            base_model: "llama3-8b".into(),
+            rank,
+            batch_size: batch,
+            seq_len: seq,
+            gpus,
+            total_steps: 100,
+            submit_time: 0.0,
+            max_slowdown: 2.0,
+        }
+    }
+
+    fn predictor() -> (Predictor, Allocator) {
+        let spec = ClusterSpec::default_128();
+        (
+            Predictor::new(spec.clone(), PlanOptions::default()),
+            Allocator::new(spec),
+        )
+    }
+
+    #[test]
+    fn isolated_cached() {
+        let (mut p, mut a) = predictor();
+        let alloc = a.allocate(2).unwrap();
+        let j = job(0, 8, 4, 512, 2);
+        let t1 = p.isolated_step_time(&j, &alloc).unwrap();
+        let probes = p.probes;
+        let t2 = p.isolated_step_time(&j, &alloc).unwrap();
+        assert_eq!(t1, t2);
+        assert_eq!(p.probes, probes, "cache miss on identical query");
+    }
+
+    #[test]
+    fn group_of_one_matches_isolated() {
+        let (mut p, mut a) = predictor();
+        let alloc = a.allocate(2).unwrap();
+        let j = job(0, 8, 4, 512, 2);
+        let iso = p.isolated_step_time(&j, &alloc).unwrap();
+        let g = p.group_perf(&[j.clone()], &alloc).unwrap();
+        assert!((g.step_time_s - iso).abs() < 1e-12);
+        assert!((g.slowdowns[0].1 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn complementary_jobs_gain_throughput() {
+        // two under-utilized jobs (neither saturates its GPU): fused on
+        // the union, the shared backbone pass amortizes the per-wave
+        // fixed costs and aggregate throughput beats isolated execution
+        let (mut p, mut a) = predictor();
+        let small = job(0, 4, 2, 512, 1);
+        let big = job(1, 8, 4, 512, 1);
+        let a_small = a.allocate(1).unwrap();
+        let a_big = a.allocate(1).unwrap();
+        let iso_sum = p.sum_throughput(&[
+            (std::slice::from_ref(&small), &a_small),
+            (std::slice::from_ref(&big), &a_big),
+        ]);
+        let merged = a_small.union(&a_big);
+        let g = p
+            .group_perf(&[small.clone(), big.clone()], &merged)
+            .unwrap();
+        assert!(
+            g.throughput_samples_s > iso_sum,
+            "grouped {} vs isolated {}",
+            g.throughput_samples_s,
+            iso_sum
+        );
+    }
+
+    #[test]
+    fn mixed_base_models_unfusable() {
+        let (mut p, mut a) = predictor();
+        let alloc = a.allocate(2).unwrap();
+        let j0 = job(0, 8, 4, 512, 1);
+        let mut j1 = job(1, 8, 4, 512, 1);
+        j1.base_model = "qwen3-8b".into();
+        assert!(p.group_perf(&[j0, j1], &alloc).is_none());
+    }
+
+    #[test]
+    fn unfusable_result_cached() {
+        let (mut p, mut a) = predictor();
+        let alloc = a.allocate(2).unwrap();
+        let j0 = job(0, 8, 4, 512, 1);
+        let mut j1 = job(1, 8, 4, 512, 1);
+        j1.base_model = "qwen3-8b".into();
+        assert!(p.group_perf(&[j0.clone(), j1.clone()], &alloc).is_none());
+        let probes = p.probes;
+        assert!(p.group_perf(&[j0, j1], &alloc).is_none());
+        assert_eq!(p.probes, probes);
+    }
+
+    #[test]
+    fn residual_higher_for_smaller_jobs() {
+        let (mut p, mut a) = predictor();
+        let alloc = a.allocate(1).unwrap();
+        let small = p.residual(&job(0, 2, 1, 256, 1), &alloc).unwrap();
+        let big = p.residual(&job(1, 16, 8, 1024, 1), &alloc).unwrap();
+        assert!(
+            small > big,
+            "small-job residual {small} <= big-job residual {big}"
+        );
+    }
+}

@@ -1,0 +1,486 @@
+//! Shared Super-Model (SSM) graph and the Model Fuser (§3.2).
+//!
+//! An SSM consolidates K LoRA jobs that share one frozen backbone into a
+//! single composite computation graph: nodes are backbone operators
+//! (embedding, transformer layers, LM head) and per-job adapter branches;
+//! edges carry activation data-flow. The Model Fuser performs the
+//! layer-wise architectural fusion, and the resulting graph is what the
+//! [`crate::planner`] cost-models to derive a parallel execution plan —
+//! "presenting the SSM as a single composite model to existing planning
+//! frameworks" (§3.2).
+//!
+//! The *executable* counterpart of this graph is the AOT-lowered JAX
+//! program (`python/compile/model.py`); this Rust representation carries
+//! the cost/memory annotations scheduling decisions are made from.
+
+use crate::model::arch::{arch_by_name, LoraSpec, ModelArch};
+use crate::model::cost::{layer_cost, lora_layer_cost};
+use crate::workload::JobSpec;
+
+/// A LoRA branch attached to a fused backbone layer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdapterBranch {
+    pub job_id: u64,
+    pub rank: usize,
+    pub batch_size: usize,
+    pub seq_len: usize,
+}
+
+impl AdapterBranch {
+    pub fn tokens(&self) -> f64 {
+        (self.batch_size * self.seq_len) as f64
+    }
+}
+
+/// Node kinds in the SSM graph.
+#[derive(Debug, Clone, PartialEq)]
+pub enum NodeKind {
+    /// token embedding (shared)
+    Embed,
+    /// fused transformer layer `i` (shared backbone compute)
+    Layer(usize),
+    /// adapter branch of job `job_id` on layer `layer`
+    Adapter { layer: usize, job_id: u64 },
+    /// LM head + per-job losses
+    Head,
+}
+
+/// One node with its cost annotations.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SsmNode {
+    pub id: usize,
+    pub kind: NodeKind,
+    pub fwd_flops: f64,
+    pub bwd_flops: f64,
+    /// activation bytes flowing out of this node per microbatch
+    pub out_bytes: f64,
+    /// resident parameter bytes
+    pub param_bytes: f64,
+}
+
+/// Directed activation-dependency edge.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SsmEdge {
+    pub from: usize,
+    pub to: usize,
+}
+
+/// Errors from fusing incompatible jobs.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FuseError {
+    EmptyGroup,
+    UnknownArch(String),
+    MixedBaseModels(String, String),
+}
+
+impl std::fmt::Display for FuseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FuseError::EmptyGroup => write!(f, "cannot fuse an empty group"),
+            FuseError::UnknownArch(a) => write!(f, "unknown base model {a}"),
+            FuseError::MixedBaseModels(a, b) => {
+                write!(f, "jobs use different base models: {a} vs {b}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FuseError {}
+
+/// The Shared Super-Model.
+#[derive(Debug, Clone)]
+pub struct Ssm {
+    pub arch: ModelArch,
+    pub jobs: Vec<JobSpec>,
+    pub adapters: Vec<AdapterBranch>,
+    pub nodes: Vec<SsmNode>,
+    pub edges: Vec<SsmEdge>,
+}
+
+impl Ssm {
+    /// The Model Fuser: layer-wise architectural fusion of jobs sharing
+    /// one backbone (Alg. 1 line 18: `S_SSM ← M_base ⊕ {Adapter(j)}`).
+    pub fn fuse(jobs: &[JobSpec]) -> Result<Ssm, FuseError> {
+        let first = jobs.first().ok_or(FuseError::EmptyGroup)?;
+        for j in jobs {
+            if j.base_model != first.base_model {
+                return Err(FuseError::MixedBaseModels(
+                    first.base_model.clone(),
+                    j.base_model.clone(),
+                ));
+            }
+        }
+        let arch = arch_by_name(&first.base_model)
+            .ok_or_else(|| FuseError::UnknownArch(first.base_model.clone()))?;
+
+        let adapters: Vec<AdapterBranch> = jobs
+            .iter()
+            .map(|j| AdapterBranch {
+                job_id: j.id,
+                rank: j.rank,
+                batch_size: j.batch_size,
+                seq_len: j.seq_len,
+            })
+            .collect();
+
+        let total_tokens: f64 = adapters.iter().map(|a| a.tokens()).sum();
+        // weighted mean sequence length for the attention term
+        let mean_seq = adapters
+            .iter()
+            .map(|a| a.tokens() * a.seq_len as f64)
+            .sum::<f64>()
+            / total_tokens;
+
+        let mut nodes = vec![];
+        let mut edges = vec![];
+        let d = arch.d_model as f64;
+        let embed_flops = 2.0 * total_tokens * d; // gather + pos add
+        nodes.push(SsmNode {
+            id: 0,
+            kind: NodeKind::Embed,
+            fwd_flops: embed_flops,
+            bwd_flops: embed_flops,
+            out_bytes: total_tokens * d * arch.dtype_bytes as f64,
+            param_bytes: (arch.vocab * arch.d_model * arch.dtype_bytes)
+                as f64,
+        });
+
+        let mut prev = 0usize;
+        for l in 0..arch.n_layers {
+            let lc = layer_cost(&arch, total_tokens, mean_seq);
+            let layer_id = nodes.len();
+            nodes.push(SsmNode {
+                id: layer_id,
+                kind: NodeKind::Layer(l),
+                fwd_flops: lc.fwd_flops,
+                bwd_flops: lc.bwd_flops,
+                out_bytes: lc.boundary_bytes,
+                param_bytes: arch.weight_bytes_per_layer() as f64,
+            });
+            edges.push(SsmEdge {
+                from: prev,
+                to: layer_id,
+            });
+            // adapter branches hang off the layer node
+            for a in &adapters {
+                let ac = lora_layer_cost(&arch, a.rank, a.tokens());
+                let aid = nodes.len();
+                nodes.push(SsmNode {
+                    id: aid,
+                    kind: NodeKind::Adapter {
+                        layer: l,
+                        job_id: a.job_id,
+                    },
+                    fwd_flops: ac.fwd_flops,
+                    bwd_flops: ac.bwd_flops,
+                    out_bytes: 0.0, // rejoins the layer output in place
+                    param_bytes: LoraSpec::new(a.rank)
+                        .train_state_bytes(&arch)
+                        as f64
+                        / arch.n_layers as f64,
+                });
+                edges.push(SsmEdge {
+                    from: layer_id,
+                    to: aid,
+                });
+                edges.push(SsmEdge {
+                    from: aid,
+                    to: layer_id,
+                });
+            }
+            prev = layer_id;
+        }
+
+        let head_flops = 2.0 * total_tokens
+            * arch.vocab as f64
+            * arch.d_model as f64;
+        let head_id = nodes.len();
+        nodes.push(SsmNode {
+            id: head_id,
+            kind: NodeKind::Head,
+            fwd_flops: head_flops,
+            bwd_flops: head_flops,
+            out_bytes: 0.0,
+            param_bytes: 0.0, // tied to embedding
+        });
+        edges.push(SsmEdge {
+            from: prev,
+            to: head_id,
+        });
+
+        Ok(Ssm {
+            arch,
+            jobs: jobs.to_vec(),
+            adapters,
+            nodes,
+            edges,
+        })
+    }
+
+    /// Total fused tokens per step.
+    pub fn total_tokens(&self) -> f64 {
+        self.adapters.iter().map(|a| a.tokens()).sum()
+    }
+
+    /// Total fused sequences (batch rows) per step.
+    pub fn total_batch(&self) -> usize {
+        self.adapters.iter().map(|a| a.batch_size).sum()
+    }
+
+    /// Per-layer total cost (backbone + all adapter branches), the
+    /// vector the pipeline partitioner consumes. Index 0 is the
+    /// embedding, 1..=L the layers (with adapters folded in), L+1 the
+    /// head — matching how a pipeline would actually cut the model.
+    pub fn layer_flops(&self) -> Vec<f64> {
+        let l_num = self.arch.n_layers;
+        let mut per = vec![0.0; l_num + 2];
+        for n in &self.nodes {
+            let total = n.fwd_flops + n.bwd_flops;
+            match n.kind {
+                NodeKind::Embed => per[0] += total,
+                NodeKind::Layer(l) => per[l + 1] += total,
+                NodeKind::Adapter { layer, .. } => per[layer + 1] += total,
+                NodeKind::Head => per[l_num + 1] += total,
+            }
+        }
+        per
+    }
+
+    /// Per-layer parameter bytes (same indexing as [`Self::layer_flops`]).
+    pub fn layer_param_bytes(&self) -> Vec<f64> {
+        let l_num = self.arch.n_layers;
+        let mut per = vec![0.0; l_num + 2];
+        for n in &self.nodes {
+            match n.kind {
+                NodeKind::Embed => per[0] += n.param_bytes,
+                NodeKind::Layer(l) => per[l + 1] += n.param_bytes,
+                NodeKind::Adapter { layer, .. } => {
+                    per[layer + 1] += n.param_bytes
+                }
+                NodeKind::Head => per[l_num + 1] += n.param_bytes,
+            }
+        }
+        per
+    }
+
+    /// Activation bytes crossing a cut between consecutive backbone
+    /// layers (pipeline-stage boundary traffic per full batch).
+    pub fn boundary_bytes(&self) -> f64 {
+        self.total_tokens()
+            * self.arch.d_model as f64
+            * self.arch.dtype_bytes as f64
+    }
+
+    /// Adapter-gradient bytes that data-parallel replicas must
+    /// all-reduce each step.
+    pub fn grad_sync_bytes(&self) -> f64 {
+        self.adapters
+            .iter()
+            .map(|a| LoraSpec::new(a.rank).params(&self.arch) as f64 * 4.0)
+            .sum()
+    }
+
+    /// Heterogeneity diagnostics (§2's three dimensions): (rank spread,
+    /// token spread) as max/min ratios.
+    pub fn heterogeneity(&self) -> (f64, f64) {
+        let ranks: Vec<f64> =
+            self.adapters.iter().map(|a| a.rank as f64).collect();
+        let toks: Vec<f64> =
+            self.adapters.iter().map(|a| a.tokens()).collect();
+        let spread = |v: &[f64]| {
+            let mx = v.iter().cloned().fold(f64::MIN, f64::max);
+            let mn = v.iter().cloned().fold(f64::MAX, f64::min);
+            if mn > 0.0 {
+                mx / mn
+            } else {
+                1.0
+            }
+        };
+        (spread(&ranks), spread(&toks))
+    }
+
+    /// Structural validation: the backbone chain is connected, adapters
+    /// attach to exactly one layer with a round-trip edge, and node ids
+    /// are dense.
+    pub fn validate(&self) -> Result<(), String> {
+        let l_num = self.arch.n_layers;
+        let expect_nodes = 1 + l_num * (1 + self.adapters.len()) + 1;
+        if self.nodes.len() != expect_nodes {
+            return Err(format!(
+                "node count {} != expected {expect_nodes}",
+                self.nodes.len()
+            ));
+        }
+        for (i, n) in self.nodes.iter().enumerate() {
+            if n.id != i {
+                return Err(format!("node {i} has id {}", n.id));
+            }
+            if n.fwd_flops < 0.0 || n.bwd_flops < 0.0 {
+                return Err(format!("node {i} has negative flops"));
+            }
+        }
+        // every adapter node has exactly one in and one out edge to its
+        // layer node
+        for n in &self.nodes {
+            if let NodeKind::Adapter { .. } = n.kind {
+                let ins = self.edges.iter().filter(|e| e.to == n.id).count();
+                let outs =
+                    self.edges.iter().filter(|e| e.from == n.id).count();
+                if ins != 1 || outs != 1 {
+                    return Err(format!(
+                        "adapter node {} has {ins} in / {outs} out edges",
+                        n.id
+                    ));
+                }
+            }
+        }
+        // backbone chain: embed -> layer_0 -> ... -> head reachable
+        let mut cur = 0usize;
+        for _ in 0..=l_num {
+            let next = self
+                .edges
+                .iter()
+                .find(|e| {
+                    e.from == cur
+                        && matches!(
+                            self.nodes[e.to].kind,
+                            NodeKind::Layer(_) | NodeKind::Head
+                        )
+                })
+                .map(|e| e.to);
+            match next {
+                Some(n) => cur = n,
+                None => {
+                    return Err(format!("backbone chain broken at {cur}"))
+                }
+            }
+        }
+        if !matches!(self.nodes[cur].kind, NodeKind::Head) {
+            return Err("backbone chain does not end at head".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(id: u64, rank: usize, batch: usize, model: &str) -> JobSpec {
+        JobSpec {
+            id,
+            base_model: model.into(),
+            rank,
+            batch_size: batch,
+            seq_len: 512,
+            gpus: 1,
+            total_steps: 100,
+            submit_time: 0.0,
+            max_slowdown: 1.5,
+        }
+    }
+
+    #[test]
+    fn fuse_two_jobs() {
+        let jobs = vec![job(0, 8, 4, "llama3-8b"), job(1, 16, 2, "llama3-8b")];
+        let ssm = Ssm::fuse(&jobs).unwrap();
+        assert_eq!(ssm.adapters.len(), 2);
+        assert_eq!(ssm.total_batch(), 6);
+        ssm.validate().unwrap();
+    }
+
+    #[test]
+    fn fuse_rejects_empty_and_mixed() {
+        assert!(matches!(Ssm::fuse(&[]), Err(FuseError::EmptyGroup)));
+        let jobs = vec![job(0, 8, 4, "llama3-8b"), job(1, 8, 4, "qwen3-8b")];
+        assert!(matches!(
+            Ssm::fuse(&jobs),
+            Err(FuseError::MixedBaseModels(_, _))
+        ));
+        let jobs = vec![job(0, 8, 4, "no-such-model")];
+        assert!(matches!(Ssm::fuse(&jobs), Err(FuseError::UnknownArch(_))));
+    }
+
+    #[test]
+    fn backbone_flops_shared_adapters_added() {
+        let one = Ssm::fuse(&[job(0, 8, 4, "llama3-8b")]).unwrap();
+        let two = Ssm::fuse(&[
+            job(0, 8, 4, "llama3-8b"),
+            job(1, 8, 4, "llama3-8b"),
+        ])
+        .unwrap();
+        let f1: f64 = one.layer_flops().iter().sum();
+        let f2: f64 = two.layer_flops().iter().sum();
+        let ratio = f2 / f1;
+        assert!((1.9..2.1).contains(&ratio), "{ratio}");
+    }
+
+    #[test]
+    fn layer_flops_indexing() {
+        let ssm = Ssm::fuse(&[job(0, 8, 2, "tiny")]).unwrap();
+        let per = ssm.layer_flops();
+        assert_eq!(per.len(), ssm.arch.n_layers + 2);
+        assert!(per.iter().all(|&f| f > 0.0));
+        // head (vocab proj) dominates embed for tiny models
+        assert!(per[per.len() - 1] > per[0]);
+    }
+
+    #[test]
+    fn heterogeneity_spreads() {
+        let ssm = Ssm::fuse(&[
+            job(0, 2, 1, "llama3-8b"),
+            job(1, 16, 8, "llama3-8b"),
+        ])
+        .unwrap();
+        let (rank_spread, tok_spread) = ssm.heterogeneity();
+        assert_eq!(rank_spread, 8.0);
+        assert_eq!(tok_spread, 8.0);
+        let homo = Ssm::fuse(&[
+            job(0, 8, 4, "llama3-8b"),
+            job(1, 8, 4, "llama3-8b"),
+        ])
+        .unwrap();
+        assert_eq!(homo.heterogeneity(), (1.0, 1.0));
+    }
+
+    #[test]
+    fn grad_sync_bytes_sum_over_jobs() {
+        let a = Ssm::fuse(&[job(0, 8, 4, "tiny")]).unwrap();
+        let b = Ssm::fuse(&[job(0, 8, 4, "tiny"), job(1, 8, 4, "tiny")])
+            .unwrap();
+        assert!((b.grad_sync_bytes() - 2.0 * a.grad_sync_bytes()).abs()
+            < 1e-6);
+    }
+
+    #[test]
+    fn validate_catches_tampering() {
+        let mut ssm = Ssm::fuse(&[job(0, 4, 2, "tiny")]).unwrap();
+        ssm.edges.pop(); // break the head link
+        assert!(ssm.validate().is_err());
+    }
+
+    #[test]
+    fn node_kinds_counted() {
+        let ssm =
+            Ssm::fuse(&[job(0, 4, 2, "tiny"), job(1, 8, 2, "tiny")]).unwrap();
+        let layers = ssm
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.kind, NodeKind::Layer(_)))
+            .count();
+        let adapters = ssm
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.kind, NodeKind::Adapter { .. }))
+            .count();
+        assert_eq!(layers, ssm.arch.n_layers);
+        assert_eq!(adapters, ssm.arch.n_layers * 2);
+    }
+
+    #[test]
+    fn boundary_bytes_scale_with_tokens() {
+        let a = Ssm::fuse(&[job(0, 8, 2, "tiny")]).unwrap();
+        let b = Ssm::fuse(&[job(0, 8, 4, "tiny")]).unwrap();
+        assert!((b.boundary_bytes() - 2.0 * a.boundary_bytes()).abs() < 1e-9);
+    }
+}

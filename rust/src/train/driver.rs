@@ -1,0 +1,100 @@
+//! End-to-end training driver: runs a fused SSM variant for N steps on
+//! the synthetic corpus, logging per-job loss curves.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::data::SyntheticCorpus;
+use crate::runtime::{Runtime, Trainer};
+
+/// Loss trajectory of one training run.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub variant: String,
+    pub steps: u64,
+    /// (step, fused loss) — sampled every `log_every`
+    pub loss_curve: Vec<(u64, f32)>,
+    /// (step, per-adapter losses)
+    pub per_adapter_curve: Vec<(u64, Vec<f32>)>,
+    pub first_loss: f32,
+    pub last_loss: f32,
+    pub mean_step_s: f64,
+    pub tokens_per_s: f64,
+}
+
+impl TrainReport {
+    pub fn converged(&self) -> bool {
+        self.last_loss < self.first_loss
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "variant={} steps={} first_loss={:.4} last_loss={:.4} \
+             step={:.1} ms tokens/s={:.0}\n",
+            self.variant,
+            self.steps,
+            self.first_loss,
+            self.last_loss,
+            self.mean_step_s * 1e3,
+            self.tokens_per_s
+        );
+        for (step, loss) in &self.loss_curve {
+            s.push_str(&format!("step {step:>6}  loss {loss:.4}\n"));
+        }
+        s
+    }
+}
+
+/// Train `variant` for `steps` fused steps; `log_every` controls curve
+/// resolution.
+pub fn train_variant(
+    artifacts_dir: &Path,
+    variant: &str,
+    steps: u64,
+    seed: u64,
+    log_every: u64,
+) -> Result<TrainReport> {
+    let runtime = Runtime::new(artifacts_dir)?;
+    let mut trainer = Trainer::new(&runtime, variant, seed as i32)?;
+    let cfg = trainer.variant().config.clone();
+    let mut corpus = SyntheticCorpus::new(
+        cfg.vocab,
+        cfg.seq_len,
+        cfg.num_adapters,
+        seed ^ 0xDA7A,
+    );
+
+    let mut loss_curve = vec![];
+    let mut per_adapter_curve = vec![];
+    let mut first_loss = f32::NAN;
+    let mut last_loss = f32::NAN;
+    let tokens_per_step = (cfg.total_batch() * cfg.seq_len) as f64;
+
+    let t0 = std::time::Instant::now();
+    for step in 0..steps {
+        let (tokens, ids) = corpus.fused_batch(&cfg.batch_sizes);
+        let stats = trainer.step(&tokens, &ids)?;
+        if step == 0 {
+            first_loss = stats.loss;
+        }
+        last_loss = stats.loss;
+        if step % log_every.max(1) == 0 || step + 1 == steps {
+            loss_curve.push((step, stats.loss));
+            per_adapter_curve.push((step, stats.per_adapter_loss.clone()));
+        }
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let mean_step_s = elapsed / steps.max(1) as f64;
+
+    Ok(TrainReport {
+        variant: variant.to_string(),
+        steps,
+        loss_curve,
+        per_adapter_curve,
+        first_loss,
+        last_loss,
+        mean_step_s,
+        tokens_per_s: tokens_per_step / mean_step_s,
+    })
+}

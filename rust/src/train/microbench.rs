@@ -1,0 +1,137 @@
+//! Micro-benchmark + simulator calibration (Fig. 10).
+//!
+//! Mirrors the paper's methodology: measure real per-step times for the
+//! AOT'd variants on the PJRT backend, fit the effective FLOP rate from
+//! the *smallest* variants, and extrapolate the larger ones analytically
+//! (cost model × fitted rate — the "homogeneity of transformer layers"
+//! extrapolation the Sailor simulator uses). The gap between predicted
+//! and measured step time is the simulator's accuracy.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::data::SyntheticCorpus;
+use crate::runtime::{Runtime, Trainer};
+
+/// One variant's measured vs predicted step time.
+#[derive(Debug, Clone)]
+pub struct MicrobenchResult {
+    pub variant: String,
+    pub flops_per_step: f64,
+    pub measured_step_s: f64,
+    /// extrapolated from the calibration variants' effective FLOP rate
+    pub predicted_step_s: f64,
+    /// |predicted - measured| / measured
+    pub error: f64,
+    /// used to fit the rate (excluded from the accuracy claim)
+    pub is_calibration: bool,
+}
+
+/// Measure `variants` with `steps` timed steps each (after `warmup`),
+/// fit on `calibrate_on`, and report per-variant accuracy.
+pub fn calibrate(
+    artifacts_dir: &Path,
+    variants: &[&str],
+    calibrate_on: &[&str],
+    warmup: u64,
+    steps: u64,
+) -> Result<Vec<MicrobenchResult>> {
+    let runtime = Runtime::new(artifacts_dir)?;
+    let mut measured: Vec<(String, f64, f64)> = vec![];
+
+    for name in variants {
+        let mut trainer = Trainer::new(&runtime, name, 0)?;
+        let cfg = trainer.variant().config.clone();
+        let flops = trainer.variant().flops_per_step;
+        let mut corpus = SyntheticCorpus::new(
+            cfg.vocab,
+            cfg.seq_len,
+            cfg.num_adapters,
+            7,
+        );
+        for _ in 0..warmup {
+            let (tokens, ids) = corpus.fused_batch(&cfg.batch_sizes);
+            trainer.step(&tokens, &ids)?;
+        }
+        let t0 = std::time::Instant::now();
+        for _ in 0..steps.max(1) {
+            let (tokens, ids) = corpus.fused_batch(&cfg.batch_sizes);
+            trainer.step(&tokens, &ids)?;
+        }
+        let per_step = t0.elapsed().as_secs_f64() / steps.max(1) as f64;
+        measured.push((name.to_string(), flops, per_step));
+    }
+
+    // affine cost model t = a + flops/rate fitted by least squares on
+    // the calibration set — the intercept captures the per-step fixed
+    // overhead (dispatch, small-kernel ramp) that a pure FLOP-rate
+    // model mis-attributes across scales
+    let cal: Vec<(f64, f64)> = measured
+        .iter()
+        .filter(|(n, _, _)| calibrate_on.contains(&n.as_str()))
+        .map(|(_, f, t)| (*f, *t))
+        .collect();
+    let (a, b) = affine_fit(&cal);
+
+    Ok(measured
+        .into_iter()
+        .map(|(variant, flops, t)| {
+            let predicted = (a + b * flops).max(0.0);
+            MicrobenchResult {
+                is_calibration: calibrate_on
+                    .contains(&variant.as_str()),
+                error: (predicted - t).abs() / t,
+                variant,
+                flops_per_step: flops,
+                measured_step_s: t,
+                predicted_step_s: predicted,
+            }
+        })
+        .collect())
+}
+
+/// Least-squares fit of `t = a + b * flops` (degenerates gracefully for
+/// a single calibration point: pure rate, zero intercept).
+fn affine_fit(points: &[(f64, f64)]) -> (f64, f64) {
+    match points.len() {
+        0 => (0.0, 1e-9),
+        1 => (0.0, points[0].1 / points[0].0),
+        _ => {
+            let n = points.len() as f64;
+            let sx: f64 = points.iter().map(|p| p.0).sum();
+            let sy: f64 = points.iter().map(|p| p.1).sum();
+            let sxx: f64 = points.iter().map(|p| p.0 * p.0).sum();
+            let sxy: f64 = points.iter().map(|p| p.0 * p.1).sum();
+            let denom = n * sxx - sx * sx;
+            if denom.abs() < 1e-30 {
+                return (0.0, sy / sx.max(1e-30));
+            }
+            let b = (n * sxy - sx * sy) / denom;
+            let a = (sy - b * sx) / n;
+            (a.max(0.0), b.max(0.0))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::affine_fit;
+
+    #[test]
+    fn affine_fit_recovers_line() {
+        let pts = [(1e9, 0.011), (2e9, 0.021), (4e9, 0.041)];
+        let (a, b) = affine_fit(&pts);
+        assert!((a - 0.001).abs() < 1e-4, "{a}");
+        assert!((b - 1e-11).abs() < 1e-13, "{b}");
+    }
+
+    #[test]
+    fn affine_fit_degenerate() {
+        let (a, b) = affine_fit(&[(2e9, 0.02)]);
+        assert_eq!(a, 0.0);
+        assert!((b - 1e-11).abs() < 1e-13);
+        let (a0, _) = affine_fit(&[]);
+        assert_eq!(a0, 0.0);
+    }
+}

@@ -1,0 +1,12 @@
+//! Real end-to-end training: synthetic corpus generation, the training
+//! driver over the PJRT runtime, and the micro-benchmark pass that
+//! calibrates the simulator (§4.1's "micro-benchmarks on real hardware"
+//! methodology; Fig. 10 checks the extrapolation accuracy).
+
+pub mod data;
+pub mod driver;
+pub mod microbench;
+
+pub use data::SyntheticCorpus;
+pub use driver::{TrainReport, train_variant};
+pub use microbench::{calibrate, MicrobenchResult};

@@ -1,0 +1,73 @@
+//! Zero-dependency substrates.
+//!
+//! The offline vendor set has no serde/rand/proptest/criterion, so the
+//! pieces a production framework would pull from crates.io are built here
+//! (DESIGN.md §3.6): a JSON parser/printer, a counter-based PRNG with the
+//! distributions the trace generator needs, descriptive statistics, a
+//! small property-testing framework, and a leveled logger.
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod prop;
+pub mod logging;
+
+/// Monotonically-increasing id allocator (jobs, groups, events).
+#[derive(Debug, Default)]
+pub struct IdGen {
+    next: u64,
+}
+
+impl IdGen {
+    pub fn new() -> Self {
+        Self { next: 0 }
+    }
+
+    pub fn next(&mut self) -> u64 {
+        let id = self.next;
+        self.next += 1;
+        id
+    }
+
+    /// Start above ids already consumed elsewhere (trace replay).
+    pub fn starting_at(next: u64) -> Self {
+        Self { next }
+    }
+}
+
+/// f64 ordering helper: total order treating NaN as largest.
+pub fn f64_cmp(a: f64, b: f64) -> std::cmp::Ordering {
+    a.partial_cmp(&b).unwrap_or_else(|| {
+        if a.is_nan() && b.is_nan() {
+            std::cmp::Ordering::Equal
+        } else if a.is_nan() {
+            std::cmp::Ordering::Greater
+        } else {
+            std::cmp::Ordering::Less
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idgen_monotone() {
+        let mut g = IdGen::new();
+        assert_eq!(g.next(), 0);
+        assert_eq!(g.next(), 1);
+        let mut g2 = IdGen::starting_at(10);
+        assert_eq!(g2.next(), 10);
+    }
+
+    #[test]
+    fn f64_cmp_total() {
+        use std::cmp::Ordering::*;
+        assert_eq!(f64_cmp(1.0, 2.0), Less);
+        assert_eq!(f64_cmp(2.0, 1.0), Greater);
+        assert_eq!(f64_cmp(1.0, 1.0), Equal);
+        assert_eq!(f64_cmp(f64::NAN, 1.0), Greater);
+        assert_eq!(f64_cmp(f64::NAN, f64::NAN), Equal);
+    }
+}

@@ -1,0 +1,321 @@
+//! Descriptive statistics: summaries, percentiles, CDFs, histograms.
+//!
+//! Shared by the simulator's metric collection and the bench harness.
+
+use super::f64_cmp;
+
+/// Summary statistics of a sample.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        if xs.is_empty() {
+            return Summary {
+                n: 0,
+                mean: 0.0,
+                std: 0.0,
+                min: 0.0,
+                max: 0.0,
+                p50: 0.0,
+                p90: 0.0,
+                p99: 0.0,
+            };
+        }
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>()
+            / n as f64;
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| f64_cmp(*a, *b));
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            p50: percentile_sorted(&sorted, 0.50),
+            p90: percentile_sorted(&sorted, 0.90),
+            p99: percentile_sorted(&sorted, 0.99),
+        }
+    }
+}
+
+/// Linear-interpolated percentile of a pre-sorted sample, q in [0,1].
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = pos - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| f64_cmp(*a, *b));
+    percentile_sorted(&sorted, q)
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Empirical CDF sampled at `points` evenly-spaced quantiles —
+/// the JCT-CDF figures (Figs. 5b, 11–13) plot these series.
+#[derive(Debug, Clone)]
+pub struct Cdf {
+    /// (value, cumulative fraction) pairs, fraction in (0, 1].
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Cdf {
+    pub fn of(xs: &[f64], points: usize) -> Cdf {
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| f64_cmp(*a, *b));
+        if sorted.is_empty() || points == 0 {
+            return Cdf { points: vec![] };
+        }
+        let mut out = Vec::with_capacity(points);
+        for i in 1..=points {
+            let q = i as f64 / points as f64;
+            out.push((percentile_sorted(&sorted, q), q));
+        }
+        Cdf { points: out }
+    }
+
+    /// Fraction of samples <= v.
+    pub fn at(&self, v: f64) -> f64 {
+        let mut frac = 0.0;
+        for (x, q) in &self.points {
+            if *x <= v {
+                frac = *q;
+            } else {
+                break;
+            }
+        }
+        frac
+    }
+}
+
+/// Fixed-bin histogram over [lo, hi).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub bins: Vec<usize>,
+    pub underflow: usize,
+    pub overflow: usize,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, nbins: usize) -> Histogram {
+        assert!(hi > lo && nbins > 0);
+        Histogram {
+            lo,
+            hi,
+            bins: vec![0; nbins],
+            underflow: 0,
+            overflow: 0,
+        }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let idx = ((x - self.lo) / (self.hi - self.lo)
+                * self.bins.len() as f64) as usize;
+            let last = self.bins.len() - 1;
+            self.bins[idx.min(last)] += 1;
+        }
+    }
+
+    pub fn total(&self) -> usize {
+        self.bins.iter().sum::<usize>() + self.underflow + self.overflow
+    }
+}
+
+/// Online mean/variance (Welford) — used by hot loops that must not
+/// allocate (DESIGN.md §Perf L3).
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+}
+
+/// Time-weighted average of a step function — GPU-utilization accounting:
+/// `add(t, v)` records that the value became `v` at time `t`.
+#[derive(Debug, Clone, Default)]
+pub struct TimeWeighted {
+    last_t: Option<f64>,
+    last_v: f64,
+    weighted_sum: f64,
+    span: f64,
+}
+
+impl TimeWeighted {
+    pub fn add(&mut self, t: f64, v: f64) {
+        if let Some(lt) = self.last_t {
+            let dt = (t - lt).max(0.0);
+            self.weighted_sum += self.last_v * dt;
+            self.span += dt;
+        }
+        self.last_t = Some(t);
+        self.last_v = v;
+    }
+
+    /// Close the window at time `t` and return the average.
+    pub fn finish(&mut self, t: f64) -> f64 {
+        self.add(t, self.last_v);
+        if self.span > 0.0 {
+            self.weighted_sum / self.span
+        } else {
+            0.0
+        }
+    }
+
+    pub fn average(&self) -> f64 {
+        if self.span > 0.0 {
+            self.weighted_sum / self.span
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.p50 - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_empty() {
+        let s = Summary::of(&[]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.mean, 0.0);
+    }
+
+    #[test]
+    fn percentiles_interpolate() {
+        let xs = [0.0, 10.0];
+        assert!((percentile(&xs, 0.5) - 5.0).abs() < 1e-12);
+        assert_eq!(percentile(&xs, 0.0), 0.0);
+        assert_eq!(percentile(&xs, 1.0), 10.0);
+    }
+
+    #[test]
+    fn cdf_monotone_and_bounds() {
+        let xs: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let cdf = Cdf::of(&xs, 20);
+        assert_eq!(cdf.points.len(), 20);
+        for w in cdf.points.windows(2) {
+            assert!(w[1].0 >= w[0].0);
+            assert!(w[1].1 > w[0].1);
+        }
+        assert!((cdf.points.last().unwrap().1 - 1.0).abs() < 1e-12);
+        assert!(cdf.at(-1.0) == 0.0);
+        assert!((cdf.at(1e9) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for i in 0..10 {
+            h.add(i as f64 + 0.5);
+        }
+        h.add(-1.0);
+        h.add(11.0);
+        assert_eq!(h.bins, vec![1; 10]);
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 1);
+        assert_eq!(h.total(), 12);
+    }
+
+    #[test]
+    fn welford_matches_batch() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut w = Welford::default();
+        for &x in &xs {
+            w.add(x);
+        }
+        let s = Summary::of(&xs);
+        assert!((w.mean() - s.mean).abs() < 1e-12);
+        assert!((w.std() - s.std).abs() < 1e-12);
+    }
+
+    #[test]
+    fn time_weighted_step_function() {
+        let mut tw = TimeWeighted::default();
+        tw.add(0.0, 1.0); // value 1 on [0, 10)
+        tw.add(10.0, 0.0); // value 0 on [10, 20)
+        let avg = tw.finish(20.0);
+        assert!((avg - 0.5).abs() < 1e-12, "{avg}");
+    }
+
+    #[test]
+    fn time_weighted_empty() {
+        let mut tw = TimeWeighted::default();
+        assert_eq!(tw.finish(5.0), 0.0);
+    }
+}

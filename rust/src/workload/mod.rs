@@ -1,0 +1,132 @@
+//! LoRA fine-tuning job specifications and trace generation.
+//!
+//! The paper replays ACMETrace (`trace_seren.csv`) with LoRA attributes
+//! sampled per §4.1: rank ∈ {2,4,8,16}, batch ∈ {1,2,4,8}, base model ∈
+//! {llama3-8b, qwen3-8b}, GPU counts from the trace. ACMETrace itself is
+//! not redistributable, so [`TraceGenerator`] synthesizes traces with the
+//! published shape (Poisson/bursty arrivals with month-over-month
+//! concurrency scaling, lognormal service durations, power-of-two GPU
+//! gangs) and [`trace`] loads real CSVs with the same schema if provided.
+
+pub mod trace;
+
+pub use trace::{TraceGenerator, TraceProfile, load_csv, save_csv};
+
+/// One LoRA fine-tuning job (fixed at submission, §A.1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    pub id: u64,
+    pub base_model: String,
+    pub rank: usize,
+    pub batch_size: usize,
+    pub seq_len: usize,
+    /// GPUs provisioned for the job when run in isolation
+    pub gpus: usize,
+    /// training step budget to completion
+    pub total_steps: u64,
+    /// submission time (seconds since trace start)
+    pub submit_time: f64,
+    /// Δ_j^max — max tolerated slowdown vs isolated execution (§3.4)
+    pub max_slowdown: f64,
+}
+
+impl JobSpec {
+    /// Tokens processed per step.
+    pub fn tokens_per_step(&self) -> f64 {
+        (self.batch_size * self.seq_len) as f64
+    }
+
+    /// Relative compute weight used for size classification (Fig. 6b
+    /// classifies by "compute cost based on their profiles (rank, batch
+    /// size)").
+    pub fn compute_weight(&self) -> f64 {
+        self.tokens_per_step() * (1.0 + self.rank as f64 / 16.0)
+    }
+}
+
+/// Size class terciles of Fig. 6b.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SizeClass {
+    Small,
+    Medium,
+    Large,
+}
+
+/// Classify jobs into compute-cost terciles.
+pub fn classify(jobs: &[JobSpec]) -> Vec<(u64, SizeClass)> {
+    let mut weights: Vec<(u64, f64)> =
+        jobs.iter().map(|j| (j.id, j.compute_weight())).collect();
+    weights.sort_by(|a, b| crate::util::f64_cmp(a.1, b.1));
+    let n = weights.len();
+    weights
+        .iter()
+        .enumerate()
+        .map(|(i, &(id, _))| {
+            let c = if i * 3 < n {
+                SizeClass::Small
+            } else if i * 3 < 2 * n {
+                SizeClass::Medium
+            } else {
+                SizeClass::Large
+            };
+            (id, c)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(id: u64, rank: usize, batch: usize) -> JobSpec {
+        JobSpec {
+            id,
+            base_model: "llama3-8b".into(),
+            rank,
+            batch_size: batch,
+            seq_len: 512,
+            gpus: 1,
+            total_steps: 100,
+            submit_time: 0.0,
+            max_slowdown: 1.5,
+        }
+    }
+
+    #[test]
+    fn tokens_per_step() {
+        assert_eq!(job(0, 8, 4).tokens_per_step(), 2048.0);
+    }
+
+    #[test]
+    fn classify_terciles() {
+        let jobs: Vec<JobSpec> =
+            (0..9).map(|i| job(i, 2, (i + 1) as usize)).collect();
+        let classes = classify(&jobs);
+        let small = classes
+            .iter()
+            .filter(|(_, c)| *c == SizeClass::Small)
+            .count();
+        let med = classes
+            .iter()
+            .filter(|(_, c)| *c == SizeClass::Medium)
+            .count();
+        let large = classes
+            .iter()
+            .filter(|(_, c)| *c == SizeClass::Large)
+            .count();
+        assert_eq!((small, med, large), (3, 3, 3));
+        // batch 1..=3 are small, 7..=9 are large
+        assert!(classes
+            .iter()
+            .any(|&(id, c)| id == 0 && c == SizeClass::Small));
+        assert!(classes
+            .iter()
+            .any(|&(id, c)| id == 8 && c == SizeClass::Large));
+    }
+
+    #[test]
+    fn compute_weight_monotone_in_rank_and_batch() {
+        assert!(job(0, 16, 4).compute_weight() > job(1, 2, 4).compute_weight());
+        assert!(job(0, 8, 8).compute_weight() > job(1, 8, 2).compute_weight());
+    }
+}

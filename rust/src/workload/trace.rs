@@ -1,0 +1,308 @@
+//! ACMETrace-style trace generation and CSV I/O.
+//!
+//! Month profiles follow §4.3 / Fig. 8b: month 1 has the sparsest
+//! arrivals; months 2 and 3 are increasingly bursty with ~2× and ~4×
+//! higher concurrency. Service demand (step budgets) is lognormal —
+//! the heavy tail production traces exhibit — and GPU gangs are powers
+//! of two, matching the original trace's allocation distribution.
+
+use super::JobSpec;
+use crate::util::rng::Rng;
+
+/// Arrival/workload shape knobs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceProfile {
+    /// mean arrival rate (jobs/second)
+    pub rate: f64,
+    /// probability that an arrival is part of a burst
+    pub burst_prob: f64,
+    /// burst size range (jobs submitted near-simultaneously)
+    pub burst_size: (usize, usize),
+    /// lognormal(mu, sigma) of total training steps
+    pub steps_mu: f64,
+    pub steps_sigma: f64,
+    /// candidate values sampled per §4.1
+    pub ranks: Vec<usize>,
+    pub batch_sizes: Vec<usize>,
+    pub seq_lens: Vec<usize>,
+    pub gpu_gangs: Vec<usize>,
+    pub base_models: Vec<String>,
+    /// Δ^max range (bounded-slowdown tolerance)
+    pub max_slowdown: (f64, f64),
+}
+
+impl TraceProfile {
+    /// Month-1 of the seren trace: the sparsest month, but still enough
+    /// pressure to keep a 128-GPU cluster contended (§A.1 caps runnable
+    /// concurrency at 128 jobs; the evaluation operates near that
+    /// regime).
+    pub fn month1() -> TraceProfile {
+        TraceProfile {
+            rate: 1.0 / 6.0, // ~10 jobs/minute
+            burst_prob: 0.05,
+            burst_size: (2, 4),
+            // fine-tuning jobs run for thousands of steps (tens of
+            // minutes to hours) — what keeps the 128-GPU cluster at its
+            // §A.1 concurrency cap and makes queueing delay the JCT
+            // driver, as in the original trace
+            steps_mu: 8.3, // median ~4000 steps
+            steps_sigma: 1.0,
+            ranks: vec![2, 4, 8, 16],
+            batch_sizes: vec![1, 2, 4, 8],
+            seq_lens: vec![256, 512, 1024],
+            gpu_gangs: vec![1, 1, 2, 2, 4, 8],
+            base_models: vec!["llama3-8b".into(), "qwen3-8b".into()],
+            max_slowdown: (1.2, 2.0),
+        }
+    }
+
+    /// Month-2: ~2× concurrency, burstier.
+    pub fn month2() -> TraceProfile {
+        let mut p = TraceProfile::month1();
+        p.rate *= 2.0;
+        p.burst_prob = 0.15;
+        p.burst_size = (2, 6);
+        p
+    }
+
+    /// Month-3: ~4× concurrency, burstiest.
+    pub fn month3() -> TraceProfile {
+        let mut p = TraceProfile::month1();
+        p.rate *= 4.0;
+        p.burst_prob = 0.25;
+        p.burst_size = (3, 8);
+        p
+    }
+
+    /// Scale the arrival rate (Fig. 9a replays 0.5×/2×/5×).
+    pub fn scaled(mut self, factor: f64) -> TraceProfile {
+        self.rate *= factor;
+        self
+    }
+}
+
+/// Deterministic synthetic trace generator.
+#[derive(Debug)]
+pub struct TraceGenerator {
+    profile: TraceProfile,
+    rng: Rng,
+}
+
+impl TraceGenerator {
+    pub fn new(profile: TraceProfile, seed: u64) -> TraceGenerator {
+        TraceGenerator {
+            profile,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// Generate `n` jobs with ids 0..n.
+    pub fn generate(&mut self, n: usize) -> Vec<JobSpec> {
+        let mut jobs = Vec::with_capacity(n);
+        let mut t = 0.0;
+        let mut id = 0u64;
+        while jobs.len() < n {
+            t += self.rng.exponential(self.profile.rate);
+            let burst = if self.rng.bool(self.profile.burst_prob) {
+                self.rng
+                    .range(self.profile.burst_size.0, self.profile.burst_size.1)
+            } else {
+                1
+            };
+            for b in 0..burst {
+                if jobs.len() >= n {
+                    break;
+                }
+                // bursts land within a few seconds of each other
+                let jitter = b as f64 * self.rng.range_f64(0.5, 3.0);
+                jobs.push(self.sample_job(id, t + jitter));
+                id += 1;
+            }
+        }
+        jobs
+    }
+
+    fn sample_job(&mut self, id: u64, submit_time: f64) -> JobSpec {
+        let p = &self.profile;
+        let steps = self
+            .rng
+            .lognormal(p.steps_mu, p.steps_sigma)
+            .clamp(20.0, 100_000.0) as u64;
+        JobSpec {
+            id,
+            base_model: self.rng.choice(&p.base_models).clone(),
+            rank: *self.rng.choice(&p.ranks),
+            batch_size: *self.rng.choice(&p.batch_sizes),
+            seq_len: *self.rng.choice(&p.seq_lens),
+            gpus: *self.rng.choice(&p.gpu_gangs),
+            total_steps: steps,
+            submit_time,
+            max_slowdown: self
+                .rng
+                .range_f64(p.max_slowdown.0, p.max_slowdown.1),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CSV I/O (schema mirrors trace_seren.csv + the LoRA columns of §4.1)
+// ---------------------------------------------------------------------------
+
+pub const CSV_HEADER: &str =
+    "job_id,base_model,rank,batch_size,seq_len,gpus,total_steps,\
+     submit_time,max_slowdown";
+
+pub fn save_csv(jobs: &[JobSpec]) -> String {
+    let mut out = String::from(CSV_HEADER);
+    out.push('\n');
+    for j in jobs {
+        out.push_str(&format!(
+            "{},{},{},{},{},{},{},{},{}\n",
+            j.id,
+            j.base_model,
+            j.rank,
+            j.batch_size,
+            j.seq_len,
+            j.gpus,
+            j.total_steps,
+            j.submit_time,
+            j.max_slowdown
+        ));
+    }
+    out
+}
+
+pub fn load_csv(text: &str) -> Result<Vec<JobSpec>, String> {
+    let mut jobs = vec![];
+    let mut lines = text.lines();
+    let header = lines.next().ok_or("empty csv")?;
+    let cols: Vec<&str> = header.split(',').map(str::trim).collect();
+    let idx = |name: &str| -> Result<usize, String> {
+        cols.iter()
+            .position(|c| *c == name)
+            .ok_or_else(|| format!("missing column {name}"))
+    };
+    let (ci_id, ci_model, ci_rank, ci_batch, ci_seq, ci_gpus, ci_steps,
+         ci_submit, ci_slow) = (
+        idx("job_id")?,
+        idx("base_model")?,
+        idx("rank")?,
+        idx("batch_size")?,
+        idx("seq_len")?,
+        idx("gpus")?,
+        idx("total_steps")?,
+        idx("submit_time")?,
+        idx("max_slowdown")?,
+    );
+    for (lineno, line) in lines.enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let f: Vec<&str> = line.split(',').map(str::trim).collect();
+        let get = |i: usize| -> Result<&str, String> {
+            f.get(i)
+                .copied()
+                .ok_or_else(|| format!("line {}: missing field", lineno + 2))
+        };
+        let parse_num = |s: &str| -> Result<f64, String> {
+            s.parse()
+                .map_err(|_| format!("line {}: bad number {s}", lineno + 2))
+        };
+        jobs.push(JobSpec {
+            id: parse_num(get(ci_id)?)? as u64,
+            base_model: get(ci_model)?.to_string(),
+            rank: parse_num(get(ci_rank)?)? as usize,
+            batch_size: parse_num(get(ci_batch)?)? as usize,
+            seq_len: parse_num(get(ci_seq)?)? as usize,
+            gpus: parse_num(get(ci_gpus)?)? as usize,
+            total_steps: parse_num(get(ci_steps)?)? as u64,
+            submit_time: parse_num(get(ci_submit)?)?,
+            max_slowdown: parse_num(get(ci_slow)?)?,
+        });
+    }
+    Ok(jobs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generator_deterministic() {
+        let a = TraceGenerator::new(TraceProfile::month1(), 7).generate(50);
+        let b = TraceGenerator::new(TraceProfile::month1(), 7).generate(50);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn generator_arrival_times_increase_mostly() {
+        let jobs = TraceGenerator::new(TraceProfile::month1(), 1)
+            .generate(100);
+        assert_eq!(jobs.len(), 100);
+        // non-burst portion is sorted; allow burst jitter
+        let sorted_violations = jobs
+            .windows(2)
+            .filter(|w| w[1].submit_time < w[0].submit_time - 30.0)
+            .count();
+        assert_eq!(sorted_violations, 0);
+    }
+
+    #[test]
+    fn month_profiles_scale_concurrency() {
+        let j1 = TraceGenerator::new(TraceProfile::month1(), 3)
+            .generate(300);
+        let j3 = TraceGenerator::new(TraceProfile::month3(), 3)
+            .generate(300);
+        let span1 = j1.last().unwrap().submit_time;
+        let span3 = j3.last().unwrap().submit_time;
+        // month 3 packs the same jobs into ~1/4 the wall-clock
+        let ratio = span1 / span3;
+        assert!(ratio > 2.5, "ratio {ratio}");
+    }
+
+    #[test]
+    fn sampled_attrs_in_catalog() {
+        let p = TraceProfile::month1();
+        let jobs = TraceGenerator::new(p.clone(), 9).generate(200);
+        for j in &jobs {
+            assert!(p.ranks.contains(&j.rank));
+            assert!(p.batch_sizes.contains(&j.batch_size));
+            assert!(p.gpu_gangs.contains(&j.gpus));
+            assert!(p.base_models.contains(&j.base_model));
+            assert!(j.total_steps >= 20);
+            assert!(j.max_slowdown >= 1.2 && j.max_slowdown <= 2.0);
+        }
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let jobs = TraceGenerator::new(TraceProfile::month2(), 5)
+            .generate(40);
+        let csv = save_csv(&jobs);
+        let back = load_csv(&csv).unwrap();
+        assert_eq!(jobs.len(), back.len());
+        for (a, b) in jobs.iter().zip(&back) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.rank, b.rank);
+            assert_eq!(a.gpus, b.gpus);
+            assert!((a.submit_time - b.submit_time).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn csv_rejects_missing_columns() {
+        assert!(load_csv("a,b,c\n1,2,3").is_err());
+        assert!(load_csv("").is_err());
+    }
+
+    #[test]
+    fn csv_tolerates_column_reorder_and_blank_lines() {
+        let text = "rank,job_id,base_model,batch_size,seq_len,gpus,\
+                    total_steps,submit_time,max_slowdown\n\
+                    8,3,llama3-8b,4,512,2,100,1.5,1.3\n\n";
+        let jobs = load_csv(text).unwrap();
+        assert_eq!(jobs.len(), 1);
+        assert_eq!(jobs[0].id, 3);
+        assert_eq!(jobs[0].rank, 8);
+    }
+}

@@ -1,0 +1,81 @@
+//! Integration: the coordinator's leader/executor topology over the
+//! real PJRT runtime — fused multi-job runs with heterogeneous budgets,
+//! elastic slot retirement, and clean shutdown.
+
+use std::path::PathBuf;
+
+use tlora::coordinator::{run_fused_jobs, Coordinator, FusedJob};
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("artifacts/ missing — skipping coordinator integration");
+        None
+    }
+}
+
+#[test]
+fn spawn_step_shutdown() {
+    let Some(dir) = artifacts() else { return };
+    let coord = Coordinator::spawn(dir, "tiny".into(), 0).unwrap();
+    let info = coord.variant_info().unwrap();
+    assert_eq!(info.num_adapters, 4);
+    let b: usize = info.batch_sizes.iter().sum();
+    let tokens = vec![1i32; b * info.seq_len];
+    let ids: Vec<i32> =
+        (0..b as i32).map(|i| i % info.num_adapters as i32).collect();
+    let s = coord.step(tokens, ids).unwrap();
+    assert!(s.loss.is_finite());
+    assert_eq!(s.per_adapter_loss.len(), 4);
+    coord.shutdown();
+}
+
+#[test]
+fn heterogeneous_budgets_retire_elastically() {
+    let Some(dir) = artifacts() else { return };
+    let coord = Coordinator::spawn(dir, "tiny".into(), 1).unwrap();
+    let jobs = vec![
+        FusedJob { adapter_slot: 0, steps: 3 },
+        FusedJob { adapter_slot: 1, steps: 10 },
+        FusedJob { adapter_slot: 2, steps: 6 },
+    ];
+    let report = run_fused_jobs(&coord, &jobs, 42, 2).unwrap();
+    // the group runs until the longest budget completes
+    assert_eq!(report.fused_steps, 10);
+    for (slot, steps, loss) in &report.jobs {
+        let want = jobs.iter().find(|j| j.adapter_slot == *slot).unwrap();
+        assert_eq!(*steps, want.steps, "slot {slot}");
+        assert!(loss.is_finite());
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn rejects_out_of_range_slot() {
+    let Some(dir) = artifacts() else { return };
+    let coord = Coordinator::spawn(dir, "tiny".into(), 2).unwrap();
+    let jobs = vec![FusedJob { adapter_slot: 9, steps: 1 }];
+    assert!(run_fused_jobs(&coord, &jobs, 1, 1).is_err());
+}
+
+#[test]
+fn step_rejects_malformed_batches() {
+    let Some(dir) = artifacts() else { return };
+    let coord = Coordinator::spawn(dir, "tiny".into(), 3).unwrap();
+    // wrong token count
+    assert!(coord.step(vec![0i32; 7], vec![0i32; 8]).is_err());
+    // executor must survive the error and keep serving
+    let info = coord.variant_info().unwrap();
+    let b: usize = info.batch_sizes.iter().sum();
+    let tokens = vec![0i32; b * info.seq_len];
+    let ids = vec![0i32; b];
+    assert!(coord.step(tokens, ids).is_ok());
+}
+
+#[test]
+fn unknown_variant_fails_cleanly() {
+    let Some(dir) = artifacts() else { return };
+    assert!(Coordinator::spawn(dir, "no-such-variant".into(), 0).is_err());
+}

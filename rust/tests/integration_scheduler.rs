@@ -1,0 +1,164 @@
+//! Integration + property tests: the Adapter Scheduler's §3.4
+//! invariants over randomized workloads, via the in-crate prop
+//! framework (proptest substitute).
+
+use tlora::cluster::{Allocator, ClusterSpec};
+use tlora::config::SchedulerConfig;
+use tlora::planner::PlanOptions;
+use tlora::scheduler::predictor::Predictor;
+use tlora::scheduler::{schedule, Candidate};
+use tlora::util::prop::{gen_usize, prop_check};
+use tlora::util::rng::Rng;
+use tlora::workload::trace::{TraceGenerator, TraceProfile};
+use tlora::workload::JobSpec;
+
+fn candidates_from_seed(seed: u64, k: usize)
+    -> (Vec<Candidate>, Predictor, SchedulerConfig) {
+    let spec = ClusterSpec::with_gpus((4 * k).max(16));
+    let mut alloc = Allocator::new(spec.clone());
+    let mut pred = Predictor::new(spec, PlanOptions::default());
+    let mut rng = Rng::new(seed);
+    let jobs: Vec<JobSpec> =
+        TraceGenerator::new(TraceProfile::month1(), seed).generate(k);
+    let cands = jobs
+        .into_iter()
+        .filter_map(|mut j| {
+            j.gpus = *rng.choice(&[1usize, 1, 2]);
+            let a = alloc.allocate(j.gpus)?;
+            let residual = pred.residual(&j, &a).unwrap_or(0.5);
+            Some(Candidate {
+                job: j,
+                alloc: a,
+                urgency: rng.f64(),
+                residual,
+            })
+        })
+        .collect();
+    (cands, pred, SchedulerConfig::default())
+}
+
+#[test]
+fn prop_every_job_scheduled_exactly_once() {
+    prop_check(15, &gen_usize(1, 5000), |&seed| {
+        let (cands, mut pred, cfg) = candidates_from_seed(seed as u64, 10);
+        let n = cands.len();
+        let mut ids: Vec<u64> =
+            cands.iter().map(|c| c.job.id).collect();
+        let out = schedule(cands, &mut pred, &cfg);
+        let mut got: Vec<u64> = out
+            .groups
+            .iter()
+            .flat_map(|(g, _)| g.jobs.iter().map(|j| j.id))
+            .collect();
+        ids.sort_unstable();
+        got.sort_unstable();
+        got.len() == n && got == ids
+    });
+}
+
+#[test]
+fn prop_groups_respect_size_memory_and_slowdown() {
+    prop_check(15, &gen_usize(1, 5000), |&seed| {
+        let (cands, mut pred, cfg) = candidates_from_seed(seed as u64, 12);
+        let out = schedule(cands, &mut pred, &cfg);
+        out.groups.iter().all(|(g, perf)| {
+            g.jobs.len() <= cfg.max_group_size
+                && perf.within_slowdown(&g.jobs)
+                && g.jobs
+                    .iter()
+                    .all(|j| j.base_model == g.jobs[0].base_model)
+        })
+    });
+}
+
+#[test]
+fn prop_grouping_never_reduces_aggregate_throughput() {
+    prop_check(10, &gen_usize(1, 5000), |&seed| {
+        let (cands, mut pred, cfg) = candidates_from_seed(seed as u64, 8);
+        // isolated aggregate
+        let iso: f64 = cands
+            .iter()
+            .cloned()
+            .filter_map(|c| {
+                pred.group_perf(std::slice::from_ref(&c.job), &c.alloc)
+                    .map(|p| p.throughput_samples_s)
+            })
+            .sum();
+        let out = schedule(cands, &mut pred, &cfg);
+        let grouped: f64 = out
+            .groups
+            .iter()
+            .map(|(_, p)| p.throughput_samples_s)
+            .sum();
+        grouped >= iso * 0.999
+    });
+}
+
+#[test]
+fn prop_allocations_never_shared_between_groups() {
+    prop_check(15, &gen_usize(1, 5000), |&seed| {
+        let (cands, mut pred, cfg) = candidates_from_seed(seed as u64, 10);
+        let out = schedule(cands, &mut pred, &cfg);
+        let mut seen = std::collections::HashSet::new();
+        for (g, _) in &out.groups {
+            for gpu in &g.alloc.gpus {
+                if !seen.insert(*gpu) {
+                    return false; // same GPU in two groups
+                }
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn urgent_jobs_get_seeded_first() {
+    // a job near its slowdown bound must not end up in a *worse* group
+    // than it started in: schedule, then verify its slowdown <= Δ^max
+    let (mut cands, mut pred, cfg) = candidates_from_seed(77, 8);
+    if cands.is_empty() {
+        return;
+    }
+    cands[0].urgency = 100.0; // critically urgent
+    let id = cands[0].job.id;
+    let out = schedule(cands, &mut pred, &cfg);
+    let (g, perf) = out
+        .groups
+        .iter()
+        .find(|(g, _)| g.jobs.iter().any(|j| j.id == id))
+        .unwrap();
+    let j = g.jobs.iter().find(|j| j.id == id).unwrap();
+    let sd = perf
+        .slowdowns
+        .iter()
+        .find(|(jid, _)| *jid == id)
+        .unwrap()
+        .1;
+    assert!(sd <= j.max_slowdown + 1e-9, "urgent job slowed {sd}");
+}
+
+#[test]
+fn deterministic_given_same_input() {
+    let (cands, mut pred, cfg) = candidates_from_seed(99, 10);
+    let out1 = schedule(cands.clone(), &mut pred, &cfg);
+    let mut pred2 = Predictor::new(
+        pred.spec().clone(),
+        PlanOptions::default(),
+    );
+    let out2 = schedule(cands, &mut pred2, &cfg);
+    let sig = |o: &tlora::scheduler::ScheduleOutcome| -> Vec<Vec<u64>> {
+        let mut v: Vec<Vec<u64>> = o
+            .groups
+            .iter()
+            .map(|(g, _)| {
+                let mut ids: Vec<u64> =
+                    g.jobs.iter().map(|j| j.id).collect();
+                ids.sort_unstable();
+                ids
+            })
+            .collect();
+        v.sort();
+        v
+    };
+    assert_eq!(sig(&out1), sig(&out2));
+}

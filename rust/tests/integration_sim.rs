@@ -1,0 +1,127 @@
+//! Integration: the trace-driven simulator end-to-end — policy
+//! orderings, conservation invariants, determinism, and property-based
+//! checks with the in-crate prop framework.
+
+use tlora::config::{ExperimentConfig, Policy};
+use tlora::sim::{simulate, simulate_jobs};
+use tlora::util::prop::{gen_usize, prop_check};
+use tlora::workload::trace::{TraceGenerator, TraceProfile};
+
+fn cfg(policy: Policy, n_jobs: usize, gpus: usize) -> ExperimentConfig {
+    let mut c = ExperimentConfig::default();
+    c.policy = policy;
+    c.n_jobs = n_jobs;
+    c.cluster = tlora::cluster::ClusterSpec::with_gpus(gpus);
+    c.seed = 1234;
+    c
+}
+
+#[test]
+fn paper_policy_ordering_holds_under_contention() {
+    // the §4.2 ordering at a contended 32-GPU cluster:
+    // tLoRA best on throughput and JCT; mLoRA below Megatron
+    let r_t = simulate(&cfg(Policy::TLora, 60, 32));
+    let r_ml = simulate(&cfg(Policy::MLora, 60, 32));
+    let r_mg = simulate(&cfg(Policy::Megatron, 60, 32));
+    assert!(
+        r_t.avg_throughput > r_ml.avg_throughput,
+        "tLoRA {} <= mLoRA {}",
+        r_t.avg_throughput,
+        r_ml.avg_throughput
+    );
+    assert!(
+        r_t.mean_jct < r_ml.mean_jct,
+        "tLoRA JCT {} >= mLoRA {}",
+        r_t.mean_jct,
+        r_ml.mean_jct
+    );
+    assert!(
+        r_t.mean_jct <= r_mg.mean_jct * 1.05,
+        "tLoRA JCT {} much worse than Megatron {}",
+        r_t.mean_jct,
+        r_mg.mean_jct
+    );
+}
+
+#[test]
+fn every_job_completes_exactly_once() {
+    for policy in Policy::all() {
+        let c = cfg(policy, 40, 32);
+        let r = simulate(&c);
+        assert_eq!(r.jct.len(), c.n_jobs, "{policy:?}");
+        let mut ids: Vec<u64> = r.jct.iter().map(|&(id, _)| id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), c.n_jobs, "{policy:?} duplicated a job");
+        assert!(r.jct.iter().all(|&(_, v)| v > 0.0));
+    }
+}
+
+#[test]
+fn deterministic_across_runs() {
+    let c = cfg(Policy::TLora, 40, 32);
+    let a = simulate(&c);
+    let b = simulate(&c);
+    assert_eq!(a.jct, b.jct);
+    assert_eq!(a.horizons, b.horizons);
+    assert!((a.avg_throughput - b.avg_throughput).abs() < 1e-9);
+}
+
+#[test]
+fn utilization_and_throughput_bounds() {
+    for policy in [Policy::TLora, Policy::MLora] {
+        let r = simulate(&cfg(policy, 50, 32));
+        assert!((0.0..=1.0).contains(&r.avg_gpu_util), "{policy:?}");
+        assert!(r.avg_throughput >= 0.0);
+        assert!(r.makespan > 0.0);
+        for &(_, u) in &r.util_timeline {
+            assert!((0.0..=1.0).contains(&u));
+        }
+    }
+}
+
+#[test]
+fn bigger_cluster_never_hurts() {
+    let small = simulate(&cfg(Policy::TLora, 60, 16));
+    let big = simulate(&cfg(Policy::TLora, 60, 64));
+    assert!(big.mean_jct <= small.mean_jct * 1.05);
+}
+
+#[test]
+fn prop_all_jobs_complete_across_seeds_and_sizes() {
+    // property: for any (seed, n_jobs, gpus) the simulator terminates
+    // with every job completed and sane metrics
+    let g = gen_usize(0, 10_000);
+    prop_check(12, &g, |&seed| {
+        let mut c = cfg(Policy::TLora, 12 + seed % 10, 16);
+        c.seed = seed as u64;
+        c.trace = TraceProfile::month1().scaled(2.0);
+        let r = simulate(&c);
+        r.jct.len() == c.n_jobs
+            && r.avg_gpu_util <= 1.0
+            && r.jct.iter().all(|&(_, v)| v.is_finite() && v >= 0.0)
+    });
+}
+
+#[test]
+fn explicit_job_list_roundtrip() {
+    let jobs =
+        TraceGenerator::new(TraceProfile::month2(), 3).generate(20);
+    let c = cfg(Policy::TLora, 20, 32);
+    let r = simulate_jobs(&c, jobs.clone());
+    assert_eq!(r.jct.len(), jobs.len());
+}
+
+#[test]
+fn grouping_ratio_keys_present_for_tlora() {
+    let r = simulate(&cfg(Policy::TLora, 60, 32));
+    for k in ["small", "medium", "large"] {
+        assert!(
+            r.grouping_ratio.contains_key(k),
+            "missing class {k}: {:?}",
+            r.grouping_ratio
+        );
+        let v = r.grouping_ratio[k];
+        assert!((0.0..=1.0).contains(&v));
+    }
+}
