@@ -5,12 +5,15 @@
 //! Paper claims: +41% throughput vs mLoRA (1.2–1.8× across loads),
 //! 2.3–5.4× mean JCT reduction, mLoRA sometimes *below* Megatron.
 //!
+//! Thin driver over the sweep engine: the five policies run as one
+//! parallel grid (`tlora::sweep`), one worker per policy.
+//!
 //! `--full` runs the paper-scale workload (slower).
 
 use tlora::cli::Args;
-use tlora::config::{ExperimentConfig, Policy};
+use tlora::config::Policy;
 use tlora::metrics::{cdf_block, write_report, Table};
-use tlora::sim::{simulate, SimResult};
+use tlora::sweep::{run_parallel, SweepGrid};
 use tlora::util::stats::Cdf;
 
 fn main() {
@@ -20,44 +23,42 @@ fn main() {
     let full = args.has("full");
 
     tlora::bench_util::section("Figure 5 — end-to-end performance");
-    let mut base = ExperimentConfig::default();
-    base.n_jobs = if full { 600 } else { 250 };
-    base.seed = args.get_u64("seed", 42).unwrap_or(42);
-
-    let mut results: Vec<(Policy, SimResult, f64)> = vec![];
-    for policy in Policy::all() {
-        let mut cfg = base.clone();
-        cfg.policy = policy;
-        let (r, wall) =
-            tlora::bench_util::time_once(|| simulate(&cfg));
-        results.push((policy, r, wall));
-    }
+    let mut grid = SweepGrid::default();
+    grid.policies = Policy::all().to_vec();
+    grid.n_jobs = vec![if full { 600 } else { 250 }];
+    grid.seeds = vec![args.get_u64("seed", 42).unwrap_or(42)];
+    let run = run_parallel(&grid).expect("sweep failed");
 
     let mut t = Table::new(
         &format!(
-            "Fig 5a/5b — {} jobs, {} GPUs (sim wall-clock per run shown)",
-            base.n_jobs,
-            base.cluster.total_gpus()
+            "Fig 5a/5b — {} jobs, {} GPUs ({} sims in {:.2}s on {} \
+             threads)",
+            grid.n_jobs[0],
+            grid.gpus[0],
+            run.points.len(),
+            run.wall_s,
+            run.n_threads
         ),
         &["policy", "thr (samples/s)", "mean JCT (s)", "p99 JCT (s)",
           "util", "sim (s)"],
     );
-    for (p, r, wall) in &results {
+    for p in &run.points {
+        let r = &p.result;
         t.row(&[
-            p.name().to_string(),
+            p.point.policy.name().to_string(),
             format!("{:.2}", r.avg_throughput),
             format!("{:.0}", r.mean_jct),
             format!("{:.0}", r.p99_jct),
             format!("{:.1}%", r.avg_gpu_util * 100.0),
-            format!("{wall:.2}"),
+            format!("{:.2}", p.wall_s),
         ]);
     }
     t.print();
 
-    let find = |p: Policy| results.iter().find(|(q, _, _)| *q == p).unwrap();
-    let (_, tl, _) = find(Policy::TLora);
-    let (_, ml, _) = find(Policy::MLora);
-    let (_, mg, _) = find(Policy::Megatron);
+    let find = |p: Policy| &run.expect_one(|q| q.policy == p).result;
+    let tl = find(Policy::TLora);
+    let ml = find(Policy::MLora);
+    let mg = find(Policy::Megatron);
 
     let mut c = Table::new(
         "paper-vs-measured",
@@ -102,9 +103,9 @@ fn main() {
 
     // Fig 5b CDFs → out/fig5b_jct_cdf.txt
     let mut blocks = String::new();
-    for (p, r, _) in &results {
-        let cdf = Cdf::of(&r.jct_values(), 50);
-        blocks.push_str(&cdf_block(p.name(), &cdf));
+    for p in &run.points {
+        let cdf = Cdf::of(&p.result.jct_values(), 50);
+        blocks.push_str(&cdf_block(p.point.policy.name(), &cdf));
         blocks.push('\n');
     }
     if let Some(path) = write_report("fig5b_jct_cdf.txt", &blocks) {

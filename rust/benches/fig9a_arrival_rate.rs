@@ -3,16 +3,31 @@
 //! sustains 1.2–1.8× better throughput than the baselines across loads;
 //! denser arrivals stretch JCT (queueing), sparser arrivals trade a
 //! little throughput for shorter JCT.
+//!
+//! Thin driver over the sweep engine: 3 policies × 4 rate scales run as
+//! one parallel grid.
 
-use tlora::config::{ExperimentConfig, Policy};
+use tlora::config::Policy;
 use tlora::metrics::{cdf_block, write_report, Table};
-use tlora::sim::simulate;
+use tlora::sweep::{run_parallel, SweepGrid};
 use tlora::util::stats::Cdf;
-use tlora::workload::trace::TraceProfile;
 
 fn main() {
     tlora::bench_util::section("Figure 9a / 12 — arrival-rate scaling");
     let scales = [0.5, 1.0, 2.0, 5.0];
+
+    let mut grid = SweepGrid::default();
+    grid.policies =
+        vec![Policy::TLora, Policy::MLora, Policy::Megatron];
+    grid.n_jobs = vec![200];
+    grid.rate_scales = scales.to_vec();
+    let run = run_parallel(&grid).expect("sweep failed");
+    println!(
+        "({} sims in {:.2}s on {} threads)",
+        run.points.len(),
+        run.wall_s,
+        run.n_threads
+    );
 
     let mut t = Table::new(
         "throughput (samples/s) and mean JCT (s) by arrival scale",
@@ -22,16 +37,15 @@ fn main() {
     let mut all_hold = true;
     let mut cdfs = String::new();
     for &scale in &scales {
-        let run = |policy: Policy| {
-            let mut cfg = ExperimentConfig::default();
-            cfg.n_jobs = 200;
-            cfg.policy = policy;
-            cfg.trace = TraceProfile::month1().scaled(scale);
-            simulate(&cfg)
+        let at = |policy: Policy| {
+            &run.expect_one(|p| {
+                p.policy == policy && p.rate_scale == scale
+            })
+            .result
         };
-        let tl = run(Policy::TLora);
-        let ml = run(Policy::MLora);
-        let mg = run(Policy::Megatron);
+        let tl = at(Policy::TLora);
+        let ml = at(Policy::MLora);
+        let mg = at(Policy::Megatron);
         let ratio = tl.avg_throughput / ml.avg_throughput;
         all_hold &= ratio >= 1.05;
         t.row(&[

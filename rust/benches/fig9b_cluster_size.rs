@@ -2,27 +2,37 @@
 //! 32/64/128/256 GPUs. Paper: throughput scales with capacity, JCT
 //! curves shift right in consistent intervals as the cluster shrinks
 //! (no starvation / heavy-tail collapse at 32 GPUs).
+//!
+//! Thin driver over the sweep engine: the four cluster sizes run as one
+//! parallel grid.
 
-use tlora::config::ExperimentConfig;
 use tlora::metrics::{cdf_block, write_report, Table};
-use tlora::sim::simulate;
+use tlora::sweep::{run_parallel, SweepGrid};
 use tlora::util::stats::Cdf;
 
 fn main() {
     tlora::bench_util::section("Figure 9b / 13 — cluster size");
     let sizes = [32usize, 64, 128, 256];
 
+    let mut grid = SweepGrid::default();
+    grid.n_jobs = vec![200];
+    grid.gpus = sizes.to_vec();
+    let run = run_parallel(&grid).expect("sweep failed");
+    println!(
+        "({} sims in {:.2}s on {} threads)",
+        run.points.len(),
+        run.wall_s,
+        run.n_threads
+    );
+
     let mut t = Table::new(
-        "tLoRA across cluster sizes (100 jobs, month-1 trace)",
+        "tLoRA across cluster sizes (200 jobs, month-1 trace)",
         &["GPUs", "thr (samples/s)", "mean JCT (s)", "p99 JCT (s)",
           "p99/mean", "util"],
     );
     let mut results = vec![];
     for &n in &sizes {
-        let mut cfg = ExperimentConfig::default();
-        cfg.n_jobs = 200;
-        cfg.cluster = tlora::cluster::ClusterSpec::with_gpus(n);
-        let r = simulate(&cfg);
+        let r = run.expect_one(|p| p.gpus == n).result.clone();
         t.row(&[
             n.to_string(),
             format!("{:.2}", r.avg_throughput),

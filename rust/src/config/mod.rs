@@ -35,6 +35,19 @@ impl Policy {
         }
     }
 
+    /// Canonical machine-friendly name: exactly the strings
+    /// [`Policy::parse`] accepts, so every emitted slug (config JSON,
+    /// sweep labels/CSV/JSON) loads back.
+    pub fn slug(&self) -> &'static str {
+        match self {
+            Policy::TLora => "tlora",
+            Policy::TLoraNoSched => "tlora-no-sched",
+            Policy::TLoraNoKernel => "tlora-no-kernel",
+            Policy::MLora => "mlora",
+            Policy::Megatron => "megatron",
+        }
+    }
+
     pub fn parse(s: &str) -> Option<Policy> {
         match s.to_ascii_lowercase().as_str() {
             "tlora" => Some(Policy::TLora),
@@ -70,6 +83,14 @@ impl Policy {
     /// Does this policy group at all?
     pub fn groups_jobs(&self) -> bool {
         !matches!(self, Policy::Megatron)
+    }
+}
+
+impl std::str::FromStr for Policy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Policy, String> {
+        Policy::parse(s).ok_or_else(|| format!("unknown policy {s}"))
     }
 }
 
@@ -185,8 +206,7 @@ impl ExperimentConfig {
 
     pub fn to_json(&self) -> Json {
         Json::obj()
-            .set("policy", self.policy.name().to_ascii_lowercase()
-                .replace(' ', "-").replace("w/o", "no"))
+            .set("policy", self.policy.slug())
             .set("n_gpus", self.cluster.total_gpus())
             .set("n_jobs", self.n_jobs)
             .set("seed", self.seed)
@@ -292,6 +312,28 @@ mod tests {
             assert_eq!(Policy::parse(s), Some(p));
         }
         assert_eq!(Policy::parse("nonsense"), None);
+    }
+
+    #[test]
+    fn policy_slug_parses_back() {
+        for p in Policy::all() {
+            assert_eq!(Policy::parse(p.slug()), Some(p), "{}", p.slug());
+            assert_eq!(p.slug().parse::<Policy>(), Ok(p));
+        }
+        assert!("bogus".parse::<Policy>().is_err());
+    }
+
+    #[test]
+    fn to_json_policy_roundtrips_for_every_policy() {
+        // the emitted slug must load back — including the ablations,
+        // whose display names ("tLoRA w/o Scheduler") are not parseable
+        for p in Policy::all() {
+            let mut c = ExperimentConfig::default();
+            c.policy = p;
+            let j = json::parse(&c.to_json().to_string()).unwrap();
+            let back = ExperimentConfig::from_json(&j).unwrap();
+            assert_eq!(back.policy, p);
+        }
     }
 
     #[test]

@@ -196,6 +196,46 @@ mod tests {
     }
 
     #[test]
+    fn converges_to_fixed_point_under_stable_load() {
+        // Under a stationary step-time curve the controller must settle
+        // into a bounded cycle anchored at one N (the AIMD sawtooth:
+        // anchor, +α probe, back to anchor) instead of wandering: after
+        // a transient, every visited N lies within α of a single anchor
+        // value, and the anchor is revisited for the majority of steps.
+        let mut c = AimdController::new(cfg());
+        let mut visits = vec![];
+        for _ in 0..300 {
+            let n = c.n();
+            visits.push(n);
+            c.observe(t_of(n));
+        }
+        let tail = &visits[200..];
+        let anchor = *tail.iter().min().unwrap();
+        let span = *tail.iter().max().unwrap() - anchor;
+        assert!(
+            span <= AimdConfig::default().alpha,
+            "no fixed point: visited N spans {span} around {anchor} \
+             ({tail:?})"
+        );
+        let at_anchor =
+            tail.iter().filter(|&&n| n == anchor).count();
+        assert!(
+            at_anchor * 3 >= tail.len(),
+            "anchor {anchor} held only {at_anchor}/{} steps",
+            tail.len()
+        );
+        // the same load curve must reproduce the same fixed point
+        let mut c2 = AimdController::new(cfg());
+        let mut visits2 = vec![];
+        for _ in 0..300 {
+            let n = c2.n();
+            visits2.push(n);
+            c2.observe(t_of(n));
+        }
+        assert_eq!(visits, visits2, "controller is not deterministic");
+    }
+
+    #[test]
     fn backoff_is_logarithmic() {
         // from n_max, consecutive regressions reach 1 in O(log N) steps
         let mut c = AimdController::new(AimdConfig {

@@ -92,6 +92,43 @@ mod tests {
     }
 
     #[test]
+    fn overlap_never_exceeds_100_percent() {
+        // The time nano-batching saves over serial execution is exactly
+        // the communication (or compute) it hides; hiding more than
+        // min(comp, comm) would be >100% overlap. With zero per-nano
+        // overheads the bound is exact; with overheads the saving only
+        // shrinks on the iter side while serial pays oh + lat once, so
+        // the bound loosens by at most that one-shot oh + lat.
+        for &(comp, comm) in &[
+            (1.0, 0.5),
+            (0.5, 1.0),
+            (2.0, 2.0),
+            (0.1, 3.0),
+            (3.0, 0.1),
+        ] {
+            for n in 1..=128usize {
+                let saved_ideal = serial_time(comp, comm, 0.0, 0.0)
+                    - iter_time(comp, comm, n, 0.0, 0.0);
+                let frac = saved_ideal / comp.min(comm);
+                assert!(
+                    frac <= 1.0 + 1e-12,
+                    "{frac} overlap at comp={comp} comm={comm} n={n}"
+                );
+                assert!(saved_ideal >= -1e-12);
+                for &(oh, lat) in &[(0.01, 0.002), (0.0005, 0.0001)] {
+                    let saved = serial_time(comp, comm, oh, lat)
+                        - iter_time(comp, comm, n, oh, lat);
+                    assert!(
+                        saved <= comp.min(comm) + oh + lat + 1e-12,
+                        "saved {saved} > min(comp, comm) at \
+                         comp={comp} comm={comm} n={n} oh={oh}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
     fn large_n_penalized_by_overheads() {
         let t8 = iter_time(1.0, 0.8, 8, 0.01, 0.002);
         let t512 = iter_time(1.0, 0.8, 512, 0.01, 0.002);

@@ -31,6 +31,7 @@
 //! | [`kernelsim`] | fused-kernel + nano-batch AIMD overlap model (§3.3) |
 //! | [`scheduler`] | residual-capacity-aware Adapter Scheduler (§3.4) |
 //! | [`sim`] | discrete-event cluster simulator (trace-driven eval) |
+//! | [`sweep`] | parallel scenario-sweep engine over sim (grids, CIs) |
 //! | [`baselines`] | mLoRA, Megatron-independent, tLoRA ablations |
 //! | [`runtime`] | PJRT executor for `artifacts/*.hlo.txt` |
 //! | [`train`] | real end-to-end training driver + micro-benchmarks |
@@ -47,6 +48,7 @@ pub mod planner;
 pub mod kernelsim;
 pub mod scheduler;
 pub mod sim;
+pub mod sweep;
 pub mod baselines;
 pub mod runtime;
 pub mod train;

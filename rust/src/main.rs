@@ -4,6 +4,9 @@
 //! tlora simulate  [--policy tlora|mlora|megatron|...] [--n-jobs N]
 //!                 [--n-gpus N] [--seed S] [--month 1|2|3] [--rate-scale F]
 //! tlora compare   [--n-jobs N] [--n-gpus N] [--seed S]     # all policies
+//! tlora sweep     [--policies a,b|all] [--n-jobs N,..] [--gpus N,..]
+//!                 [--rate-scales F,..] [--months M,..] [--seeds S,..]
+//!                 [--threads T] [--out-json f] [--out-csv f]
 //! tlora train     [--variant tiny|small|...] [--steps N] [--seed S]
 //! tlora microbench [--steps N]
 //! tlora trace-gen [--n-jobs N] [--month M] [--seed S] [--out file.csv]
@@ -28,6 +31,7 @@ fn main() -> std::process::ExitCode {
     let code = match args.subcommand.as_deref() {
         Some("simulate") => cmd_simulate(&args),
         Some("compare") => cmd_compare(&args),
+        Some("sweep") => cmd_sweep(&args),
         Some("train") => cmd_train(&args),
         Some("microbench") => cmd_microbench(&args),
         Some("trace-gen") => cmd_trace_gen(&args),
@@ -50,12 +54,17 @@ USAGE: tlora <subcommand> [flags]
 
   simulate     trace-driven cluster simulation for one policy
   compare      run all policies on the same trace, print §4.2 metrics
+  sweep        parallel scenario grid (policy x jobs x gpus x rate x
+               month x seed) with mean±CI aggregation + JSON/CSV output
   train        real fused training via PJRT on an AOT'd SSM variant
   microbench   measure step times + simulator calibration (Fig. 10)
   trace-gen    emit a synthetic ACMETrace-style CSV
 
 Common flags: --n-jobs N --n-gpus N --seed S --month 1|2|3
               --rate-scale F --policy NAME --artifacts DIR
+Sweep flags:  --policies a,b|all --n-jobs N,.. --gpus N,..
+              --rate-scales F,.. --months M,.. --seeds S,..
+              --threads T --out-json FILE --out-csv FILE
 ";
 
 fn build_config(args: &Args) -> Result<ExperimentConfig, String> {
@@ -172,6 +181,139 @@ fn cmd_compare(args: &Args) -> i32 {
         ]);
     }
     t.print();
+    0
+}
+
+/// Parse a comma-separated flag into a typed list, with a default.
+fn parse_list<T: std::str::FromStr>(
+    args: &Args,
+    name: &str,
+    default: Vec<T>,
+) -> Result<Vec<T>, String> {
+    match args.get(name) {
+        None => Ok(default),
+        Some(raw) => {
+            let mut out = vec![];
+            for tok in raw.split(',').map(str::trim) {
+                if tok.is_empty() {
+                    continue;
+                }
+                out.push(tok.parse::<T>().map_err(|_| {
+                    format!("--{name}: cannot parse {tok:?}")
+                })?);
+            }
+            if out.is_empty() {
+                return Err(format!("--{name}: empty list"));
+            }
+            Ok(out)
+        }
+    }
+}
+
+fn parse_policies(
+    args: &Args,
+    default: Policy,
+) -> Result<Vec<Policy>, String> {
+    if args.get("policies") == Some("all") {
+        return Ok(Policy::all().to_vec());
+    }
+    parse_list(args, "policies", vec![default])
+}
+
+fn cmd_sweep(args: &Args) -> i32 {
+    let build = || -> Result<tlora::sweep::SweepGrid, String> {
+        let mut grid = tlora::sweep::SweepGrid::default();
+        // --config loads FIRST so its policy/n_jobs/n_gpus/seed become
+        // the axis defaults below (explicit axis flags still win). The
+        // trace itself is rebuilt per grid cell from --months and
+        // --rate-scales, so trace keys in the file cannot take effect.
+        if let Some(path) = args.get("config") {
+            let j = tlora::util::json::parse_file(
+                std::path::Path::new(path),
+            )?;
+            for key in ["trace_rate", "burst_prob"] {
+                if j.get(key).is_some() {
+                    eprintln!(
+                        "sweep: note: config key {key} is overridden \
+                         by the --months/--rate-scales axes"
+                    );
+                }
+            }
+            grid.base.apply_json(&j)?;
+        }
+        grid.policies = parse_policies(args, grid.base.policy)?;
+        grid.n_jobs = parse_list(args, "n-jobs", vec![grid.base.n_jobs])?;
+        grid.gpus = parse_list(
+            args,
+            "gpus",
+            vec![grid.base.cluster.total_gpus()],
+        )?;
+        grid.rate_scales = parse_list(args, "rate-scales", vec![1.0])?;
+        grid.months = parse_list(args, "months", vec![1])?;
+        grid.seeds = parse_list(args, "seeds", vec![grid.base.seed])?;
+        grid.validate()?;
+        Ok(grid)
+    };
+    let grid = match build() {
+        Ok(g) => g,
+        Err(e) => {
+            eprintln!("sweep config error: {e}");
+            return 2;
+        }
+    };
+    let threads = match args
+        .get_usize("threads", tlora::sweep::default_threads())
+    {
+        Ok(t) => t.max(1),
+        Err(e) => {
+            eprintln!("sweep config error: {e}");
+            return 2;
+        }
+    };
+    println!(
+        "sweep: {} scenarios x {} seeds = {} simulations on {} threads",
+        grid.len() / grid.seeds.len(),
+        grid.seeds.len(),
+        grid.len(),
+        threads.min(grid.len().max(1))
+    );
+    let run = match tlora::sweep::run(&grid, threads) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("sweep failed: {e}");
+            return 1;
+        }
+    };
+    let cells = tlora::sweep::aggregate(&run);
+    tlora::sweep::sweep_table(
+        &format!(
+            "sweep — {} cells in {:.2}s on {} threads",
+            run.points.len(),
+            run.wall_s,
+            run.n_threads
+        ),
+        &cells,
+    )
+    .print();
+    if let Some(path) = args.get("out-json") {
+        let text = tlora::sweep::to_json(&run).to_pretty();
+        match std::fs::write(path, text) {
+            Ok(()) => println!("JSON report -> {path}"),
+            Err(e) => {
+                eprintln!("write {path}: {e}");
+                return 1;
+            }
+        }
+    }
+    if let Some(path) = args.get("out-csv") {
+        match std::fs::write(path, tlora::sweep::to_csv(&run)) {
+            Ok(()) => println!("CSV report -> {path}"),
+            Err(e) => {
+                eprintln!("write {path}: {e}");
+                return 1;
+            }
+        }
+    }
     0
 }
 

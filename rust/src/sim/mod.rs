@@ -185,12 +185,14 @@ pub fn simulate_jobs(cfg: &ExperimentConfig, jobs: Vec<JobSpec>)
             }
         }
 
-        // ---- 2. allocate GPUs to queued jobs (FIFO) ----
+        // ---- 2. allocate GPUs to queued jobs (FIFO; id breaks
+        // submit-time ties so the order never depends on map order) ----
         queue.sort_by(|a, b| {
             crate::util::f64_cmp(
                 states[a].spec.submit_time,
                 states[b].spec.submit_time,
             )
+            .then(a.cmp(b))
         });
         let mut still_queued = vec![];
         // owned, uncompleted jobs (shared members are re-queued above
@@ -222,8 +224,16 @@ pub fn simulate_jobs(cfg: &ExperimentConfig, jobs: Vec<JobSpec>)
         queue = still_queued;
 
         // ---- 3. (re)group all admitted, unfinished jobs ----
+        // Walk allocations in job-id order: HashMap iteration order is
+        // nondeterministic per instance, and the candidate order feeds
+        // the scheduler's tie-breaking — bit-identical reruns (and the
+        // sweep engine's cross-thread determinism) require a canonical
+        // order here.
         let mut candidates = vec![];
-        for (&id, a) in &allocations {
+        let mut alloc_ids: Vec<u64> = allocations.keys().copied().collect();
+        alloc_ids.sort_unstable();
+        for id in alloc_ids {
+            let a = &allocations[&id];
             let st = &states[&id];
             if st.completed_at.is_some() {
                 continue;
@@ -492,9 +502,17 @@ pub fn simulate_jobs(cfg: &ExperimentConfig, jobs: Vec<JobSpec>)
         acc.finish(t90)
     };
 
+    // Final accumulations also walk jobs in id order: f64 addition is
+    // not associative-in-bits, so summing in HashMap order would make
+    // two identical runs differ in the last ulp (the sweep engine
+    // guarantees bit-identical results across runs and thread counts).
+    let mut state_ids: Vec<u64> = states.keys().copied().collect();
+    state_ids.sort_unstable();
+
     let mut class_grouped: HashMap<&'static str, (f64, f64)> =
         HashMap::new();
-    for s in states.values() {
+    for id in &state_ids {
+        let s = &states[id];
         let class = match size_classes.get(&s.spec.id) {
             Some(SizeClass::Small) => "small",
             Some(SizeClass::Medium) => "medium",
@@ -513,7 +531,8 @@ pub fn simulate_jobs(cfg: &ExperimentConfig, jobs: Vec<JobSpec>)
     let mean_slowdown = {
         let mut acc = 0.0;
         let mut n = 0usize;
-        for s in states.values() {
+        for id in &state_ids {
+            let s = &states[id];
             if s.running_time > 0.0 && s.iso_step_time.is_finite() {
                 let exp_steps = s.running_time / s.iso_step_time;
                 if s.steps_done > 0.0 && exp_steps > 0.0 {

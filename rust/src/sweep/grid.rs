@@ -1,0 +1,234 @@
+//! Declarative scenario grids.
+//!
+//! A [`SweepGrid`] is the cartesian product of the evaluation axes every
+//! figure of the paper varies: policy × job count × cluster size ×
+//! arrival-rate scale × trace month × seed. [`SweepGrid::points`]
+//! enumerates the cells in a fixed row-major order, so a sweep's output
+//! is a pure function of the grid regardless of how many worker threads
+//! execute it.
+
+use crate::cluster::ClusterSpec;
+use crate::config::{ExperimentConfig, Policy};
+use crate::workload::trace::TraceProfile;
+
+/// The trace profile for a month index (1, 2 or 3; anything else falls
+/// back to month 1, matching the CLI's `--month` handling).
+pub fn month_profile(month: usize) -> TraceProfile {
+    match month {
+        2 => TraceProfile::month2(),
+        3 => TraceProfile::month3(),
+        _ => TraceProfile::month1(),
+    }
+}
+
+/// Cartesian sweep specification. Every axis must be non-empty; `base`
+/// supplies the knobs the grid does not vary (scheduler horizon, AIMD
+/// parameters, concurrency cap, ...).
+#[derive(Debug, Clone)]
+pub struct SweepGrid {
+    pub base: ExperimentConfig,
+    pub policies: Vec<Policy>,
+    pub n_jobs: Vec<usize>,
+    pub gpus: Vec<usize>,
+    pub rate_scales: Vec<f64>,
+    pub months: Vec<usize>,
+    pub seeds: Vec<u64>,
+}
+
+impl Default for SweepGrid {
+    fn default() -> Self {
+        let base = ExperimentConfig::default();
+        SweepGrid {
+            policies: vec![base.policy],
+            n_jobs: vec![base.n_jobs],
+            gpus: vec![base.cluster.total_gpus()],
+            rate_scales: vec![1.0],
+            months: vec![1],
+            seeds: vec![base.seed],
+            base,
+        }
+    }
+}
+
+impl SweepGrid {
+    /// Number of grid cells (simulations) the sweep will run.
+    pub fn len(&self) -> usize {
+        self.policies.len()
+            * self.n_jobs.len()
+            * self.gpus.len()
+            * self.rate_scales.len()
+            * self.months.len()
+            * self.seeds.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Check every axis is non-empty and every cell yields a valid
+    /// [`ExperimentConfig`].
+    pub fn validate(&self) -> Result<(), String> {
+        for (axis, empty) in [
+            ("policies", self.policies.is_empty()),
+            ("n_jobs", self.n_jobs.is_empty()),
+            ("gpus", self.gpus.is_empty()),
+            ("rate_scales", self.rate_scales.is_empty()),
+            ("months", self.months.is_empty()),
+            ("seeds", self.seeds.is_empty()),
+        ] {
+            if empty {
+                return Err(format!("sweep axis {axis} is empty"));
+            }
+        }
+        for p in self.points() {
+            p.config(&self.base)
+                .validate()
+                .map_err(|e| format!("grid cell {}: {e}", p.label()))?;
+        }
+        Ok(())
+    }
+
+    /// Enumerate all cells in deterministic row-major order (seeds vary
+    /// fastest, so one scenario's replicas are adjacent).
+    pub fn points(&self) -> Vec<SweepPoint> {
+        let mut out = Vec::with_capacity(self.len());
+        let mut index = 0usize;
+        for &policy in &self.policies {
+            for &n_jobs in &self.n_jobs {
+                for &gpus in &self.gpus {
+                    for &rate_scale in &self.rate_scales {
+                        for &month in &self.months {
+                            for &seed in &self.seeds {
+                                out.push(SweepPoint {
+                                    index,
+                                    policy,
+                                    n_jobs,
+                                    gpus,
+                                    rate_scale,
+                                    month,
+                                    seed,
+                                });
+                                index += 1;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One grid cell: a complete scenario description plus its position in
+/// the enumeration order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepPoint {
+    pub index: usize,
+    pub policy: Policy,
+    pub n_jobs: usize,
+    pub gpus: usize,
+    pub rate_scale: f64,
+    pub month: usize,
+    pub seed: u64,
+}
+
+impl SweepPoint {
+    /// Materialize the scenario's experiment configuration on top of the
+    /// grid's base config.
+    pub fn config(&self, base: &ExperimentConfig) -> ExperimentConfig {
+        let mut cfg = base.clone();
+        cfg.policy = self.policy;
+        cfg.n_jobs = self.n_jobs;
+        cfg.cluster = ClusterSpec::with_gpus(self.gpus);
+        cfg.trace = month_profile(self.month).scaled(self.rate_scale);
+        cfg.seed = self.seed;
+        cfg
+    }
+
+    /// Short machine-friendly label, e.g. `tlora/j200/g128/r1x/m1/s42`.
+    pub fn label(&self) -> String {
+        format!("{}/s{}", self.cell_key(), self.seed)
+    }
+
+    /// Scenario key ignoring the seed — replicas of one scenario share a
+    /// cell key and are aggregated together by the report layer.
+    pub fn cell_key(&self) -> String {
+        format!(
+            "{}/j{}/g{}/r{}x/m{}",
+            self.policy.slug(),
+            self.n_jobs,
+            self.gpus,
+            self.rate_scale,
+            self.month
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid() -> SweepGrid {
+        let mut g = SweepGrid::default();
+        g.policies = vec![Policy::TLora, Policy::MLora];
+        g.n_jobs = vec![10];
+        g.gpus = vec![16, 32];
+        g.rate_scales = vec![1.0, 2.0];
+        g.months = vec![1];
+        g.seeds = vec![1, 2, 3];
+        g
+    }
+
+    #[test]
+    fn len_matches_enumeration() {
+        let g = grid();
+        assert_eq!(g.len(), 2 * 2 * 2 * 3);
+        let pts = g.points();
+        assert_eq!(pts.len(), g.len());
+        for (i, p) in pts.iter().enumerate() {
+            assert_eq!(p.index, i);
+        }
+    }
+
+    #[test]
+    fn enumeration_is_deterministic() {
+        let g = grid();
+        assert_eq!(g.points(), g.points());
+    }
+
+    #[test]
+    fn seeds_vary_fastest() {
+        let pts = grid().points();
+        assert_eq!(pts[0].seed, 1);
+        assert_eq!(pts[1].seed, 2);
+        assert_eq!(pts[2].seed, 3);
+        assert_eq!(pts[0].cell_key(), pts[2].cell_key());
+        assert_ne!(pts[0].cell_key(), pts[3].cell_key());
+        assert_ne!(pts[0].label(), pts[1].label());
+    }
+
+    #[test]
+    fn point_config_applies_all_axes() {
+        let g = grid();
+        let pts = g.points();
+        let p = &pts[g.len() - 1];
+        let cfg = p.config(&g.base);
+        assert_eq!(cfg.policy, Policy::MLora);
+        assert_eq!(cfg.n_jobs, 10);
+        assert_eq!(cfg.cluster.total_gpus(), 32);
+        assert_eq!(cfg.seed, 3);
+        let base_rate = month_profile(1).rate;
+        assert!((cfg.trace.rate - base_rate * 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validate_rejects_empty_axes_and_bad_cells() {
+        let mut g = grid();
+        g.seeds.clear();
+        assert!(g.validate().is_err());
+        let mut g = grid();
+        g.n_jobs = vec![0];
+        assert!(g.validate().is_err());
+        assert!(grid().validate().is_ok());
+    }
+}

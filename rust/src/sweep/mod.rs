@@ -1,0 +1,32 @@
+//! Scenario-sweep engine: declarative grids over the evaluation axes,
+//! fanned out across worker threads, aggregated with confidence
+//! intervals, and emitted as tables / CSV / JSON.
+//!
+//! The paper's headline results (Figs. 5–10) are all grids over
+//! policy × cluster size × arrival rate × trace month; related systems
+//! (mLoRA, PLoRA) are evaluated the same way. This subsystem makes that
+//! shape first-class so every figure bench — and any future
+//! evaluation — is a thin driver instead of a bespoke loop:
+//!
+//! * [`grid`] — [`SweepGrid`] (the declarative cartesian product) and
+//!   [`SweepPoint`] (one cell, in a fixed enumeration order);
+//! * [`runner`] — the `std::thread` + channel executor. Simulations are
+//!   pure functions of their config, and results are re-sorted by cell
+//!   index, so output is bit-identical across thread counts and runs;
+//! * [`report`] — per-scenario aggregation across seed replicas
+//!   (`mean ± 95% CI` via [`crate::util::stats::mean_ci95`]) and
+//!   table/CSV/JSON emission through [`crate::metrics`] and
+//!   [`crate::util::json`].
+//!
+//! CLI: `tlora sweep --policies tlora,mlora --gpus 32,64,128
+//! --rate-scales 0.5,1,2 --seeds 41,42,43 --threads 8 --out-json s.json
+//! --out-csv s.csv` (see `main.rs` / DESIGN.md §Sweep).
+
+pub mod grid;
+pub mod runner;
+pub mod report;
+
+pub use grid::{month_profile, SweepGrid, SweepPoint};
+pub use report::{aggregate, sweep_table, to_csv, to_json, CellSummary};
+pub use runner::{default_threads, run, run_parallel, PointResult,
+                 SweepRun};

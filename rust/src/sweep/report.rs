@@ -1,0 +1,259 @@
+//! Sweep aggregation and emission.
+//!
+//! Per-scenario aggregation pools the seed replicas of each grid cell
+//! and reports every metric as `mean ± 95% CI` via
+//! [`crate::util::stats::mean_ci95`]. Emission goes through the shared
+//! reporting substrates: aligned tables / CSV via [`crate::metrics`]
+//! and JSON via [`crate::util::json`].
+
+use super::runner::{PointResult, SweepRun};
+use crate::metrics::Table;
+use crate::util::json::Json;
+use crate::util::stats::mean_ci95;
+
+/// One scenario (grid cell modulo seed) aggregated across its replicas.
+#[derive(Debug, Clone)]
+pub struct CellSummary {
+    /// scenario key, e.g. `tlora/j200/g128/r1x/m1`
+    pub key: String,
+    /// representative point of the cell (its first replica)
+    pub point: super::grid::SweepPoint,
+    pub n_seeds: usize,
+    /// (mean, 95% CI half-width) pairs
+    pub throughput: (f64, f64),
+    pub mean_jct: (f64, f64),
+    pub p99_jct: (f64, f64),
+    pub gpu_util: (f64, f64),
+    pub makespan: (f64, f64),
+    pub mean_slowdown: (f64, f64),
+}
+
+/// Aggregate a run's points into per-scenario summaries, preserving the
+/// grid's enumeration order of first appearance.
+pub fn aggregate(run: &SweepRun) -> Vec<CellSummary> {
+    // first-appearance order preserved; HashMap index keeps the
+    // grouping O(points) for paper-scale sweeps (thousands of cells)
+    let mut order: Vec<String> = vec![];
+    let mut buckets: Vec<Vec<&PointResult>> = vec![];
+    let mut index: std::collections::HashMap<String, usize> =
+        std::collections::HashMap::new();
+    for p in &run.points {
+        let key = p.point.cell_key();
+        match index.get(&key) {
+            Some(&i) => buckets[i].push(p),
+            None => {
+                index.insert(key.clone(), order.len());
+                order.push(key);
+                buckets.push(vec![p]);
+            }
+        }
+    }
+    order
+        .into_iter()
+        .zip(buckets)
+        .map(|(key, pts)| {
+            let col = |f: &dyn Fn(&PointResult) -> f64| -> (f64, f64) {
+                let xs: Vec<f64> = pts.iter().map(|p| f(*p)).collect();
+                mean_ci95(&xs)
+            };
+            CellSummary {
+                key,
+                point: pts[0].point.clone(),
+                n_seeds: pts.len(),
+                throughput: col(&|p| p.result.avg_throughput),
+                mean_jct: col(&|p| p.result.mean_jct),
+                p99_jct: col(&|p| p.result.p99_jct),
+                gpu_util: col(&|p| p.result.avg_gpu_util),
+                makespan: col(&|p| p.result.makespan),
+                mean_slowdown: col(&|p| p.result.mean_slowdown),
+            }
+        })
+        .collect()
+}
+
+fn pm(v: (f64, f64), digits: usize) -> String {
+    if v.1 > 0.0 {
+        format!("{:.d$} ±{:.d$}", v.0, v.1, d = digits)
+    } else {
+        format!("{:.d$}", v.0, d = digits)
+    }
+}
+
+/// Render the aggregated scenarios as an aligned table.
+pub fn sweep_table(title: &str, cells: &[CellSummary]) -> Table {
+    let mut t = Table::new(
+        title,
+        &["scenario", "seeds", "thr (samples/s)", "mean JCT (s)",
+          "p99 JCT (s)", "GPU util", "slowdown"],
+    );
+    for c in cells {
+        t.row(&[
+            c.key.clone(),
+            c.n_seeds.to_string(),
+            pm(c.throughput, 2),
+            pm(c.mean_jct, 0),
+            pm(c.p99_jct, 0),
+            format!(
+                "{:.1}%{}",
+                c.gpu_util.0 * 100.0,
+                if c.gpu_util.1 > 0.0 {
+                    format!(" ±{:.1}", c.gpu_util.1 * 100.0)
+                } else {
+                    String::new()
+                }
+            ),
+            pm(c.mean_slowdown, 3),
+        ]);
+    }
+    t
+}
+
+/// Per-point CSV (one row per simulated cell) through the shared
+/// [`Table`] CSV path.
+pub fn to_csv(run: &SweepRun) -> String {
+    let mut t = Table::new(
+        "sweep",
+        &["index", "policy", "n_jobs", "gpus", "rate_scale", "month",
+          "seed", "throughput", "mean_jct", "p99_jct", "gpu_util",
+          "makespan", "mean_slowdown", "horizons", "completed"],
+    );
+    for p in &run.points {
+        t.row(&[
+            p.point.index.to_string(),
+            p.point.policy.slug().to_string(),
+            p.point.n_jobs.to_string(),
+            p.point.gpus.to_string(),
+            p.point.rate_scale.to_string(),
+            p.point.month.to_string(),
+            p.point.seed.to_string(),
+            format!("{:.6}", p.result.avg_throughput),
+            format!("{:.6}", p.result.mean_jct),
+            format!("{:.6}", p.result.p99_jct),
+            format!("{:.6}", p.result.avg_gpu_util),
+            format!("{:.6}", p.result.makespan),
+            format!("{:.6}", p.result.mean_slowdown),
+            p.result.horizons.to_string(),
+            p.result.jct.len().to_string(),
+        ]);
+    }
+    t.to_csv()
+}
+
+/// Full machine-readable report: run metadata, per-point metrics, and
+/// per-scenario aggregates.
+pub fn to_json(run: &SweepRun) -> Json {
+    let points: Vec<Json> = run
+        .points
+        .iter()
+        .map(|p| {
+            Json::obj()
+                .set("index", p.point.index)
+                .set("label", p.point.label())
+                .set("policy", p.point.policy.slug())
+                .set("n_jobs", p.point.n_jobs)
+                .set("gpus", p.point.gpus)
+                .set("rate_scale", p.point.rate_scale)
+                .set("month", p.point.month)
+                .set("seed", p.point.seed)
+                .set("throughput", p.result.avg_throughput)
+                .set("mean_jct", p.result.mean_jct)
+                .set("p99_jct", p.result.p99_jct)
+                .set("gpu_util", p.result.avg_gpu_util)
+                .set("makespan", p.result.makespan)
+                .set("mean_slowdown", p.result.mean_slowdown)
+                .set("horizons", p.result.horizons)
+                .set("completed", p.result.jct.len())
+                .set("wall_s", p.wall_s)
+        })
+        .collect();
+    let cells: Vec<Json> = aggregate(run)
+        .iter()
+        .map(|c| {
+            let ci = |v: (f64, f64)| {
+                Json::Arr(vec![Json::Num(v.0), Json::Num(v.1)])
+            };
+            Json::obj()
+                .set("key", c.key.clone())
+                .set("n_seeds", c.n_seeds)
+                .set("throughput", ci(c.throughput))
+                .set("mean_jct", ci(c.mean_jct))
+                .set("p99_jct", ci(c.p99_jct))
+                .set("gpu_util", ci(c.gpu_util))
+                .set("makespan", ci(c.makespan))
+                .set("mean_slowdown", ci(c.mean_slowdown))
+        })
+        .collect();
+    Json::obj()
+        .set("n_points", run.points.len())
+        .set("n_threads", run.n_threads)
+        .set("wall_s", run.wall_s)
+        .set("points", Json::Arr(points))
+        .set("cells", Json::Arr(cells))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Policy;
+    use crate::sweep::grid::SweepGrid;
+    use crate::sweep::runner;
+    use crate::util::json;
+
+    fn run_small() -> SweepRun {
+        let mut g = SweepGrid::default();
+        g.policies = vec![Policy::TLora];
+        g.n_jobs = vec![8];
+        g.gpus = vec![16];
+        g.rate_scales = vec![2.0];
+        g.months = vec![1];
+        g.seeds = vec![3, 4];
+        runner::run(&g, 2).unwrap()
+    }
+
+    #[test]
+    fn aggregate_pools_seeds() {
+        let run = run_small();
+        let cells = aggregate(&run);
+        assert_eq!(cells.len(), 1);
+        assert_eq!(cells[0].n_seeds, 2);
+        assert!(cells[0].throughput.0 > 0.0);
+        assert!(cells[0].throughput.1 >= 0.0);
+        // the pooled mean sits between the two replicas
+        let a = run.points[0].result.avg_throughput;
+        let b = run.points[1].result.avg_throughput;
+        let m = cells[0].throughput.0;
+        assert!(m >= a.min(b) - 1e-12 && m <= a.max(b) + 1e-12);
+    }
+
+    #[test]
+    fn csv_has_one_row_per_point() {
+        let run = run_small();
+        let csv = to_csv(&run);
+        assert_eq!(csv.lines().count(), run.points.len() + 1);
+        assert!(csv.starts_with("index,policy,"));
+    }
+
+    #[test]
+    fn json_roundtrips_through_parser() {
+        let run = run_small();
+        let j = to_json(&run);
+        let back = json::parse(&j.to_string()).unwrap();
+        assert_eq!(
+            back.get("n_points").unwrap().as_usize().unwrap(),
+            run.points.len()
+        );
+        assert_eq!(
+            back.get("points").unwrap().as_arr().unwrap().len(),
+            run.points.len()
+        );
+        assert_eq!(back.get("cells").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn table_renders_scenarios() {
+        let run = run_small();
+        let t = sweep_table("demo", &aggregate(&run));
+        let s = t.render();
+        assert!(s.contains("tlora/j8/g16/r2x/m1"), "{s}");
+    }
+}

@@ -1,0 +1,183 @@
+//! Parallel sweep executor.
+//!
+//! A fixed pool of `std::thread` workers pulls grid cells off a shared
+//! atomic cursor, simulates each cell, and streams `(index, result)`
+//! pairs back over an mpsc channel. Each simulation is a pure function
+//! of its [`crate::config::ExperimentConfig`] (seed-deterministic RNG,
+//! no global state), and results are re-sorted by cell index before the
+//! run is returned — so a sweep's output is **bit-identical** on 1
+//! thread and on N threads, and across repeated runs. The cross-layer
+//! determinism tests in `tests/integration_sweep.rs` pin this down.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::time::Instant;
+
+use super::grid::{SweepGrid, SweepPoint};
+use crate::sim::{simulate, SimResult};
+
+/// Outcome of one grid cell.
+#[derive(Debug, Clone)]
+pub struct PointResult {
+    pub point: SweepPoint,
+    pub result: SimResult,
+    /// wall-clock seconds this cell's simulation took (diagnostic only;
+    /// excluded from determinism guarantees)
+    pub wall_s: f64,
+}
+
+/// A completed sweep: per-cell results in grid-enumeration order.
+#[derive(Debug, Clone)]
+pub struct SweepRun {
+    pub points: Vec<PointResult>,
+    pub n_threads: usize,
+    pub wall_s: f64,
+}
+
+impl SweepRun {
+    /// Results matching a predicate on the scenario, in grid order.
+    pub fn select(
+        &self,
+        pred: impl Fn(&SweepPoint) -> bool,
+    ) -> Vec<&PointResult> {
+        self.points.iter().filter(|p| pred(&p.point)).collect()
+    }
+
+    /// The single result matching a predicate (panics on 0 or >1 — the
+    /// benches use this to pull exact scenarios out of a grid).
+    pub fn expect_one(
+        &self,
+        pred: impl Fn(&SweepPoint) -> bool,
+    ) -> &PointResult {
+        let hits = self.select(pred);
+        assert_eq!(
+            hits.len(),
+            1,
+            "expected exactly one matching sweep point, got {}",
+            hits.len()
+        );
+        hits[0]
+    }
+}
+
+/// Worker-thread count to use when the caller does not care: the
+/// machine's available parallelism.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Run every cell of `grid` across `n_threads` workers.
+pub fn run(grid: &SweepGrid, n_threads: usize) -> Result<SweepRun, String> {
+    grid.validate()?;
+    let points = grid.points();
+    let n_threads = n_threads.max(1).min(points.len().max(1));
+    let t0 = Instant::now();
+
+    let (tx, rx) = mpsc::channel::<PointResult>();
+    let cursor = AtomicUsize::new(0);
+    {
+        let points = &points;
+        let cursor = &cursor;
+        let base = &grid.base;
+        std::thread::scope(|scope| {
+            for _ in 0..n_threads {
+                let tx = tx.clone();
+                scope.spawn(move || loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= points.len() {
+                        break;
+                    }
+                    let point = points[i].clone();
+                    let cfg = point.config(base);
+                    let cell_t0 = Instant::now();
+                    let result = simulate(&cfg);
+                    let wall_s = cell_t0.elapsed().as_secs_f64();
+                    if tx
+                        .send(PointResult {
+                            point,
+                            result,
+                            wall_s,
+                        })
+                        .is_err()
+                    {
+                        break;
+                    }
+                });
+            }
+        });
+    }
+    drop(tx); // workers joined; close the channel so collection ends
+
+    let mut out: Vec<PointResult> = rx.iter().collect();
+    if out.len() != points.len() {
+        return Err(format!(
+            "sweep lost results: {} of {} cells reported",
+            out.len(),
+            points.len()
+        ));
+    }
+    out.sort_by_key(|p| p.point.index);
+    Ok(SweepRun {
+        points: out,
+        n_threads,
+        wall_s: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// [`run`] with [`default_threads`] workers.
+pub fn run_parallel(grid: &SweepGrid) -> Result<SweepRun, String> {
+    run(grid, default_threads())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Policy;
+
+    fn tiny_grid() -> SweepGrid {
+        let mut g = SweepGrid::default();
+        g.policies = vec![Policy::TLora, Policy::Megatron];
+        g.n_jobs = vec![8];
+        g.gpus = vec![16];
+        g.rate_scales = vec![2.0];
+        g.months = vec![1];
+        g.seeds = vec![5];
+        g
+    }
+
+    #[test]
+    fn runs_every_cell_in_order() {
+        let g = tiny_grid();
+        let run = run(&g, 2).unwrap();
+        assert_eq!(run.points.len(), g.len());
+        for (i, p) in run.points.iter().enumerate() {
+            assert_eq!(p.point.index, i);
+            assert_eq!(p.result.jct.len(), 8, "{}", p.point.label());
+        }
+    }
+
+    #[test]
+    fn select_and_expect_one() {
+        let g = tiny_grid();
+        let run = run(&g, 1).unwrap();
+        assert_eq!(run.select(|p| p.gpus == 16).len(), 2);
+        let one = run.expect_one(|p| p.policy == Policy::Megatron);
+        assert_eq!(one.point.policy, Policy::Megatron);
+    }
+
+    #[test]
+    fn thread_count_clamped_to_grid() {
+        let g = tiny_grid();
+        let r = run(&g, 64).unwrap();
+        assert!(r.n_threads <= g.len());
+    }
+
+    #[test]
+    fn invalid_grid_rejected() {
+        let mut g = tiny_grid();
+        g.gpus = vec![];
+        assert!(run(&g, 2).is_err());
+    }
+}

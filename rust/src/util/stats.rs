@@ -80,6 +80,21 @@ pub fn mean(xs: &[f64]) -> f64 {
     }
 }
 
+/// Mean and 95% confidence half-width of a sample (normal
+/// approximation, `1.96 * s / sqrt(n)` with the sample standard
+/// deviation). Half-width is 0 for fewer than two observations. The
+/// sweep engine reports every aggregated metric as `mean ± ci95`.
+pub fn mean_ci95(xs: &[f64]) -> (f64, f64) {
+    let s = Summary::of(xs);
+    if s.n < 2 {
+        return (s.mean, 0.0);
+    }
+    let n = s.n as f64;
+    // Summary.std is the population σ; rescale to the sample estimate
+    let sample_var = s.std * s.std * n / (n - 1.0);
+    (s.mean, 1.96 * (sample_var / n).sqrt())
+}
+
 /// Empirical CDF sampled at `points` evenly-spaced quantiles —
 /// the JCT-CDF figures (Figs. 5b, 11–13) plot these series.
 #[derive(Debug, Clone)]
@@ -262,6 +277,20 @@ mod tests {
         assert!((percentile(&xs, 0.5) - 5.0).abs() < 1e-12);
         assert_eq!(percentile(&xs, 0.0), 0.0);
         assert_eq!(percentile(&xs, 1.0), 10.0);
+    }
+
+    #[test]
+    fn mean_ci95_matches_hand_computation() {
+        // s = 1 for [1,2,3] sample-std; ci = 1.96 * 1/sqrt(3)
+        let (m, ci) = mean_ci95(&[1.0, 2.0, 3.0]);
+        assert!((m - 2.0).abs() < 1e-12);
+        assert!((ci - 1.96 / 3.0f64.sqrt()).abs() < 1e-9, "{ci}");
+        // degenerate cases collapse to zero width
+        assert_eq!(mean_ci95(&[5.0]), (5.0, 0.0));
+        assert_eq!(mean_ci95(&[]), (0.0, 0.0));
+        // identical observations: zero width
+        let (_, ci0) = mean_ci95(&[4.0, 4.0, 4.0, 4.0]);
+        assert!(ci0.abs() < 1e-12);
     }
 
     #[test]

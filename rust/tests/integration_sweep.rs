@@ -1,0 +1,130 @@
+//! Cross-layer determinism: the sweep engine must produce bit-identical
+//! results regardless of worker-thread count and across consecutive
+//! runs, and each sweep cell must match a direct `sim::simulate` call
+//! with the same configuration. Together these pin the whole stack —
+//! trace generation, scheduling, planning, the AIMD controller, and the
+//! parallel executor — to "output is a pure function of (grid, seed)".
+
+use tlora::config::Policy;
+use tlora::sim::{simulate, SimResult};
+use tlora::sweep::{aggregate, run, to_csv, to_json, SweepGrid};
+
+fn small_grid() -> SweepGrid {
+    let mut g = SweepGrid::default();
+    g.policies = vec![Policy::TLora, Policy::Megatron];
+    g.n_jobs = vec![10];
+    g.gpus = vec![16];
+    g.rate_scales = vec![1.0, 2.0];
+    g.months = vec![1];
+    g.seeds = vec![7, 8];
+    g
+}
+
+/// Bit-identical comparison of every deterministic SimResult field
+/// (wall-clock diagnostics live outside SimResult and are exempt).
+fn assert_bit_identical(a: &SimResult, b: &SimResult, label: &str) {
+    assert_eq!(a.jct, b.jct, "{label}: jct");
+    assert_eq!(a.horizons, b.horizons, "{label}: horizons");
+    assert_eq!(
+        a.scheduler_probes, b.scheduler_probes,
+        "{label}: probes"
+    );
+    assert!(
+        a.mean_jct == b.mean_jct && a.p99_jct == b.p99_jct,
+        "{label}: jct summary"
+    );
+    assert!(
+        a.avg_throughput == b.avg_throughput,
+        "{label}: throughput {} vs {}",
+        a.avg_throughput,
+        b.avg_throughput
+    );
+    assert!(a.avg_gpu_util == b.avg_gpu_util, "{label}: util");
+    assert!(a.makespan == b.makespan, "{label}: makespan");
+    assert!(a.mean_slowdown == b.mean_slowdown, "{label}: slowdown");
+    assert_eq!(
+        a.throughput_timeline, b.throughput_timeline,
+        "{label}: thr timeline"
+    );
+    assert_eq!(
+        a.util_timeline, b.util_timeline,
+        "{label}: util timeline"
+    );
+    assert_eq!(
+        a.grouping_ratio, b.grouping_ratio,
+        "{label}: grouping ratio"
+    );
+}
+
+#[test]
+fn n_threads_matches_single_thread_bitwise() {
+    let g = small_grid();
+    let serial = run(&g, 1).unwrap();
+    let parallel = run(&g, 4).unwrap();
+    assert_eq!(serial.points.len(), g.len());
+    assert_eq!(parallel.points.len(), g.len());
+    for (a, b) in serial.points.iter().zip(&parallel.points) {
+        assert_eq!(a.point, b.point, "cell order must be identical");
+        assert_bit_identical(&a.result, &b.result, &a.point.label());
+    }
+}
+
+#[test]
+fn consecutive_parallel_runs_bitwise_identical() {
+    let g = small_grid();
+    let first = run(&g, 3).unwrap();
+    let second = run(&g, 3).unwrap();
+    for (a, b) in first.points.iter().zip(&second.points) {
+        assert_eq!(a.point, b.point);
+        assert_bit_identical(&a.result, &b.result, &a.point.label());
+    }
+}
+
+#[test]
+fn sweep_cell_matches_direct_simulate() {
+    let g = small_grid();
+    let swept = run(&g, 2).unwrap();
+    for p in &swept.points {
+        let direct = simulate(&p.point.config(&g.base));
+        assert_bit_identical(&p.result, &direct, &p.point.label());
+    }
+}
+
+#[test]
+fn aggregation_pools_exactly_the_seed_replicas() {
+    let g = small_grid();
+    let swept = run(&g, 2).unwrap();
+    let cells = aggregate(&swept);
+    // 2 policies x 2 rate scales = 4 scenarios, each with 2 seeds
+    assert_eq!(cells.len(), 4);
+    for c in &cells {
+        assert_eq!(c.n_seeds, 2, "{}", c.key);
+        assert!(c.throughput.0 > 0.0);
+        assert!(c.throughput.1 >= 0.0);
+        assert!(c.mean_jct.0 > 0.0);
+    }
+}
+
+#[test]
+fn reports_are_complete_and_parsable() {
+    let g = small_grid();
+    let swept = run(&g, 2).unwrap();
+    let csv = to_csv(&swept);
+    assert_eq!(csv.lines().count(), swept.points.len() + 1);
+    let parsed =
+        tlora::util::json::parse(&to_json(&swept).to_string()).unwrap();
+    assert_eq!(
+        parsed.get("points").unwrap().as_arr().unwrap().len(),
+        swept.points.len()
+    );
+    assert_eq!(parsed.get("cells").unwrap().as_arr().unwrap().len(), 4);
+    // every job completed in every cell
+    for pt in parsed.get("points").unwrap().as_arr().unwrap() {
+        assert_eq!(
+            pt.get("completed").unwrap().as_usize().unwrap(),
+            10,
+            "incomplete cell {:?}",
+            pt.get("label")
+        );
+    }
+}

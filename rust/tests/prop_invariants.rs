@@ -1,0 +1,156 @@
+//! Property tests (via the in-crate `util::prop` framework) for the
+//! Adapter Scheduler's §3.4 invariants, checked independently of the
+//! scheduler's own bookkeeping:
+//!
+//! 1. capacity — no scheduling round hands out more GPUs than the
+//!    cluster has, never shares a GPU between groups, and never invents
+//!    a GPU outside the cluster topology;
+//! 2. liveness — every submitted job is scheduled into exactly one
+//!    group each round, and at the simulator level every job eventually
+//!    completes;
+//! 3. bounded slowdown — grouping never raises a member's modeled
+//!    per-step time above its solo baseline by more than its Δ^max,
+//!    recomputed here from the predictor's isolated step time rather
+//!    than trusting the scheduler's recorded slowdowns.
+
+use std::collections::HashSet;
+
+use tlora::cluster::{Allocation, Allocator, ClusterSpec};
+use tlora::config::{ExperimentConfig, Policy, SchedulerConfig};
+use tlora::planner::PlanOptions;
+use tlora::scheduler::predictor::Predictor;
+use tlora::scheduler::{schedule, Candidate};
+use tlora::sim::simulate;
+use tlora::util::prop::{gen_pair, gen_usize, prop_check};
+use tlora::util::rng::Rng;
+use tlora::workload::trace::{TraceGenerator, TraceProfile};
+use tlora::workload::JobSpec;
+
+fn scenario(seed: u64, k: usize)
+    -> (ClusterSpec, Vec<Candidate>, Predictor, SchedulerConfig) {
+    let spec = ClusterSpec::with_gpus((4 * k).max(16));
+    let mut alloc = Allocator::new(spec.clone());
+    let mut pred = Predictor::new(spec.clone(), PlanOptions::default());
+    let mut rng = Rng::new(seed ^ 0x5EED);
+    let jobs: Vec<JobSpec> =
+        TraceGenerator::new(TraceProfile::month1(), seed).generate(k);
+    let cands = jobs
+        .into_iter()
+        .filter_map(|mut j| {
+            j.gpus = *rng.choice(&[1usize, 1, 2]);
+            let a = alloc.allocate(j.gpus)?;
+            let residual = pred.residual(&j, &a).unwrap_or(0.5);
+            Some(Candidate {
+                job: j,
+                alloc: a,
+                urgency: rng.f64(),
+                residual,
+            })
+        })
+        .collect();
+    (spec, cands, pred, SchedulerConfig::default())
+}
+
+#[test]
+fn prop_no_round_exceeds_cluster_capacity() {
+    let g = gen_pair(gen_usize(1, 4000), gen_usize(4, 14));
+    prop_check(12, &g, |&(seed, k)| {
+        let (spec, cands, mut pred, cfg) = scenario(seed as u64, k);
+        let out = schedule(cands, &mut pred, &cfg);
+        let mut seen = HashSet::new();
+        let mut total = 0usize;
+        for (grp, _) in &out.groups {
+            for gpu in &grp.alloc.gpus {
+                // within topology bounds
+                if gpu.node >= spec.n_nodes
+                    || gpu.idx >= spec.gpus_per_node
+                {
+                    return false;
+                }
+                // never assigned twice across groups (or within one)
+                if !seen.insert(*gpu) {
+                    return false;
+                }
+                total += 1;
+            }
+        }
+        total <= spec.total_gpus()
+    });
+}
+
+#[test]
+fn prop_every_submitted_job_is_scheduled_each_round() {
+    let g = gen_pair(gen_usize(1, 4000), gen_usize(4, 14));
+    prop_check(12, &g, |&(seed, k)| {
+        let (_, cands, mut pred, cfg) = scenario(seed as u64, k);
+        let mut want: Vec<u64> =
+            cands.iter().map(|c| c.job.id).collect();
+        let out = schedule(cands, &mut pred, &cfg);
+        let mut got: Vec<u64> = out
+            .groups
+            .iter()
+            .flat_map(|(grp, _)| grp.jobs.iter().map(|j| j.id))
+            .collect();
+        want.sort_unstable();
+        got.sort_unstable();
+        got == want
+    });
+}
+
+#[test]
+fn prop_grouping_respects_solo_baseline_slowdown_bound() {
+    let g = gen_pair(gen_usize(1, 4000), gen_usize(4, 12));
+    prop_check(10, &g, |&(seed, k)| {
+        let (_, cands, mut pred, cfg) = scenario(seed as u64, k);
+        let out = schedule(cands, &mut pred, &cfg);
+        for (grp, perf) in &out.groups {
+            for j in &grp.jobs {
+                // the job's nominal share of the merged gang: its first
+                // `gpus` devices — the same baseline the predictor's
+                // slowdown accounting uses
+                let sub = Allocation {
+                    gpus: grp
+                        .alloc
+                        .gpus
+                        .iter()
+                        .take(j.gpus.max(1).min(grp.alloc.gpus.len()))
+                        .cloned()
+                        .collect(),
+                };
+                let Ok(iso) = pred.isolated_step_time(j, &sub) else {
+                    return false;
+                };
+                if perf.step_time_s
+                    > iso * j.max_slowdown * (1.0 + 1e-9)
+                {
+                    return false;
+                }
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_simulator_eventually_schedules_every_job() {
+    // liveness end-to-end: across seeds, loads, and policies, every
+    // submitted job completes (none starves in the queue forever)
+    prop_check(8, &gen_usize(0, 10_000), |&seed| {
+        for policy in [Policy::TLora, Policy::MLora] {
+            let mut cfg = ExperimentConfig::default();
+            cfg.policy = policy;
+            cfg.n_jobs = 10 + seed % 8;
+            cfg.cluster = ClusterSpec::with_gpus(16);
+            cfg.seed = seed as u64;
+            cfg.trace = TraceProfile::month1().scaled(3.0);
+            let r = simulate(&cfg);
+            if r.jct.len() != cfg.n_jobs {
+                return false;
+            }
+            if !r.jct.iter().all(|&(_, v)| v.is_finite() && v > 0.0) {
+                return false;
+            }
+        }
+        true
+    });
+}
