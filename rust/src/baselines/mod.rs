@@ -1,13 +1,15 @@
 //! Baseline grouping policies (§4.1): mLoRA, Megatron, and the tLoRA
-//! ablations. Each exposes the same interface as the tLoRA Adapter
-//! Scheduler — a list of runnable candidates in, a set of executable
-//! groups out — so the simulator can swap policies freely.
+//! ablations. Each implements [`PolicyHooks`] — the same interface as
+//! the tLoRA Adapter Scheduler (runnable candidates in, executable
+//! groups out, plus the elastic-admission choice) — so the simulation
+//! engine swaps policies without branching on them.
 
 use crate::config::Policy;
 use crate::scheduler::grouping::{schedule, GroupState, ScheduleOutcome};
-use crate::scheduler::predictor::Predictor;
-use crate::scheduler::Candidate;
+use crate::scheduler::predictor::{GroupPerf, Predictor};
+use crate::scheduler::{Candidate, PolicyHooks};
 use crate::config::SchedulerConfig;
+use crate::workload::JobSpec;
 
 /// mLoRA-style grouping: first-come-first-served, pack jobs into a group
 /// "as long as memory capacity permits" — no heterogeneity awareness,
@@ -104,7 +106,142 @@ pub fn megatron_schedule(
     }
 }
 
-/// Dispatch a scheduling round for `policy`.
+/// tLoRA's hooks: Adapter-Scheduler dispatch (§3.4, Algorithm 1) and
+/// throughput-maximizing elastic admission under every member's Δ^max.
+/// `aimd: false` is the tLoRA-w/o-Kernel-Fuser ablation.
+pub struct TloraHooks {
+    pub aimd: bool,
+}
+
+impl PolicyHooks for TloraHooks {
+    fn dispatch(
+        &self,
+        candidates: Vec<Candidate>,
+        predictor: &mut Predictor,
+        cfg: &SchedulerConfig,
+    ) -> ScheduleOutcome {
+        schedule(candidates, predictor, cfg)
+    }
+
+    fn aimd_enabled(&self) -> bool {
+        self.aimd
+    }
+
+    fn elastic_admit(
+        &self,
+        job: &JobSpec,
+        groups: &[(GroupState, GroupPerf)],
+        predictor: &mut Predictor,
+        cfg: &SchedulerConfig,
+    ) -> Option<usize> {
+        // best group by predicted merged throughput, subject to the
+        // *existing* members' Δ^max (progress guard); the newcomer is
+        // queued — any progress beats zero, so its own slowdown bound
+        // cannot veto admission (starvation avoidance, §3.4)
+        let mut choice: Option<(usize, f64)> = None;
+        for (gi, (g, perf)) in groups.iter().enumerate() {
+            if g.jobs.len() >= cfg.max_group_size
+                || g.jobs[0].base_model != job.base_model
+            {
+                continue;
+            }
+            let mut jobs2 = g.jobs.clone();
+            jobs2.push(job.clone());
+            let Some(merged) = predictor.group_perf(&jobs2, &g.alloc)
+            else {
+                continue;
+            };
+            if !merged.within_slowdown(&g.jobs) {
+                continue;
+            }
+            let gain = merged.throughput_samples_s
+                / perf.throughput_samples_s;
+            if gain <= 1.0 {
+                continue;
+            }
+            if choice.map_or(true, |(_, g0)| gain > g0) {
+                choice = Some((gi, gain));
+            }
+        }
+        choice.map(|(gi, _)| gi)
+    }
+}
+
+/// mLoRA's hooks: FIFO memory packing and first-fit elastic admission
+/// (no heterogeneity awareness, no slowdown guard). `aimd: true` is
+/// the tLoRA-w/o-Scheduler ablation (mLoRA grouping, tLoRA kernels).
+pub struct MloraHooks {
+    pub aimd: bool,
+}
+
+impl PolicyHooks for MloraHooks {
+    fn dispatch(
+        &self,
+        candidates: Vec<Candidate>,
+        predictor: &mut Predictor,
+        cfg: &SchedulerConfig,
+    ) -> ScheduleOutcome {
+        mlora_schedule(candidates, predictor, cfg)
+    }
+
+    fn aimd_enabled(&self) -> bool {
+        self.aimd
+    }
+
+    fn elastic_admit(
+        &self,
+        job: &JobSpec,
+        groups: &[(GroupState, GroupPerf)],
+        predictor: &mut Predictor,
+        cfg: &SchedulerConfig,
+    ) -> Option<usize> {
+        // first group whose memory fits (FIFO), regardless of the
+        // slowdown it inflicts on the members
+        for (gi, (g, _)) in groups.iter().enumerate() {
+            if g.jobs.len() >= cfg.max_group_size
+                || g.jobs[0].base_model != job.base_model
+            {
+                continue;
+            }
+            let mut jobs2 = g.jobs.clone();
+            jobs2.push(job.clone());
+            if predictor.group_perf(&jobs2, &g.alloc).is_some() {
+                return Some(gi);
+            }
+        }
+        None
+    }
+}
+
+/// Megatron's hooks: every job isolated, never shares.
+pub struct MegatronHooks;
+
+impl PolicyHooks for MegatronHooks {
+    fn dispatch(
+        &self,
+        candidates: Vec<Candidate>,
+        predictor: &mut Predictor,
+        _cfg: &SchedulerConfig,
+    ) -> ScheduleOutcome {
+        megatron_schedule(candidates, predictor)
+    }
+
+    fn aimd_enabled(&self) -> bool {
+        false
+    }
+
+    fn elastic_admit(
+        &self,
+        _job: &JobSpec,
+        _groups: &[(GroupState, GroupPerf)],
+        _predictor: &mut Predictor,
+        _cfg: &SchedulerConfig,
+    ) -> Option<usize> {
+        None
+    }
+}
+
+/// The hooks implementation for `policy`.
 ///
 /// * tLoRA / tLoRA-w/o-Kernel-Fuser → the Adapter Scheduler (§3.4)
 /// * tLoRA-w/o-Scheduler / mLoRA → mLoRA's FIFO memory packing
@@ -112,19 +249,25 @@ pub fn megatron_schedule(
 ///
 /// (The kernel choice — fused vs unfused — is carried by the
 /// `Predictor`'s [`crate::planner::PlanOptions::fused_kernel`].)
+pub fn hooks_for(policy: Policy) -> Box<dyn PolicyHooks> {
+    match policy {
+        Policy::TLora => Box::new(TloraHooks { aimd: true }),
+        Policy::TLoraNoKernel => Box::new(TloraHooks { aimd: false }),
+        Policy::TLoraNoSched => Box::new(MloraHooks { aimd: true }),
+        Policy::MLora => Box::new(MloraHooks { aimd: false }),
+        Policy::Megatron => Box::new(MegatronHooks),
+    }
+}
+
+/// Dispatch a scheduling round for `policy` (convenience over
+/// [`hooks_for`] for callers without a hooks instance).
 pub fn dispatch(
     policy: Policy,
     candidates: Vec<Candidate>,
     predictor: &mut Predictor,
     cfg: &SchedulerConfig,
 ) -> ScheduleOutcome {
-    if policy.uses_tlora_scheduler() {
-        schedule(candidates, predictor, cfg)
-    } else if policy.groups_jobs() {
-        mlora_schedule(candidates, predictor, cfg)
-    } else {
-        megatron_schedule(candidates, predictor)
-    }
+    hooks_for(policy).dispatch(candidates, predictor, cfg)
 }
 
 #[cfg(test)]
@@ -231,5 +374,116 @@ mod tests {
         let out =
             dispatch(Policy::Megatron, cands, &mut pred, &cfg);
         assert_eq!(out.groups.len(), 3);
+    }
+
+    #[test]
+    fn hooks_match_policy_capabilities() {
+        for p in Policy::all() {
+            let h = hooks_for(p);
+            assert_eq!(
+                h.aimd_enabled(),
+                p.uses_kernel_fuser(),
+                "{p:?}"
+            );
+        }
+    }
+
+    /// Isolated singleton groups, as the engine's dispatch would hand
+    /// the elastic-admission step.
+    fn singleton_groups(
+        jobs: Vec<JobSpec>,
+    ) -> (Vec<(GroupState, GroupPerf)>, Predictor, SchedulerConfig)
+    {
+        let (cands, mut pred, cfg) = mk(jobs);
+        let out = megatron_schedule(cands, &mut pred);
+        (out.groups, pred, cfg)
+    }
+
+    #[test]
+    fn tlora_elastic_admit_picks_gaining_group_within_slowdown() {
+        // complementary pair: a queued small job absorbed into an
+        // under-utilized group raises merged throughput while the
+        // existing member stays within its Δ^max
+        let (groups, mut pred, cfg) =
+            singleton_groups(vec![job(0, 8, 4, 1)]);
+        let hooks = TloraHooks { aimd: true };
+        let queued = job(1, 4, 2, 1);
+        let gi = hooks.elastic_admit(&queued, &groups, &mut pred, &cfg);
+        assert_eq!(gi, Some(0), "complementary absorption refused");
+        // and the committed merge respects the existing member's Δ^max
+        let (g, perf) = &groups[0];
+        let mut jobs2 = g.jobs.clone();
+        jobs2.push(queued.clone());
+        let merged = pred.group_perf(&jobs2, &g.alloc).unwrap();
+        assert!(merged.within_slowdown(&g.jobs));
+        assert!(
+            merged.throughput_samples_s > perf.throughput_samples_s
+        );
+    }
+
+    #[test]
+    fn tlora_elastic_admit_vetoes_on_member_slowdown() {
+        // the incumbent has a Δ^max so tight that sharing its GPU with
+        // a heavy job must be rejected
+        let mut incumbent = job(0, 16, 8, 1);
+        incumbent.seq_len = 1024;
+        incumbent.max_slowdown = 1.001;
+        let (groups, mut pred, cfg) =
+            singleton_groups(vec![incumbent]);
+        let hooks = TloraHooks { aimd: true };
+        let mut heavy = job(1, 16, 8, 1);
+        heavy.seq_len = 1024;
+        assert_eq!(
+            hooks.elastic_admit(&heavy, &groups, &mut pred, &cfg),
+            None,
+            "Δ^max guard must veto the absorption"
+        );
+    }
+
+    #[test]
+    fn tlora_elastic_admit_respects_base_model_boundary() {
+        let (groups, mut pred, cfg) =
+            singleton_groups(vec![job(0, 8, 4, 1)]);
+        let hooks = TloraHooks { aimd: true };
+        let mut other = job(1, 4, 2, 1);
+        other.base_model = "qwen3-8b".into();
+        assert_eq!(
+            hooks.elastic_admit(&other, &groups, &mut pred, &cfg),
+            None
+        );
+    }
+
+    #[test]
+    fn mlora_elastic_admit_first_fit_ignores_slowdown() {
+        // mLoRA takes the first group whose memory fits, even when the
+        // merge violates the member's slowdown budget — the §4.2
+        // "mLoRA often underperforms Megatron" mechanism again
+        let mut incumbent = job(0, 16, 8, 1);
+        incumbent.seq_len = 1024;
+        incumbent.max_slowdown = 1.001;
+        let (groups, mut pred, cfg) =
+            singleton_groups(vec![incumbent]);
+        let hooks = MloraHooks { aimd: false };
+        let mut heavy = job(1, 16, 8, 1);
+        heavy.seq_len = 1024;
+        assert_eq!(
+            hooks.elastic_admit(&heavy, &groups, &mut pred, &cfg),
+            Some(0)
+        );
+    }
+
+    #[test]
+    fn megatron_elastic_admit_never_shares() {
+        let (groups, mut pred, cfg) =
+            singleton_groups(vec![job(0, 8, 4, 1)]);
+        assert_eq!(
+            MegatronHooks.elastic_admit(
+                &job(1, 4, 2, 1),
+                &groups,
+                &mut pred,
+                &cfg
+            ),
+            None
+        );
     }
 }

@@ -126,7 +126,12 @@ impl Default for AimdConfig {
 /// Adapter Scheduler knobs (§3.4).
 #[derive(Debug, Clone, PartialEq)]
 pub struct SchedulerConfig {
-    /// scheduling horizon in seconds (regroup cadence)
+    /// Maximum interval between scheduling rounds in seconds. The
+    /// event-driven engine regroups reactively on every arrival and
+    /// completion (§3.4); this bound caps how long a schedule under
+    /// pressure (queued jobs, adapting AIMD controllers) may go
+    /// unexamined. (Formerly the fixed per-horizon tick of the legacy
+    /// loop — see `sim::EngineOptions::legacy_tick`.)
     pub horizon_s: f64,
     /// default Δ^max when a job does not specify one
     pub default_max_slowdown: f64,

@@ -146,7 +146,24 @@ fn cmd_simulate(args: &Args) -> i32 {
     ]);
     t.row(&["makespan (s)".into(), format!("{:.0}", r.makespan)]);
     t.row(&["mean slowdown".into(), format!("{:.3}", r.mean_slowdown)]);
+    t.row(&["scheduling rounds".into(), r.sched_rounds.to_string()]);
+    t.row(&["events processed".into(), r.events.to_string()]);
+    if !r.incomplete_jobs.is_empty() {
+        t.row(&[
+            "INCOMPLETE jobs".into(),
+            format!("{} ({:?})", r.incomplete_jobs.len(),
+                    r.incomplete_jobs),
+        ]);
+    }
     t.print();
+    if !r.incomplete_jobs.is_empty() {
+        eprintln!(
+            "warning: {} job(s) never completed (unsatisfiable GPU \
+             request or simulation cutoff); JCT/throughput metrics \
+             cover completed jobs only",
+            r.incomplete_jobs.len()
+        );
+    }
     0
 }
 

@@ -133,6 +133,21 @@ pub fn plan(
     best.ok_or_else(|| any_oom.unwrap_or(PlanError::NoGpus))
 }
 
+/// Plan under a forced (pp, tp) shape instead of searching. Used for
+/// like-for-like comparisons where the shape search would otherwise
+/// change underneath (e.g. the spread-placement tests comparing the
+/// comm terms of identical shapes on packed vs cross-node allocations).
+pub fn plan_with_shape(
+    ssm: &Ssm,
+    alloc: &Allocation,
+    spec: &ClusterSpec,
+    opts: &PlanOptions,
+    pp: usize,
+    tp: usize,
+) -> Result<ParallelPlan, PlanError> {
+    plan_fixed(ssm, alloc, spec, opts, pp, tp)
+}
+
 /// All (pp, tp) with pp*tp == n, pp bounded by the layer-chain length.
 fn factorizations(n: usize, max_pp: usize) -> Vec<(usize, usize)> {
     let mut out = vec![];

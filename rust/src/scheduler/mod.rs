@@ -24,7 +24,43 @@ pub mod grouping;
 pub use grouping::{schedule, GroupState, ScheduleOutcome};
 pub use predictor::{GroupPerf, Predictor};
 
+use crate::config::SchedulerConfig;
 use crate::workload::JobSpec;
+
+/// Policy-specific decisions the simulation engine delegates instead of
+/// branching on [`crate::config::Policy`] inline. One implementation
+/// per baseline lives in [`crate::baselines`]; adding a policy means
+/// implementing this trait, not editing the engine.
+pub trait PolicyHooks {
+    /// One scheduling round: runnable candidates in, executable groups
+    /// out (the interface every baseline shares, §4.1).
+    fn dispatch(
+        &self,
+        candidates: Vec<Candidate>,
+        predictor: &mut Predictor,
+        cfg: &SchedulerConfig,
+    ) -> ScheduleOutcome;
+
+    /// Does this policy execute groups with the fused kernel + AIMD
+    /// nano-batching?
+    fn aimd_enabled(&self) -> bool;
+
+    /// Elastic shared admission (§3.4): pick the group that should
+    /// absorb the queued `job` — an index into `groups` — or `None` to
+    /// keep it queued. The engine commits the absorption (perf
+    /// refresh, admission bookkeeping); this hook only chooses.
+    /// Implementations should return groups whose merge is feasible
+    /// (`Predictor::group_perf` is `Some` for members + `job`); if the
+    /// commit-time probe fails anyway, the engine leaves the job
+    /// queued rather than absorbing it.
+    fn elastic_admit(
+        &self,
+        job: &JobSpec,
+        groups: &[(GroupState, GroupPerf)],
+        predictor: &mut Predictor,
+        cfg: &SchedulerConfig,
+    ) -> Option<usize>;
+}
 
 /// A runnable job as the scheduler sees it at a horizon boundary.
 #[derive(Debug, Clone)]

@@ -1,0 +1,489 @@
+//! The event-driven simulation loop.
+//!
+//! Instead of ticking a fixed 60 s horizon, the engine advances
+//! straight to the next event ([`super::events`]): job arrivals, exact
+//! completions derived from current step rates, and reschedule points
+//! that bound how long a schedule may go unexamined. Every event
+//! triggers one *scheduling round* — release, dissolve, admit,
+//! dispatch (via [`PolicyHooks`]), elastic absorption, group install,
+//! completion-event refresh — which is the paper's online reactive
+//! scheduler (§3.4: regroup on arrivals/completions, reclaim resources
+//! elastically).
+//!
+//! Reschedule points are scheduled only under *pressure*: queued jobs
+//! waiting for capacity, or AIMD controllers still adapting. A quiet
+//! cluster (empty queue, settled controllers) provably produces the
+//! same dispatch outcome every round, so the engine jumps straight to
+//! the next arrival/completion — this is where sparse low-arrival-rate
+//! sweeps win both iterations and predictor probes over the old
+//! per-horizon loop ([`EngineOptions::legacy_tick`] upper-bounds the
+//! old cadence for comparison).
+
+use std::collections::HashMap;
+
+use super::events::{Event, EventKind, EventQueue};
+use super::observer::{
+    CompletionObserver, GroupingObserver, RoundStats, SimObserver,
+    SlowdownObserver, TimelineObserver,
+};
+use super::state::{JobState, SimState};
+use super::SimResult;
+use crate::baselines::hooks_for;
+use crate::config::ExperimentConfig;
+use crate::planner::PlanOptions;
+use crate::scheduler::predictor::Predictor;
+use crate::scheduler::PolicyHooks;
+use crate::util::stats::Summary;
+use crate::workload::{classify, JobSpec};
+
+/// Engine knobs that are not experiment configuration.
+#[derive(Debug, Clone)]
+pub struct EngineOptions {
+    /// Approximate the legacy fixed-horizon loop's cadence *from
+    /// above*: force a scheduling round at every multiple of
+    /// `scheduler.horizon_s` regardless of pressure, on top of the
+    /// reactive arrival/completion rounds (which the old loop did not
+    /// run — so this mode's round/probe counts upper-bound the old
+    /// loop's grid count but are not a bit-exact replay of it; AIMD
+    /// observation order also differs). Kept for cadence benchmarking
+    /// and the engine-vs-loop regression tests; real runs leave this
+    /// off.
+    pub legacy_tick: bool,
+    /// AIMD observation count after which a group's controller is
+    /// considered settled and stops forcing periodic reschedule points
+    /// (the controller keeps adapting at arrival/completion rounds).
+    pub aimd_settle_obs: u64,
+}
+
+impl Default for EngineOptions {
+    fn default() -> Self {
+        EngineOptions {
+            legacy_tick: false,
+            aimd_settle_obs: 256,
+        }
+    }
+}
+
+/// Built-in metric observers; `SimResult` is assembled from these (and
+/// any extra observers the caller registered see the same stream).
+struct ObserverSet {
+    timeline: TimelineObserver,
+    completion: CompletionObserver,
+    grouping: GroupingObserver,
+    slowdown: SlowdownObserver,
+}
+
+impl ObserverSet {
+    fn admit(
+        &mut self,
+        t: f64,
+        job: &JobState,
+        extra: &mut [&mut dyn SimObserver],
+    ) {
+        self.timeline.on_admit(t, job);
+        self.completion.on_admit(t, job);
+        self.grouping.on_admit(t, job);
+        self.slowdown.on_admit(t, job);
+        for o in extra.iter_mut() {
+            o.on_admit(t, job);
+        }
+    }
+
+    fn round(
+        &mut self,
+        stats: &RoundStats,
+        extra: &mut [&mut dyn SimObserver],
+    ) {
+        self.timeline.on_round(stats);
+        self.completion.on_round(stats);
+        self.grouping.on_round(stats);
+        self.slowdown.on_round(stats);
+        for o in extra.iter_mut() {
+            o.on_round(stats);
+        }
+    }
+
+    fn complete(
+        &mut self,
+        t: f64,
+        job: &JobState,
+        extra: &mut [&mut dyn SimObserver],
+    ) {
+        self.timeline.on_complete(t, job);
+        self.completion.on_complete(t, job);
+        self.grouping.on_complete(t, job);
+        self.slowdown.on_complete(t, job);
+        for o in extra.iter_mut() {
+            o.on_complete(t, job);
+        }
+    }
+
+    fn finish(
+        &mut self,
+        t_end: f64,
+        jobs: &[&JobState],
+        extra: &mut [&mut dyn SimObserver],
+    ) {
+        self.timeline.on_finish(t_end, jobs);
+        self.completion.on_finish(t_end, jobs);
+        self.grouping.on_finish(t_end, jobs);
+        self.slowdown.on_finish(t_end, jobs);
+        for o in extra.iter_mut() {
+            o.on_finish(t_end, jobs);
+        }
+    }
+}
+
+/// The event-driven simulator.
+pub struct Engine<'a> {
+    cfg: &'a ExperimentConfig,
+    opts: EngineOptions,
+    hooks: Box<dyn PolicyHooks>,
+    predictor: Predictor,
+    state: SimState,
+    events: EventQueue,
+    obs: ObserverSet,
+    epoch: u64,
+    sched_rounds: u64,
+    events_processed: u64,
+    arrivals_pending: usize,
+    n_jobs: usize,
+    total_gpus: f64,
+    t_max: f64,
+}
+
+impl<'a> Engine<'a> {
+    pub fn new(
+        cfg: &'a ExperimentConfig,
+        jobs: Vec<JobSpec>,
+        opts: EngineOptions,
+    ) -> Engine<'a> {
+        let plan_opts = PlanOptions {
+            fused_kernel: cfg.policy.uses_kernel_fuser(),
+            // AIMD drives n online; None would use the oracle.
+            n_nano: Some(cfg.aimd.n0),
+            n_nano_max: cfg.aimd.n_max,
+        };
+        let size_classes: HashMap<_, _> =
+            classify(&jobs).into_iter().collect();
+        // safety valve: generous upper bound on simulated time
+        let t_max = (jobs
+            .iter()
+            .map(|j| j.submit_time)
+            .fold(0.0f64, f64::max)
+            + 1.0)
+            * 50.0
+            + 1e7;
+        let mut events = EventQueue::new();
+        for j in &jobs {
+            events.push(Event {
+                time: j.submit_time,
+                kind: EventKind::Arrival,
+                job_id: j.id,
+                epoch: 0,
+            });
+        }
+        let n_jobs = jobs.len();
+        Engine {
+            predictor: Predictor::new(cfg.cluster.clone(), plan_opts),
+            state: SimState::new(cfg, &jobs),
+            events,
+            obs: ObserverSet {
+                timeline: TimelineObserver::default(),
+                completion: CompletionObserver::default(),
+                grouping: GroupingObserver::new(size_classes),
+                slowdown: SlowdownObserver::default(),
+            },
+            epoch: 0,
+            sched_rounds: 0,
+            events_processed: 0,
+            arrivals_pending: n_jobs,
+            n_jobs,
+            total_gpus: cfg.cluster.total_gpus() as f64,
+            t_max,
+            cfg,
+            opts,
+            hooks: hooks_for(cfg.policy),
+        }
+    }
+
+    /// Is the event still meaningful? Arrivals always are; completion
+    /// and reschedule events go stale when a later round re-derived
+    /// step rates (and re-issued events) under a newer epoch.
+    fn is_valid(&self, ev: &Event) -> bool {
+        match ev.kind {
+            EventKind::Arrival => true,
+            EventKind::Completion | EventKind::ReschedulePoint => {
+                ev.epoch == self.epoch
+            }
+        }
+    }
+
+    fn pop_next_valid(&mut self) -> Option<Event> {
+        while let Some(ev) = self.events.pop() {
+            if self.is_valid(&ev) {
+                return Some(ev);
+            }
+        }
+        None
+    }
+
+    /// Pop the next valid event iff it shares timestamp `t` — events at
+    /// one instant are batched into a single scheduling round.
+    fn pop_valid_at(&mut self, t: f64) -> Option<Event> {
+        loop {
+            let ev = *self.events.peek()?;
+            if !self.is_valid(&ev) {
+                self.events.pop();
+                continue;
+            }
+            if ev.time == t {
+                self.events.pop();
+                return Some(ev);
+            }
+            return None;
+        }
+    }
+
+    /// Any running AIMD controller still warming up? While one is, the
+    /// schedule keeps changing between events and periodic reschedule
+    /// points stay on.
+    fn aimd_pressure(&self) -> bool {
+        self.state.running.iter().any(|g| {
+            g.aimd
+                .as_ref()
+                .map_or(false, |c| {
+                    c.adjustments() < self.opts.aimd_settle_obs
+                })
+        })
+    }
+
+    /// One scheduling round at time `t`. Mirrors the legacy loop's
+    /// steps but runs reactively: release → dissolve → admit →
+    /// dispatch (policy) → elastic absorption (policy) → install →
+    /// re-derive completion events → bound the next round.
+    fn round(&mut self, t: f64, extra: &mut [&mut dyn SimObserver]) {
+        self.epoch += 1;
+        self.sched_rounds += 1;
+
+        self.state.release_completed();
+        self.state.requeue_shared();
+        let newly = self.state.admit_queued(
+            self.cfg.max_concurrent_jobs,
+            &mut self.predictor,
+            t,
+        );
+        for id in newly {
+            self.obs.admit(t, &self.state.states[&id], extra);
+        }
+
+        let candidates =
+            self.state.build_candidates(&mut self.predictor, t);
+        let outcome = self.hooks.dispatch(
+            candidates,
+            &mut self.predictor,
+            &self.cfg.scheduler,
+        );
+        let mut groups = outcome.groups;
+
+        let absorbed = self.state.absorb_queued(
+            &mut groups,
+            self.hooks.as_ref(),
+            &mut self.predictor,
+            &self.cfg.scheduler,
+            self.cfg.max_concurrent_jobs,
+            t,
+        );
+        for id in absorbed {
+            self.obs.admit(t, &self.state.states[&id], extra);
+        }
+
+        self.state.install_groups(
+            groups,
+            self.hooks.aimd_enabled(),
+            self.cfg,
+        );
+
+        // exact completion events from the current step rates
+        for g in &self.state.running {
+            for id in &g.job_ids {
+                let st = &self.state.states[id];
+                let remaining = (st.spec.total_steps as f64
+                    - st.steps_done)
+                    .max(0.0);
+                self.events.push(Event {
+                    time: t + remaining * g.step_time,
+                    kind: EventKind::Completion,
+                    job_id: *id,
+                    epoch: self.epoch,
+                });
+            }
+        }
+
+        // bound the interval until the next round
+        let h = self.cfg.scheduler.horizon_s;
+        if self.opts.legacy_tick {
+            self.events.push(Event {
+                time: (t / h).floor() * h + h,
+                kind: EventKind::ReschedulePoint,
+                job_id: 0,
+                epoch: self.epoch,
+            });
+        } else {
+            // queued work can only be retried by a future round; a job
+            // that cannot even be placed on a fully idle cluster with
+            // no arrivals left is unsatisfiable — no point ticking
+            // until t_max for it (it is reported in incomplete_jobs)
+            let queue_pressure = !self.state.queue.is_empty()
+                && !(self.state.running.is_empty()
+                    && self.arrivals_pending == 0);
+            if queue_pressure || self.aimd_pressure() {
+                self.events.push(Event {
+                    time: t + h,
+                    kind: EventKind::ReschedulePoint,
+                    job_id: 0,
+                    epoch: self.epoch,
+                });
+            }
+        }
+
+        let stats = self.round_stats(t);
+        self.obs.round(&stats, extra);
+    }
+
+    fn round_stats(&self, t: f64) -> RoundStats {
+        let mut inst = 0.0;
+        let mut busy = 0.0;
+        let mut n_running = 0usize;
+        for g in &self.state.running {
+            let batch: f64 = g
+                .job_ids
+                .iter()
+                .map(|id| {
+                    self.state.states[id].spec.batch_size as f64
+                })
+                .sum();
+            inst += batch / g.step_time;
+            busy += g.compute_util * g.alloc.n_gpus() as f64;
+            n_running += g.job_ids.len();
+        }
+        RoundStats {
+            t,
+            inst_throughput: inst,
+            busy_gpus: busy,
+            total_gpus: self.total_gpus,
+            n_groups: self.state.running.len(),
+            n_running,
+            n_queued: self.state.queue.len(),
+        }
+    }
+
+    /// Run to completion (or starvation / `t_max`) and assemble the
+    /// result from the observers.
+    pub fn run(
+        mut self,
+        extra: &mut [&mut dyn SimObserver],
+    ) -> SimResult {
+        // round 0 at t=0 mirrors the legacy loop's first horizon:
+        // admit anything submitted at the trace origin
+        while let Some(ev) = self.pop_valid_at(0.0) {
+            self.events_processed += 1;
+            if ev.kind == EventKind::Arrival {
+                self.arrivals_pending -= 1;
+                self.state.queue.push(ev.job_id);
+            }
+        }
+        self.round(0.0, extra);
+
+        while self.state.completed < self.n_jobs {
+            let Some(first) = self.pop_next_valid() else {
+                // no events left but jobs incomplete: unsatisfiable
+                // jobs (e.g. wanting more GPUs than the cluster has) —
+                // surfaced via SimResult::incomplete_jobs
+                break;
+            };
+            let t = first.time;
+            if t > self.t_max {
+                break;
+            }
+            self.state.advance_to(t);
+            let mut arrivals = vec![];
+            let mut completions = vec![];
+            let mut batch = vec![first];
+            while let Some(ev) = self.pop_valid_at(t) {
+                batch.push(ev);
+            }
+            for ev in batch {
+                self.events_processed += 1;
+                match ev.kind {
+                    EventKind::Arrival => {
+                        self.arrivals_pending -= 1;
+                        arrivals.push(ev.job_id);
+                    }
+                    EventKind::Completion => {
+                        completions.push(ev.job_id);
+                    }
+                    EventKind::ReschedulePoint => {}
+                }
+            }
+            for id in arrivals {
+                self.state.queue.push(id);
+            }
+            for id in completions {
+                if self.state.complete(id, t) {
+                    self.obs.complete(
+                        t,
+                        &self.state.states[&id],
+                        extra,
+                    );
+                }
+            }
+            self.round(t, extra);
+        }
+
+        let makespan = self.state.now;
+        {
+            let jobs = self.state.sorted_states();
+            self.obs.finish(makespan, &jobs, extra);
+        }
+
+        let jct = std::mem::take(&mut self.obs.completion.jct);
+        let jvals: Vec<f64> =
+            jct.iter().map(|&(_, v)| v).collect();
+        let summary = Summary::of(&jvals);
+        let (avg_throughput, avg_gpu_util) = self
+            .obs
+            .timeline
+            .windowed_averages(self.cfg.scheduler.horizon_s);
+        let (avg_throughput_full, avg_gpu_util_full) =
+            self.obs.timeline.full_averages();
+
+        SimResult {
+            policy: self.cfg.policy,
+            mean_jct: summary.mean,
+            p99_jct: summary.p99,
+            jct,
+            avg_throughput,
+            avg_throughput_full,
+            throughput_timeline: std::mem::take(
+                &mut self.obs.timeline.throughput_timeline,
+            ),
+            avg_gpu_util,
+            avg_gpu_util_full,
+            util_timeline: std::mem::take(
+                &mut self.obs.timeline.util_timeline,
+            ),
+            makespan,
+            grouping_ratio: std::mem::take(
+                &mut self.obs.grouping.grouping_ratio,
+            ),
+            scheduler_probes: self.predictor.probes,
+            sched_rounds: self.sched_rounds,
+            events: self.events_processed,
+            incomplete_jobs: std::mem::take(
+                &mut self.obs.completion.incomplete,
+            ),
+            mean_slowdown: self.obs.slowdown.mean_slowdown,
+        }
+    }
+}

@@ -1,0 +1,204 @@
+//! Deterministic event queue for the simulation engine.
+//!
+//! The engine advances straight from event to event instead of ticking
+//! a fixed horizon. Three kinds exist:
+//!
+//! * [`EventKind::Arrival`] — a job's submit time was reached;
+//! * [`EventKind::Completion`] — a running job's last step finishes,
+//!   computed exactly from its group's current step rate;
+//! * [`EventKind::ReschedulePoint`] — the periodic regroup bound
+//!   (`scheduler.horizon_s` now caps the *maximum* interval between
+//!   scheduling rounds instead of forcing one every 60 s).
+//!
+//! **Determinism tie-break rule:** events order by
+//! `(time, kind, job_id, epoch)` — time via the crate's total f64
+//! order, then `Arrival < Completion < ReschedulePoint`, then job id.
+//! Two runs of the same config therefore pop events in a bit-identical
+//! sequence, which is what keeps the sweep engine's cross-thread
+//! determinism contract intact (DESIGN.md §Determinism).
+//!
+//! Completion and reschedule events are *epoch-stamped*: every
+//! scheduling round bumps the engine epoch and re-derives completion
+//! times from the (possibly regrouped, AIMD-updated) step rates, so
+//! events from earlier epochs are stale and discarded on pop instead of
+//! being searched for and removed from the heap.
+
+use std::cmp::{Ordering, Reverse};
+use std::collections::BinaryHeap;
+
+use crate::util::f64_cmp;
+
+/// What happened at an event's timestamp.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// A job reaches its submit time and enters the queue.
+    Arrival,
+    /// A running job finishes its final training step.
+    Completion,
+    /// Upper bound on the interval between scheduling rounds.
+    ReschedulePoint,
+}
+
+impl EventKind {
+    /// Tie-break rank at equal timestamps (arrivals first, so a job
+    /// arriving exactly when another completes sees the freed GPUs in
+    /// the same round).
+    fn rank(self) -> u8 {
+        match self {
+            EventKind::Arrival => 0,
+            EventKind::Completion => 1,
+            EventKind::ReschedulePoint => 2,
+        }
+    }
+}
+
+/// One scheduled event. `job_id` is 0 for reschedule points; `epoch`
+/// is the scheduling-round counter the event was issued under (always
+/// 0 for arrivals, which never go stale).
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    pub time: f64,
+    pub kind: EventKind,
+    pub job_id: u64,
+    pub epoch: u64,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Event) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Event) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Event) -> Ordering {
+        f64_cmp(self.time, other.time)
+            .then(self.kind.rank().cmp(&other.kind.rank()))
+            .then(self.job_id.cmp(&other.job_id))
+            .then(self.epoch.cmp(&other.epoch))
+    }
+}
+
+/// Min-heap of events under the deterministic order above.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Reverse<Event>>,
+}
+
+impl EventQueue {
+    pub fn new() -> EventQueue {
+        EventQueue {
+            heap: BinaryHeap::new(),
+        }
+    }
+
+    pub fn push(&mut self, ev: Event) {
+        self.heap.push(Reverse(ev));
+    }
+
+    pub fn pop(&mut self) -> Option<Event> {
+        self.heap.pop().map(|Reverse(ev)| ev)
+    }
+
+    pub fn peek(&self) -> Option<&Event> {
+        self.heap.peek().map(|Reverse(ev)| ev)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(time: f64, kind: EventKind, job_id: u64) -> Event {
+        Event {
+            time,
+            kind,
+            job_id,
+            epoch: 0,
+        }
+    }
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(ev(30.0, EventKind::Arrival, 1));
+        q.push(ev(10.0, EventKind::Completion, 2));
+        q.push(ev(20.0, EventKind::ReschedulePoint, 0));
+        let times: Vec<f64> = std::iter::from_fn(|| q.pop())
+            .map(|e| e.time)
+            .collect();
+        assert_eq!(times, vec![10.0, 20.0, 30.0]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn equal_time_ties_break_on_kind_then_job_id() {
+        let mut q = EventQueue::new();
+        q.push(ev(5.0, EventKind::ReschedulePoint, 0));
+        q.push(ev(5.0, EventKind::Completion, 9));
+        q.push(ev(5.0, EventKind::Completion, 3));
+        q.push(ev(5.0, EventKind::Arrival, 7));
+        let order: Vec<(EventKind, u64)> = std::iter::from_fn(|| q.pop())
+            .map(|e| (e.kind, e.job_id))
+            .collect();
+        assert_eq!(
+            order,
+            vec![
+                (EventKind::Arrival, 7),
+                (EventKind::Completion, 3),
+                (EventKind::Completion, 9),
+                (EventKind::ReschedulePoint, 0),
+            ]
+        );
+    }
+
+    #[test]
+    fn insertion_order_never_leaks_into_pop_order() {
+        // push the same event set in two different orders: pops match
+        let evs = vec![
+            ev(1.0, EventKind::Completion, 4),
+            ev(1.0, EventKind::Arrival, 4),
+            ev(0.5, EventKind::ReschedulePoint, 0),
+            ev(1.0, EventKind::Completion, 1),
+        ];
+        let mut a = EventQueue::new();
+        let mut b = EventQueue::new();
+        for e in &evs {
+            a.push(*e);
+        }
+        for e in evs.iter().rev() {
+            b.push(*e);
+        }
+        loop {
+            match (a.pop(), b.pop()) {
+                (None, None) => break,
+                (x, y) => assert_eq!(x, y),
+            }
+        }
+    }
+
+    #[test]
+    fn peek_does_not_remove() {
+        let mut q = EventQueue::new();
+        q.push(ev(2.0, EventKind::Arrival, 0));
+        assert_eq!(q.peek().unwrap().time, 2.0);
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.pop().unwrap().time, 2.0);
+        assert!(q.pop().is_none());
+    }
+}

@@ -1,0 +1,297 @@
+//! Metric observers: [`SimResult`](crate::sim::SimResult) is assembled
+//! from pluggable [`SimObserver`]s instead of accumulators threaded
+//! through the engine loop.
+//!
+//! **Observer contract.** The engine calls, in order per scheduling
+//! round: zero or more `on_admit`/`on_complete` (as jobs start and
+//! finish), then exactly one `on_round` with the post-round snapshot.
+//! `on_finish` fires once after the last round with the final job
+//! states sorted by id (the canonical order — observers summing floats
+//! over it stay bit-deterministic). Observers must be deterministic
+//! functions of their inputs; they must not read clocks or global
+//! state, or the sweep engine's cross-thread bit-identity breaks.
+//!
+//! Custom observers (tests, future failure-injection / SLO scenarios)
+//! implement the trait and are passed to
+//! [`crate::sim::simulate_jobs_with`]; the four built-ins below feed
+//! every field of `SimResult`.
+
+use std::collections::HashMap;
+
+use super::state::JobState;
+use crate::util::stats::{percentile_sorted, TimeWeighted};
+use crate::workload::SizeClass;
+
+/// Snapshot the engine publishes after every scheduling round.
+#[derive(Debug, Clone)]
+pub struct RoundStats {
+    /// round timestamp (simulated seconds)
+    pub t: f64,
+    /// Σ groups batch / step_time — instantaneous cluster samples/s
+    pub inst_throughput: f64,
+    /// Σ groups compute_util × gpus
+    pub busy_gpus: f64,
+    pub total_gpus: f64,
+    pub n_groups: usize,
+    /// running jobs across all groups
+    pub n_running: usize,
+    /// jobs still queued after this round's admission
+    pub n_queued: usize,
+}
+
+/// Observer callbacks. All methods default to no-ops so an observer
+/// implements only what it needs.
+pub trait SimObserver {
+    /// A job started making progress for the first time (own
+    /// allocation or elastic shared admission).
+    fn on_admit(&mut self, _t: f64, _job: &JobState) {}
+
+    /// A scheduling round finished; `stats` is the new running state.
+    fn on_round(&mut self, _stats: &RoundStats) {}
+
+    /// A job completed at `t` (its final state, post-completion).
+    fn on_complete(&mut self, _t: f64, _job: &JobState) {}
+
+    /// The run ended at `t_end`; `jobs` holds every job's final state
+    /// sorted by id (completed or not).
+    fn on_finish(&mut self, _t_end: f64, _jobs: &[&JobState]) {}
+}
+
+/// Throughput + GPU-utilization timelines and their time-weighted
+/// averages, both full-run and windowed to the 90th-percentile
+/// completion (the steady window the paper's figures use, so a finite
+/// trace's drain tail does not wash out the signal).
+#[derive(Debug, Default)]
+pub struct TimelineObserver {
+    pub throughput_timeline: Vec<(f64, f64)>,
+    pub util_timeline: Vec<(f64, f64)>,
+    thr_full: TimeWeighted,
+    util_full: TimeWeighted,
+    completions: Vec<f64>,
+    avg_throughput_full: f64,
+    avg_gpu_util_full: f64,
+}
+
+impl SimObserver for TimelineObserver {
+    fn on_round(&mut self, s: &RoundStats) {
+        let util = s.busy_gpus / s.total_gpus;
+        self.throughput_timeline.push((s.t, s.inst_throughput));
+        self.util_timeline.push((s.t, util.min(1.0)));
+        self.thr_full.add(s.t, s.inst_throughput);
+        self.util_full.add(s.t, util);
+    }
+
+    fn on_complete(&mut self, t: f64, _job: &JobState) {
+        self.completions.push(t);
+    }
+
+    fn on_finish(&mut self, t_end: f64, _jobs: &[&JobState]) {
+        self.avg_throughput_full = self.thr_full.finish(t_end);
+        self.avg_gpu_util_full = self.util_full.finish(t_end);
+    }
+}
+
+impl TimelineObserver {
+    /// Full-run time-weighted averages (throughput, utilization);
+    /// valid after `on_finish`.
+    pub fn full_averages(&self) -> (f64, f64) {
+        (self.avg_throughput_full, self.avg_gpu_util_full)
+    }
+
+    /// Averages over the steady window `[0, t90]`, where `t90` is the
+    /// 90th-percentile completion time, floored at `min_window`.
+    pub fn windowed_averages(&self, min_window: f64) -> (f64, f64) {
+        let mut done = self.completions.clone();
+        done.sort_by(|a, b| crate::util::f64_cmp(*a, *b));
+        let t90 = percentile_sorted(&done, 0.90).max(min_window);
+        let window_avg = |tl: &[(f64, f64)]| -> f64 {
+            let mut acc = TimeWeighted::default();
+            for &(ts, v) in tl.iter().filter(|&&(ts, _)| ts <= t90) {
+                acc.add(ts, v);
+            }
+            acc.finish(t90)
+        };
+        (
+            window_avg(&self.throughput_timeline),
+            window_avg(&self.util_timeline),
+        )
+    }
+}
+
+/// Per-job completion records: JCT pairs and the jobs that never
+/// finished (silently truncated by the old loop's `t_max` valve — now
+/// surfaced as [`crate::sim::SimResult::incomplete_jobs`]).
+#[derive(Debug, Default)]
+pub struct CompletionObserver {
+    /// (job id, completion time - submit time), sorted by id at finish
+    pub jct: Vec<(u64, f64)>,
+    pub incomplete: Vec<u64>,
+}
+
+impl SimObserver for CompletionObserver {
+    fn on_complete(&mut self, t: f64, job: &JobState) {
+        self.jct.push((job.spec.id, t - job.spec.submit_time));
+    }
+
+    fn on_finish(&mut self, _t_end: f64, jobs: &[&JobState]) {
+        self.jct.sort_by_key(|&(id, _)| id);
+        self.incomplete = jobs
+            .iter()
+            .filter(|s| s.completed_at.is_none())
+            .map(|s| s.spec.id)
+            .collect();
+    }
+}
+
+/// Per size-class grouping ratio (Fig. 6b): fraction of running time
+/// each class spent co-located.
+#[derive(Debug, Default)]
+pub struct GroupingObserver {
+    size_classes: HashMap<u64, SizeClass>,
+    pub grouping_ratio: HashMap<&'static str, f64>,
+}
+
+impl GroupingObserver {
+    pub fn new(size_classes: HashMap<u64, SizeClass>) -> Self {
+        GroupingObserver {
+            size_classes,
+            grouping_ratio: HashMap::new(),
+        }
+    }
+}
+
+impl SimObserver for GroupingObserver {
+    fn on_finish(&mut self, _t_end: f64, jobs: &[&JobState]) {
+        let mut class_grouped: HashMap<&'static str, (f64, f64)> =
+            HashMap::new();
+        for s in jobs {
+            let class = match self.size_classes.get(&s.spec.id) {
+                Some(SizeClass::Small) => "small",
+                Some(SizeClass::Medium) => "medium",
+                Some(SizeClass::Large) => "large",
+                None => continue,
+            };
+            let e = class_grouped.entry(class).or_insert((0.0, 0.0));
+            e.0 += s.grouped_time;
+            e.1 += s.running_time;
+        }
+        self.grouping_ratio = class_grouped
+            .into_iter()
+            .map(|(k, (g, r))| (k, if r > 0.0 { g / r } else { 0.0 }))
+            .collect();
+    }
+}
+
+/// Mean slowdown across jobs that ran (expected isolated steps over
+/// actual steps, the §4.2 fairness metric).
+#[derive(Debug, Default)]
+pub struct SlowdownObserver {
+    pub mean_slowdown: f64,
+}
+
+impl SimObserver for SlowdownObserver {
+    fn on_finish(&mut self, _t_end: f64, jobs: &[&JobState]) {
+        let mut acc = 0.0;
+        let mut n = 0usize;
+        for s in jobs {
+            if s.running_time > 0.0 && s.iso_step_time.is_finite() {
+                let exp_steps = s.running_time / s.iso_step_time;
+                if s.steps_done > 0.0 && exp_steps > 0.0 {
+                    acc += exp_steps / s.steps_done;
+                    n += 1;
+                }
+            }
+        }
+        self.mean_slowdown =
+            if n > 0 { acc / n as f64 } else { 1.0 };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::JobSpec;
+
+    fn job_state(id: u64, submit: f64) -> JobState {
+        JobState {
+            spec: JobSpec {
+                id,
+                base_model: "llama3-8b".into(),
+                rank: 8,
+                batch_size: 4,
+                seq_len: 512,
+                gpus: 1,
+                total_steps: 100,
+                submit_time: submit,
+                max_slowdown: 2.0,
+            },
+            steps_done: 0.0,
+            iso_step_time: 1.0,
+            admitted_at: None,
+            completed_at: None,
+            grouped_time: 0.0,
+            running_time: 0.0,
+        }
+    }
+
+    #[test]
+    fn timeline_windowed_vs_full_averages() {
+        let mut o = TimelineObserver::default();
+        let stats = |t: f64, thr: f64| RoundStats {
+            t,
+            inst_throughput: thr,
+            busy_gpus: 0.0,
+            total_gpus: 16.0,
+            n_groups: 0,
+            n_running: 0,
+            n_queued: 0,
+        };
+        o.on_round(&stats(0.0, 10.0));
+        o.on_round(&stats(100.0, 0.0)); // drain tail: zero throughput
+        let done = job_state(0, 0.0);
+        o.on_complete(50.0, &done);
+        o.on_finish(200.0, &[]);
+        let (full, _) = o.full_averages();
+        // 10 samples/s for half the run, 0 for the other half
+        assert!((full - 5.0).abs() < 1e-9, "{full}");
+        // windowed to t90=max(50, 60)=60: only the busy stretch counts
+        let (windowed, _) = o.windowed_averages(60.0);
+        assert!((windowed - 10.0).abs() < 1e-9, "{windowed}");
+    }
+
+    #[test]
+    fn completion_observer_tracks_incomplete() {
+        let mut o = CompletionObserver::default();
+        let mut a = job_state(3, 5.0);
+        a.completed_at = Some(25.0);
+        o.on_complete(25.0, &a);
+        let b = job_state(7, 0.0); // never completed
+        o.on_finish(100.0, &[&a, &b]);
+        assert_eq!(o.jct, vec![(3, 20.0)]);
+        assert_eq!(o.incomplete, vec![7]);
+    }
+
+    #[test]
+    fn grouping_ratio_per_class() {
+        let mut classes = HashMap::new();
+        classes.insert(0, SizeClass::Small);
+        classes.insert(1, SizeClass::Large);
+        let mut o = GroupingObserver::new(classes);
+        let mut a = job_state(0, 0.0);
+        a.grouped_time = 30.0;
+        a.running_time = 60.0;
+        let mut b = job_state(1, 0.0);
+        b.grouped_time = 0.0;
+        b.running_time = 40.0;
+        o.on_finish(100.0, &[&a, &b]);
+        assert!((o.grouping_ratio["small"] - 0.5).abs() < 1e-12);
+        assert_eq!(o.grouping_ratio["large"], 0.0);
+    }
+
+    #[test]
+    fn slowdown_defaults_to_one_without_runners() {
+        let mut o = SlowdownObserver::default();
+        o.on_finish(10.0, &[]);
+        assert_eq!(o.mean_slowdown, 1.0);
+    }
+}

@@ -1,0 +1,456 @@
+//! Simulation state: per-job bookkeeping, running groups, and the
+//! allocation/admission mechanics the engine drives.
+//!
+//! Everything here is *mechanism* — how jobs are admitted, absorbed,
+//! advanced, and released. *Policy* (which groups to form, which group
+//! absorbs a queued job) lives behind
+//! [`crate::scheduler::PolicyHooks`], implemented per baseline in
+//! [`crate::baselines`].
+
+use std::collections::HashMap;
+
+use crate::cluster::{Allocation, Allocator};
+use crate::config::{ExperimentConfig, SchedulerConfig};
+use crate::kernelsim::overlap::iter_time;
+use crate::kernelsim::AimdController;
+use crate::scheduler::predictor::GroupPerf;
+use crate::scheduler::predictor::Predictor;
+use crate::scheduler::{urgency, Candidate, GroupState, PolicyHooks};
+use crate::util::f64_cmp;
+use crate::workload::JobSpec;
+
+/// Per-job bookkeeping during the run.
+#[derive(Debug, Clone)]
+pub struct JobState {
+    pub spec: JobSpec,
+    pub steps_done: f64,
+    /// isolated-execution step time on its provisioned GPUs (slowdown
+    /// reference), computed lazily at admission
+    pub iso_step_time: f64,
+    /// first time the job started making progress (own allocation or
+    /// elastic shared admission); refreshed if it later reclaims its
+    /// own GPUs, matching the urgency bookkeeping
+    pub admitted_at: Option<f64>,
+    pub completed_at: Option<f64>,
+    /// seconds spent in a group of size > 1
+    pub grouped_time: f64,
+    pub running_time: f64,
+}
+
+/// A group currently executing at a fixed step rate. The rate only
+/// changes at scheduling rounds (regroup or AIMD update), which is what
+/// lets the engine compute completion times exactly.
+#[derive(Debug)]
+pub struct RunningGroup {
+    pub job_ids: Vec<u64>,
+    pub alloc: Allocation,
+    pub step_time: f64,
+    pub compute_util: f64,
+    pub aimd: Option<AimdController>,
+    /// comp/comm decomposition for online AIMD re-evaluation
+    pub comp_s: f64,
+    pub comm_s: f64,
+    pub oh: f64,
+    pub lat: f64,
+}
+
+/// Cap on AIMD observations consumed per advance — the same per-window
+/// bound the horizon loop used, now applied per inter-event interval.
+const AIMD_OBS_PER_ADVANCE: f64 = 16.0;
+
+/// The full mutable simulation state.
+pub struct SimState {
+    pub states: HashMap<u64, JobState>,
+    /// arrived jobs waiting for GPUs (or for elastic absorption)
+    pub queue: Vec<u64>,
+    /// owned gang allocations by job id
+    pub allocations: HashMap<u64, Allocation>,
+    pub running: Vec<RunningGroup>,
+    pub allocator: Allocator,
+    pub completed: usize,
+    /// current simulated time; advances only via [`SimState::advance_to`]
+    pub now: f64,
+}
+
+impl SimState {
+    pub fn new(cfg: &ExperimentConfig, jobs: &[JobSpec]) -> SimState {
+        let states = jobs
+            .iter()
+            .map(|j| {
+                (
+                    j.id,
+                    JobState {
+                        spec: j.clone(),
+                        steps_done: 0.0,
+                        iso_step_time: 0.0,
+                        admitted_at: None,
+                        completed_at: None,
+                        grouped_time: 0.0,
+                        running_time: 0.0,
+                    },
+                )
+            })
+            .collect();
+        SimState {
+            states,
+            queue: vec![],
+            allocations: HashMap::new(),
+            running: vec![],
+            allocator: Allocator::new(cfg.cluster.clone()),
+            completed: 0,
+            now: 0.0,
+        }
+    }
+
+    /// Advance simulated time to `t`: accrue progress for every running
+    /// group at the step rate in effect over `[now, t)`, then step each
+    /// group's AIMD controller by the elapsed simulated steps (capped,
+    /// as the horizon loop capped per-horizon observations) and refresh
+    /// its step rate for the *next* interval.
+    pub fn advance_to(&mut self, t: f64) {
+        let dt = t - self.now;
+        if dt > 0.0 {
+            for g in &mut self.running {
+                let step = g.step_time;
+                let grouped = g.job_ids.len() > 1;
+                for id in &g.job_ids {
+                    let st = self.states.get_mut(id).unwrap();
+                    if st.completed_at.is_some() {
+                        continue;
+                    }
+                    st.steps_done += dt / step;
+                    st.running_time += dt;
+                    if grouped {
+                        st.grouped_time += dt;
+                    }
+                }
+                if let Some(c) = &mut g.aimd {
+                    let steps = (dt / step)
+                        .max(1.0)
+                        .min(AIMD_OBS_PER_ADVANCE)
+                        as usize;
+                    for _ in 0..steps {
+                        let t_step = iter_time(
+                            g.comp_s, g.comm_s, c.n(), g.oh, g.lat,
+                        );
+                        c.observe(t_step);
+                    }
+                    g.step_time = iter_time(
+                        g.comp_s, g.comm_s, c.n(), g.oh, g.lat,
+                    );
+                }
+            }
+        }
+        self.now = t;
+    }
+
+    /// Mark `id` complete at exactly `t` (the event's timestamp, which
+    /// was computed from the group's step rate — no interpolation).
+    /// Returns whether the job was newly completed.
+    pub fn complete(&mut self, id: u64, t: f64) -> bool {
+        let st = self.states.get_mut(&id).unwrap();
+        if st.completed_at.is_some() {
+            return false;
+        }
+        st.completed_at = Some(t);
+        st.steps_done = st.steps_done.max(st.spec.total_steps as f64);
+        self.completed += 1;
+        true
+    }
+
+    /// Release completed jobs' GPUs and drop empty groups.
+    pub fn release_completed(&mut self) {
+        let states = &self.states;
+        let mut freed = vec![];
+        for g in &mut self.running {
+            g.job_ids.retain(|id| {
+                let done = states[id].completed_at.is_some();
+                if done {
+                    freed.push(*id);
+                }
+                !done
+            });
+        }
+        self.running.retain(|g| !g.job_ids.is_empty());
+        for id in freed {
+            if let Some(a) = self.allocations.remove(&id) {
+                self.allocator.release(&a);
+            }
+        }
+    }
+
+    /// Dissolve shared placements: group members without owned GPUs
+    /// return to the queue and are re-admitted this round (possibly
+    /// onto their own allocation now — the elastic "reclaim resources
+    /// later" of §3.4). Progress and admission timestamps persist in
+    /// `states`.
+    pub fn requeue_shared(&mut self) {
+        for g in &self.running {
+            for id in &g.job_ids {
+                if !self.allocations.contains_key(id)
+                    && self.states[id].completed_at.is_none()
+                {
+                    self.queue.push(*id);
+                }
+            }
+        }
+    }
+
+    /// Allocate GPUs to queued jobs (FIFO; id breaks submit-time ties
+    /// so the order never depends on map order). Returns jobs admitted
+    /// for the first time (for observers).
+    pub fn admit_queued(
+        &mut self,
+        max_concurrent: usize,
+        predictor: &mut Predictor,
+        t: f64,
+    ) -> Vec<u64> {
+        let states = &self.states;
+        self.queue.sort_by(|a, b| {
+            f64_cmp(
+                states[a].spec.submit_time,
+                states[b].spec.submit_time,
+            )
+            .then(a.cmp(b))
+        });
+        // owned, uncompleted jobs (shared members are re-queued above
+        // and counted as they are re-admitted)
+        let running_count: usize = self
+            .allocations
+            .iter()
+            .filter(|(id, _)| states[id].completed_at.is_none())
+            .count();
+        let drained: Vec<u64> = self.queue.drain(..).collect();
+        let mut still = vec![];
+        let mut newly = vec![];
+        let mut admitted_now = 0usize;
+        for id in drained {
+            let spec = self.states[&id].spec.clone();
+            let cap_ok = running_count + admitted_now < max_concurrent;
+            if cap_ok {
+                if let Some(a) = self.allocator.allocate(spec.gpus) {
+                    let iso = predictor
+                        .isolated_step_time(&spec, &a)
+                        .unwrap_or(f64::INFINITY);
+                    let st = self.states.get_mut(&id).unwrap();
+                    let first = st.admitted_at.is_none();
+                    st.admitted_at = Some(t);
+                    st.iso_step_time = iso;
+                    self.allocations.insert(id, a);
+                    admitted_now += 1;
+                    if first {
+                        newly.push(id);
+                    }
+                    continue;
+                }
+            }
+            still.push(id);
+        }
+        self.queue = still;
+        newly
+    }
+
+    /// Build the scheduler's candidate list from all admitted,
+    /// unfinished jobs. Walks allocations in job-id order: HashMap
+    /// iteration order is nondeterministic per instance, and the
+    /// candidate order feeds the scheduler's tie-breaking —
+    /// bit-identical reruns require a canonical order here.
+    pub fn build_candidates(
+        &self,
+        predictor: &mut Predictor,
+        t: f64,
+    ) -> Vec<Candidate> {
+        let mut candidates = vec![];
+        let mut alloc_ids: Vec<u64> =
+            self.allocations.keys().copied().collect();
+        alloc_ids.sort_unstable();
+        for id in alloc_ids {
+            let a = &self.allocations[&id];
+            let st = &self.states[&id];
+            if st.completed_at.is_some() {
+                continue;
+            }
+            // current slowdown estimate from the group it last ran in
+            let cur_slow = self
+                .running
+                .iter()
+                .find(|g| g.job_ids.contains(&id))
+                .map(|g| g.step_time / st.iso_step_time.max(1e-12))
+                .unwrap_or(1.0);
+            let wait_frac = if t > st.spec.submit_time {
+                (t - st.admitted_at.unwrap_or(t))
+                    .max(0.0)
+                    .min(t - st.spec.submit_time)
+                    / (t - st.spec.submit_time)
+            } else {
+                0.0
+            };
+            let residual =
+                predictor.residual(&st.spec, a).unwrap_or(0.5);
+            candidates.push(Candidate {
+                job: st.spec.clone(),
+                alloc: a.clone(),
+                urgency: urgency(
+                    cur_slow,
+                    st.spec.max_slowdown,
+                    wait_frac,
+                ),
+                residual,
+            });
+        }
+        candidates
+    }
+
+    /// Elastic shared admission (the Shared Super-Model's headline
+    /// mechanism, §3.4): jobs still queued because no GPUs are free may
+    /// be absorbed into an existing group, sharing its GPUs. *Which*
+    /// group absorbs is the policy's call
+    /// ([`PolicyHooks::elastic_admit`]); committing the absorption —
+    /// perf refresh, iso baseline, admission timestamp — is mechanism
+    /// and happens here. Returns jobs admitted for the first time.
+    #[allow(clippy::too_many_arguments)]
+    pub fn absorb_queued(
+        &mut self,
+        groups: &mut Vec<(GroupState, GroupPerf)>,
+        hooks: &dyn PolicyHooks,
+        predictor: &mut Predictor,
+        sched: &SchedulerConfig,
+        max_concurrent: usize,
+        t: f64,
+    ) -> Vec<u64> {
+        let drained: Vec<u64> = self.queue.drain(..).collect();
+        let mut still = vec![];
+        let mut newly = vec![];
+        let mut shared_now = 0usize;
+        for id in drained {
+            let n_running: usize =
+                groups.iter().map(|(g, _)| g.jobs.len()).sum();
+            if n_running + shared_now >= max_concurrent {
+                still.push(id);
+                continue;
+            }
+            let spec = self.states[&id].spec.clone();
+            match hooks.elastic_admit(
+                &spec,
+                groups.as_slice(),
+                predictor,
+                sched,
+            ) {
+                Some(gi) => {
+                    let (g, _) = &mut groups[gi];
+                    g.jobs.push(spec.clone());
+                    let alloc = g.alloc.clone();
+                    // hooks are not required to have probed
+                    // feasibility; an infeasible choice leaves the job
+                    // queued instead of crashing the run
+                    let Some(perf2) =
+                        predictor.group_perf(&g.jobs, &alloc)
+                    else {
+                        g.jobs.pop();
+                        still.push(id);
+                        continue;
+                    };
+                    let iso = {
+                        // the job's nominal share of the gang: its
+                        // first `gpus` devices (same baseline the
+                        // predictor's slowdown accounting uses)
+                        let sub = Allocation {
+                            gpus: alloc
+                                .gpus
+                                .iter()
+                                .take(spec.gpus.max(1))
+                                .cloned()
+                                .collect(),
+                        };
+                        predictor
+                            .isolated_step_time(&spec, &sub)
+                            .unwrap_or(f64::INFINITY)
+                    };
+                    let st = self.states.get_mut(&id).unwrap();
+                    // set exactly once: re-absorptions on later rounds
+                    // must not churn the admission record
+                    if st.admitted_at.is_none() {
+                        st.admitted_at = Some(t);
+                        st.iso_step_time = iso;
+                        newly.push(id);
+                    }
+                    groups[gi].1 = perf2;
+                    shared_now += 1;
+                }
+                None => still.push(id),
+            }
+        }
+        self.queue = still;
+        newly
+    }
+
+    /// Replace the running set with this round's groups, carrying AIMD
+    /// controllers across rounds keyed by group membership. Step rates
+    /// come from the carried controller's current nano count (fused
+    /// policies) or the plain plan (unfused).
+    pub fn install_groups(
+        &mut self,
+        groups: Vec<(GroupState, GroupPerf)>,
+        aimd_enabled: bool,
+        cfg: &ExperimentConfig,
+    ) {
+        let mut prev_aimd: HashMap<Vec<u64>, AimdController> = self
+            .running
+            .drain(..)
+            .filter_map(|g| {
+                let mut ids = g.job_ids.clone();
+                ids.sort_unstable();
+                g.aimd.map(|c| (ids, c))
+            })
+            .collect();
+        for (g, perf) in groups {
+            let mut ids: Vec<u64> =
+                g.jobs.iter().map(|j| j.id).collect();
+            ids.sort_unstable();
+            let aimd = if aimd_enabled {
+                Some(prev_aimd.remove(&ids).unwrap_or_else(|| {
+                    AimdController::new(cfg.aimd.clone())
+                }))
+            } else {
+                None
+            };
+            let gpu = &cfg.cluster.gpu;
+            let oh = gpu.launch_overhead_s * 4.0;
+            let lat = if g.alloc.spans_nodes() {
+                cfg.cluster.ib_latency_s
+            } else {
+                1e-6
+            };
+            let step_time = match &aimd {
+                Some(c) => iter_time(
+                    perf.plan.comp_s,
+                    perf.plan.comm_s,
+                    c.n(),
+                    oh,
+                    lat,
+                ),
+                None => perf.step_time_s,
+            };
+            self.running.push(RunningGroup {
+                job_ids: ids,
+                alloc: g.alloc,
+                step_time,
+                compute_util: perf.compute_util,
+                comp_s: perf.plan.comp_s,
+                comm_s: perf.plan.comm_s,
+                oh,
+                lat,
+                aimd,
+            });
+        }
+    }
+
+    /// All job states sorted by id — the canonical order for final
+    /// accumulations (f64 addition is not associative-in-bits, so
+    /// summing in HashMap order would break bit-determinism).
+    pub fn sorted_states(&self) -> Vec<&JobState> {
+        let mut ids: Vec<u64> = self.states.keys().copied().collect();
+        ids.sort_unstable();
+        ids.iter().map(|id| &self.states[id]).collect()
+    }
+}

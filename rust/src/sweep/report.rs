@@ -26,6 +26,10 @@ pub struct CellSummary {
     pub gpu_util: (f64, f64),
     pub makespan: (f64, f64),
     pub mean_slowdown: (f64, f64),
+    /// total jobs that never completed across the cell's replicas —
+    /// nonzero means the scenario silently truncated work and its
+    /// JCT/throughput numbers are not comparable
+    pub incomplete: usize,
 }
 
 /// Aggregate a run's points into per-scenario summaries, preserving the
@@ -66,6 +70,10 @@ pub fn aggregate(run: &SweepRun) -> Vec<CellSummary> {
                 gpu_util: col(&|p| p.result.avg_gpu_util),
                 makespan: col(&|p| p.result.makespan),
                 mean_slowdown: col(&|p| p.result.mean_slowdown),
+                incomplete: pts
+                    .iter()
+                    .map(|p| p.result.incomplete_jobs.len())
+                    .sum(),
             }
         })
         .collect()
@@ -84,7 +92,7 @@ pub fn sweep_table(title: &str, cells: &[CellSummary]) -> Table {
     let mut t = Table::new(
         title,
         &["scenario", "seeds", "thr (samples/s)", "mean JCT (s)",
-          "p99 JCT (s)", "GPU util", "slowdown"],
+          "p99 JCT (s)", "GPU util", "slowdown", "incomplete"],
     );
     for c in cells {
         t.row(&[
@@ -103,6 +111,13 @@ pub fn sweep_table(title: &str, cells: &[CellSummary]) -> Table {
                 }
             ),
             pm(c.mean_slowdown, 3),
+            // warning column: jobs cut off before completion make the
+            // cell's other metrics incomparable
+            if c.incomplete == 0 {
+                "-".into()
+            } else {
+                format!("{} UNFINISHED", c.incomplete)
+            },
         ]);
     }
     t
@@ -115,7 +130,8 @@ pub fn to_csv(run: &SweepRun) -> String {
         "sweep",
         &["index", "policy", "n_jobs", "gpus", "rate_scale", "month",
           "seed", "throughput", "mean_jct", "p99_jct", "gpu_util",
-          "makespan", "mean_slowdown", "horizons", "completed"],
+          "makespan", "mean_slowdown", "sched_rounds", "events",
+          "probes", "completed", "incomplete"],
     );
     for p in &run.points {
         t.row(&[
@@ -132,8 +148,11 @@ pub fn to_csv(run: &SweepRun) -> String {
             format!("{:.6}", p.result.avg_gpu_util),
             format!("{:.6}", p.result.makespan),
             format!("{:.6}", p.result.mean_slowdown),
-            p.result.horizons.to_string(),
+            p.result.sched_rounds.to_string(),
+            p.result.events.to_string(),
+            p.result.scheduler_probes.to_string(),
             p.result.jct.len().to_string(),
+            p.result.incomplete_jobs.len().to_string(),
         ]);
     }
     t.to_csv()
@@ -161,8 +180,11 @@ pub fn to_json(run: &SweepRun) -> Json {
                 .set("gpu_util", p.result.avg_gpu_util)
                 .set("makespan", p.result.makespan)
                 .set("mean_slowdown", p.result.mean_slowdown)
-                .set("horizons", p.result.horizons)
+                .set("sched_rounds", p.result.sched_rounds)
+                .set("events", p.result.events)
+                .set("scheduler_probes", p.result.scheduler_probes)
                 .set("completed", p.result.jct.len())
+                .set("incomplete", p.result.incomplete_jobs.len())
                 .set("wall_s", p.wall_s)
         })
         .collect();
@@ -181,12 +203,19 @@ pub fn to_json(run: &SweepRun) -> Json {
                 .set("gpu_util", ci(c.gpu_util))
                 .set("makespan", ci(c.makespan))
                 .set("mean_slowdown", ci(c.mean_slowdown))
+                .set("incomplete", c.incomplete)
         })
         .collect();
+    let total_probes: u64 = run
+        .points
+        .iter()
+        .map(|p| p.result.scheduler_probes)
+        .sum();
     Json::obj()
         .set("n_points", run.points.len())
         .set("n_threads", run.n_threads)
         .set("wall_s", run.wall_s)
+        .set("scheduler_probes", total_probes)
         .set("points", Json::Arr(points))
         .set("cells", Json::Arr(cells))
 }
@@ -218,6 +247,7 @@ mod tests {
         assert_eq!(cells[0].n_seeds, 2);
         assert!(cells[0].throughput.0 > 0.0);
         assert!(cells[0].throughput.1 >= 0.0);
+        assert_eq!(cells[0].incomplete, 0);
         // the pooled mean sits between the two replicas
         let a = run.points[0].result.avg_throughput;
         let b = run.points[1].result.avg_throughput;

@@ -24,7 +24,12 @@ fn small_grid() -> SweepGrid {
 /// (wall-clock diagnostics live outside SimResult and are exempt).
 fn assert_bit_identical(a: &SimResult, b: &SimResult, label: &str) {
     assert_eq!(a.jct, b.jct, "{label}: jct");
-    assert_eq!(a.horizons, b.horizons, "{label}: horizons");
+    assert_eq!(a.sched_rounds, b.sched_rounds, "{label}: rounds");
+    assert_eq!(a.events, b.events, "{label}: events");
+    assert_eq!(
+        a.incomplete_jobs, b.incomplete_jobs,
+        "{label}: incomplete"
+    );
     assert_eq!(
         a.scheduler_probes, b.scheduler_probes,
         "{label}: probes"
@@ -40,6 +45,11 @@ fn assert_bit_identical(a: &SimResult, b: &SimResult, label: &str) {
         b.avg_throughput
     );
     assert!(a.avg_gpu_util == b.avg_gpu_util, "{label}: util");
+    assert!(
+        a.avg_throughput_full == b.avg_throughput_full
+            && a.avg_gpu_util_full == b.avg_gpu_util_full,
+        "{label}: full-run averages"
+    );
     assert!(a.makespan == b.makespan, "{label}: makespan");
     assert!(a.mean_slowdown == b.mean_slowdown, "{label}: slowdown");
     assert_eq!(

@@ -20,7 +20,7 @@ use tlora::config::{ExperimentConfig, Policy, SchedulerConfig};
 use tlora::planner::PlanOptions;
 use tlora::scheduler::predictor::Predictor;
 use tlora::scheduler::{schedule, Candidate};
-use tlora::sim::simulate;
+use tlora::sim::{simulate, simulate_jobs};
 use tlora::util::prop::{gen_pair, gen_usize, prop_check};
 use tlora::util::rng::Rng;
 use tlora::workload::trace::{TraceGenerator, TraceProfile};
@@ -128,6 +128,44 @@ fn prop_grouping_respects_solo_baseline_slowdown_bound() {
             }
         }
         true
+    });
+}
+
+#[test]
+fn prop_jobs_are_conserved_even_with_unsatisfiable_requests() {
+    // 4. conservation — every submitted job ends the run in exactly one
+    //    of `jct` or `incomplete_jobs`, even when the workload contains
+    //    a request the cluster can never place (the old horizon loop
+    //    silently dropped those); and the engine terminates promptly
+    //    instead of spinning to its t_max valve
+    prop_check(8, &gen_usize(0, 10_000), |&seed| {
+        let mut cfg = ExperimentConfig::default();
+        cfg.policy = Policy::TLora;
+        cfg.n_jobs = 8 + seed % 6;
+        cfg.cluster = ClusterSpec::with_gpus(16);
+        cfg.seed = seed as u64;
+        let mut jobs =
+            TraceGenerator::new(cfg.trace.clone(), cfg.seed)
+                .generate(cfg.n_jobs);
+        let mut big = jobs[0].clone();
+        big.id = 10_000;
+        big.gpus = 999; // can never own an allocation
+        jobs.push(big);
+        let n = jobs.len();
+        let r = simulate_jobs(&cfg, jobs);
+        let mut seen: Vec<u64> = r
+            .jct
+            .iter()
+            .map(|&(id, _)| id)
+            .chain(r.incomplete_jobs.iter().copied())
+            .collect();
+        seen.sort_unstable();
+        let distinct = {
+            let mut d = seen.clone();
+            d.dedup();
+            d.len()
+        };
+        seen.len() == n && distinct == n && r.makespan < 1e6
     });
 }
 
