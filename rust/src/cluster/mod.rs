@@ -152,12 +152,17 @@ impl ClusterSpec {
 
 /// Gang allocator with node-packing preference: allocations avoid
 /// spanning nodes when a single node can hold them (keeps groups in the
-/// cheap bandwidth tier).
+/// cheap bandwidth tier). Tracks node health: down nodes keep their
+/// free-list bookkeeping (releases still land there) but are excluded
+/// from every allocation path until [`Allocator::set_down`] marks them
+/// up again.
 #[derive(Debug, Clone)]
 pub struct Allocator {
     spec: ClusterSpec,
     /// free[node] = list of free local indices
     free: Vec<Vec<usize>>,
+    /// down[node] = node is failed; its GPUs are unallocatable
+    down: Vec<bool>,
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -196,31 +201,57 @@ impl Allocator {
         let free = (0..spec.n_nodes)
             .map(|_| (0..spec.gpus_per_node).rev().collect())
             .collect();
-        Allocator { spec, free }
+        let down = vec![false; spec.n_nodes];
+        Allocator { spec, free, down }
     }
 
     pub fn spec(&self) -> &ClusterSpec {
         &self.spec
     }
 
+    /// All free GPUs, including those stranded on down nodes.
     pub fn free_gpus(&self) -> usize {
         self.free.iter().map(|f| f.len()).sum()
+    }
+
+    /// Free GPUs on healthy nodes — what [`Allocator::allocate`] can
+    /// actually hand out.
+    pub fn available_gpus(&self) -> usize {
+        self.free
+            .iter()
+            .enumerate()
+            .filter(|(node, _)| !self.down[*node])
+            .map(|(_, f)| f.len())
+            .sum()
+    }
+
+    /// Mark a node failed (`down = true`) or recovered. While down, the
+    /// node's GPUs are excluded from allocation; releases onto a down
+    /// node still return GPUs to its free list, so recovery restores
+    /// full capacity with no extra bookkeeping.
+    pub fn set_down(&mut self, node: usize, down: bool) {
+        self.down[node] = down;
+    }
+
+    pub fn is_down(&self, node: usize) -> bool {
+        self.down[node]
     }
 
     pub fn total_gpus(&self) -> usize {
         self.spec.total_gpus()
     }
 
-    /// Allocate `n` GPUs, preferring (1) the single node with the
-    /// tightest fit, then (2) spilling across the emptiest nodes.
+    /// Allocate `n` GPUs from healthy nodes, preferring (1) the single
+    /// node with the tightest fit, then (2) spilling across the
+    /// emptiest nodes.
     pub fn allocate(&mut self, n: usize) -> Option<Allocation> {
-        if n == 0 || self.free_gpus() < n {
+        if n == 0 || self.available_gpus() < n {
             return None;
         }
         // best-fit single node
         let mut best: Option<(usize, usize)> = None; // (node, slack)
         for (node, f) in self.free.iter().enumerate() {
-            if f.len() >= n {
+            if !self.down[node] && f.len() >= n {
                 let slack = f.len() - n;
                 if best.map_or(true, |(_, s)| slack < s) {
                     best = Some((node, slack));
@@ -235,8 +266,11 @@ impl Allocator {
             }
             return Some(Allocation { gpus });
         }
-        // spill: fill from nodes with the most free capacity first
-        let mut order: Vec<usize> = (0..self.free.len()).collect();
+        // spill: fill from healthy nodes with the most free capacity
+        // first
+        let mut order: Vec<usize> = (0..self.free.len())
+            .filter(|&i| !self.down[i])
+            .collect();
         order.sort_by_key(|&i| std::cmp::Reverse(self.free[i].len()));
         let mut need = n;
         for node in order {
@@ -269,14 +303,18 @@ impl Allocator {
     }
 
     /// Randomized allocation order (trace replay uses this to model
-    /// fragmented production clusters).
+    /// fragmented production clusters). Down nodes are excluded like in
+    /// [`Allocator::allocate`].
     pub fn allocate_random(&mut self, n: usize, rng: &mut Rng)
         -> Option<Allocation> {
-        if self.free_gpus() < n || n == 0 {
+        if self.available_gpus() < n || n == 0 {
             return None;
         }
         let mut candidates: Vec<GpuId> = vec![];
         for (node, f) in self.free.iter().enumerate() {
+            if self.down[node] {
+                continue;
+            }
             for &idx in f {
                 candidates.push(GpuId { node, idx });
             }
@@ -393,5 +431,61 @@ mod tests {
         let s = ClusterSpec::default_128();
         assert_eq!(s.total_gpus(), 128);
         assert_eq!(s.gpus_per_node, 8);
+    }
+
+    #[test]
+    fn down_node_excluded_from_allocation() {
+        let mut a = Allocator::new(spec4x4());
+        a.set_down(0, true);
+        assert!(a.is_down(0));
+        assert_eq!(a.free_gpus(), 16);
+        assert_eq!(a.available_gpus(), 12);
+        // single-node fits must land on healthy nodes only
+        for _ in 0..3 {
+            let alloc = a.allocate(4).unwrap();
+            assert!(!alloc.spans_nodes());
+            assert_ne!(alloc.gpus[0].node, 0);
+        }
+        // everything healthy is taken; the down node's GPUs stay out
+        assert!(a.allocate(1).is_none());
+        assert_eq!(a.free_gpus(), 4);
+        assert_eq!(a.available_gpus(), 0);
+    }
+
+    #[test]
+    fn spill_never_touches_down_nodes() {
+        let mut a = Allocator::new(spec4x4());
+        a.set_down(1, true);
+        // 6 > any single node: spills across the 3 healthy nodes
+        let alloc = a.allocate(6).unwrap();
+        assert!(alloc.spans_nodes());
+        assert!(alloc.gpus.iter().all(|g| g.node != 1));
+    }
+
+    #[test]
+    fn release_onto_down_node_then_recover_restores_capacity() {
+        let mut a = Allocator::new(spec4x4());
+        let x = a.allocate(4).unwrap();
+        let node = x.gpus[0].node;
+        a.set_down(node, true);
+        // eviction path: the holder's GPUs come back while the node is
+        // still down — stranded but accounted
+        a.release(&x);
+        assert_eq!(a.free_gpus(), 16);
+        assert_eq!(a.available_gpus(), 12);
+        a.set_down(node, false);
+        assert_eq!(a.available_gpus(), 16);
+        assert!(a.allocate(16).is_some());
+    }
+
+    #[test]
+    fn allocate_random_skips_down_nodes() {
+        let mut a = Allocator::new(spec4x4());
+        a.set_down(2, true);
+        let mut rng = crate::util::rng::Rng::new(9);
+        let alloc = a.allocate_random(10, &mut rng).unwrap();
+        assert_eq!(alloc.n_gpus(), 10);
+        assert!(alloc.gpus.iter().all(|g| g.node != 2));
+        assert!(a.allocate_random(3, &mut rng).is_none());
     }
 }

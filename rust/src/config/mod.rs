@@ -152,6 +152,73 @@ impl Default for SchedulerConfig {
     }
 }
 
+/// Fault & SLO scenario knobs: node churn, exogenous preemptions, and
+/// the checkpoint-restore cost model charged on every eviction.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultConfig {
+    /// Per-node mean time between failures in seconds (exponential).
+    /// 0 disables node failures entirely.
+    pub mtbf_s: f64,
+    /// Per-node mean time to recovery in seconds (exponential). Must
+    /// be > 0 whenever `mtbf_s` > 0.
+    pub mttr_s: f64,
+    /// Cluster-level preemption rate (events/second, Poisson). 0
+    /// disables preemptions.
+    pub preempt_rate: f64,
+    /// Fixed restart overhead per evicted job (reschedule, process
+    /// spin-up, backbone re-init from the recorded seed — the part of
+    /// `runtime::Checkpoint::restore` that is size-independent).
+    pub restore_overhead_s: f64,
+    /// Bandwidth at which the adapter-only checkpoint (LoRA params +
+    /// Adam moments, `model::cost`/`LoraSpec::train_state_bytes`) is
+    /// read back, bytes/second.
+    pub ckpt_read_bw: f64,
+    /// SLO deadline factor: a job meets its deadline when
+    /// `jct <= slo_factor * max_slowdown * total_steps *
+    /// iso_step_time` (queueing + churn allowance on top of its
+    /// slowdown-adjusted ideal runtime).
+    pub slo_factor: f64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            mtbf_s: 0.0,
+            mttr_s: 600.0,
+            preempt_rate: 0.0,
+            restore_overhead_s: 30.0,
+            ckpt_read_bw: 1.0e9,
+            slo_factor: 3.0,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// Is any fault source active?
+    pub fn enabled(&self) -> bool {
+        self.mtbf_s > 0.0 || self.preempt_rate > 0.0
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.mtbf_s < 0.0 || self.preempt_rate < 0.0 {
+            return Err("faults: mtbf_s/preempt_rate must be >= 0".into());
+        }
+        if self.mtbf_s > 0.0 && self.mttr_s <= 0.0 {
+            return Err("faults: mttr_s must be > 0 with failures on".into());
+        }
+        if self.restore_overhead_s < 0.0 {
+            return Err("faults: restore_overhead_s must be >= 0".into());
+        }
+        if self.ckpt_read_bw <= 0.0 {
+            return Err("faults: ckpt_read_bw must be > 0".into());
+        }
+        if self.slo_factor <= 0.0 {
+            return Err("faults: slo_factor must be > 0".into());
+        }
+        Ok(())
+    }
+}
+
 /// Full experiment configuration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ExperimentConfig {
@@ -162,6 +229,7 @@ pub struct ExperimentConfig {
     pub seed: u64,
     pub scheduler: SchedulerConfig,
     pub aimd: AimdConfig,
+    pub faults: FaultConfig,
     /// global concurrency cap (§A.1: 128 runnable jobs)
     pub max_concurrent_jobs: usize,
 }
@@ -176,6 +244,7 @@ impl Default for ExperimentConfig {
             seed: 42,
             scheduler: SchedulerConfig::default(),
             aimd: AimdConfig::default(),
+            faults: FaultConfig::default(),
             max_concurrent_jobs: 128,
         }
     }
@@ -204,6 +273,7 @@ impl ExperimentConfig {
         if self.trace.rate <= 0.0 {
             return Err("trace rate must be positive".into());
         }
+        self.faults.validate()?;
         Ok(())
     }
 
@@ -228,6 +298,19 @@ impl ExperimentConfig {
             .set("aimd_n0", self.aimd.n0)
             .set("aimd_n_max", self.aimd.n_max)
             .set("max_concurrent_jobs", self.max_concurrent_jobs)
+            .set(
+                "faults",
+                Json::obj()
+                    .set("mtbf_s", self.faults.mtbf_s)
+                    .set("mttr_s", self.faults.mttr_s)
+                    .set("preempt_rate", self.faults.preempt_rate)
+                    .set(
+                        "restore_overhead_s",
+                        self.faults.restore_overhead_s,
+                    )
+                    .set("ckpt_read_bw", self.faults.ckpt_read_bw)
+                    .set("slo_factor", self.faults.slo_factor),
+            )
     }
 
     /// Apply JSON overrides onto `self` (missing keys keep defaults).
@@ -283,6 +366,33 @@ impl ExperimentConfig {
             j.get("max_concurrent_jobs").and_then(Json::as_usize)
         {
             self.max_concurrent_jobs = m;
+        }
+        if let Some(f) = j.get("faults") {
+            if let Some(v) = f.get("mtbf_s").and_then(Json::as_f64) {
+                self.faults.mtbf_s = v;
+            }
+            if let Some(v) = f.get("mttr_s").and_then(Json::as_f64) {
+                self.faults.mttr_s = v;
+            }
+            if let Some(v) =
+                f.get("preempt_rate").and_then(Json::as_f64)
+            {
+                self.faults.preempt_rate = v;
+            }
+            if let Some(v) =
+                f.get("restore_overhead_s").and_then(Json::as_f64)
+            {
+                self.faults.restore_overhead_s = v;
+            }
+            if let Some(v) =
+                f.get("ckpt_read_bw").and_then(Json::as_f64)
+            {
+                self.faults.ckpt_read_bw = v;
+            }
+            if let Some(v) = f.get("slo_factor").and_then(Json::as_f64)
+            {
+                self.faults.slo_factor = v;
+            }
         }
         self.validate()
     }
@@ -390,5 +500,50 @@ mod tests {
         let j = c.to_json();
         let j2 = json::parse(&j.to_string()).unwrap();
         assert_eq!(j2.get("aimd_alpha").unwrap().as_usize().unwrap(), 4);
+    }
+
+    #[test]
+    fn faults_default_disabled_and_valid() {
+        let f = FaultConfig::default();
+        assert!(!f.enabled());
+        assert!(f.validate().is_ok());
+        let mut c = ExperimentConfig::default();
+        c.faults.mtbf_s = 3600.0;
+        assert!(c.faults.enabled());
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn faults_section_roundtrips_through_json() {
+        let mut c = ExperimentConfig::default();
+        c.faults.mtbf_s = 1800.0;
+        c.faults.mttr_s = 120.0;
+        c.faults.preempt_rate = 0.001;
+        c.faults.slo_factor = 2.5;
+        let j = json::parse(&c.to_json().to_string()).unwrap();
+        let back = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(back.faults, c.faults);
+        // partial override: only mtbf_s set, rest keep defaults
+        let j = json::parse(r#"{"faults": {"mtbf_s": 900.0}}"#).unwrap();
+        let c2 = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(c2.faults.mtbf_s, 900.0);
+        assert_eq!(c2.faults.mttr_s, FaultConfig::default().mttr_s);
+    }
+
+    #[test]
+    fn invalid_fault_configs_rejected() {
+        let mut c = ExperimentConfig::default();
+        c.faults.mtbf_s = -1.0;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.faults.mtbf_s = 100.0;
+        c.faults.mttr_s = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.faults.ckpt_read_bw = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.faults.slo_factor = 0.0;
+        assert!(c.validate().is_err());
     }
 }

@@ -25,7 +25,7 @@
 //! | [`config`] | typed configuration + JSON I/O |
 //! | [`cluster`] | GPU/node/cluster topology model + gang allocator |
 //! | [`model`] | transformer + LoRA cost model (FLOPs/bytes/memory) |
-//! | [`workload`] | job specs, ACMETrace-like trace generation |
+//! | [`workload`] | job specs, ACMETrace-like trace generation, fault/churn synthesis |
 //! | [`ssm`] | Shared Super-Model graph + Model Fuser (§3.2) |
 //! | [`planner`] | pipeline/TP parallelism planner over SSM (§3.2) |
 //! | [`kernelsim`] | fused-kernel + nano-batch AIMD overlap model (§3.3) |

@@ -3,10 +3,12 @@
 //! ```text
 //! tlora simulate  [--policy tlora|mlora|megatron|...] [--n-jobs N]
 //!                 [--n-gpus N] [--seed S] [--month 1|2|3] [--rate-scale F]
+//!                 [--mtbf S] [--mttr S] [--preempt-rate R]
 //! tlora compare   [--n-jobs N] [--n-gpus N] [--seed S]     # all policies
 //! tlora sweep     [--policies a,b|all] [--n-jobs N,..] [--gpus N,..]
-//!                 [--rate-scales F,..] [--months M,..] [--seeds S,..]
-//!                 [--threads T] [--out-json f] [--out-csv f]
+//!                 [--rate-scales F,..] [--months M,..] [--mtbfs S,..]
+//!                 [--seeds S,..] [--threads T] [--out-json f]
+//!                 [--out-csv f] [--canonical]
 //! tlora train     [--variant tiny|small|...] [--steps N] [--seed S]
 //! tlora microbench [--steps N]
 //! tlora trace-gen [--n-jobs N] [--month M] [--seed S] [--out file.csv]
@@ -62,9 +64,13 @@ USAGE: tlora <subcommand> [flags]
 
 Common flags: --n-jobs N --n-gpus N --seed S --month 1|2|3
               --rate-scale F --policy NAME --artifacts DIR
+Fault flags:  --mtbf SECONDS (0 = off) --mttr SECONDS
+              --preempt-rate EVENTS/S  (simulate/compare)
 Sweep flags:  --policies a,b|all --n-jobs N,.. --gpus N,..
-              --rate-scales F,.. --months M,.. --seeds S,..
-              --threads T --out-json FILE --out-csv FILE
+              --rate-scales F,.. --months M,.. --mtbfs S,..
+              --seeds S,.. --threads T --out-json FILE --out-csv FILE
+              --canonical (strip wall-clock/thread fields from JSON so
+              runs diff bit-exactly; used by the golden-trace fixture)
 ";
 
 fn build_config(args: &Args) -> Result<ExperimentConfig, String> {
@@ -84,6 +90,10 @@ fn build_config(args: &Args) -> Result<ExperimentConfig, String> {
     };
     let scale = args.get_f64("rate-scale", 1.0)?;
     cfg.trace = cfg.trace.scaled(scale);
+    cfg.faults.mtbf_s = args.get_f64("mtbf", cfg.faults.mtbf_s)?;
+    cfg.faults.mttr_s = args.get_f64("mttr", cfg.faults.mttr_s)?;
+    cfg.faults.preempt_rate =
+        args.get_f64("preempt-rate", cfg.faults.preempt_rate)?;
     if let Some(path) = args.get("config") {
         let j = tlora::util::json::parse_file(std::path::Path::new(path))?;
         cfg.apply_json(&j)?;
@@ -146,8 +156,29 @@ fn cmd_simulate(args: &Args) -> i32 {
     ]);
     t.row(&["makespan (s)".into(), format!("{:.0}", r.makespan)]);
     t.row(&["mean slowdown".into(), format!("{:.3}", r.mean_slowdown)]);
+    t.row(&[
+        "goodput (samples/s)".into(),
+        format!("{:.2}", r.goodput),
+    ]);
+    t.row(&[
+        "SLO attainment".into(),
+        format!("{:.1}%", r.slo_attainment * 100.0),
+    ]);
     t.row(&["scheduling rounds".into(), r.sched_rounds.to_string()]);
     t.row(&["events processed".into(), r.events.to_string()]);
+    if cfg.faults.enabled() || r.restarts > 0 {
+        t.row(&["node failures".into(), r.node_failures.to_string()]);
+        t.row(&["preemptions".into(), r.preemptions.to_string()]);
+        t.row(&["restarts".into(), r.restarts.to_string()]);
+        t.row(&[
+            "lost step-time (s)".into(),
+            format!("{:.1}", r.lost_step_time_s),
+        ]);
+        t.row(&[
+            "restore delay (s)".into(),
+            format!("{:.1}", r.restore_delay_s),
+        ]);
+    }
     if !r.incomplete_jobs.is_empty() {
         t.row(&[
             "INCOMPLETE jobs".into(),
@@ -267,6 +298,11 @@ fn cmd_sweep(args: &Args) -> i32 {
         )?;
         grid.rate_scales = parse_list(args, "rate-scales", vec![1.0])?;
         grid.months = parse_list(args, "months", vec![1])?;
+        grid.mtbfs = parse_list(
+            args,
+            "mtbfs",
+            vec![grid.base.faults.mtbf_s],
+        )?;
         grid.seeds = parse_list(args, "seeds", vec![grid.base.seed])?;
         grid.validate()?;
         Ok(grid)
@@ -313,7 +349,14 @@ fn cmd_sweep(args: &Args) -> i32 {
     )
     .print();
     if let Some(path) = args.get("out-json") {
-        let text = tlora::sweep::to_json(&run).to_pretty();
+        // --canonical: strip wall-clock + thread-count fields so the
+        // file is bit-identical across runs and thread counts (golden
+        // fixtures, CI determinism diffs)
+        let text = if args.has("canonical") {
+            tlora::sweep::to_json_canonical(&run).to_pretty()
+        } else {
+            tlora::sweep::to_json(&run).to_pretty()
+        };
         match std::fs::write(path, text) {
             Ok(()) => println!("JSON report -> {path}"),
             Err(e) => {

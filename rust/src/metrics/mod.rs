@@ -68,15 +68,41 @@ impl Table {
         print!("{}", self.render());
     }
 
+    /// RFC 4180 CSV: fields containing a comma, double quote, or
+    /// newline are quoted (inner quotes doubled). Plain numeric /
+    /// identifier fields emit unchanged, so existing consumers see the
+    /// same bytes — only fields that would have corrupted the row
+    /// (e.g. warning text with commas) change representation.
     pub fn to_csv(&self) -> String {
-        let mut out = self.headers.join(",");
+        let mut out = csv_row(&self.headers);
         out.push('\n');
         for r in &self.rows {
-            out.push_str(&r.join(","));
+            out.push_str(&csv_row(r));
             out.push('\n');
         }
         out
     }
+}
+
+fn csv_field(f: &str) -> String {
+    if f.contains(',') || f.contains('"') || f.contains('\n')
+        || f.contains('\r')
+    {
+        format!("\"{}\"", f.replace('"', "\"\""))
+    } else {
+        f.to_string()
+    }
+}
+
+fn csv_row(cells: &[String]) -> String {
+    let mut out = String::new();
+    for (i, c) in cells.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&csv_field(c));
+    }
+    out
 }
 
 /// Paper-vs-measured comparison row: the benches print these so
@@ -145,6 +171,41 @@ mod tests {
         let mut t = Table::new("x", &["a", "b"]);
         t.row(&["1".into(), "2".into()]);
         assert_eq!(t.to_csv(), "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn csv_quotes_fields_with_commas_quotes_newlines() {
+        let mut t = Table::new("x", &["a", "b", "c"]);
+        t.row(&[
+            "plain".into(),
+            "has,comma".into(),
+            "says \"hi\"".into(),
+        ]);
+        t.row(&["line\nbreak".into(), "3".into(), "4".into()]);
+        let csv = t.to_csv();
+        let mut lines = csv.split('\n');
+        assert_eq!(lines.next().unwrap(), "a,b,c");
+        assert_eq!(
+            lines.next().unwrap(),
+            "plain,\"has,comma\",\"says \"\"hi\"\"\""
+        );
+        // the embedded newline stays inside its quoted field
+        assert_eq!(lines.next().unwrap(), "\"line");
+        assert_eq!(lines.next().unwrap(), "break\",3,4");
+    }
+
+    #[test]
+    fn csv_unquoted_fields_byte_stable() {
+        // the warning-column style values the sweep report emits must
+        // not change representation unless they actually need quoting
+        let mut t = Table::new("x", &["w"]);
+        t.row(&["3 UNFINISHED".into()]);
+        t.row(&["-".into()]);
+        t.row(&["tlora/j8/g16/r2x/m1/f0".into()]);
+        assert_eq!(
+            t.to_csv(),
+            "w\n3 UNFINISHED\n-\ntlora/j8/g16/r2x/m1/f0\n"
+        );
     }
 
     #[test]

@@ -97,6 +97,27 @@ pub fn cost_of(arch: &ModelArch, lora: &LoraSpec, batch: usize, seq: usize)
     }
 }
 
+/// Adapter-only checkpoint size in bytes: LoRA params + Adam moments,
+/// f32 — exactly what `runtime::Checkpoint` serializes (the frozen
+/// backbone is reproducible from the init seed and is never stored,
+/// which is why an 8B-backbone job checkpoints in tens of MB).
+pub fn checkpoint_bytes(arch: &ModelArch, lora: &LoraSpec) -> f64 {
+    lora.train_state_bytes(arch) as f64
+}
+
+/// Restore time charged when a job restarts after eviction: fixed
+/// overhead (reschedule + backbone re-init from the recorded seed)
+/// plus reading the adapter-only checkpoint at `read_bw` bytes/s. The
+/// simulator's failure rounds charge this per evicted job.
+pub fn restore_time_s(
+    arch: &ModelArch,
+    lora: &LoraSpec,
+    overhead_s: f64,
+    read_bw: f64,
+) -> f64 {
+    overhead_s + checkpoint_bytes(arch, lora) / read_bw
+}
+
 /// Memory model for placement feasibility (used by the planner and by
 /// mLoRA's memory-capacity grouping rule).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -205,6 +226,26 @@ mod tests {
         // backbone shared: grows by adapter+activation only
         assert!(two.total() > one.total());
         assert_eq!(two.weight_bytes, one.weight_bytes);
+    }
+
+    #[test]
+    fn restore_time_scales_with_rank_and_floors_at_overhead() {
+        let a = arch_by_name("llama3-8b").unwrap();
+        let t8 = restore_time_s(&a, &LoraSpec::new(8), 10.0, 1e9);
+        let t16 = restore_time_s(&a, &LoraSpec::new(16), 10.0, 1e9);
+        assert!(t16 > t8, "{t16} vs {t8}");
+        assert!(t8 > 10.0);
+        // adapter-only: the checkpoint is a small fraction of the
+        // backbone weights
+        assert!(
+            checkpoint_bytes(&a, &LoraSpec::new(16))
+                < 0.05 * a.weight_bytes() as f64
+        );
+        // exact size model: params * 4 bytes * (param + m + v)
+        assert_eq!(
+            checkpoint_bytes(&a, &LoraSpec::new(8)),
+            LoraSpec::new(8).params(&a) as f64 * 12.0
+        );
     }
 
     #[test]

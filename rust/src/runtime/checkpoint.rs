@@ -166,4 +166,82 @@ mod tests {
         assert!(Checkpoint::load(&path).is_err());
         std::fs::remove_file(&path).unwrap();
     }
+
+    /// A small valid checkpoint with non-trivial payloads, for the
+    /// corruption tests to mutate.
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            variant: "small".into(),
+            seed: -3,
+            steps_done: 7,
+            tensors: vec![
+                vec![0.5, -1.25, 3.0e-8, f32::MAX],
+                vec![42.0],
+            ],
+        }
+    }
+
+    fn write_sample(name: &str) -> (std::path::PathBuf, Vec<u8>) {
+        let dir = std::env::temp_dir().join("tlora_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(name);
+        sample().save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        (path, bytes)
+    }
+
+    #[test]
+    fn save_load_save_is_byte_identical() {
+        // save -> load -> save must reproduce the file bit-for-bit:
+        // the on-disk format is itself a determinism artifact
+        let (path, first) = write_sample("roundtrip_bytes.ckpt");
+        let loaded = Checkpoint::load(&path).unwrap();
+        assert_eq!(loaded.seed, -3);
+        assert_eq!(loaded.steps_done, 7);
+        assert_eq!(loaded.tensors, sample().tensors);
+        let path2 = path.with_file_name("roundtrip_bytes2.ckpt");
+        loaded.save(&path2).unwrap();
+        let second = std::fs::read(&path2).unwrap();
+        assert_eq!(first, second, "resave changed the bytes");
+        std::fs::remove_file(&path).unwrap();
+        std::fs::remove_file(&path2).unwrap();
+    }
+
+    #[test]
+    fn bad_magic_is_rejected_with_cause() {
+        let (path, bytes) = write_sample("corrupt_magic.ckpt");
+        // valid JSON header, wrong magic, payload intact
+        let nl = bytes.iter().position(|&b| b == b'\n').unwrap();
+        let mut forged =
+            b"{\"magic\":\"TLORA-CKPT-0\",\"lens\":[4,1],\
+              \"seed\":-3,\"steps_done\":7,\"variant\":\"small\"}"
+                .to_vec();
+        forged.extend_from_slice(&bytes[nl..]);
+        std::fs::write(&path, &forged).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err().to_string();
+        assert!(err.contains("bad magic"), "{err}");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn truncated_payload_is_rejected_with_cause() {
+        let (path, bytes) = write_sample("corrupt_trunc.ckpt");
+        // drop the final byte of the last tensor
+        std::fs::write(&path, &bytes[..bytes.len() - 1]).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn trailing_bytes_are_rejected_with_cause() {
+        let (path, mut bytes) = write_sample("corrupt_trail.ckpt");
+        // an extra word after the declared payload: a stale partial
+        // write or a lens/payload mismatch — never silently accepted
+        bytes.extend_from_slice(&[0u8; 4]);
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err().to_string();
+        assert!(err.contains("trailing bytes"), "{err}");
+        std::fs::remove_file(&path).unwrap();
+    }
 }

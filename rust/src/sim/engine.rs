@@ -23,17 +23,22 @@ use std::collections::HashMap;
 
 use super::events::{Event, EventKind, EventQueue};
 use super::observer::{
-    CompletionObserver, GroupingObserver, RoundStats, SimObserver,
-    SlowdownObserver, TimelineObserver,
+    CompletionObserver, EvictCause, FaultObserver, GroupingObserver,
+    RoundStats, SimObserver, SlowdownObserver, TimelineObserver,
 };
-use super::state::{JobState, SimState};
+use super::state::{Eviction, JobState, SimState};
 use super::SimResult;
 use crate::baselines::hooks_for;
 use crate::config::ExperimentConfig;
+use crate::model::arch::{arch_by_name, LoraSpec};
+use crate::model::cost::restore_time_s;
 use crate::planner::PlanOptions;
 use crate::scheduler::predictor::Predictor;
 use crate::scheduler::PolicyHooks;
 use crate::util::stats::Summary;
+use crate::workload::faults::{
+    FaultKind, NodeFaultModel, PreemptionModel, ScriptedFault,
+};
 use crate::workload::{classify, JobSpec};
 
 /// Engine knobs that are not experiment configuration.
@@ -53,6 +58,10 @@ pub struct EngineOptions {
     /// considered settled and stops forcing periodic reschedule points
     /// (the controller keeps adapting at arrival/completion rounds).
     pub aimd_settle_obs: u64,
+    /// Deterministic injected faults on top of (or instead of) the
+    /// seeded `config::FaultConfig` streams — pinned scenarios like
+    /// "kill node 0 at t=100" (`workload::faults::ScriptedFault`).
+    pub fault_script: Vec<ScriptedFault>,
 }
 
 impl Default for EngineOptions {
@@ -60,6 +69,7 @@ impl Default for EngineOptions {
         EngineOptions {
             legacy_tick: false,
             aimd_settle_obs: 256,
+            fault_script: vec![],
         }
     }
 }
@@ -71,6 +81,23 @@ struct ObserverSet {
     completion: CompletionObserver,
     grouping: GroupingObserver,
     slowdown: SlowdownObserver,
+    faults: FaultObserver,
+}
+
+/// Fan one observer callback out to every built-in plus the caller's
+/// extras. Adding a built-in observer means touching this macro once,
+/// not every forwarding method.
+macro_rules! fan_out {
+    ($set:ident, $extra:ident, $hook:ident($($arg:expr),*)) => {{
+        $set.timeline.$hook($($arg),*);
+        $set.completion.$hook($($arg),*);
+        $set.grouping.$hook($($arg),*);
+        $set.slowdown.$hook($($arg),*);
+        $set.faults.$hook($($arg),*);
+        for o in $extra.iter_mut() {
+            o.$hook($($arg),*);
+        }
+    }};
 }
 
 impl ObserverSet {
@@ -80,13 +107,7 @@ impl ObserverSet {
         job: &JobState,
         extra: &mut [&mut dyn SimObserver],
     ) {
-        self.timeline.on_admit(t, job);
-        self.completion.on_admit(t, job);
-        self.grouping.on_admit(t, job);
-        self.slowdown.on_admit(t, job);
-        for o in extra.iter_mut() {
-            o.on_admit(t, job);
-        }
+        fan_out!(self, extra, on_admit(t, job));
     }
 
     fn round(
@@ -94,13 +115,7 @@ impl ObserverSet {
         stats: &RoundStats,
         extra: &mut [&mut dyn SimObserver],
     ) {
-        self.timeline.on_round(stats);
-        self.completion.on_round(stats);
-        self.grouping.on_round(stats);
-        self.slowdown.on_round(stats);
-        for o in extra.iter_mut() {
-            o.on_round(stats);
-        }
+        fan_out!(self, extra, on_round(stats));
     }
 
     fn complete(
@@ -109,13 +124,40 @@ impl ObserverSet {
         job: &JobState,
         extra: &mut [&mut dyn SimObserver],
     ) {
-        self.timeline.on_complete(t, job);
-        self.completion.on_complete(t, job);
-        self.grouping.on_complete(t, job);
-        self.slowdown.on_complete(t, job);
-        for o in extra.iter_mut() {
-            o.on_complete(t, job);
-        }
+        fan_out!(self, extra, on_complete(t, job));
+    }
+
+    fn node_failure(
+        &mut self,
+        t: f64,
+        node: usize,
+        extra: &mut [&mut dyn SimObserver],
+    ) {
+        fan_out!(self, extra, on_node_failure(t, node));
+    }
+
+    fn node_recovery(
+        &mut self,
+        t: f64,
+        node: usize,
+        extra: &mut [&mut dyn SimObserver],
+    ) {
+        fan_out!(self, extra, on_node_recovery(t, node));
+    }
+
+    fn evict(
+        &mut self,
+        t: f64,
+        job: &JobState,
+        cause: EvictCause,
+        ev: &Eviction,
+        extra: &mut [&mut dyn SimObserver],
+    ) {
+        fan_out!(
+            self,
+            extra,
+            on_evict(t, job, cause, ev.lost_s, ev.penalty_s)
+        );
     }
 
     fn finish(
@@ -124,12 +166,77 @@ impl ObserverSet {
         jobs: &[&JobState],
         extra: &mut [&mut dyn SimObserver],
     ) {
-        self.timeline.on_finish(t_end, jobs);
-        self.completion.on_finish(t_end, jobs);
-        self.grouping.on_finish(t_end, jobs);
-        self.slowdown.on_finish(t_end, jobs);
-        for o in extra.iter_mut() {
-            o.on_finish(t_end, jobs);
+        fan_out!(self, extra, on_finish(t_end, jobs));
+    }
+}
+
+/// Per-job checkpoint-restore penalty (seconds), from the adapter-only
+/// checkpoint size model: fixed overhead + `train_state_bytes` read at
+/// the configured bandwidth. An unknown backbone restores at the bare
+/// overhead.
+fn restore_penalties(
+    cfg: &ExperimentConfig,
+    jobs: &[JobSpec],
+) -> HashMap<u64, f64> {
+    jobs.iter()
+        .map(|j| {
+            let p = match arch_by_name(&j.base_model) {
+                Some(arch) => restore_time_s(
+                    &arch,
+                    &LoraSpec::new(j.rank),
+                    cfg.faults.restore_overhead_s,
+                    cfg.faults.ckpt_read_bw,
+                ),
+                None => cfg.faults.restore_overhead_s,
+            };
+            (j.id, p)
+        })
+        .collect()
+}
+
+/// Origin tag for exogenous fault events, carried in the (otherwise
+/// unused) `epoch` field: model-originated events chain the next draw
+/// from their seeded stream when handled; scripted events (epoch 0)
+/// never chain, so mixing a script into a faulted config cannot
+/// multiply the stream rate or shift the per-node draw sequences.
+const FAULT_MODEL_ORIGIN: u64 = 1;
+
+/// The seeded fault sources driving the engine's exogenous events.
+struct FaultDriver {
+    /// per-node MTBF/MTTR streams (None: node failures disabled)
+    nodes: Option<NodeFaultModel>,
+    /// Poisson preemption stream (None: preemptions disabled)
+    preempt: Option<PreemptionModel>,
+    /// per-job restore penalty in seconds
+    penalties: HashMap<u64, f64>,
+}
+
+impl FaultDriver {
+    fn new(cfg: &ExperimentConfig, jobs: &[JobSpec]) -> FaultDriver {
+        let f = &cfg.faults;
+        let nodes = if f.mtbf_s > 0.0 {
+            Some(NodeFaultModel::new(
+                f.mtbf_s,
+                f.mttr_s,
+                cfg.cluster.n_nodes,
+                cfg.seed,
+            ))
+        } else {
+            None
+        };
+        let preempt = if f.preempt_rate > 0.0 && !jobs.is_empty() {
+            Some(PreemptionModel::new(
+                f.preempt_rate,
+                jobs.iter().map(|j| j.id).collect(),
+                cfg.seed,
+            ))
+        } else {
+            None
+        };
+        FaultDriver {
+            nodes,
+            preempt,
+            penalties: restore_penalties(cfg, jobs),
         }
     }
 }
@@ -143,6 +250,7 @@ pub struct Engine<'a> {
     state: SimState,
     events: EventQueue,
     obs: ObserverSet,
+    faults: FaultDriver,
     epoch: u64,
     sched_rounds: u64,
     events_processed: u64,
@@ -183,6 +291,56 @@ impl<'a> Engine<'a> {
                 epoch: 0,
             });
         }
+        let mut faults = FaultDriver::new(cfg, &jobs);
+        // seed the exogenous fault streams: one pending failure per
+        // node, one pending preemption; each handled event chains the
+        // next draw from its own stream
+        if let Some(m) = &mut faults.nodes {
+            for node in 0..m.n_nodes() {
+                events.push(Event {
+                    time: m.uptime(node),
+                    kind: EventKind::NodeFailure,
+                    job_id: node as u64,
+                    epoch: FAULT_MODEL_ORIGIN,
+                });
+            }
+        }
+        if let Some(p) = &mut faults.preempt {
+            let (dt, target) = p.next();
+            events.push(Event {
+                time: dt,
+                kind: EventKind::Preemption,
+                job_id: target,
+                epoch: FAULT_MODEL_ORIGIN,
+            });
+        }
+        // deterministic injected faults (pinned scenarios)
+        for f in &opts.fault_script {
+            let kind = match f.kind {
+                FaultKind::NodeFailure => EventKind::NodeFailure,
+                FaultKind::NodeRecovery => EventKind::NodeRecovery,
+                FaultKind::Preemption => EventKind::Preemption,
+            };
+            if kind != EventKind::Preemption {
+                // fail loudly on a bad script instead of an opaque
+                // slice-index panic inside the allocator at fire time
+                // (preemption targets may name unknown jobs: no-op)
+                assert!(
+                    (f.target as usize) < cfg.cluster.n_nodes,
+                    "fault_script entry at t={} targets node {} but \
+                     the cluster has {} nodes",
+                    f.time,
+                    f.target,
+                    cfg.cluster.n_nodes
+                );
+            }
+            events.push(Event {
+                time: f.time,
+                kind,
+                job_id: f.target,
+                epoch: 0,
+            });
+        }
         let n_jobs = jobs.len();
         Engine {
             predictor: Predictor::new(cfg.cluster.clone(), plan_opts),
@@ -193,7 +351,9 @@ impl<'a> Engine<'a> {
                 completion: CompletionObserver::default(),
                 grouping: GroupingObserver::new(size_classes),
                 slowdown: SlowdownObserver::default(),
+                faults: FaultObserver::new(cfg.faults.slo_factor),
             },
+            faults,
             epoch: 0,
             sched_rounds: 0,
             events_processed: 0,
@@ -207,16 +367,12 @@ impl<'a> Engine<'a> {
         }
     }
 
-    /// Is the event still meaningful? Arrivals always are; completion
-    /// and reschedule events go stale when a later round re-derived
-    /// step rates (and re-issued events) under a newer epoch.
+    /// Is the event still meaningful? Exogenous events (arrivals,
+    /// faults) always are; completion and reschedule events go stale
+    /// when a later round re-derived step rates (and re-issued events)
+    /// under a newer epoch ([`Event::is_stale`]).
     fn is_valid(&self, ev: &Event) -> bool {
-        match ev.kind {
-            EventKind::Arrival => true,
-            EventKind::Completion | EventKind::ReschedulePoint => {
-                ev.epoch == self.epoch
-            }
-        }
+        !ev.is_stale(self.epoch)
     }
 
     fn pop_next_valid(&mut self) -> Option<Event> {
@@ -256,6 +412,98 @@ impl<'a> Engine<'a> {
                     c.adjustments() < self.opts.aimd_settle_obs
                 })
         })
+    }
+
+    /// A node died at `t`: evict touched groups (restore penalties
+    /// charged per job), notify observers, and — for model-originated
+    /// failures — chain the repair from the node's own MTTR stream.
+    /// (A scripted failure with no matching scripted recovery and no
+    /// active MTBF model leaves the node down for good.)
+    fn apply_node_failure(
+        &mut self,
+        node: usize,
+        from_model: bool,
+        t: f64,
+        extra: &mut [&mut dyn SimObserver],
+    ) {
+        let evs =
+            self.state.fail_node(node, t, &self.faults.penalties);
+        self.obs.node_failure(t, node, extra);
+        for e in &evs {
+            self.obs.evict(
+                t,
+                &self.state.states[&e.job_id],
+                EvictCause::NodeFailure,
+                e,
+                extra,
+            );
+        }
+        if from_model {
+            if let Some(m) = &mut self.faults.nodes {
+                self.events.push(Event {
+                    time: t + m.downtime(node),
+                    kind: EventKind::NodeRecovery,
+                    job_id: node as u64,
+                    epoch: FAULT_MODEL_ORIGIN,
+                });
+            }
+        }
+    }
+
+    /// A node came back at `t`; model-originated recoveries chain the
+    /// node's next failure from its MTBF stream.
+    fn apply_node_recovery(
+        &mut self,
+        node: usize,
+        from_model: bool,
+        t: f64,
+        extra: &mut [&mut dyn SimObserver],
+    ) {
+        self.state.recover_node(node);
+        self.obs.node_recovery(t, node, extra);
+        if from_model {
+            if let Some(m) = &mut self.faults.nodes {
+                self.events.push(Event {
+                    time: t + m.uptime(node),
+                    kind: EventKind::NodeFailure,
+                    job_id: node as u64,
+                    epoch: FAULT_MODEL_ORIGIN,
+                });
+            }
+        }
+    }
+
+    /// Job `id` is exogenously preempted at `t` (no-op unless placed);
+    /// model-originated preemptions chain the next Poisson draw.
+    fn apply_preemption(
+        &mut self,
+        id: u64,
+        from_model: bool,
+        t: f64,
+        extra: &mut [&mut dyn SimObserver],
+    ) {
+        if let Some(e) =
+            self.state.preempt(id, t, &self.faults.penalties)
+        {
+            self.obs.evict(
+                t,
+                &self.state.states[&id],
+                EvictCause::Preemption,
+                &e,
+                extra,
+            );
+        }
+        if from_model {
+            if let Some(p) = &mut self.faults.preempt {
+                let (dt, target) = p.next();
+                self.events.push(Event {
+                    time: t + dt,
+                    kind: EventKind::Preemption,
+                    job_id: target,
+                    epoch: FAULT_MODEL_ORIGIN,
+                });
+            }
+        }
     }
 
     /// One scheduling round at time `t`. Mirrors the legacy loop's
@@ -333,8 +581,15 @@ impl<'a> Engine<'a> {
             // queued work can only be retried by a future round; a job
             // that cannot even be placed on a fully idle cluster with
             // no arrivals left is unsatisfiable — no point ticking
-            // until t_max for it (it is reported in incomplete_jobs)
-            let queue_pressure = !self.state.queue.is_empty()
+            // until t_max for it (it is reported in incomplete_jobs).
+            // Jobs inside their checkpoint-restore window are excluded:
+            // they get an exact wake-up below instead of periodic ticks
+            let unblocked_queued = self
+                .state
+                .queue
+                .iter()
+                .any(|id| self.state.states[id].restart_at <= t);
+            let queue_pressure = unblocked_queued
                 && !(self.state.running.is_empty()
                     && self.arrivals_pending == 0);
             if queue_pressure || self.aimd_pressure() {
@@ -345,6 +600,25 @@ impl<'a> Engine<'a> {
                     epoch: self.epoch,
                 });
             }
+        }
+
+        // evicted jobs waiting out their restore window: wake exactly
+        // when the earliest one becomes runnable (re-derived each
+        // round, so staleness handles superseded wake-ups)
+        let mut wake: Option<f64> = None;
+        for id in &self.state.queue {
+            let ra = self.state.states[id].restart_at;
+            if ra > t {
+                wake = Some(wake.map_or(ra, |w: f64| w.min(ra)));
+            }
+        }
+        if let Some(w) = wake {
+            self.events.push(Event {
+                time: w,
+                kind: EventKind::ReschedulePoint,
+                job_id: 0,
+                epoch: self.epoch,
+            });
         }
 
         let stats = self.round_stats(t);
@@ -385,12 +659,43 @@ impl<'a> Engine<'a> {
         extra: &mut [&mut dyn SimObserver],
     ) -> SimResult {
         // round 0 at t=0 mirrors the legacy loop's first horizon:
-        // admit anything submitted at the trace origin
+        // admit anything submitted at the trace origin (scripted
+        // faults at t=0 apply before the first dispatch; preemptions
+        // at t=0 are no-ops — nothing is placed yet)
         while let Some(ev) = self.pop_valid_at(0.0) {
             self.events_processed += 1;
-            if ev.kind == EventKind::Arrival {
-                self.arrivals_pending -= 1;
-                self.state.queue.push(ev.job_id);
+            let from_model = ev.epoch == FAULT_MODEL_ORIGIN;
+            match ev.kind {
+                EventKind::Arrival => {
+                    self.arrivals_pending -= 1;
+                    self.state.queue.push(ev.job_id);
+                }
+                EventKind::NodeFailure => {
+                    self.apply_node_failure(
+                        ev.job_id as usize,
+                        from_model,
+                        0.0,
+                        extra,
+                    );
+                }
+                EventKind::NodeRecovery => {
+                    self.apply_node_recovery(
+                        ev.job_id as usize,
+                        from_model,
+                        0.0,
+                        extra,
+                    );
+                }
+                EventKind::Preemption => {
+                    self.apply_preemption(
+                        ev.job_id,
+                        from_model,
+                        0.0,
+                        extra,
+                    );
+                }
+                EventKind::Completion
+                | EventKind::ReschedulePoint => {}
             }
         }
         self.round(0.0, extra);
@@ -409,6 +714,9 @@ impl<'a> Engine<'a> {
             self.state.advance_to(t);
             let mut arrivals = vec![];
             let mut completions = vec![];
+            let mut failures = vec![];
+            let mut recoveries = vec![];
+            let mut preemptions = vec![];
             let mut batch = vec![first];
             while let Some(ev) = self.pop_valid_at(t) {
                 batch.push(ev);
@@ -423,12 +731,32 @@ impl<'a> Engine<'a> {
                     EventKind::Completion => {
                         completions.push(ev.job_id);
                     }
+                    EventKind::NodeFailure => {
+                        failures.push((
+                            ev.job_id as usize,
+                            ev.epoch == FAULT_MODEL_ORIGIN,
+                        ));
+                    }
+                    EventKind::NodeRecovery => {
+                        recoveries.push((
+                            ev.job_id as usize,
+                            ev.epoch == FAULT_MODEL_ORIGIN,
+                        ));
+                    }
+                    EventKind::Preemption => {
+                        preemptions.push((
+                            ev.job_id,
+                            ev.epoch == FAULT_MODEL_ORIGIN,
+                        ));
+                    }
                     EventKind::ReschedulePoint => {}
                 }
             }
             for id in arrivals {
                 self.state.queue.push(id);
             }
+            // completions first (rank order): a final step landing at
+            // the failure instant still counts as finished
             for id in completions {
                 if self.state.complete(id, t) {
                     self.obs.complete(
@@ -437,6 +765,15 @@ impl<'a> Engine<'a> {
                         extra,
                     );
                 }
+            }
+            for (node, from_model) in failures {
+                self.apply_node_failure(node, from_model, t, extra);
+            }
+            for (node, from_model) in recoveries {
+                self.apply_node_recovery(node, from_model, t, extra);
+            }
+            for (id, from_model) in preemptions {
+                self.apply_preemption(id, from_model, t, extra);
             }
             self.round(t, extra);
         }
@@ -484,6 +821,13 @@ impl<'a> Engine<'a> {
                 &mut self.obs.completion.incomplete,
             ),
             mean_slowdown: self.obs.slowdown.mean_slowdown,
+            node_failures: self.obs.faults.node_failures,
+            preemptions: self.obs.faults.preemptions,
+            restarts: self.obs.faults.restarts,
+            lost_step_time_s: self.obs.faults.lost_step_time_s,
+            restore_delay_s: self.obs.faults.restore_delay_s,
+            goodput: self.obs.faults.goodput,
+            slo_attainment: self.obs.faults.slo_attainment,
         }
     }
 }

@@ -1,27 +1,39 @@
 //! Deterministic event queue for the simulation engine.
 //!
 //! The engine advances straight from event to event instead of ticking
-//! a fixed horizon. Three kinds exist:
+//! a fixed horizon. Six kinds exist:
 //!
 //! * [`EventKind::Arrival`] — a job's submit time was reached;
 //! * [`EventKind::Completion`] — a running job's last step finishes,
 //!   computed exactly from its group's current step rate;
+//! * [`EventKind::NodeFailure`] / [`EventKind::NodeRecovery`] — a
+//!   cluster node goes down / comes back (the fault subsystem;
+//!   `job_id` carries the node index for these two);
+//! * [`EventKind::Preemption`] — an exogenous eviction of one job
+//!   (spot reclaim / higher-priority tenant);
 //! * [`EventKind::ReschedulePoint`] — the periodic regroup bound
 //!   (`scheduler.horizon_s` now caps the *maximum* interval between
 //!   scheduling rounds instead of forcing one every 60 s).
 //!
 //! **Determinism tie-break rule:** events order by
 //! `(time, kind, job_id, epoch)` — time via the crate's total f64
-//! order, then `Arrival < Completion < ReschedulePoint`, then job id.
-//! Two runs of the same config therefore pop events in a bit-identical
-//! sequence, which is what keeps the sweep engine's cross-thread
-//! determinism contract intact (DESIGN.md §Determinism).
+//! order, then `Arrival < Completion < NodeFailure < NodeRecovery <
+//! Preemption < ReschedulePoint`, then job id. Two runs of the same
+//! config therefore pop events in a bit-identical sequence, which is
+//! what keeps the sweep engine's cross-thread determinism contract
+//! intact (DESIGN.md §Determinism). The fault ranks encode semantics:
+//! a job whose final step lands exactly when its node dies *completed*
+//! (the step finished), and a zero-downtime blip still orders failure
+//! before recovery.
 //!
 //! Completion and reschedule events are *epoch-stamped*: every
 //! scheduling round bumps the engine epoch and re-derives completion
 //! times from the (possibly regrouped, AIMD-updated) step rates, so
 //! events from earlier epochs are stale and discarded on pop instead of
-//! being searched for and removed from the heap.
+//! being searched for and removed from the heap. Arrivals and fault
+//! events (failure / recovery / preemption) are *exogenous*: they come
+//! from the trace or the seeded fault model, not from the schedule, so
+//! they never go stale ([`Event::is_stale`]).
 
 use std::cmp::{Ordering, Reverse};
 use std::collections::BinaryHeap;
@@ -35,32 +47,70 @@ pub enum EventKind {
     Arrival,
     /// A running job finishes its final training step.
     Completion,
+    /// A node goes down (`job_id` = node index). Groups whose
+    /// allocation touches the node are evicted.
+    NodeFailure,
+    /// A down node returns to the allocatable pool (`job_id` = node
+    /// index).
+    NodeRecovery,
+    /// One job (`job_id`) is exogenously evicted; a no-op if it is not
+    /// currently placed.
+    Preemption,
     /// Upper bound on the interval between scheduling rounds.
     ReschedulePoint,
 }
 
 impl EventKind {
-    /// Tie-break rank at equal timestamps (arrivals first, so a job
+    /// Tie-break rank at equal timestamps: arrivals first (a job
     /// arriving exactly when another completes sees the freed GPUs in
-    /// the same round).
+    /// the same round), then completions (a final step that lands at
+    /// the failure instant still counts), then failure before recovery
+    /// before preemption, reschedule points last.
     fn rank(self) -> u8 {
         match self {
             EventKind::Arrival => 0,
             EventKind::Completion => 1,
-            EventKind::ReschedulePoint => 2,
+            EventKind::NodeFailure => 2,
+            EventKind::NodeRecovery => 3,
+            EventKind::Preemption => 4,
+            EventKind::ReschedulePoint => 5,
         }
     }
 }
 
-/// One scheduled event. `job_id` is 0 for reschedule points; `epoch`
-/// is the scheduling-round counter the event was issued under (always
-/// 0 for arrivals, which never go stale).
+/// One scheduled event. `job_id` is 0 for reschedule points and the
+/// node index for failure/recovery; `epoch` is the scheduling-round
+/// counter the event was issued under. Exogenous kinds never go stale,
+/// so their `epoch` is free for other use: arrivals carry 0, and the
+/// engine stamps fault events with an *origin tag* (0 = scripted,
+/// 1 = seeded-model — model events chain the next draw from their
+/// stream when handled; see `sim::engine::FAULT_MODEL_ORIGIN`).
 #[derive(Debug, Clone, Copy)]
 pub struct Event {
     pub time: f64,
     pub kind: EventKind,
     pub job_id: u64,
     pub epoch: u64,
+}
+
+impl Event {
+    /// Is this event obsolete under the engine's current scheduling
+    /// epoch? Completion and reschedule events are re-derived every
+    /// round (step rates may have changed), so an older stamp means a
+    /// newer copy supersedes this one. Exogenous events — arrivals and
+    /// the fault kinds — are facts about the outside world and are
+    /// never stale.
+    pub fn is_stale(&self, current_epoch: u64) -> bool {
+        match self.kind {
+            EventKind::Arrival
+            | EventKind::NodeFailure
+            | EventKind::NodeRecovery
+            | EventKind::Preemption => false,
+            EventKind::Completion | EventKind::ReschedulePoint => {
+                self.epoch != current_epoch
+            }
+        }
+    }
 }
 
 impl PartialEq for Event {
@@ -189,6 +239,55 @@ mod tests {
                 (None, None) => break,
                 (x, y) => assert_eq!(x, y),
             }
+        }
+    }
+
+    #[test]
+    fn fault_kinds_rank_between_completions_and_reschedule() {
+        let mut q = EventQueue::new();
+        q.push(ev(5.0, EventKind::ReschedulePoint, 0));
+        q.push(ev(5.0, EventKind::Preemption, 4));
+        q.push(ev(5.0, EventKind::NodeRecovery, 2));
+        q.push(ev(5.0, EventKind::NodeFailure, 2));
+        q.push(ev(5.0, EventKind::Completion, 1));
+        q.push(ev(5.0, EventKind::Arrival, 9));
+        let order: Vec<EventKind> = std::iter::from_fn(|| q.pop())
+            .map(|e| e.kind)
+            .collect();
+        assert_eq!(
+            order,
+            vec![
+                EventKind::Arrival,
+                EventKind::Completion,
+                EventKind::NodeFailure,
+                EventKind::NodeRecovery,
+                EventKind::Preemption,
+                EventKind::ReschedulePoint,
+            ]
+        );
+    }
+
+    #[test]
+    fn staleness_only_applies_to_schedule_derived_kinds() {
+        let stamped = |kind, epoch| Event {
+            time: 1.0,
+            kind,
+            job_id: 0,
+            epoch,
+        };
+        // schedule-derived kinds: stale iff the epoch moved on
+        for kind in [EventKind::Completion, EventKind::ReschedulePoint] {
+            assert!(!stamped(kind, 3).is_stale(3));
+            assert!(stamped(kind, 2).is_stale(3));
+        }
+        // exogenous kinds: never stale, whatever the stamp
+        for kind in [
+            EventKind::Arrival,
+            EventKind::NodeFailure,
+            EventKind::NodeRecovery,
+            EventKind::Preemption,
+        ] {
+            assert!(!stamped(kind, 0).is_stale(7));
         }
     }
 

@@ -9,10 +9,16 @@
 //!
 //! The simulator is event-driven (§3.4's online reactive scheduler):
 //! time advances straight to the next arrival / exact completion /
-//! reschedule point instead of ticking a fixed horizon, with
-//! `scheduler.horizon_s` acting as the *maximum* interval between
-//! scheduling rounds. See [`events`] for the determinism tie-break
-//! rule, [`engine`] for the loop, [`state`] for the bookkeeping, and
+//! node failure / recovery / preemption / reschedule point instead of
+//! ticking a fixed horizon, with `scheduler.horizon_s` acting as the
+//! *maximum* interval between scheduling rounds. The fault subsystem
+//! (`config::FaultConfig` + `workload::faults`) injects seeded node
+//! churn and preemptions; evicted jobs pay a checkpoint-restore
+//! penalty from the adapter-only size model and requeue, and each
+//! policy reacts through its ordinary `PolicyHooks` dispatch (tLoRA
+//! re-fuses elastically, mLoRA repacks FIFO, Megatron restarts in
+//! isolation). See [`events`] for the determinism tie-break rule,
+//! [`engine`] for the loop, [`state`] for the bookkeeping, and
 //! [`observer`] for the metric-collection contract.
 
 pub mod engine;
@@ -21,8 +27,8 @@ pub mod observer;
 pub mod state;
 
 pub use engine::{Engine, EngineOptions};
-pub use observer::{RoundStats, SimObserver};
-pub use state::{JobState, RunningGroup, SimState};
+pub use observer::{EvictCause, FaultObserver, RoundStats, SimObserver};
+pub use state::{Eviction, JobState, RunningGroup, SimState};
 
 use std::collections::HashMap;
 
@@ -64,13 +70,30 @@ pub struct SimResult {
     /// scheduling rounds the engine ran (the event-driven analogue of
     /// the old per-horizon iteration count)
     pub sched_rounds: u64,
-    /// events processed (arrivals + completions + reschedule points)
+    /// events processed (arrivals, completions, node failures /
+    /// recoveries, preemptions, reschedule points)
     pub events: u64,
     /// jobs that never completed (unsatisfiable requests or the `t_max`
     /// safety valve) — previously these vanished from `jct` silently
     pub incomplete_jobs: Vec<u64>,
     /// mean slowdown across jobs that ran grouped
     pub mean_slowdown: f64,
+    /// node-failure events applied (fault subsystem; 0 with faults off)
+    pub node_failures: u64,
+    /// preemption evictions applied (no-op preemptions excluded)
+    pub preemptions: u64,
+    /// total evictions — node failures + preemptions; each charged a
+    /// checkpoint-restore penalty
+    pub restarts: u64,
+    /// simulated seconds of in-flight work rolled back at evictions
+    pub lost_step_time_s: f64,
+    /// total checkpoint-restore delay charged across evictions
+    pub restore_delay_s: f64,
+    /// useful samples/s over the whole run (rolled-back work excluded)
+    pub goodput: f64,
+    /// fraction of jobs finishing within their SLO deadline
+    /// (`faults.slo_factor` × Δ^max × ideal runtime past submission)
+    pub slo_attainment: f64,
 }
 
 impl SimResult {
@@ -267,6 +290,18 @@ mod tests {
             r.avg_throughput_full
         );
         assert!(r.avg_gpu_util_full <= r.avg_gpu_util * 3.0 + 1e-9);
+    }
+
+    #[test]
+    fn fault_free_runs_report_zero_churn() {
+        let r = simulate(&small_cfg(Policy::TLora));
+        assert_eq!(r.node_failures, 0);
+        assert_eq!(r.preemptions, 0);
+        assert_eq!(r.restarts, 0);
+        assert_eq!(r.lost_step_time_s, 0.0);
+        assert_eq!(r.restore_delay_s, 0.0);
+        assert!(r.goodput > 0.0);
+        assert!((0.0..=1.0).contains(&r.slo_attainment));
     }
 
     #[test]

@@ -39,6 +39,15 @@ pub struct RoundStats {
     pub n_queued: usize,
 }
 
+/// Why a job was evicted mid-run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvictCause {
+    /// Its group's allocation touched a failed node.
+    NodeFailure,
+    /// Exogenous preemption (spot reclaim / priority tenant).
+    Preemption,
+}
+
 /// Observer callbacks. All methods default to no-ops so an observer
 /// implements only what it needs.
 pub trait SimObserver {
@@ -51,6 +60,25 @@ pub trait SimObserver {
 
     /// A job completed at `t` (its final state, post-completion).
     fn on_complete(&mut self, _t: f64, _job: &JobState) {}
+
+    /// A node went down at `t`.
+    fn on_node_failure(&mut self, _t: f64, _node: usize) {}
+
+    /// A node returned to the pool at `t`.
+    fn on_node_recovery(&mut self, _t: f64, _node: usize) {}
+
+    /// A job was evicted at `t`: `lost_s` seconds of in-flight work
+    /// rolled back, `penalty_s` of checkpoint-restore delay before it
+    /// may run again (`job` is its post-eviction state).
+    fn on_evict(
+        &mut self,
+        _t: f64,
+        _job: &JobState,
+        _cause: EvictCause,
+        _lost_s: f64,
+        _penalty_s: f64,
+    ) {
+    }
 
     /// The run ended at `t_end`; `jobs` holds every job's final state
     /// sorted by id (completed or not).
@@ -182,6 +210,110 @@ impl SimObserver for GroupingObserver {
     }
 }
 
+/// Fault & SLO accounting: churn counts, lost work, restore delay,
+/// goodput, and per-job deadline attainment.
+///
+/// *Goodput* is useful samples per second — every step that survived
+/// to the end of the run (rolled-back work is subtracted from
+/// `steps_done` at eviction, so it never counts), over the makespan.
+/// *SLO attainment* is the fraction of jobs that finished by their
+/// deadline `submit + slo_factor × Δ^max × total_steps ×
+/// iso_step_time` (incomplete or never-admitted jobs are misses).
+#[derive(Debug)]
+pub struct FaultObserver {
+    slo_factor: f64,
+    pub node_failures: u64,
+    pub node_recoveries: u64,
+    pub preemptions: u64,
+    /// total evictions (failure + preemption)
+    pub restarts: u64,
+    pub lost_step_time_s: f64,
+    pub restore_delay_s: f64,
+    pub goodput: f64,
+    pub slo_attainment: f64,
+}
+
+impl FaultObserver {
+    pub fn new(slo_factor: f64) -> FaultObserver {
+        FaultObserver {
+            slo_factor,
+            node_failures: 0,
+            node_recoveries: 0,
+            preemptions: 0,
+            restarts: 0,
+            lost_step_time_s: 0.0,
+            restore_delay_s: 0.0,
+            goodput: 0.0,
+            slo_attainment: 1.0,
+        }
+    }
+
+    /// A job's SLO deadline under this observer's factor, if its
+    /// isolated baseline is known.
+    pub fn deadline_of(&self, job: &JobState) -> Option<f64> {
+        if job.iso_step_time.is_finite() && job.iso_step_time > 0.0 {
+            Some(
+                job.spec.submit_time
+                    + self.slo_factor
+                        * job.spec.max_slowdown
+                        * job.spec.total_steps as f64
+                        * job.iso_step_time,
+            )
+        } else {
+            None
+        }
+    }
+}
+
+impl SimObserver for FaultObserver {
+    fn on_node_failure(&mut self, _t: f64, _node: usize) {
+        self.node_failures += 1;
+    }
+
+    fn on_node_recovery(&mut self, _t: f64, _node: usize) {
+        self.node_recoveries += 1;
+    }
+
+    fn on_evict(
+        &mut self,
+        _t: f64,
+        _job: &JobState,
+        cause: EvictCause,
+        lost_s: f64,
+        penalty_s: f64,
+    ) {
+        self.restarts += 1;
+        if cause == EvictCause::Preemption {
+            self.preemptions += 1;
+        }
+        self.lost_step_time_s += lost_s;
+        self.restore_delay_s += penalty_s;
+    }
+
+    fn on_finish(&mut self, t_end: f64, jobs: &[&JobState]) {
+        let mut samples = 0.0;
+        let mut met = 0usize;
+        for s in jobs {
+            samples += s.steps_done.min(s.spec.total_steps as f64)
+                * s.spec.batch_size as f64;
+            if let (Some(done), Some(deadline)) =
+                (s.completed_at, self.deadline_of(s))
+            {
+                if done <= deadline {
+                    met += 1;
+                }
+            }
+        }
+        self.goodput =
+            if t_end > 0.0 { samples / t_end } else { 0.0 };
+        self.slo_attainment = if jobs.is_empty() {
+            1.0
+        } else {
+            met as f64 / jobs.len() as f64
+        };
+    }
+}
+
 /// Mean slowdown across jobs that ran (expected isolated steps over
 /// actual steps, the §4.2 fairness metric).
 #[derive(Debug, Default)]
@@ -231,6 +363,8 @@ mod tests {
             completed_at: None,
             grouped_time: 0.0,
             running_time: 0.0,
+            restart_at: 0.0,
+            restarts: 0,
         }
     }
 
@@ -293,5 +427,52 @@ mod tests {
         let mut o = SlowdownObserver::default();
         o.on_finish(10.0, &[]);
         assert_eq!(o.mean_slowdown, 1.0);
+    }
+
+    #[test]
+    fn fault_observer_accounts_churn_and_goodput() {
+        let mut o = FaultObserver::new(3.0);
+        o.on_node_failure(10.0, 2);
+        o.on_node_recovery(40.0, 2);
+        let j = job_state(0, 0.0);
+        o.on_evict(10.0, &j, EvictCause::NodeFailure, 0.4, 12.0);
+        o.on_evict(20.0, &j, EvictCause::Preemption, 0.1, 12.0);
+        assert_eq!(o.node_failures, 1);
+        assert_eq!(o.node_recoveries, 1);
+        assert_eq!(o.restarts, 2);
+        assert_eq!(o.preemptions, 1);
+        assert!((o.lost_step_time_s - 0.5).abs() < 1e-12);
+        assert!((o.restore_delay_s - 24.0).abs() < 1e-12);
+        // goodput: surviving steps x batch over makespan
+        let mut a = job_state(1, 0.0); // batch 4, 100 steps
+        a.steps_done = 100.0;
+        a.completed_at = Some(200.0);
+        let mut b = job_state(2, 0.0);
+        b.steps_done = 50.0; // incomplete: still useful work
+        o.on_finish(200.0, &[&a, &b]);
+        let want = (100.0 * 4.0 + 50.0 * 4.0) / 200.0;
+        assert!((o.goodput - want).abs() < 1e-9, "{}", o.goodput);
+    }
+
+    #[test]
+    fn fault_observer_slo_attainment() {
+        let o = FaultObserver::new(2.0);
+        // iso 1.0 s/step, 100 steps, Δ^max 2.0, factor 2.0:
+        // deadline = submit + 2.0 * 2.0 * 100 * 1.0 = submit + 400
+        let mut on_time = job_state(0, 0.0);
+        on_time.spec.max_slowdown = 2.0;
+        on_time.completed_at = Some(300.0);
+        let mut late = job_state(1, 0.0);
+        late.spec.max_slowdown = 2.0;
+        late.completed_at = Some(500.0);
+        let never = job_state(2, 0.0); // incomplete: a miss
+        let mut o2 = o;
+        assert_eq!(o2.deadline_of(&on_time), Some(400.0));
+        o2.on_finish(600.0, &[&on_time, &late, &never]);
+        assert!((o2.slo_attainment - 1.0 / 3.0).abs() < 1e-12);
+        // no jobs: vacuously attained
+        let mut o3 = FaultObserver::new(2.0);
+        o3.on_finish(0.0, &[]);
+        assert_eq!(o3.slo_attainment, 1.0);
     }
 }

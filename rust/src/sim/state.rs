@@ -35,6 +35,23 @@ pub struct JobState {
     /// seconds spent in a group of size > 1
     pub grouped_time: f64,
     pub running_time: f64,
+    /// earliest time the job may run again after an eviction (its
+    /// checkpoint-restore window); 0 until the first eviction
+    pub restart_at: f64,
+    /// evictions suffered (node failures + preemptions)
+    pub restarts: u64,
+}
+
+/// One job evicted by a node failure or preemption: what it lost and
+/// what restoring it costs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Eviction {
+    pub job_id: u64,
+    /// simulated seconds of rolled-back in-flight work (the fractional
+    /// step in progress at eviction — checkpoints persist whole steps)
+    pub lost_s: f64,
+    /// checkpoint-restore delay charged before the job may run again
+    pub penalty_s: f64,
 }
 
 /// A group currently executing at a fixed step rate. The rate only
@@ -87,6 +104,8 @@ impl SimState {
                         completed_at: None,
                         grouped_time: 0.0,
                         running_time: 0.0,
+                        restart_at: 0.0,
+                        restarts: 0,
                     },
                 )
             })
@@ -196,6 +215,139 @@ impl SimState {
         }
     }
 
+    /// Evict one uncompleted job at time `t`: roll back its in-flight
+    /// fractional step (checkpoints persist whole steps; `step_time`
+    /// prices the lost fraction, 0 when the job was not running),
+    /// release its owned gang, stamp its restore window, and requeue it.
+    fn evict(
+        &mut self,
+        id: u64,
+        t: f64,
+        step_time: f64,
+        penalty: &HashMap<u64, f64>,
+    ) -> Eviction {
+        if let Some(a) = self.allocations.remove(&id) {
+            self.allocator.release(&a);
+        }
+        let p = *penalty.get(&id).unwrap_or(&0.0);
+        let st = self.states.get_mut(&id).unwrap();
+        let whole = st.steps_done.floor();
+        let lost = (st.steps_done - whole) * step_time;
+        st.steps_done = whole;
+        st.restart_at = t + p;
+        st.restarts += 1;
+        self.queue.push(id);
+        Eviction {
+            job_id: id,
+            lost_s: lost,
+            penalty_s: p,
+        }
+    }
+
+    /// Fail `node` at time `t`: the allocator stops handing out its
+    /// GPUs, and every group whose allocation touches the node dies —
+    /// its gang's sharded adapter/optimizer state is gone, so all
+    /// uncompleted members are evicted (restore from the adapter-only
+    /// checkpoint, priced per job by `penalty`) and requeued. How they
+    /// come back is the *policy's* reaction at the next round: tLoRA
+    /// re-fuses them elastically, mLoRA repacks FIFO, Megatron restarts
+    /// each in isolation. Returns the evictions in job-id order.
+    pub fn fail_node(
+        &mut self,
+        node: usize,
+        t: f64,
+        penalty: &HashMap<u64, f64>,
+    ) -> Vec<Eviction> {
+        self.allocator.set_down(node, true);
+        // (member id, its group's step rate) — the rate prices the
+        // rolled-back in-flight fraction and dies with the group
+        let mut affected: Vec<(u64, f64)> = vec![];
+        let mut keep = vec![];
+        for g in self.running.drain(..) {
+            if g.alloc.gpus.iter().any(|gpu| gpu.node == node) {
+                for id in &g.job_ids {
+                    affected.push((*id, g.step_time));
+                }
+            } else {
+                keep.push(g);
+            }
+        }
+        self.running = keep;
+        let mut evictions = vec![];
+        affected.sort_unstable_by_key(|&(id, _)| id);
+        for (id, step_time) in affected {
+            if self.states[&id].completed_at.is_some() {
+                // the member finished at this very timestamp; just free
+                // its gang (release_completed would have, but its group
+                // no longer exists)
+                if let Some(a) = self.allocations.remove(&id) {
+                    self.allocator.release(&a);
+                }
+                continue;
+            }
+            evictions.push(self.evict(id, t, step_time, penalty));
+        }
+        // admitted-but-not-running holders (a dispatch probe failure
+        // can leave a job with a gang but no group): sweep any
+        // remaining allocation touching the node, in id order
+        let mut held: Vec<u64> = self
+            .allocations
+            .iter()
+            .filter(|(_, a)| a.gpus.iter().any(|g| g.node == node))
+            .map(|(id, _)| *id)
+            .collect();
+        held.sort_unstable();
+        for id in held {
+            if self.states[&id].completed_at.is_some() {
+                if let Some(a) = self.allocations.remove(&id) {
+                    self.allocator.release(&a);
+                }
+            } else {
+                evictions.push(self.evict(id, t, 0.0, penalty));
+            }
+        }
+        evictions
+    }
+
+    /// Recover `node`: its GPUs return to the allocatable pool.
+    pub fn recover_node(&mut self, node: usize) {
+        self.allocator.set_down(node, false);
+    }
+
+    /// Exogenously preempt job `id` at time `t` (spot reclaim /
+    /// higher-priority tenant). A no-op unless the job is currently
+    /// placed (running in a group or holding a gang). If its group had
+    /// other members they keep running until the round that follows
+    /// regroups them.
+    pub fn preempt(
+        &mut self,
+        id: u64,
+        t: f64,
+        penalty: &HashMap<u64, f64>,
+    ) -> Option<Eviction> {
+        let st = self.states.get(&id)?;
+        if st.completed_at.is_some() {
+            return None;
+        }
+        let gi = self
+            .running
+            .iter()
+            .position(|g| g.job_ids.contains(&id));
+        if gi.is_none() && !self.allocations.contains_key(&id) {
+            return None; // queued / restoring: nothing to take away
+        }
+        let mut step_time = 0.0;
+        if let Some(gi) = gi {
+            let g = &mut self.running[gi];
+            step_time = g.step_time;
+            g.job_ids.retain(|j| *j != id);
+            if g.job_ids.is_empty() {
+                self.running.remove(gi);
+            }
+        }
+        Some(self.evict(id, t, step_time, penalty))
+    }
+
     /// Allocate GPUs to queued jobs (FIFO; id breaks submit-time ties
     /// so the order never depends on map order). Returns jobs admitted
     /// for the first time (for observers).
@@ -225,6 +377,12 @@ impl SimState {
         let mut newly = vec![];
         let mut admitted_now = 0usize;
         for id in drained {
+            // an evicted job is unrunnable until its checkpoint restore
+            // finishes; it waits in the queue without consuming a slot
+            if self.states[&id].restart_at > t {
+                still.push(id);
+                continue;
+            }
             let spec = self.states[&id].spec.clone();
             let cap_ok = running_count + admitted_now < max_concurrent;
             if cap_ok {
@@ -323,6 +481,12 @@ impl SimState {
         let mut newly = vec![];
         let mut shared_now = 0usize;
         for id in drained {
+            // restore window not elapsed: not even elastic absorption
+            // can run the job yet
+            if self.states[&id].restart_at > t {
+                still.push(id);
+                continue;
+            }
             let n_running: usize =
                 groups.iter().map(|(g, _)| g.jobs.len()).sum();
             if n_running + shared_now >= max_concurrent {

@@ -2,10 +2,13 @@
 //!
 //! A [`SweepGrid`] is the cartesian product of the evaluation axes every
 //! figure of the paper varies: policy × job count × cluster size ×
-//! arrival-rate scale × trace month × seed. [`SweepGrid::points`]
-//! enumerates the cells in a fixed row-major order, so a sweep's output
-//! is a pure function of the grid regardless of how many worker threads
-//! execute it.
+//! arrival-rate scale × trace month × node MTBF × seed.
+//! [`SweepGrid::points`] enumerates the cells in a fixed row-major
+//! order, so a sweep's output is a pure function of the grid regardless
+//! of how many worker threads execute it. The MTBF axis (seconds; 0 =
+//! no churn) opens the failure/SLO workload dimension: every other
+//! fault knob (MTTR, preemption rate, restore cost model) comes from
+//! the grid's base config.
 
 use crate::cluster::ClusterSpec;
 use crate::config::{ExperimentConfig, Policy};
@@ -32,6 +35,9 @@ pub struct SweepGrid {
     pub gpus: Vec<usize>,
     pub rate_scales: Vec<f64>,
     pub months: Vec<usize>,
+    /// node MTBF values in seconds; 0 disables node failures for the
+    /// cell (other fault knobs come from `base.faults`)
+    pub mtbfs: Vec<f64>,
     pub seeds: Vec<u64>,
 }
 
@@ -44,6 +50,7 @@ impl Default for SweepGrid {
             gpus: vec![base.cluster.total_gpus()],
             rate_scales: vec![1.0],
             months: vec![1],
+            mtbfs: vec![base.faults.mtbf_s],
             seeds: vec![base.seed],
             base,
         }
@@ -58,6 +65,7 @@ impl SweepGrid {
             * self.gpus.len()
             * self.rate_scales.len()
             * self.months.len()
+            * self.mtbfs.len()
             * self.seeds.len()
     }
 
@@ -74,6 +82,7 @@ impl SweepGrid {
             ("gpus", self.gpus.is_empty()),
             ("rate_scales", self.rate_scales.is_empty()),
             ("months", self.months.is_empty()),
+            ("mtbfs", self.mtbfs.is_empty()),
             ("seeds", self.seeds.is_empty()),
         ] {
             if empty {
@@ -98,17 +107,20 @@ impl SweepGrid {
                 for &gpus in &self.gpus {
                     for &rate_scale in &self.rate_scales {
                         for &month in &self.months {
-                            for &seed in &self.seeds {
-                                out.push(SweepPoint {
-                                    index,
-                                    policy,
-                                    n_jobs,
-                                    gpus,
-                                    rate_scale,
-                                    month,
-                                    seed,
-                                });
-                                index += 1;
+                            for &mtbf_s in &self.mtbfs {
+                                for &seed in &self.seeds {
+                                    out.push(SweepPoint {
+                                        index,
+                                        policy,
+                                        n_jobs,
+                                        gpus,
+                                        rate_scale,
+                                        month,
+                                        mtbf_s,
+                                        seed,
+                                    });
+                                    index += 1;
+                                }
                             }
                         }
                     }
@@ -129,6 +141,8 @@ pub struct SweepPoint {
     pub gpus: usize,
     pub rate_scale: f64,
     pub month: usize,
+    /// node MTBF in seconds (0 = no node failures for this cell)
+    pub mtbf_s: f64,
     pub seed: u64,
 }
 
@@ -141,25 +155,29 @@ impl SweepPoint {
         cfg.n_jobs = self.n_jobs;
         cfg.cluster = ClusterSpec::with_gpus(self.gpus);
         cfg.trace = month_profile(self.month).scaled(self.rate_scale);
+        cfg.faults.mtbf_s = self.mtbf_s;
         cfg.seed = self.seed;
         cfg
     }
 
-    /// Short machine-friendly label, e.g. `tlora/j200/g128/r1x/m1/s42`.
+    /// Short machine-friendly label, e.g.
+    /// `tlora/j200/g128/r1x/m1/f0/s42`.
     pub fn label(&self) -> String {
         format!("{}/s{}", self.cell_key(), self.seed)
     }
 
     /// Scenario key ignoring the seed — replicas of one scenario share a
-    /// cell key and are aggregated together by the report layer.
+    /// cell key and are aggregated together by the report layer. The
+    /// `f` component is the node MTBF in seconds (0 = fault-free).
     pub fn cell_key(&self) -> String {
         format!(
-            "{}/j{}/g{}/r{}x/m{}",
+            "{}/j{}/g{}/r{}x/m{}/f{}",
             self.policy.slug(),
             self.n_jobs,
             self.gpus,
             self.rate_scale,
-            self.month
+            self.month,
+            self.mtbf_s
         )
     }
 }
@@ -229,6 +247,33 @@ mod tests {
         let mut g = grid();
         g.n_jobs = vec![0];
         assert!(g.validate().is_err());
+        let mut g = grid();
+        g.mtbfs.clear();
+        assert!(g.validate().is_err());
+        let mut g = grid();
+        g.mtbfs = vec![-5.0];
+        assert!(g.validate().is_err());
         assert!(grid().validate().is_ok());
+    }
+
+    #[test]
+    fn mtbf_axis_enumerates_and_applies() {
+        let mut g = grid();
+        g.mtbfs = vec![0.0, 1800.0];
+        assert_eq!(g.len(), 2 * 2 * 2 * 2 * 3);
+        let pts = g.points();
+        assert_eq!(pts.len(), g.len());
+        // mtbf varies faster than month, slower than seed
+        assert_eq!(pts[0].mtbf_s, 0.0);
+        assert_eq!(pts[3].mtbf_s, 1800.0);
+        assert_ne!(pts[0].cell_key(), pts[3].cell_key());
+        assert!(pts[0].cell_key().ends_with("/f0"));
+        assert!(pts[3].cell_key().ends_with("/f1800"));
+        let cfg0 = pts[0].config(&g.base);
+        let cfg1 = pts[3].config(&g.base);
+        assert!(!cfg0.faults.enabled());
+        assert_eq!(cfg1.faults.mtbf_s, 1800.0);
+        assert!(cfg1.faults.enabled());
+        assert!(cfg0.validate().is_ok() && cfg1.validate().is_ok());
     }
 }

@@ -27,6 +27,9 @@ pub mod runner;
 pub mod report;
 
 pub use grid::{month_profile, SweepGrid, SweepPoint};
-pub use report::{aggregate, sweep_table, to_csv, to_json, CellSummary};
+pub use report::{
+    aggregate, sweep_table, to_csv, to_json, to_json_canonical,
+    CellSummary,
+};
 pub use runner::{default_threads, run, run_parallel, PointResult,
                  SweepRun};

@@ -26,6 +26,14 @@ pub struct CellSummary {
     pub gpu_util: (f64, f64),
     pub makespan: (f64, f64),
     pub mean_slowdown: (f64, f64),
+    /// useful samples/s (rolled-back work excluded) — the churn metric
+    pub goodput: (f64, f64),
+    /// fraction of jobs meeting their SLO deadline
+    pub slo_attainment: (f64, f64),
+    /// total evictions across the cell's replicas
+    pub restarts: u64,
+    /// total node-failure events across the cell's replicas
+    pub node_failures: u64,
     /// total jobs that never completed across the cell's replicas —
     /// nonzero means the scenario silently truncated work and its
     /// JCT/throughput numbers are not comparable
@@ -70,6 +78,16 @@ pub fn aggregate(run: &SweepRun) -> Vec<CellSummary> {
                 gpu_util: col(&|p| p.result.avg_gpu_util),
                 makespan: col(&|p| p.result.makespan),
                 mean_slowdown: col(&|p| p.result.mean_slowdown),
+                goodput: col(&|p| p.result.goodput),
+                slo_attainment: col(&|p| p.result.slo_attainment),
+                restarts: pts
+                    .iter()
+                    .map(|p| p.result.restarts)
+                    .sum(),
+                node_failures: pts
+                    .iter()
+                    .map(|p| p.result.node_failures)
+                    .sum(),
                 incomplete: pts
                     .iter()
                     .map(|p| p.result.incomplete_jobs.len())
@@ -91,14 +109,16 @@ fn pm(v: (f64, f64), digits: usize) -> String {
 pub fn sweep_table(title: &str, cells: &[CellSummary]) -> Table {
     let mut t = Table::new(
         title,
-        &["scenario", "seeds", "thr (samples/s)", "mean JCT (s)",
-          "p99 JCT (s)", "GPU util", "slowdown", "incomplete"],
+        &["scenario", "seeds", "thr (samples/s)", "goodput",
+          "mean JCT (s)", "p99 JCT (s)", "GPU util", "slowdown",
+          "SLO", "restarts", "incomplete"],
     );
     for c in cells {
         t.row(&[
             c.key.clone(),
             c.n_seeds.to_string(),
             pm(c.throughput, 2),
+            pm(c.goodput, 2),
             pm(c.mean_jct, 0),
             pm(c.p99_jct, 0),
             format!(
@@ -111,6 +131,16 @@ pub fn sweep_table(title: &str, cells: &[CellSummary]) -> Table {
                 }
             ),
             pm(c.mean_slowdown, 3),
+            format!(
+                "{:.1}%{}",
+                c.slo_attainment.0 * 100.0,
+                if c.slo_attainment.1 > 0.0 {
+                    format!(" ±{:.1}", c.slo_attainment.1 * 100.0)
+                } else {
+                    String::new()
+                }
+            ),
+            c.restarts.to_string(),
             // warning column: jobs cut off before completion make the
             // cell's other metrics incomparable
             if c.incomplete == 0 {
@@ -129,9 +159,11 @@ pub fn to_csv(run: &SweepRun) -> String {
     let mut t = Table::new(
         "sweep",
         &["index", "policy", "n_jobs", "gpus", "rate_scale", "month",
-          "seed", "throughput", "mean_jct", "p99_jct", "gpu_util",
-          "makespan", "mean_slowdown", "sched_rounds", "events",
-          "probes", "completed", "incomplete"],
+          "mtbf_s", "seed", "throughput", "goodput", "mean_jct",
+          "p99_jct", "gpu_util", "makespan", "mean_slowdown",
+          "slo_attainment", "node_failures", "preemptions", "restarts",
+          "lost_step_time_s", "restore_delay_s", "sched_rounds",
+          "events", "probes", "completed", "incomplete"],
     );
     for p in &run.points {
         t.row(&[
@@ -141,13 +173,21 @@ pub fn to_csv(run: &SweepRun) -> String {
             p.point.gpus.to_string(),
             p.point.rate_scale.to_string(),
             p.point.month.to_string(),
+            p.point.mtbf_s.to_string(),
             p.point.seed.to_string(),
             format!("{:.6}", p.result.avg_throughput),
+            format!("{:.6}", p.result.goodput),
             format!("{:.6}", p.result.mean_jct),
             format!("{:.6}", p.result.p99_jct),
             format!("{:.6}", p.result.avg_gpu_util),
             format!("{:.6}", p.result.makespan),
             format!("{:.6}", p.result.mean_slowdown),
+            format!("{:.6}", p.result.slo_attainment),
+            p.result.node_failures.to_string(),
+            p.result.preemptions.to_string(),
+            p.result.restarts.to_string(),
+            format!("{:.6}", p.result.lost_step_time_s),
+            format!("{:.6}", p.result.restore_delay_s),
             p.result.sched_rounds.to_string(),
             p.result.events.to_string(),
             p.result.scheduler_probes.to_string(),
@@ -159,13 +199,28 @@ pub fn to_csv(run: &SweepRun) -> String {
 }
 
 /// Full machine-readable report: run metadata, per-point metrics, and
-/// per-scenario aggregates.
+/// per-scenario aggregates. Includes wall-clock timing and the thread
+/// count — see [`to_json_canonical`] for the determinism-comparable
+/// form.
 pub fn to_json(run: &SweepRun) -> Json {
+    to_json_with(run, true)
+}
+
+/// [`to_json`] minus every execution-dependent field (`wall_s` per
+/// point and total, `n_threads`): two runs of the same grid must
+/// produce *byte-identical* canonical JSON whatever the thread count —
+/// this is the form the golden-trace fixture and CI's `--threads 1`
+/// vs `--threads 8` diff pin down.
+pub fn to_json_canonical(run: &SweepRun) -> Json {
+    to_json_with(run, false)
+}
+
+fn to_json_with(run: &SweepRun, include_timing: bool) -> Json {
     let points: Vec<Json> = run
         .points
         .iter()
         .map(|p| {
-            Json::obj()
+            let mut j = Json::obj()
                 .set("index", p.point.index)
                 .set("label", p.point.label())
                 .set("policy", p.point.policy.slug())
@@ -173,19 +228,30 @@ pub fn to_json(run: &SweepRun) -> Json {
                 .set("gpus", p.point.gpus)
                 .set("rate_scale", p.point.rate_scale)
                 .set("month", p.point.month)
+                .set("mtbf_s", p.point.mtbf_s)
                 .set("seed", p.point.seed)
                 .set("throughput", p.result.avg_throughput)
+                .set("goodput", p.result.goodput)
                 .set("mean_jct", p.result.mean_jct)
                 .set("p99_jct", p.result.p99_jct)
                 .set("gpu_util", p.result.avg_gpu_util)
                 .set("makespan", p.result.makespan)
                 .set("mean_slowdown", p.result.mean_slowdown)
+                .set("slo_attainment", p.result.slo_attainment)
+                .set("node_failures", p.result.node_failures)
+                .set("preemptions", p.result.preemptions)
+                .set("restarts", p.result.restarts)
+                .set("lost_step_time_s", p.result.lost_step_time_s)
+                .set("restore_delay_s", p.result.restore_delay_s)
                 .set("sched_rounds", p.result.sched_rounds)
                 .set("events", p.result.events)
                 .set("scheduler_probes", p.result.scheduler_probes)
                 .set("completed", p.result.jct.len())
-                .set("incomplete", p.result.incomplete_jobs.len())
-                .set("wall_s", p.wall_s)
+                .set("incomplete", p.result.incomplete_jobs.len());
+            if include_timing {
+                j = j.set("wall_s", p.wall_s);
+            }
+            j
         })
         .collect();
     let cells: Vec<Json> = aggregate(run)
@@ -198,11 +264,15 @@ pub fn to_json(run: &SweepRun) -> Json {
                 .set("key", c.key.clone())
                 .set("n_seeds", c.n_seeds)
                 .set("throughput", ci(c.throughput))
+                .set("goodput", ci(c.goodput))
                 .set("mean_jct", ci(c.mean_jct))
                 .set("p99_jct", ci(c.p99_jct))
                 .set("gpu_util", ci(c.gpu_util))
                 .set("makespan", ci(c.makespan))
                 .set("mean_slowdown", ci(c.mean_slowdown))
+                .set("slo_attainment", ci(c.slo_attainment))
+                .set("restarts", c.restarts)
+                .set("node_failures", c.node_failures)
                 .set("incomplete", c.incomplete)
         })
         .collect();
@@ -211,13 +281,15 @@ pub fn to_json(run: &SweepRun) -> Json {
         .iter()
         .map(|p| p.result.scheduler_probes)
         .sum();
-    Json::obj()
+    let mut j = Json::obj()
         .set("n_points", run.points.len())
-        .set("n_threads", run.n_threads)
-        .set("wall_s", run.wall_s)
         .set("scheduler_probes", total_probes)
         .set("points", Json::Arr(points))
-        .set("cells", Json::Arr(cells))
+        .set("cells", Json::Arr(cells));
+    if include_timing {
+        j = j.set("n_threads", run.n_threads).set("wall_s", run.wall_s);
+    }
+    j
 }
 
 #[cfg(test)]
@@ -284,6 +356,65 @@ mod tests {
         let run = run_small();
         let t = sweep_table("demo", &aggregate(&run));
         let s = t.render();
-        assert!(s.contains("tlora/j8/g16/r2x/m1"), "{s}");
+        assert!(s.contains("tlora/j8/g16/r2x/m1/f0"), "{s}");
+    }
+
+    #[test]
+    fn canonical_json_carries_no_timing_fields() {
+        let run = run_small();
+        let full =
+            json::parse(&to_json(&run).to_string()).unwrap();
+        assert!(full.get("wall_s").is_some());
+        assert!(full.get("n_threads").is_some());
+        let canon =
+            json::parse(&to_json_canonical(&run).to_string()).unwrap();
+        assert!(canon.get("wall_s").is_none());
+        assert!(canon.get("n_threads").is_none());
+        for p in canon.get("points").unwrap().as_arr().unwrap() {
+            assert!(p.get("wall_s").is_none());
+            assert!(p.get("goodput").is_some());
+            assert!(p.get("slo_attainment").is_some());
+            assert!(p.get("mtbf_s").is_some());
+        }
+        // canonical output is reproducible byte-for-byte
+        let again = to_json_canonical(&runner::run(
+            &{
+                let mut g = SweepGrid::default();
+                g.policies = vec![Policy::TLora];
+                g.n_jobs = vec![8];
+                g.gpus = vec![16];
+                g.rate_scales = vec![2.0];
+                g.months = vec![1];
+                g.seeds = vec![3, 4];
+                g
+            },
+            1,
+        )
+        .unwrap());
+        assert_eq!(
+            to_json_canonical(&run).to_pretty(),
+            again.to_pretty()
+        );
+    }
+
+    #[test]
+    fn fault_free_cells_report_zero_churn_columns() {
+        let run = run_small();
+        let cells = aggregate(&run);
+        assert_eq!(cells[0].restarts, 0);
+        assert_eq!(cells[0].node_failures, 0);
+        assert!(cells[0].goodput.0 > 0.0);
+        assert!(
+            (0.0..=1.0).contains(&cells[0].slo_attainment.0),
+            "{}",
+            cells[0].slo_attainment.0
+        );
+        let csv = to_csv(&run);
+        let header = csv.lines().next().unwrap();
+        for col in
+            ["mtbf_s", "goodput", "slo_attainment", "restarts"]
+        {
+            assert!(header.contains(col), "{header}");
+        }
     }
 }

@@ -1,0 +1,288 @@
+//! Seeded failure-trace synthesis: the fault dimension of the
+//! workload.
+//!
+//! Production multi-tenant clusters churn — nodes fail and are
+//! repaired, spot capacity is reclaimed, priority tenants preempt. The
+//! paper's scheduler is built to react to exactly this kind of event
+//! stream (§3.4: regroup on arrivals/completions, reclaim resources
+//! elastically), so the simulator models churn as first-class workload
+//! input:
+//!
+//! * [`NodeFaultModel`] — a per-node alternating renewal process:
+//!   up-times are exponential with mean `mtbf_s`, down-times
+//!   exponential with mean `mttr_s`. Each node owns an independent
+//!   seeded RNG stream, so a node's failure/repair sequence is a pure
+//!   function of `(seed, node)` — it does not shift when the engine
+//!   interleaves draws across nodes, which keeps faulted sweeps
+//!   bit-deterministic across thread counts.
+//! * [`PreemptionModel`] — cluster-level Poisson preemptions at
+//!   `rate_per_s`, each targeting a uniformly drawn job id. Preempting
+//!   a job that is not currently placed is a no-op in the engine.
+//! * [`ScriptedFault`] — a deterministic injected fault for pinned
+//!   scenarios ("kill node 0 at t=100"); tests and benches thread a
+//!   script through `sim::EngineOptions::fault_script`.
+//! * [`synthesize_node_faults`] — materialize the renewal process up to
+//!   a horizon as a sorted script; its prefix is exactly what the
+//!   engine's lazy draws produce, which the module tests pin.
+
+use crate::util::f64_cmp;
+use crate::util::rng::Rng;
+
+/// Kind of an injected fault (mirrors the engine's event kinds without
+/// depending on `sim`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// `target` is a node index.
+    NodeFailure,
+    /// `target` is a node index.
+    NodeRecovery,
+    /// `target` is a job id.
+    Preemption,
+}
+
+/// One deterministic injected fault.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScriptedFault {
+    pub time: f64,
+    pub kind: FaultKind,
+    pub target: u64,
+}
+
+/// Salt folded into fault seeds so fault streams never alias the trace
+/// generator's streams for the same experiment seed.
+const FAULT_SALT: u64 = 0xFA17_7E57;
+
+/// Per-node MTBF/MTTR exponential renewal model with independent
+/// per-node RNG streams.
+#[derive(Debug)]
+pub struct NodeFaultModel {
+    mtbf_s: f64,
+    mttr_s: f64,
+    rngs: Vec<Rng>,
+}
+
+impl NodeFaultModel {
+    /// `mtbf_s` must be > 0 (a zero MTBF means "faults disabled" and
+    /// callers should not build the model at all); `mttr_s` must be
+    /// > 0 so every failure schedules a recovery.
+    pub fn new(
+        mtbf_s: f64,
+        mttr_s: f64,
+        n_nodes: usize,
+        seed: u64,
+    ) -> NodeFaultModel {
+        assert!(mtbf_s > 0.0 && mttr_s > 0.0, "mtbf/mttr must be > 0");
+        let rngs = (0..n_nodes)
+            .map(|n| {
+                Rng::new(
+                    seed ^ FAULT_SALT
+                        ^ (n as u64 + 1)
+                            .wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                )
+            })
+            .collect();
+        NodeFaultModel {
+            mtbf_s,
+            mttr_s,
+            rngs,
+        }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.rngs.len()
+    }
+
+    /// Draw the next up-time span for `node` (seconds until its next
+    /// failure, measured from now / from recovery).
+    pub fn uptime(&mut self, node: usize) -> f64 {
+        self.rngs[node].exponential(1.0 / self.mtbf_s)
+    }
+
+    /// Draw the repair span for `node` (seconds from failure to
+    /// recovery).
+    pub fn downtime(&mut self, node: usize) -> f64 {
+        self.rngs[node].exponential(1.0 / self.mttr_s)
+    }
+}
+
+/// Cluster-level Poisson preemption stream over an explicit job-id
+/// catalog.
+#[derive(Debug)]
+pub struct PreemptionModel {
+    rate_per_s: f64,
+    job_ids: Vec<u64>,
+    rng: Rng,
+}
+
+impl PreemptionModel {
+    /// `rate_per_s` must be > 0 and `job_ids` non-empty.
+    pub fn new(
+        rate_per_s: f64,
+        mut job_ids: Vec<u64>,
+        seed: u64,
+    ) -> PreemptionModel {
+        assert!(rate_per_s > 0.0, "preemption rate must be > 0");
+        assert!(!job_ids.is_empty(), "preemption needs target jobs");
+        // canonical order: the stream must not depend on caller order
+        job_ids.sort_unstable();
+        PreemptionModel {
+            rate_per_s,
+            job_ids,
+            rng: Rng::new(seed ^ FAULT_SALT ^ 0x5B07_F00D),
+        }
+    }
+
+    /// Draw the next preemption: (seconds from now, target job id).
+    pub fn next(&mut self) -> (f64, u64) {
+        let dt = self.rng.exponential(self.rate_per_s);
+        let target = *self.rng.choice(&self.job_ids);
+        (dt, target)
+    }
+}
+
+/// Materialize the per-node renewal process as a sorted fault script
+/// covering `[0, horizon_s)`. Failure times are measured from t=0;
+/// each failure is followed by its recovery (the recovery may land
+/// beyond the horizon — it is included so the script never leaves a
+/// node down forever).
+pub fn synthesize_node_faults(
+    mtbf_s: f64,
+    mttr_s: f64,
+    n_nodes: usize,
+    seed: u64,
+    horizon_s: f64,
+) -> Vec<ScriptedFault> {
+    let mut model = NodeFaultModel::new(mtbf_s, mttr_s, n_nodes, seed);
+    let mut out = vec![];
+    for node in 0..n_nodes {
+        let mut t = model.uptime(node);
+        while t < horizon_s {
+            out.push(ScriptedFault {
+                time: t,
+                kind: FaultKind::NodeFailure,
+                target: node as u64,
+            });
+            let rec = t + model.downtime(node);
+            out.push(ScriptedFault {
+                time: rec,
+                kind: FaultKind::NodeRecovery,
+                target: node as u64,
+            });
+            t = rec + model.uptime(node);
+        }
+    }
+    out.sort_by(|a, b| {
+        f64_cmp(a.time, b.time).then(a.target.cmp(&b.target))
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn node_streams_deterministic_and_independent() {
+        let mut a = NodeFaultModel::new(1000.0, 100.0, 4, 7);
+        let mut b = NodeFaultModel::new(1000.0, 100.0, 4, 7);
+        for node in 0..4 {
+            for _ in 0..20 {
+                assert_eq!(a.uptime(node), b.uptime(node));
+                assert_eq!(a.downtime(node), b.downtime(node));
+            }
+        }
+        // a node's stream is untouched by draws on other nodes
+        let mut c = NodeFaultModel::new(1000.0, 100.0, 4, 7);
+        let mut d = NodeFaultModel::new(1000.0, 100.0, 4, 7);
+        for _ in 0..50 {
+            let _ = d.uptime(0);
+            let _ = d.downtime(0);
+        }
+        assert_eq!(c.uptime(3), d.uptime(3));
+    }
+
+    #[test]
+    fn uptime_mean_tracks_mtbf() {
+        let mut m = NodeFaultModel::new(500.0, 50.0, 1, 3);
+        let n = 20_000;
+        let mean_up: f64 =
+            (0..n).map(|_| m.uptime(0)).sum::<f64>() / n as f64;
+        let mean_down: f64 =
+            (0..n).map(|_| m.downtime(0)).sum::<f64>() / n as f64;
+        assert!((mean_up - 500.0).abs() < 25.0, "{mean_up}");
+        assert!((mean_down - 50.0).abs() < 2.5, "{mean_down}");
+    }
+
+    #[test]
+    fn synthesized_script_alternates_per_node_and_sorts() {
+        let script =
+            synthesize_node_faults(300.0, 60.0, 3, 11, 10_000.0);
+        assert!(!script.is_empty());
+        // globally time-sorted
+        for w in script.windows(2) {
+            assert!(w[0].time <= w[1].time);
+        }
+        // per node: failure/recovery strictly alternate, times increase
+        for node in 0..3u64 {
+            let evs: Vec<&ScriptedFault> = script
+                .iter()
+                .filter(|f| f.target == node)
+                .collect();
+            let mut last = 0.0;
+            for (i, f) in evs.iter().enumerate() {
+                let want = if i % 2 == 0 {
+                    FaultKind::NodeFailure
+                } else {
+                    FaultKind::NodeRecovery
+                };
+                assert_eq!(f.kind, want, "node {node} event {i}");
+                assert!(f.time >= last);
+                last = f.time;
+            }
+            // every failure has its recovery in the script
+            assert_eq!(evs.len() % 2, 0, "node {node} left down");
+        }
+    }
+
+    #[test]
+    fn synthesis_matches_lazy_model_draws() {
+        // the engine draws lazily (uptime -> downtime -> uptime ...);
+        // the synthesized script must be exactly that sequence
+        let script =
+            synthesize_node_faults(400.0, 40.0, 2, 5, 5_000.0);
+        let mut model = NodeFaultModel::new(400.0, 40.0, 2, 5);
+        for node in 0..2u64 {
+            let evs: Vec<&ScriptedFault> = script
+                .iter()
+                .filter(|f| f.target == node)
+                .collect();
+            let mut t = model.uptime(node as usize);
+            let mut i = 0;
+            while t < 5_000.0 {
+                assert_eq!(evs[i].time, t, "failure {i} node {node}");
+                let rec = t + model.downtime(node as usize);
+                assert_eq!(
+                    evs[i + 1].time,
+                    rec,
+                    "recovery {i} node {node}"
+                );
+                t = rec + model.uptime(node as usize);
+                i += 2;
+            }
+            assert_eq!(i, evs.len());
+        }
+    }
+
+    #[test]
+    fn preemption_stream_deterministic_and_order_free() {
+        let mut a = PreemptionModel::new(0.01, vec![3, 1, 2], 9);
+        let mut b = PreemptionModel::new(0.01, vec![1, 2, 3], 9);
+        for _ in 0..50 {
+            assert_eq!(a.next(), b.next());
+        }
+        let mut c = PreemptionModel::new(0.01, vec![1, 2, 3], 9);
+        let (dt, target) = c.next();
+        assert!(dt > 0.0);
+        assert!([1, 2, 3].contains(&target));
+    }
+}

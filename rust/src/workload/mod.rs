@@ -7,9 +7,17 @@
 //! published shape (Poisson/bursty arrivals with month-over-month
 //! concurrency scaling, lognormal service durations, power-of-two GPU
 //! gangs) and [`trace`] loads real CSVs with the same schema if provided.
+//! [`faults`] adds the churn dimension: seeded per-node MTBF/MTTR
+//! failure streams, Poisson preemptions, and deterministic injected
+//! fault scripts.
 
+pub mod faults;
 pub mod trace;
 
+pub use faults::{
+    synthesize_node_faults, FaultKind, NodeFaultModel, PreemptionModel,
+    ScriptedFault,
+};
 pub use trace::{TraceGenerator, TraceProfile, load_csv, save_csv};
 
 /// One LoRA fine-tuning job (fixed at submission, §A.1).

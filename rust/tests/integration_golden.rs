@@ -1,0 +1,106 @@
+//! Golden-trace regression: a small pinned *faulted* sweep whose full
+//! canonical JSON output is committed as a diffable fixture, turning
+//! the determinism contract into an artifact a code review can read.
+//!
+//! The pinned grid (keep in sync with `golden_grid()` below):
+//!
+//! ```text
+//! tlora sweep --policies tlora,megatron --n-jobs 10 --gpus 16 \
+//!             --rate-scales 2 --months 1 --mtbfs 0,900 --seeds 7,8 \
+//!             --threads 8 --canonical \
+//!             --out-json tests/fixtures/golden_sweep.json
+//! ```
+//!
+//! Regenerate the fixture with exactly that invocation (from `rust/`)
+//! after any *intended* change to simulator numerics, then commit the
+//! diff. The canonical JSON form strips wall-clock and thread-count
+//! fields, so the bytes are a pure function of the grid.
+//!
+//! Bless protocol: when the fixture file is missing or still holds the
+//! `UNBLESSED` sentinel, the test writes the freshly computed output
+//! into it and passes (first bootstrap on a machine with a toolchain);
+//! once a real fixture is committed, any byte difference fails.
+
+use tlora::config::Policy;
+use tlora::sweep::{run, to_json_canonical, SweepGrid};
+
+fn golden_grid() -> SweepGrid {
+    let mut g = SweepGrid::default();
+    g.policies = vec![Policy::TLora, Policy::Megatron];
+    g.n_jobs = vec![10];
+    g.gpus = vec![16];
+    g.rate_scales = vec![2.0];
+    g.months = vec![1];
+    g.mtbfs = vec![0.0, 900.0];
+    g.seeds = vec![7, 8];
+    g
+}
+
+fn fixture_path() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures/golden_sweep.json")
+}
+
+#[test]
+fn golden_faulted_sweep_is_bit_identical_across_threads_and_runs() {
+    let g = golden_grid();
+    let serial = run(&g, 1).unwrap();
+    let parallel = run(&g, 8).unwrap();
+    let canon = to_json_canonical(&serial).to_pretty();
+    let canon_par = to_json_canonical(&parallel).to_pretty();
+    assert_eq!(
+        canon, canon_par,
+        "canonical sweep JSON differs between --threads 1 and 8"
+    );
+
+    // structural pins on the output itself (hold whether or not the
+    // fixture is blessed yet)
+    let parsed = tlora::util::json::parse(&canon).unwrap();
+    let points = parsed.get("points").unwrap().as_arr().unwrap();
+    assert_eq!(points.len(), g.len());
+    assert_eq!(
+        points[0].get("label").unwrap().as_str().unwrap(),
+        "tlora/j10/g16/r2x/m1/f0/s7"
+    );
+    let mut churned = 0u64;
+    for p in points {
+        let completed =
+            p.get("completed").unwrap().as_usize().unwrap();
+        let incomplete =
+            p.get("incomplete").unwrap().as_usize().unwrap();
+        assert_eq!(completed + incomplete, 10, "job conservation");
+        assert_eq!(incomplete, 0, "golden scenario truncated work");
+        let mtbf = p.get("mtbf_s").unwrap().as_f64().unwrap();
+        let failures =
+            p.get("node_failures").unwrap().as_i64().unwrap() as u64;
+        if mtbf == 0.0 {
+            assert_eq!(failures, 0, "churn in a fault-free cell");
+        } else {
+            churned += failures;
+        }
+    }
+    assert!(churned > 0, "no faulted cell saw a single failure");
+
+    // fixture comparison / first-run bless
+    let path = fixture_path();
+    let blessed = std::fs::read_to_string(&path)
+        .ok()
+        .filter(|s| !s.contains("UNBLESSED"));
+    match blessed {
+        Some(expect) => assert_eq!(
+            canon, expect,
+            "sweep output diverged from the committed golden \
+             fixture; if the numeric change is intended, regenerate \
+             it (see the header of this file) and commit the diff"
+        ),
+        None => {
+            std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+            std::fs::write(&path, &canon).unwrap();
+            eprintln!(
+                "golden fixture blessed at {}; commit it to pin the \
+                 determinism contract across checkouts",
+                path.display()
+            );
+        }
+    }
+}

@@ -64,6 +64,19 @@ fn assert_bit_identical(a: &SimResult, b: &SimResult, label: &str) {
         a.grouping_ratio, b.grouping_ratio,
         "{label}: grouping ratio"
     );
+    assert_eq!(a.node_failures, b.node_failures, "{label}: failures");
+    assert_eq!(a.preemptions, b.preemptions, "{label}: preemptions");
+    assert_eq!(a.restarts, b.restarts, "{label}: restarts");
+    assert!(
+        a.lost_step_time_s == b.lost_step_time_s
+            && a.restore_delay_s == b.restore_delay_s,
+        "{label}: churn accounting"
+    );
+    assert!(a.goodput == b.goodput, "{label}: goodput");
+    assert!(
+        a.slo_attainment == b.slo_attainment,
+        "{label}: slo attainment"
+    );
 }
 
 #[test]
@@ -87,6 +100,34 @@ fn consecutive_parallel_runs_bitwise_identical() {
     for (a, b) in first.points.iter().zip(&second.points) {
         assert_eq!(a.point, b.point);
         assert_bit_identical(&a.result, &b.result, &a.point.label());
+    }
+}
+
+#[test]
+fn faulted_grid_is_bit_identical_across_thread_counts() {
+    // the MTBF axis rides the same determinism contract: per-node
+    // fault streams are pure functions of (seed, node), so a faulted
+    // sweep must not depend on worker count either
+    let mut g = small_grid();
+    g.rate_scales = vec![2.0];
+    g.mtbfs = vec![0.0, 900.0];
+    let serial = run(&g, 1).unwrap();
+    let parallel = run(&g, 4).unwrap();
+    let mut churn = 0u64;
+    for (a, b) in serial.points.iter().zip(&parallel.points) {
+        assert_eq!(a.point, b.point);
+        assert_bit_identical(&a.result, &b.result, &a.point.label());
+        if a.point.mtbf_s == 0.0 {
+            assert_eq!(a.result.node_failures, 0, "{}", a.point.label());
+        } else {
+            churn += a.result.node_failures;
+        }
+    }
+    assert!(churn > 0, "faulted cells produced no churn");
+    // each faulted cell equals a direct simulate of its config
+    for p in serial.points.iter().filter(|p| p.point.mtbf_s > 0.0) {
+        let direct = simulate(&p.point.config(&g.base));
+        assert_bit_identical(&p.result, &direct, &p.point.label());
     }
 }
 
