@@ -7,7 +7,7 @@
 use crate::config::Policy;
 use crate::scheduler::grouping::{schedule, GroupState, ScheduleOutcome};
 use crate::scheduler::predictor::{GroupPerf, Predictor};
-use crate::scheduler::{Candidate, PolicyHooks};
+use crate::scheduler::{Candidate, NodeView, PolicyHooks};
 use crate::config::SchedulerConfig;
 use crate::workload::JobSpec;
 
@@ -127,10 +127,20 @@ impl PolicyHooks for TloraHooks {
         self.aimd
     }
 
+    fn straggler_aware(&self) -> bool {
+        // tLoRA's scheduler is residual-capacity-aware (§3.4): a
+        // suspected straggler has *negative* effective residual, so
+        // detection slots naturally into its grouping decisions.
+        // (Whether detection actually runs is gated by
+        // `stragglers.detect` in the engine.)
+        true
+    }
+
     fn elastic_admit(
         &self,
         job: &JobSpec,
         groups: &[(GroupState, GroupPerf)],
+        view: &NodeView,
         predictor: &mut Predictor,
         cfg: &SchedulerConfig,
     ) -> Option<usize> {
@@ -143,6 +153,12 @@ impl PolicyHooks for TloraHooks {
             if g.jobs.len() >= cfg.max_group_size
                 || g.jobs[0].base_model != job.base_model
             {
+                continue;
+            }
+            // never place a new rider on a suspected straggler: the
+            // predictor's gain estimate assumes nominal node speed,
+            // and a degraded gang drags the rider down with it
+            if view.suspects_alloc(&g.alloc) {
                 continue;
             }
             let mut jobs2 = g.jobs.clone();
@@ -192,11 +208,14 @@ impl PolicyHooks for MloraHooks {
         &self,
         job: &JobSpec,
         groups: &[(GroupState, GroupPerf)],
+        _view: &NodeView,
         predictor: &mut Predictor,
         cfg: &SchedulerConfig,
     ) -> Option<usize> {
         // first group whose memory fits (FIFO), regardless of the
-        // slowdown it inflicts on the members
+        // slowdown it inflicts on the members — and oblivious to
+        // stragglers (no `straggler_aware`): mLoRA packs onto a
+        // degraded node as happily as onto a healthy one
         for (gi, (g, _)) in groups.iter().enumerate() {
             if g.jobs.len() >= cfg.max_group_size
                 || g.jobs[0].base_model != job.base_model
@@ -234,6 +253,7 @@ impl PolicyHooks for MegatronHooks {
         &self,
         _job: &JobSpec,
         _groups: &[(GroupState, GroupPerf)],
+        _view: &NodeView,
         _predictor: &mut Predictor,
         _cfg: &SchedulerConfig,
     ) -> Option<usize> {
@@ -408,7 +428,13 @@ mod tests {
             singleton_groups(vec![job(0, 8, 4, 1)]);
         let hooks = TloraHooks { aimd: true };
         let queued = job(1, 4, 2, 1);
-        let gi = hooks.elastic_admit(&queued, &groups, &mut pred, &cfg);
+        let gi = hooks.elastic_admit(
+            &queued,
+            &groups,
+            &NodeView::oblivious(),
+            &mut pred,
+            &cfg,
+        );
         assert_eq!(gi, Some(0), "complementary absorption refused");
         // and the committed merge respects the existing member's Δ^max
         let (g, perf) = &groups[0];
@@ -434,7 +460,13 @@ mod tests {
         let mut heavy = job(1, 16, 8, 1);
         heavy.seq_len = 1024;
         assert_eq!(
-            hooks.elastic_admit(&heavy, &groups, &mut pred, &cfg),
+            hooks.elastic_admit(
+                &heavy,
+                &groups,
+                &NodeView::oblivious(),
+                &mut pred,
+                &cfg
+            ),
             None,
             "Δ^max guard must veto the absorption"
         );
@@ -448,9 +480,71 @@ mod tests {
         let mut other = job(1, 4, 2, 1);
         other.base_model = "qwen3-8b".into();
         assert_eq!(
-            hooks.elastic_admit(&other, &groups, &mut pred, &cfg),
+            hooks.elastic_admit(
+                &other,
+                &groups,
+                &NodeView::oblivious(),
+                &mut pred,
+                &cfg
+            ),
             None
         );
+    }
+
+    #[test]
+    fn tlora_elastic_admit_refuses_riders_on_suspected_stragglers() {
+        use crate::scheduler::NodeSpeedEstimator;
+        // same complementary pair that absorbs under an oblivious
+        // view — but the incumbent group's node is a suspected
+        // straggler, so detection-aware tLoRA keeps the rider queued
+        let (groups, mut pred, cfg) =
+            singleton_groups(vec![job(0, 8, 4, 1)]);
+        let hooks = TloraHooks { aimd: true };
+        assert!(hooks.straggler_aware());
+        let queued = job(1, 4, 2, 1);
+        let node = groups[0].0.alloc.gpus[0].node;
+        let mut est = NodeSpeedEstimator::new(node + 1, 0.5);
+        for _ in 0..50 {
+            est.observe_group(&[node], 3.0, 1.0);
+        }
+        let view = NodeView::new(&est, 1.5);
+        assert!(view.suspected(node));
+        assert_eq!(
+            hooks.elastic_admit(
+                &queued,
+                &groups,
+                &view,
+                &mut pred,
+                &cfg
+            ),
+            None,
+            "rider placed on a suspected straggler"
+        );
+        // and the same call with an oblivious view still absorbs
+        assert_eq!(
+            hooks.elastic_admit(
+                &queued,
+                &groups,
+                &NodeView::oblivious(),
+                &mut pred,
+                &cfg
+            ),
+            Some(0)
+        );
+    }
+
+    #[test]
+    fn baselines_stay_straggler_oblivious() {
+        assert!(!MloraHooks { aimd: false }.straggler_aware());
+        assert!(!MloraHooks { aimd: true }.straggler_aware());
+        assert!(!MegatronHooks.straggler_aware());
+        for p in Policy::all() {
+            assert_eq!(
+                hooks_for(p).straggler_aware(),
+                p.uses_tlora_scheduler(),
+                "{p:?}"
+            );
+        }
     }
 
     #[test]
@@ -467,7 +561,13 @@ mod tests {
         let mut heavy = job(1, 16, 8, 1);
         heavy.seq_len = 1024;
         assert_eq!(
-            hooks.elastic_admit(&heavy, &groups, &mut pred, &cfg),
+            hooks.elastic_admit(
+                &heavy,
+                &groups,
+                &NodeView::oblivious(),
+                &mut pred,
+                &cfg
+            ),
             Some(0)
         );
     }
@@ -480,6 +580,7 @@ mod tests {
             MegatronHooks.elastic_admit(
                 &job(1, 4, 2, 1),
                 &groups,
+                &NodeView::oblivious(),
                 &mut pred,
                 &cfg
             ),

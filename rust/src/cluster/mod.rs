@@ -155,7 +155,11 @@ impl ClusterSpec {
 /// cheap bandwidth tier). Tracks node health: down nodes keep their
 /// free-list bookkeeping (releases still land there) but are excluded
 /// from every allocation path until [`Allocator::set_down`] marks them
-/// up again.
+/// up again. Also tracks per-node *speed* multipliers (the straggler
+/// fault mode): a degraded node stays fully allocatable — degradation
+/// is a throughput property, not a capacity one — and the simulator
+/// prices every group touching it at the slowest member node's rate
+/// ([`Allocator::alloc_speed`]).
 #[derive(Debug, Clone)]
 pub struct Allocator {
     spec: ClusterSpec,
@@ -163,6 +167,9 @@ pub struct Allocator {
     free: Vec<Vec<usize>>,
     /// down[node] = node is failed; its GPUs are unallocatable
     down: Vec<bool>,
+    /// speed[node] = throughput multiplier (1.0 healthy; a straggler
+    /// episode samples a value in (0, 1))
+    speed: Vec<f64>,
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -202,7 +209,13 @@ impl Allocator {
             .map(|_| (0..spec.gpus_per_node).rev().collect())
             .collect();
         let down = vec![false; spec.n_nodes];
-        Allocator { spec, free, down }
+        let speed = vec![1.0; spec.n_nodes];
+        Allocator {
+            spec,
+            free,
+            down,
+            speed,
+        }
     }
 
     pub fn spec(&self) -> &ClusterSpec {
@@ -235,6 +248,70 @@ impl Allocator {
 
     pub fn is_down(&self, node: usize) -> bool {
         self.down[node]
+    }
+
+    /// Set a node's throughput multiplier (straggler degrade/restore).
+    /// Must be > 0: a node at speed 0 is a failure, not a straggler.
+    pub fn set_speed(&mut self, node: usize, speed: f64) {
+        assert!(speed > 0.0, "node speed must be > 0, got {speed}");
+        self.speed[node] = speed;
+    }
+
+    pub fn node_speed(&self, node: usize) -> f64 {
+        self.speed[node]
+    }
+
+    /// Effective speed of a gang allocation: the *slowest* node it
+    /// touches — a fused group is gang-synchronous, so one degraded
+    /// member node paces every step (1.0 for an empty allocation).
+    pub fn alloc_speed(&self, alloc: &Allocation) -> f64 {
+        alloc
+            .gpus
+            .iter()
+            .map(|g| self.speed[g.node])
+            .fold(1.0, f64::min)
+    }
+
+    /// Free GPUs on nodes that are neither down nor flagged in
+    /// `avoid` — the capacity [`Allocator::allocate_avoiding`] can
+    /// hand out without touching a suspected straggler.
+    pub fn available_gpus_avoiding(&self, avoid: &[bool]) -> usize {
+        self.free
+            .iter()
+            .enumerate()
+            .filter(|(node, _)| {
+                !self.down[*node]
+                    && !avoid.get(*node).copied().unwrap_or(false)
+            })
+            .map(|(_, f)| f.len())
+            .sum()
+    }
+
+    /// [`Allocator::allocate`], preferring nodes not flagged in
+    /// `avoid` (suspected stragglers): first try the allocation with
+    /// avoided nodes treated as down; if that cannot be satisfied,
+    /// fall back to the ordinary path — a slow GPU still beats no GPU.
+    /// With an all-false `avoid` this is *exactly* `allocate` (the
+    /// straggler-free differential fixture depends on that).
+    pub fn allocate_avoiding(
+        &mut self,
+        n: usize,
+        avoid: &[bool],
+    ) -> Option<Allocation> {
+        if avoid.iter().any(|&a| a) {
+            let saved = self.down.clone();
+            for (node, &a) in avoid.iter().enumerate() {
+                if a && node < self.down.len() {
+                    self.down[node] = true;
+                }
+            }
+            let got = self.allocate(n);
+            self.down = saved;
+            if got.is_some() {
+                return got;
+            }
+        }
+        self.allocate(n)
     }
 
     pub fn total_gpus(&self) -> usize {
@@ -476,6 +553,69 @@ mod tests {
         a.set_down(node, false);
         assert_eq!(a.available_gpus(), 16);
         assert!(a.allocate(16).is_some());
+    }
+
+    #[test]
+    fn node_speeds_default_healthy_and_bottleneck_allocations() {
+        let mut a = Allocator::new(spec4x4());
+        for node in 0..4 {
+            assert_eq!(a.node_speed(node), 1.0);
+        }
+        a.set_speed(1, 0.25);
+        assert_eq!(a.node_speed(1), 0.25);
+        let single = Allocation {
+            gpus: vec![GpuId { node: 0, idx: 0 }],
+        };
+        assert_eq!(a.alloc_speed(&single), 1.0);
+        let spanning = Allocation {
+            gpus: vec![
+                GpuId { node: 0, idx: 0 },
+                GpuId { node: 1, idx: 0 },
+                GpuId { node: 2, idx: 0 },
+            ],
+        };
+        // gang-synchronous: the slowest node paces the whole gang
+        assert_eq!(a.alloc_speed(&spanning), 0.25);
+        a.set_speed(1, 1.0);
+        assert_eq!(a.alloc_speed(&spanning), 1.0);
+        // a degraded node stays fully allocatable
+        a.set_speed(1, 0.1);
+        assert_eq!(a.available_gpus(), 16);
+        assert!(a.allocate(16).is_some());
+    }
+
+    #[test]
+    fn allocate_avoiding_prefers_healthy_then_falls_back() {
+        let mut a = Allocator::new(spec4x4());
+        let avoid = [true, false, false, false];
+        assert_eq!(a.available_gpus_avoiding(&avoid), 12);
+        // fits on unflagged nodes: never touches node 0
+        for _ in 0..3 {
+            let alloc = a.allocate_avoiding(4, &avoid).unwrap();
+            assert!(alloc.gpus.iter().all(|g| g.node != 0));
+        }
+        // only node 0 is left: fall back rather than starve
+        assert_eq!(a.available_gpus_avoiding(&avoid), 0);
+        let alloc = a.allocate_avoiding(2, &avoid).unwrap();
+        assert!(alloc.gpus.iter().all(|g| g.node == 0));
+        // but a *down* node is never a fallback
+        let mut b = Allocator::new(spec4x4());
+        b.set_down(0, true);
+        assert!(b
+            .allocate_avoiding(16, &[true, false, false, false])
+            .is_none());
+    }
+
+    #[test]
+    fn allocate_avoiding_all_false_matches_allocate_exactly() {
+        let mut a = Allocator::new(spec4x4());
+        let mut b = Allocator::new(spec4x4());
+        let avoid = [false; 4];
+        for n in [2usize, 4, 6, 1, 3] {
+            let x = a.allocate(n);
+            let y = b.allocate_avoiding(n, &avoid);
+            assert_eq!(x, y, "n={n}");
+        }
     }
 
     #[test]

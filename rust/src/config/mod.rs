@@ -219,6 +219,118 @@ impl FaultConfig {
     }
 }
 
+/// Straggler (degraded-node) scenario knobs: seeded slow-node episodes
+/// plus the detection machinery tLoRA's scheduler uses to route around
+/// them (`scheduler::NodeSpeedEstimator`). Oblivious baselines ignore
+/// every `detect_*` knob.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StragglerConfig {
+    /// Per-node mean time between straggler episodes in seconds
+    /// (exponential). 0 disables the seeded straggler model entirely
+    /// (scripted stragglers via `EngineOptions::straggler_script`
+    /// still apply).
+    pub mtbs_s: f64,
+    /// Mean degraded-span duration in seconds (exponential). Must be
+    /// > 0 whenever `mtbs_s` > 0.
+    pub mtts_s: f64,
+    /// Episode severity bounds: the degraded node's speed multiplier
+    /// is drawn uniformly from `[severity_min, severity_max]`,
+    /// requiring `0 < min <= max < 1`.
+    pub severity_min: f64,
+    pub severity_max: f64,
+    /// Straggler detection on/off for detection-capable policies
+    /// (`PolicyHooks::straggler_aware`). Off = even tLoRA runs
+    /// oblivious — the control arm of the detection-vs-oblivious
+    /// comparison.
+    pub detect: bool,
+    /// EWMA weight per observed step for the per-node slowdown
+    /// estimate, in (0, 1]. Smaller = smoother but later detection —
+    /// this is the detection-lag knob.
+    pub detect_alpha: f64,
+    /// A node is *suspected* (no new placements or riders) when its
+    /// estimated slowdown exceeds this factor (> 1).
+    pub detect_threshold: f64,
+    /// Jobs allocated on a node whose estimated slowdown exceeds this
+    /// factor are migrated off it (evicted with the usual
+    /// checkpoint-restore cost and re-placed on healthy nodes). Must
+    /// be >= `detect_threshold`.
+    pub migrate_threshold: f64,
+    /// Forgiveness time constant (seconds, > 0): a node that produces
+    /// *no* observations over an interval `dt` has its estimate pulled
+    /// toward healthy by `exp(-dt / rehab_tau_s)`. Without this, an
+    /// avoided node could never be exonerated — suspicion suppresses
+    /// the very placements whose observations would clear it.
+    pub rehab_tau_s: f64,
+}
+
+impl Default for StragglerConfig {
+    fn default() -> Self {
+        StragglerConfig {
+            mtbs_s: 0.0,
+            mtts_s: 900.0,
+            severity_min: 0.2,
+            severity_max: 0.5,
+            detect: true,
+            detect_alpha: 0.08,
+            detect_threshold: 1.25,
+            migrate_threshold: 1.6,
+            rehab_tau_s: 600.0,
+        }
+    }
+}
+
+impl StragglerConfig {
+    /// Is the seeded straggler model active?
+    pub fn enabled(&self) -> bool {
+        self.mtbs_s > 0.0
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.mtbs_s < 0.0 {
+            return Err("stragglers: mtbs_s must be >= 0".into());
+        }
+        if self.mtbs_s > 0.0 && self.mtts_s <= 0.0 {
+            return Err(
+                "stragglers: mtts_s must be > 0 with episodes on"
+                    .into(),
+            );
+        }
+        if !(self.severity_min > 0.0
+            && self.severity_min <= self.severity_max
+            && self.severity_max < 1.0)
+        {
+            return Err(
+                "stragglers: severity bounds must satisfy \
+                 0 < min <= max < 1"
+                    .into(),
+            );
+        }
+        if !(self.detect_alpha > 0.0 && self.detect_alpha <= 1.0) {
+            return Err(
+                "stragglers: detect_alpha must be in (0,1]".into()
+            );
+        }
+        if self.detect_threshold <= 1.0 {
+            return Err(
+                "stragglers: detect_threshold must be > 1".into()
+            );
+        }
+        if self.migrate_threshold < self.detect_threshold {
+            return Err(
+                "stragglers: migrate_threshold must be >= \
+                 detect_threshold"
+                    .into(),
+            );
+        }
+        if self.rehab_tau_s <= 0.0 {
+            return Err(
+                "stragglers: rehab_tau_s must be > 0".into()
+            );
+        }
+        Ok(())
+    }
+}
+
 /// Full experiment configuration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ExperimentConfig {
@@ -230,6 +342,7 @@ pub struct ExperimentConfig {
     pub scheduler: SchedulerConfig,
     pub aimd: AimdConfig,
     pub faults: FaultConfig,
+    pub stragglers: StragglerConfig,
     /// global concurrency cap (§A.1: 128 runnable jobs)
     pub max_concurrent_jobs: usize,
 }
@@ -245,6 +358,7 @@ impl Default for ExperimentConfig {
             scheduler: SchedulerConfig::default(),
             aimd: AimdConfig::default(),
             faults: FaultConfig::default(),
+            stragglers: StragglerConfig::default(),
             max_concurrent_jobs: 128,
         }
     }
@@ -274,6 +388,7 @@ impl ExperimentConfig {
             return Err("trace rate must be positive".into());
         }
         self.faults.validate()?;
+        self.stragglers.validate()?;
         Ok(())
     }
 
@@ -310,6 +425,25 @@ impl ExperimentConfig {
                     )
                     .set("ckpt_read_bw", self.faults.ckpt_read_bw)
                     .set("slo_factor", self.faults.slo_factor),
+            )
+            .set(
+                "stragglers",
+                Json::obj()
+                    .set("mtbs_s", self.stragglers.mtbs_s)
+                    .set("mtts_s", self.stragglers.mtts_s)
+                    .set("severity_min", self.stragglers.severity_min)
+                    .set("severity_max", self.stragglers.severity_max)
+                    .set("detect", self.stragglers.detect)
+                    .set("detect_alpha", self.stragglers.detect_alpha)
+                    .set(
+                        "detect_threshold",
+                        self.stragglers.detect_threshold,
+                    )
+                    .set(
+                        "migrate_threshold",
+                        self.stragglers.migrate_threshold,
+                    )
+                    .set("rehab_tau_s", self.stragglers.rehab_tau_s),
             )
     }
 
@@ -392,6 +526,47 @@ impl ExperimentConfig {
             if let Some(v) = f.get("slo_factor").and_then(Json::as_f64)
             {
                 self.faults.slo_factor = v;
+            }
+        }
+        if let Some(s) = j.get("stragglers") {
+            if let Some(v) = s.get("mtbs_s").and_then(Json::as_f64) {
+                self.stragglers.mtbs_s = v;
+            }
+            if let Some(v) = s.get("mtts_s").and_then(Json::as_f64) {
+                self.stragglers.mtts_s = v;
+            }
+            if let Some(v) =
+                s.get("severity_min").and_then(Json::as_f64)
+            {
+                self.stragglers.severity_min = v;
+            }
+            if let Some(v) =
+                s.get("severity_max").and_then(Json::as_f64)
+            {
+                self.stragglers.severity_max = v;
+            }
+            if let Some(v) = s.get("detect").and_then(Json::as_bool) {
+                self.stragglers.detect = v;
+            }
+            if let Some(v) =
+                s.get("detect_alpha").and_then(Json::as_f64)
+            {
+                self.stragglers.detect_alpha = v;
+            }
+            if let Some(v) =
+                s.get("detect_threshold").and_then(Json::as_f64)
+            {
+                self.stragglers.detect_threshold = v;
+            }
+            if let Some(v) =
+                s.get("migrate_threshold").and_then(Json::as_f64)
+            {
+                self.stragglers.migrate_threshold = v;
+            }
+            if let Some(v) =
+                s.get("rehab_tau_s").and_then(Json::as_f64)
+            {
+                self.stragglers.rehab_tau_s = v;
             }
         }
         self.validate()
@@ -528,6 +703,81 @@ mod tests {
         let c2 = ExperimentConfig::from_json(&j).unwrap();
         assert_eq!(c2.faults.mtbf_s, 900.0);
         assert_eq!(c2.faults.mttr_s, FaultConfig::default().mttr_s);
+    }
+
+    #[test]
+    fn stragglers_default_disabled_and_valid() {
+        let s = StragglerConfig::default();
+        assert!(!s.enabled());
+        assert!(s.validate().is_ok());
+        let mut c = ExperimentConfig::default();
+        c.stragglers.mtbs_s = 3600.0;
+        assert!(c.stragglers.enabled());
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn stragglers_section_roundtrips_through_json() {
+        let mut c = ExperimentConfig::default();
+        c.stragglers.mtbs_s = 1800.0;
+        c.stragglers.mtts_s = 300.0;
+        c.stragglers.severity_min = 0.3;
+        c.stragglers.severity_max = 0.6;
+        c.stragglers.detect = false;
+        c.stragglers.detect_alpha = 0.2;
+        c.stragglers.detect_threshold = 1.4;
+        c.stragglers.migrate_threshold = 2.0;
+        c.stragglers.rehab_tau_s = 450.0;
+        let j = json::parse(&c.to_json().to_string()).unwrap();
+        let back = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(back.stragglers, c.stragglers);
+        // partial override keeps the other defaults
+        let j =
+            json::parse(r#"{"stragglers": {"mtbs_s": 900.0}}"#)
+                .unwrap();
+        let c2 = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(c2.stragglers.mtbs_s, 900.0);
+        assert_eq!(
+            c2.stragglers.detect,
+            StragglerConfig::default().detect
+        );
+        assert_eq!(
+            c2.stragglers.mtts_s,
+            StragglerConfig::default().mtts_s
+        );
+    }
+
+    #[test]
+    fn invalid_straggler_configs_rejected() {
+        let mut c = ExperimentConfig::default();
+        c.stragglers.mtbs_s = -1.0;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.stragglers.mtbs_s = 100.0;
+        c.stragglers.mtts_s = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.stragglers.severity_min = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.stragglers.severity_max = 1.0;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.stragglers.severity_min = 0.7;
+        c.stragglers.severity_max = 0.4;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.stragglers.detect_alpha = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.stragglers.detect_threshold = 1.0;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.stragglers.migrate_threshold = 1.1;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.stragglers.rehab_tau_s = 0.0;
+        assert!(c.validate().is_err());
     }
 
     #[test]

@@ -4,11 +4,13 @@
 //! tlora simulate  [--policy tlora|mlora|megatron|...] [--n-jobs N]
 //!                 [--n-gpus N] [--seed S] [--month 1|2|3] [--rate-scale F]
 //!                 [--mtbf S] [--mttr S] [--preempt-rate R]
+//!                 [--straggler-mtbs S] [--straggler-mtts S]
+//!                 [--straggler-oblivious]
 //! tlora compare   [--n-jobs N] [--n-gpus N] [--seed S]     # all policies
 //! tlora sweep     [--policies a,b|all] [--n-jobs N,..] [--gpus N,..]
 //!                 [--rate-scales F,..] [--months M,..] [--mtbfs S,..]
-//!                 [--seeds S,..] [--threads T] [--out-json f]
-//!                 [--out-csv f] [--canonical]
+//!                 [--stragglers S,..] [--seeds S,..] [--threads T]
+//!                 [--out-json f] [--out-csv f] [--canonical]
 //! tlora train     [--variant tiny|small|...] [--steps N] [--seed S]
 //! tlora microbench [--steps N]
 //! tlora trace-gen [--n-jobs N] [--month M] [--seed S] [--out file.csv]
@@ -66,9 +68,15 @@ Common flags: --n-jobs N --n-gpus N --seed S --month 1|2|3
               --rate-scale F --policy NAME --artifacts DIR
 Fault flags:  --mtbf SECONDS (0 = off) --mttr SECONDS
               --preempt-rate EVENTS/S  (simulate/compare)
+Straggler flags: --straggler-mtbs SECONDS (mean time between degrade
+              episodes per node, 0 = off) --straggler-mtts SECONDS
+              (mean episode length) --straggler-oblivious (disable
+              detection even for detection-capable policies;
+              severity/detection knobs via --config JSON 'stragglers')
 Sweep flags:  --policies a,b|all --n-jobs N,.. --gpus N,..
               --rate-scales F,.. --months M,.. --mtbfs S,..
-              --seeds S,.. --threads T --out-json FILE --out-csv FILE
+              --stragglers S,.. --seeds S,.. --threads T
+              --out-json FILE --out-csv FILE
               --canonical (strip wall-clock/thread fields from JSON so
               runs diff bit-exactly; used by the golden-trace fixture)
 ";
@@ -94,6 +102,13 @@ fn build_config(args: &Args) -> Result<ExperimentConfig, String> {
     cfg.faults.mttr_s = args.get_f64("mttr", cfg.faults.mttr_s)?;
     cfg.faults.preempt_rate =
         args.get_f64("preempt-rate", cfg.faults.preempt_rate)?;
+    cfg.stragglers.mtbs_s =
+        args.get_f64("straggler-mtbs", cfg.stragglers.mtbs_s)?;
+    cfg.stragglers.mtts_s =
+        args.get_f64("straggler-mtts", cfg.stragglers.mtts_s)?;
+    if args.has("straggler-oblivious") {
+        cfg.stragglers.detect = false;
+    }
     if let Some(path) = args.get("config") {
         let j = tlora::util::json::parse_file(std::path::Path::new(path))?;
         cfg.apply_json(&j)?;
@@ -177,6 +192,21 @@ fn cmd_simulate(args: &Args) -> i32 {
         t.row(&[
             "restore delay (s)".into(),
             format!("{:.1}", r.restore_delay_s),
+        ]);
+    }
+    if cfg.stragglers.enabled() || r.node_degrades > 0 {
+        t.row(&["node degrades".into(), r.node_degrades.to_string()]);
+        t.row(&[
+            "degraded node-time (s)".into(),
+            format!("{:.1}", r.degraded_node_time_s),
+        ]);
+        t.row(&[
+            "straggler slowdown".into(),
+            format!("{:.2}x", r.straggler_slowdown),
+        ]);
+        t.row(&[
+            "straggler migrations".into(),
+            r.migrations.to_string(),
         ]);
     }
     if !r.incomplete_jobs.is_empty() {
@@ -302,6 +332,11 @@ fn cmd_sweep(args: &Args) -> i32 {
             args,
             "mtbfs",
             vec![grid.base.faults.mtbf_s],
+        )?;
+        grid.stragglers = parse_list(
+            args,
+            "stragglers",
+            vec![grid.base.stragglers.mtbs_s],
         )?;
         grid.seeds = parse_list(args, "seeds", vec![grid.base.seed])?;
         grid.validate()?;

@@ -1,0 +1,291 @@
+//! Straggler detection: per-node slowdown estimation from *observed*
+//! step times.
+//!
+//! The simulator knows each node's true speed, but a scheduler in
+//! production does not — it only sees groups finishing steps slower
+//! than the planner predicted. [`NodeSpeedEstimator`] reconstructs a
+//! per-node slowdown estimate from exactly that signal: every
+//! scheduling round, each running group reports the ratio of its
+//! observed step time to its planned (speed-1) step time over the
+//! elapsed interval, and the ratio is folded into an EWMA for **every
+//! node the group's gang touches**. Attribution is deliberately
+//! smeared: a gang spanning a healthy and a degraded node implicates
+//! both, and only further observations from disjoint placements
+//! separate them — the same ambiguity a real detector faces.
+//!
+//! The EWMA weight (`stragglers.detect_alpha`, applied once per
+//! observed *step*, not per round) is the detection-lag knob: after a
+//! node degrades to speed `m`, the estimate moves from ~1 toward `1/m`
+//! at rate `alpha` per step, so crossing the suspicion threshold takes
+//! `O(log(..)/alpha)` steps. Everything here is a pure deterministic
+//! function of the observation stream — no clocks, no RNG — so the
+//! sweep engine's bit-determinism contract extends through detection.
+//!
+//! [`NodeView`] is the read-only facade handed to
+//! [`crate::scheduler::PolicyHooks`]: detection-aware policies query
+//! `suspected`/`suspects_alloc` to keep new placements and elastic
+//! riders off suspected nodes; oblivious baselines simply never look.
+
+use crate::cluster::Allocation;
+
+/// Per-node EWMA of the observed/planned step-time ratio (>= 1 means
+/// "running slower than planned"). Estimates start at exactly 1.0
+/// (no evidence) and decay back toward 1.0 only through fresh
+/// observations — a node nobody runs on keeps its last estimate.
+#[derive(Debug, Clone)]
+pub struct NodeSpeedEstimator {
+    alpha: f64,
+    ests: Vec<f64>,
+}
+
+impl NodeSpeedEstimator {
+    /// `alpha` is the per-step EWMA weight in (0, 1].
+    pub fn new(n_nodes: usize, alpha: f64) -> NodeSpeedEstimator {
+        assert!(
+            alpha > 0.0 && alpha <= 1.0,
+            "detect_alpha must be in (0,1], got {alpha}"
+        );
+        NodeSpeedEstimator {
+            alpha,
+            ests: vec![1.0; n_nodes],
+        }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.ests.len()
+    }
+
+    /// Fold one group's interval observation into every node its gang
+    /// touches: `ratio` = observed step time / planned speed-1 step
+    /// time, `steps` = how many steps elapsed in the interval. The
+    /// closed form `(1-alpha)^steps` applies the per-step EWMA `steps`
+    /// times at the constant observed ratio.
+    pub fn observe_group(
+        &mut self,
+        nodes: &[usize],
+        ratio: f64,
+        steps: f64,
+    ) {
+        if !(ratio.is_finite() && ratio > 0.0) || steps <= 0.0 {
+            return;
+        }
+        let decay = (1.0 - self.alpha).powf(steps);
+        for &node in nodes {
+            if let Some(e) = self.ests.get_mut(node) {
+                *e = decay * *e + (1.0 - decay) * ratio;
+            }
+        }
+    }
+
+    /// Estimated slowdown factor for `node` (1.0 = running at plan;
+    /// unknown nodes report 1.0).
+    pub fn slowdown(&self, node: usize) -> f64 {
+        self.ests.get(node).copied().unwrap_or(1.0)
+    }
+
+    /// Forgiveness: pull every node **not** marked in `observed`
+    /// toward healthy by `exp(-dt_s / tau_s)`. Suspicion suppresses
+    /// the very placements whose observations would exonerate a node
+    /// — an avoided node would otherwise stay blacklisted forever
+    /// (restored stragglers, and healthy nodes implicated only by
+    /// gang smearing, included). Decay gives them a probation path:
+    /// the estimate drifts below the suspicion threshold in `O(tau)`,
+    /// placements resume, and genuinely slow nodes are re-convicted
+    /// by the very next observations.
+    pub fn forgive_idle(
+        &mut self,
+        observed: &[bool],
+        dt_s: f64,
+        tau_s: f64,
+    ) {
+        if dt_s <= 0.0 || tau_s <= 0.0 {
+            return;
+        }
+        let decay = (-dt_s / tau_s).exp();
+        for (node, e) in self.ests.iter_mut().enumerate() {
+            if !observed.get(node).copied().unwrap_or(false) {
+                *e = 1.0 + (*e - 1.0) * decay;
+            }
+        }
+    }
+}
+
+/// Read-only detection facade for [`crate::scheduler::PolicyHooks`].
+/// `oblivious()` (no estimator) never suspects anything — it is what
+/// baselines and detection-disabled runs receive.
+#[derive(Debug, Clone, Copy)]
+pub struct NodeView<'a> {
+    est: Option<&'a NodeSpeedEstimator>,
+    threshold: f64,
+}
+
+impl<'a> NodeView<'a> {
+    /// A view over a live estimator: nodes whose estimated slowdown
+    /// exceeds `threshold` are suspected.
+    pub fn new(
+        est: &'a NodeSpeedEstimator,
+        threshold: f64,
+    ) -> NodeView<'a> {
+        NodeView {
+            est: Some(est),
+            threshold,
+        }
+    }
+
+    /// The no-detection view: every query reports healthy.
+    pub fn oblivious() -> NodeView<'static> {
+        NodeView {
+            est: None,
+            threshold: f64::INFINITY,
+        }
+    }
+
+    /// Estimated slowdown for `node` (1.0 without an estimator).
+    pub fn slowdown(&self, node: usize) -> f64 {
+        self.est.map_or(1.0, |e| e.slowdown(node))
+    }
+
+    /// Is `node` a suspected straggler?
+    pub fn suspected(&self, node: usize) -> bool {
+        self.slowdown(node) > self.threshold
+    }
+
+    /// Does `alloc` touch any suspected node?
+    pub fn suspects_alloc(&self, alloc: &Allocation) -> bool {
+        self.est.is_some()
+            && alloc.gpus.iter().any(|g| self.suspected(g.node))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::GpuId;
+
+    #[test]
+    fn estimates_start_healthy_and_converge_to_observed_ratio() {
+        let mut e = NodeSpeedEstimator::new(4, 0.1);
+        assert_eq!(e.slowdown(2), 1.0);
+        assert_eq!(e.slowdown(99), 1.0); // out of range: healthy
+        for _ in 0..200 {
+            e.observe_group(&[1], 4.0, 1.0);
+        }
+        assert!((e.slowdown(1) - 4.0).abs() < 1e-3, "{}", e.slowdown(1));
+        // untouched nodes keep their estimate
+        assert_eq!(e.slowdown(0), 1.0);
+    }
+
+    #[test]
+    fn detection_lag_scales_with_alpha() {
+        // a smoother EWMA crosses the suspicion threshold later
+        let mut fast = NodeSpeedEstimator::new(1, 0.3);
+        let mut slow = NodeSpeedEstimator::new(1, 0.02);
+        let steps_to_cross = |e: &mut NodeSpeedEstimator| -> usize {
+            for i in 1..10_000 {
+                e.observe_group(&[0], 4.0, 1.0);
+                if e.slowdown(0) > 1.5 {
+                    return i;
+                }
+            }
+            10_000
+        };
+        let f = steps_to_cross(&mut fast);
+        let s = steps_to_cross(&mut slow);
+        assert!(f < s, "fast alpha {f} steps vs slow alpha {s}");
+    }
+
+    #[test]
+    fn closed_form_matches_repeated_single_steps() {
+        let mut a = NodeSpeedEstimator::new(1, 0.25);
+        let mut b = NodeSpeedEstimator::new(1, 0.25);
+        a.observe_group(&[0], 3.0, 8.0);
+        for _ in 0..8 {
+            b.observe_group(&[0], 3.0, 1.0);
+        }
+        assert!(
+            (a.slowdown(0) - b.slowdown(0)).abs() < 1e-12,
+            "{} vs {}",
+            a.slowdown(0),
+            b.slowdown(0)
+        );
+    }
+
+    #[test]
+    fn attribution_smears_over_gang_nodes() {
+        let mut e = NodeSpeedEstimator::new(3, 0.2);
+        // a gang spanning nodes 0 and 1 runs slow: both implicated
+        for _ in 0..100 {
+            e.observe_group(&[0, 1], 3.0, 1.0);
+        }
+        assert!(e.slowdown(0) > 2.5);
+        assert!(e.slowdown(1) > 2.5);
+        assert_eq!(e.slowdown(2), 1.0);
+        // later, node 0 alone observes healthy: it is exonerated
+        for _ in 0..200 {
+            e.observe_group(&[0], 1.0, 1.0);
+        }
+        assert!(e.slowdown(0) < 1.1, "{}", e.slowdown(0));
+        assert!(e.slowdown(1) > 2.5);
+    }
+
+    #[test]
+    fn idle_nodes_are_forgiven_observed_nodes_are_not() {
+        let mut e = NodeSpeedEstimator::new(2, 0.5);
+        for _ in 0..50 {
+            e.observe_group(&[0], 4.0, 1.0);
+            e.observe_group(&[1], 4.0, 1.0);
+        }
+        assert!(e.slowdown(0) > 3.9 && e.slowdown(1) > 3.9);
+        // node 0 keeps producing (slow) observations; node 1 goes
+        // idle — only node 1 drifts back toward healthy
+        for _ in 0..10 {
+            e.observe_group(&[0], 4.0, 1.0);
+            e.forgive_idle(&[true, false], 300.0, 600.0);
+        }
+        assert!(e.slowdown(0) > 3.9, "{}", e.slowdown(0));
+        // 10 half-ish-lives: 1 + 3*exp(-5) ≈ 1.02
+        assert!(e.slowdown(1) < 1.1, "{}", e.slowdown(1));
+        assert!(e.slowdown(1) >= 1.0);
+        // degenerate intervals are no-ops
+        let before = e.slowdown(1);
+        e.forgive_idle(&[false, false], 0.0, 600.0);
+        e.forgive_idle(&[false, false], -5.0, 600.0);
+        assert_eq!(e.slowdown(1), before);
+    }
+
+    #[test]
+    fn degenerate_observations_are_ignored() {
+        let mut e = NodeSpeedEstimator::new(1, 0.5);
+        e.observe_group(&[0], f64::INFINITY, 1.0);
+        e.observe_group(&[0], f64::NAN, 1.0);
+        e.observe_group(&[0], -1.0, 1.0);
+        e.observe_group(&[0], 2.0, 0.0);
+        assert_eq!(e.slowdown(0), 1.0);
+    }
+
+    #[test]
+    fn node_view_thresholds_and_oblivious() {
+        let mut e = NodeSpeedEstimator::new(2, 0.5);
+        for _ in 0..50 {
+            e.observe_group(&[1], 2.0, 1.0);
+        }
+        let v = NodeView::new(&e, 1.5);
+        assert!(!v.suspected(0));
+        assert!(v.suspected(1));
+        let healthy = Allocation {
+            gpus: vec![GpuId { node: 0, idx: 0 }],
+        };
+        let tainted = Allocation {
+            gpus: vec![
+                GpuId { node: 0, idx: 1 },
+                GpuId { node: 1, idx: 0 },
+            ],
+        };
+        assert!(!v.suspects_alloc(&healthy));
+        assert!(v.suspects_alloc(&tainted));
+        let o = NodeView::oblivious();
+        assert!(!o.suspected(1));
+        assert_eq!(o.slowdown(1), 1.0);
+        assert!(!o.suspects_alloc(&tainted));
+    }
+}

@@ -18,9 +18,11 @@
 //! Complexity: O(K log K) per round — sort + O(log K) predictor probes
 //! per merge (see the `sched_scaling` bench).
 
+pub mod estimator;
 pub mod predictor;
 pub mod grouping;
 
+pub use estimator::{NodeSpeedEstimator, NodeView};
 pub use grouping::{schedule, GroupState, ScheduleOutcome};
 pub use predictor::{GroupPerf, Predictor};
 
@@ -45,11 +47,23 @@ pub trait PolicyHooks {
     /// nano-batching?
     fn aimd_enabled(&self) -> bool;
 
+    /// Does this policy consume the straggler-detection signal
+    /// ([`NodeView`])? Aware policies keep new placements and elastic
+    /// riders off suspected nodes, and the engine migrates their jobs
+    /// off nodes whose estimated slowdown crosses
+    /// `stragglers.migrate_threshold`. Baselines default to oblivious
+    /// — detection-vs-oblivious is a measured axis, not a given.
+    fn straggler_aware(&self) -> bool {
+        false
+    }
+
     /// Elastic shared admission (§3.4): pick the group that should
     /// absorb the queued `job` — an index into `groups` — or `None` to
     /// keep it queued. The engine commits the absorption (perf
     /// refresh, admission bookkeeping); this hook only chooses.
-    /// Implementations should return groups whose merge is feasible
+    /// `view` carries the straggler-detection estimates (oblivious
+    /// for baselines and detection-disabled runs). Implementations
+    /// should return groups whose merge is feasible
     /// (`Predictor::group_perf` is `Some` for members + `job`); if the
     /// commit-time probe fails anyway, the engine leaves the job
     /// queued rather than absorbing it.
@@ -57,6 +71,7 @@ pub trait PolicyHooks {
         &self,
         job: &JobSpec,
         groups: &[(GroupState, GroupPerf)],
+        view: &NodeView,
         predictor: &mut Predictor,
         cfg: &SchedulerConfig,
     ) -> Option<usize>;

@@ -24,7 +24,8 @@ use std::collections::HashMap;
 use super::events::{Event, EventKind, EventQueue};
 use super::observer::{
     CompletionObserver, EvictCause, FaultObserver, GroupingObserver,
-    RoundStats, SimObserver, SlowdownObserver, TimelineObserver,
+    RoundStats, SimObserver, SlowdownObserver, StragglerObserver,
+    TimelineObserver,
 };
 use super::state::{Eviction, JobState, SimState};
 use super::SimResult;
@@ -34,10 +35,11 @@ use crate::model::arch::{arch_by_name, LoraSpec};
 use crate::model::cost::restore_time_s;
 use crate::planner::PlanOptions;
 use crate::scheduler::predictor::Predictor;
-use crate::scheduler::PolicyHooks;
+use crate::scheduler::{NodeSpeedEstimator, NodeView, PolicyHooks};
 use crate::util::stats::Summary;
 use crate::workload::faults::{
     FaultKind, NodeFaultModel, PreemptionModel, ScriptedFault,
+    ScriptedStraggler, StragglerModel,
 };
 use crate::workload::{classify, JobSpec};
 
@@ -62,6 +64,11 @@ pub struct EngineOptions {
     /// seeded `config::FaultConfig` streams — pinned scenarios like
     /// "kill node 0 at t=100" (`workload::faults::ScriptedFault`).
     pub fault_script: Vec<ScriptedFault>,
+    /// Deterministic injected straggler transitions on top of (or
+    /// instead of) the seeded `config::StragglerConfig` model —
+    /// pinned scenarios like "node 0 runs at 0.25× from t=100"
+    /// (`workload::faults::ScriptedStraggler`; `speed >= 1` restores).
+    pub straggler_script: Vec<ScriptedStraggler>,
 }
 
 impl Default for EngineOptions {
@@ -70,6 +77,7 @@ impl Default for EngineOptions {
             legacy_tick: false,
             aimd_settle_obs: 256,
             fault_script: vec![],
+            straggler_script: vec![],
         }
     }
 }
@@ -82,6 +90,7 @@ struct ObserverSet {
     grouping: GroupingObserver,
     slowdown: SlowdownObserver,
     faults: FaultObserver,
+    stragglers: StragglerObserver,
 }
 
 /// Fan one observer callback out to every built-in plus the caller's
@@ -94,6 +103,7 @@ macro_rules! fan_out {
         $set.grouping.$hook($($arg),*);
         $set.slowdown.$hook($($arg),*);
         $set.faults.$hook($($arg),*);
+        $set.stragglers.$hook($($arg),*);
         for o in $extra.iter_mut() {
             o.$hook($($arg),*);
         }
@@ -143,6 +153,25 @@ impl ObserverSet {
         extra: &mut [&mut dyn SimObserver],
     ) {
         fan_out!(self, extra, on_node_recovery(t, node));
+    }
+
+    fn node_degraded(
+        &mut self,
+        t: f64,
+        node: usize,
+        speed: f64,
+        extra: &mut [&mut dyn SimObserver],
+    ) {
+        fan_out!(self, extra, on_node_degraded(t, node, speed));
+    }
+
+    fn node_restored(
+        &mut self,
+        t: f64,
+        node: usize,
+        extra: &mut [&mut dyn SimObserver],
+    ) {
+        fan_out!(self, extra, on_node_restored(t, node));
     }
 
     fn evict(
@@ -241,6 +270,68 @@ impl FaultDriver {
     }
 }
 
+/// The seeded straggler source plus the severity side-table for
+/// scripted transitions (events carry only the node index; the speed
+/// is looked up by `(time, node)` when the event fires).
+struct StragglerDriver {
+    /// per-node degrade/restore renewal streams (None: seeded
+    /// stragglers disabled)
+    model: Option<StragglerModel>,
+    /// scripted severities keyed by `(time.to_bits(), node)`
+    scripted_speed: HashMap<(u64, u64), f64>,
+}
+
+impl StragglerDriver {
+    fn new(
+        cfg: &ExperimentConfig,
+        script: &[ScriptedStraggler],
+    ) -> StragglerDriver {
+        let s = &cfg.stragglers;
+        let model = if s.mtbs_s > 0.0 {
+            Some(StragglerModel::new(
+                s.mtbs_s,
+                s.mtts_s,
+                s.severity_min,
+                s.severity_max,
+                cfg.cluster.n_nodes,
+                cfg.seed,
+            ))
+        } else {
+            None
+        };
+        let mut scripted_speed = HashMap::new();
+        for e in script {
+            assert!(
+                (e.node as usize) < cfg.cluster.n_nodes,
+                "straggler_script entry at t={} targets node {} but \
+                 the cluster has {} nodes",
+                e.time,
+                e.node,
+                cfg.cluster.n_nodes
+            );
+            assert!(
+                e.speed > 0.0,
+                "straggler_script entry at t={} has speed {} (a node \
+                 at speed 0 is a failure, not a straggler)",
+                e.time,
+                e.speed
+            );
+            let prev = scripted_speed
+                .insert((e.time.to_bits(), e.node), e.speed);
+            assert!(
+                prev.is_none(),
+                "straggler_script has two entries for node {} at t={}",
+                e.node,
+                e.time
+            );
+        }
+        StragglerDriver {
+            model,
+            scripted_speed,
+        }
+    }
+}
+
 /// The event-driven simulator.
 pub struct Engine<'a> {
     cfg: &'a ExperimentConfig,
@@ -251,6 +342,13 @@ pub struct Engine<'a> {
     events: EventQueue,
     obs: ObserverSet,
     faults: FaultDriver,
+    stragglers: StragglerDriver,
+    /// per-node slowdown estimator (Some only when straggler sources
+    /// exist, detection is on, and the policy consumes the signal —
+    /// absent, every code path is the oblivious pre-straggler one)
+    estimator: Option<NodeSpeedEstimator>,
+    /// last time `observe_speeds` ran (estimator bookkeeping)
+    last_obs_t: f64,
     epoch: u64,
     sched_rounds: u64,
     events_processed: u64,
@@ -305,6 +403,33 @@ impl<'a> Engine<'a> {
                 });
             }
         }
+        // straggler sources: one pending degrade per node from the
+        // seeded renewal model (severity + restore are drawn when the
+        // degrade fires), plus the scripted transitions
+        let mut stragglers =
+            StragglerDriver::new(cfg, &opts.straggler_script);
+        if let Some(m) = &mut stragglers.model {
+            for node in 0..m.n_nodes() {
+                events.push(Event {
+                    time: m.healthy_span(node),
+                    kind: EventKind::NodeDegraded,
+                    job_id: node as u64,
+                    epoch: FAULT_MODEL_ORIGIN,
+                });
+            }
+        }
+        for e in &opts.straggler_script {
+            events.push(Event {
+                time: e.time,
+                kind: if e.speed < 1.0 {
+                    EventKind::NodeDegraded
+                } else {
+                    EventKind::NodeRestored
+                },
+                job_id: e.node,
+                epoch: 0,
+            });
+        }
         if let Some(p) = &mut faults.preempt {
             let (dt, target) = p.next();
             events.push(Event {
@@ -342,6 +467,24 @@ impl<'a> Engine<'a> {
             });
         }
         let n_jobs = jobs.len();
+        let hooks = hooks_for(cfg.policy);
+        // the estimator exists only when there is something to detect
+        // (seeded model or script), detection is configured on, and
+        // the policy actually consumes the signal — otherwise every
+        // admission/migration path is the oblivious pre-straggler one
+        let straggler_sources = stragglers.model.is_some()
+            || !stragglers.scripted_speed.is_empty();
+        let estimator = if straggler_sources
+            && cfg.stragglers.detect
+            && hooks.straggler_aware()
+        {
+            Some(NodeSpeedEstimator::new(
+                cfg.cluster.n_nodes,
+                cfg.stragglers.detect_alpha,
+            ))
+        } else {
+            None
+        };
         Engine {
             predictor: Predictor::new(cfg.cluster.clone(), plan_opts),
             state: SimState::new(cfg, &jobs),
@@ -352,8 +495,14 @@ impl<'a> Engine<'a> {
                 grouping: GroupingObserver::new(size_classes),
                 slowdown: SlowdownObserver::default(),
                 faults: FaultObserver::new(cfg.faults.slo_factor),
+                stragglers: StragglerObserver::new(
+                    cfg.cluster.n_nodes,
+                ),
             },
             faults,
+            stragglers,
+            estimator,
+            last_obs_t: 0.0,
             epoch: 0,
             sched_rounds: 0,
             events_processed: 0,
@@ -363,7 +512,7 @@ impl<'a> Engine<'a> {
             t_max,
             cfg,
             opts,
-            hooks: hooks_for(cfg.policy),
+            hooks,
         }
     }
 
@@ -473,6 +622,121 @@ impl<'a> Engine<'a> {
         }
     }
 
+    /// A node starts straggling at `t`: model-originated degrades draw
+    /// the episode's severity + duration from the node's own stream
+    /// (and schedule the matching restore); scripted degrades look the
+    /// severity up in the script side-table. Running groups touching
+    /// the node are re-priced at this exact instant
+    /// ([`SimState::set_node_speed`]); the round that follows
+    /// re-derives their completion events under the new epoch.
+    fn apply_node_degraded(
+        &mut self,
+        node: usize,
+        from_model: bool,
+        t: f64,
+        extra: &mut [&mut dyn SimObserver],
+    ) {
+        let speed = if from_model {
+            let m = self
+                .stragglers
+                .model
+                .as_mut()
+                .expect("model-origin degrade without a model");
+            let (speed, dur) = m.episode(node);
+            self.events.push(Event {
+                time: t + dur,
+                kind: EventKind::NodeRestored,
+                job_id: node as u64,
+                epoch: FAULT_MODEL_ORIGIN,
+            });
+            speed
+        } else {
+            *self
+                .stragglers
+                .scripted_speed
+                .get(&(t.to_bits(), node as u64))
+                .expect("scripted degrade without a script entry")
+        };
+        self.state.set_node_speed(node, speed);
+        self.obs.node_degraded(t, node, speed, extra);
+    }
+
+    /// A straggling node returns to full speed at `t` (or, for a
+    /// scripted entry with `speed >= 1`, to that scripted multiplier);
+    /// model-originated restores chain the node's next degrade from
+    /// its stream.
+    fn apply_node_restored(
+        &mut self,
+        node: usize,
+        from_model: bool,
+        t: f64,
+        extra: &mut [&mut dyn SimObserver],
+    ) {
+        let speed = if from_model {
+            1.0
+        } else {
+            *self
+                .stragglers
+                .scripted_speed
+                .get(&(t.to_bits(), node as u64))
+                .expect("scripted restore without a script entry")
+        };
+        self.state.set_node_speed(node, speed);
+        self.obs.node_restored(t, node, extra);
+        if from_model {
+            if let Some(m) = &mut self.stragglers.model {
+                self.events.push(Event {
+                    time: t + m.healthy_span(node),
+                    kind: EventKind::NodeDegraded,
+                    job_id: node as u64,
+                    epoch: FAULT_MODEL_ORIGIN,
+                });
+            }
+        }
+    }
+
+    /// Feed the straggler detector with what this interval *observed*:
+    /// each group that ran over `[last_obs_t, t)` reports the ratio of
+    /// its effective step time to its planned speed-1 step time,
+    /// attributed to every node its gang touches (the detector cannot
+    /// tell which member is slow — only disjoint placements separate
+    /// them). Must run after `advance_to(t)` and **before** the
+    /// event batch re-prices groups, so the observation reflects the
+    /// rates that were actually in effect over the elapsed interval.
+    fn observe_speeds(&mut self, t: f64) {
+        let dt = t - self.last_obs_t;
+        self.last_obs_t = t;
+        let Some(est) = &mut self.estimator else {
+            return;
+        };
+        if dt <= 0.0 {
+            return;
+        }
+        let mut observed = vec![false; self.cfg.cluster.n_nodes];
+        for g in &self.state.running {
+            if g.base_step_time <= 0.0 || g.step_time <= 0.0 {
+                continue;
+            }
+            let ratio = g.step_time / g.base_step_time;
+            let steps = dt / g.step_time;
+            let nodes = g.alloc.nodes();
+            for &n in &nodes {
+                if let Some(o) = observed.get_mut(n) {
+                    *o = true;
+                }
+            }
+            est.observe_group(&nodes, ratio, steps);
+        }
+        // nodes with no observations this interval drift back toward
+        // healthy — suspicion would otherwise be unfalsifiable, since
+        // avoided nodes produce no observations to clear themselves
+        est.forgive_idle(
+            &observed,
+            dt,
+            self.cfg.stragglers.rehab_tau_s,
+        );
+    }
+
     /// Job `id` is exogenously preempted at `t` (no-op unless placed);
     /// model-originated preemptions chain the next Poisson draw.
     fn apply_preemption(
@@ -516,10 +780,53 @@ impl<'a> Engine<'a> {
 
         self.state.release_completed();
         self.state.requeue_shared();
+
+        // straggler detection (None = every path below is the
+        // oblivious pre-straggler one): suspected nodes are avoided
+        // by fresh placements, and jobs allocated on nodes whose
+        // estimated slowdown crossed the migrate threshold are moved
+        // off — evicted with the usual restore cost and re-placed on
+        // healthier nodes by the very admission pass that follows
+        let avoid: Option<Vec<bool>> =
+            self.estimator.as_ref().map(|est| {
+                (0..self.cfg.cluster.n_nodes)
+                    .map(|n| {
+                        est.slowdown(n)
+                            > self.cfg.stragglers.detect_threshold
+                    })
+                    .collect()
+            });
+        if let (Some(est), Some(av)) = (&self.estimator, &avoid) {
+            let flagged: Vec<bool> = (0..self.cfg.cluster.n_nodes)
+                .map(|n| {
+                    est.slowdown(n)
+                        > self.cfg.stragglers.migrate_threshold
+                })
+                .collect();
+            if flagged.iter().any(|&f| f) {
+                let evs = self.state.migrate_stragglers(
+                    &flagged,
+                    av,
+                    t,
+                    &self.faults.penalties,
+                );
+                for e in &evs {
+                    self.obs.evict(
+                        t,
+                        &self.state.states[&e.job_id],
+                        EvictCause::StragglerMigration,
+                        e,
+                        extra,
+                    );
+                }
+            }
+        }
+
         let newly = self.state.admit_queued(
             self.cfg.max_concurrent_jobs,
             &mut self.predictor,
             t,
+            avoid.as_deref(),
         );
         for id in newly {
             self.obs.admit(t, &self.state.states[&id], extra);
@@ -534,9 +841,17 @@ impl<'a> Engine<'a> {
         );
         let mut groups = outcome.groups;
 
+        let view = match &self.estimator {
+            Some(est) => NodeView::new(
+                est,
+                self.cfg.stragglers.detect_threshold,
+            ),
+            None => NodeView::oblivious(),
+        };
         let absorbed = self.state.absorb_queued(
             &mut groups,
             self.hooks.as_ref(),
+            &view,
             &mut self.predictor,
             &self.cfg.scheduler,
             self.cfg.max_concurrent_jobs,
@@ -686,6 +1001,22 @@ impl<'a> Engine<'a> {
                         extra,
                     );
                 }
+                EventKind::NodeDegraded => {
+                    self.apply_node_degraded(
+                        ev.job_id as usize,
+                        from_model,
+                        0.0,
+                        extra,
+                    );
+                }
+                EventKind::NodeRestored => {
+                    self.apply_node_restored(
+                        ev.job_id as usize,
+                        from_model,
+                        0.0,
+                        extra,
+                    );
+                }
                 EventKind::Preemption => {
                     self.apply_preemption(
                         ev.job_id,
@@ -712,10 +1043,16 @@ impl<'a> Engine<'a> {
                 break;
             }
             self.state.advance_to(t);
+            // detector observations cover [last_obs_t, t) at the rates
+            // that were actually in effect — before this batch's
+            // degrade/restore events re-price anything
+            self.observe_speeds(t);
             let mut arrivals = vec![];
             let mut completions = vec![];
             let mut failures = vec![];
             let mut recoveries = vec![];
+            let mut degrades = vec![];
+            let mut restores = vec![];
             let mut preemptions = vec![];
             let mut batch = vec![first];
             while let Some(ev) = self.pop_valid_at(t) {
@@ -739,6 +1076,18 @@ impl<'a> Engine<'a> {
                     }
                     EventKind::NodeRecovery => {
                         recoveries.push((
+                            ev.job_id as usize,
+                            ev.epoch == FAULT_MODEL_ORIGIN,
+                        ));
+                    }
+                    EventKind::NodeDegraded => {
+                        degrades.push((
+                            ev.job_id as usize,
+                            ev.epoch == FAULT_MODEL_ORIGIN,
+                        ));
+                    }
+                    EventKind::NodeRestored => {
+                        restores.push((
                             ev.job_id as usize,
                             ev.epoch == FAULT_MODEL_ORIGIN,
                         ));
@@ -771,6 +1120,14 @@ impl<'a> Engine<'a> {
             }
             for (node, from_model) in recoveries {
                 self.apply_node_recovery(node, from_model, t, extra);
+            }
+            // degrade/restore after failure/recovery (rank order), so
+            // an eviction priced at this instant sees the new rate
+            for (node, from_model) in degrades {
+                self.apply_node_degraded(node, from_model, t, extra);
+            }
+            for (node, from_model) in restores {
+                self.apply_node_restored(node, from_model, t, extra);
             }
             for (id, from_model) in preemptions {
                 self.apply_preemption(id, from_model, t, extra);
@@ -828,6 +1185,16 @@ impl<'a> Engine<'a> {
             restore_delay_s: self.obs.faults.restore_delay_s,
             goodput: self.obs.faults.goodput,
             slo_attainment: self.obs.faults.slo_attainment,
+            node_degrades: self.obs.stragglers.node_degrades,
+            degraded_node_time_s: self
+                .obs
+                .stragglers
+                .degraded_node_time_s,
+            straggler_slowdown: self
+                .obs
+                .stragglers
+                .straggler_slowdown,
+            migrations: self.obs.stragglers.migrations,
         }
     }
 }

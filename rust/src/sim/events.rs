@@ -1,7 +1,7 @@
 //! Deterministic event queue for the simulation engine.
 //!
 //! The engine advances straight from event to event instead of ticking
-//! a fixed horizon. Six kinds exist:
+//! a fixed horizon. Eight kinds exist:
 //!
 //! * [`EventKind::Arrival`] — a job's submit time was reached;
 //! * [`EventKind::Completion`] — a running job's last step finishes,
@@ -9,6 +9,11 @@
 //! * [`EventKind::NodeFailure`] / [`EventKind::NodeRecovery`] — a
 //!   cluster node goes down / comes back (the fault subsystem;
 //!   `job_id` carries the node index for these two);
+//! * [`EventKind::NodeDegraded`] / [`EventKind::NodeRestored`] — a
+//!   node starts / stops *straggling*: it keeps its GPUs but runs
+//!   every co-located group at a fraction of its nominal rate
+//!   (`job_id` carries the node index; the severity travels in the
+//!   engine's straggler driver, not in the event);
 //! * [`EventKind::Preemption`] — an exogenous eviction of one job
 //!   (spot reclaim / higher-priority tenant);
 //! * [`EventKind::ReschedulePoint`] — the periodic regroup bound
@@ -18,13 +23,18 @@
 //! **Determinism tie-break rule:** events order by
 //! `(time, kind, job_id, epoch)` — time via the crate's total f64
 //! order, then `Arrival < Completion < NodeFailure < NodeRecovery <
-//! Preemption < ReschedulePoint`, then job id. Two runs of the same
-//! config therefore pop events in a bit-identical sequence, which is
-//! what keeps the sweep engine's cross-thread determinism contract
-//! intact (DESIGN.md §Determinism). The fault ranks encode semantics:
-//! a job whose final step lands exactly when its node dies *completed*
-//! (the step finished), and a zero-downtime blip still orders failure
-//! before recovery.
+//! NodeDegraded < NodeRestored < Preemption < ReschedulePoint`, then
+//! job id. Two runs of the same config therefore pop events in a
+//! bit-identical sequence, which is what keeps the sweep engine's
+//! cross-thread determinism contract intact (DESIGN.md §Determinism).
+//! The fault ranks encode semantics: a job whose final step lands
+//! exactly when its node dies *completed* (the step finished), and a
+//! zero-downtime blip still orders failure before recovery. Straggler
+//! transitions rank after failure/recovery — a node that dies at the
+//! instant it would have degraded is simply dead — and degrade before
+//! restore, so a zero-length episode is a no-op rather than a
+//! restore-then-degrade inversion; both rank before `Preemption`, so
+//! an eviction priced at the degrade instant sees the new rate.
 //!
 //! Completion and reschedule events are *epoch-stamped*: every
 //! scheduling round bumps the engine epoch and re-derives completion
@@ -53,6 +63,13 @@ pub enum EventKind {
     /// A down node returns to the allocatable pool (`job_id` = node
     /// index).
     NodeRecovery,
+    /// A node starts straggling (`job_id` = node index): its GPUs stay
+    /// allocatable but every co-located group runs at the episode's
+    /// sampled speed multiplier.
+    NodeDegraded,
+    /// A straggling node returns to full speed (`job_id` = node
+    /// index).
+    NodeRestored,
     /// One job (`job_id`) is exogenously evicted; a no-op if it is not
     /// currently placed.
     Preemption,
@@ -65,15 +82,18 @@ impl EventKind {
     /// arriving exactly when another completes sees the freed GPUs in
     /// the same round), then completions (a final step that lands at
     /// the failure instant still counts), then failure before recovery
-    /// before preemption, reschedule points last.
+    /// before degrade before restore before preemption, reschedule
+    /// points last.
     fn rank(self) -> u8 {
         match self {
             EventKind::Arrival => 0,
             EventKind::Completion => 1,
             EventKind::NodeFailure => 2,
             EventKind::NodeRecovery => 3,
-            EventKind::Preemption => 4,
-            EventKind::ReschedulePoint => 5,
+            EventKind::NodeDegraded => 4,
+            EventKind::NodeRestored => 5,
+            EventKind::Preemption => 6,
+            EventKind::ReschedulePoint => 7,
         }
     }
 }
@@ -105,6 +125,8 @@ impl Event {
             EventKind::Arrival
             | EventKind::NodeFailure
             | EventKind::NodeRecovery
+            | EventKind::NodeDegraded
+            | EventKind::NodeRestored
             | EventKind::Preemption => false,
             EventKind::Completion | EventKind::ReschedulePoint => {
                 self.epoch != current_epoch
@@ -247,6 +269,8 @@ mod tests {
         let mut q = EventQueue::new();
         q.push(ev(5.0, EventKind::ReschedulePoint, 0));
         q.push(ev(5.0, EventKind::Preemption, 4));
+        q.push(ev(5.0, EventKind::NodeRestored, 3));
+        q.push(ev(5.0, EventKind::NodeDegraded, 3));
         q.push(ev(5.0, EventKind::NodeRecovery, 2));
         q.push(ev(5.0, EventKind::NodeFailure, 2));
         q.push(ev(5.0, EventKind::Completion, 1));
@@ -261,6 +285,8 @@ mod tests {
                 EventKind::Completion,
                 EventKind::NodeFailure,
                 EventKind::NodeRecovery,
+                EventKind::NodeDegraded,
+                EventKind::NodeRestored,
                 EventKind::Preemption,
                 EventKind::ReschedulePoint,
             ]
@@ -285,6 +311,8 @@ mod tests {
             EventKind::Arrival,
             EventKind::NodeFailure,
             EventKind::NodeRecovery,
+            EventKind::NodeDegraded,
+            EventKind::NodeRestored,
             EventKind::Preemption,
         ] {
             assert!(!stamped(kind, 0).is_stale(7));

@@ -17,7 +17,14 @@
 //! penalty from the adapter-only size model and requeue, and each
 //! policy reacts through its ordinary `PolicyHooks` dispatch (tLoRA
 //! re-fuses elastically, mLoRA repacks FIFO, Megatron restarts in
-//! isolation). See [`events`] for the determinism tie-break rule,
+//! isolation). The straggler subsystem (`config::StragglerConfig` +
+//! `workload::faults::StragglerModel`) degrades nodes *partially*:
+//! groups touching a degraded node run at its sampled speed
+//! multiplier, the `scheduler::NodeSpeedEstimator` reconstructs the
+//! slowdown from observed step times, and detection-aware policies
+//! route placements around (and migrate off) suspected stragglers
+//! while oblivious baselines keep crawling. See [`events`] for the
+//! determinism tie-break rule,
 //! [`engine`] for the loop, [`state`] for the bookkeeping, and
 //! [`observer`] for the metric-collection contract.
 
@@ -27,7 +34,10 @@ pub mod observer;
 pub mod state;
 
 pub use engine::{Engine, EngineOptions};
-pub use observer::{EvictCause, FaultObserver, RoundStats, SimObserver};
+pub use observer::{
+    EvictCause, FaultObserver, RoundStats, SimObserver,
+    StragglerObserver,
+};
 pub use state::{Eviction, JobState, RunningGroup, SimState};
 
 use std::collections::HashMap;
@@ -94,6 +104,17 @@ pub struct SimResult {
     /// fraction of jobs finishing within their SLO deadline
     /// (`faults.slo_factor` × Δ^max × ideal runtime past submission)
     pub slo_attainment: f64,
+    /// straggler degrade events applied (0 with stragglers off)
+    pub node_degrades: u64,
+    /// total node-seconds spent degraded (episodes open at run end
+    /// are closed at the makespan)
+    pub degraded_node_time_s: f64,
+    /// time-weighted mean of `1/speed` over the degraded node-time
+    /// (1.0 when no node ever degraded)
+    pub straggler_slowdown: f64,
+    /// voluntary straggler-migration evictions performed by
+    /// detection-aware policies (0 for oblivious runs)
+    pub migrations: u64,
 }
 
 impl SimResult {
@@ -302,6 +323,11 @@ mod tests {
         assert_eq!(r.restore_delay_s, 0.0);
         assert!(r.goodput > 0.0);
         assert!((0.0..=1.0).contains(&r.slo_attainment));
+        // straggler columns are quiescent too
+        assert_eq!(r.node_degrades, 0);
+        assert_eq!(r.degraded_node_time_s, 0.0);
+        assert_eq!(r.straggler_slowdown, 1.0);
+        assert_eq!(r.migrations, 0);
     }
 
     #[test]

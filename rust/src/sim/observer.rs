@@ -46,6 +46,10 @@ pub enum EvictCause {
     NodeFailure,
     /// Exogenous preemption (spot reclaim / priority tenant).
     Preemption,
+    /// A detection-aware policy moved it off a suspected straggler
+    /// node (same mechanics as an eviction: rollback + restore
+    /// penalty, then re-placement on healthier nodes).
+    StragglerMigration,
 }
 
 /// Observer callbacks. All methods default to no-ops so an observer
@@ -66,6 +70,19 @@ pub trait SimObserver {
 
     /// A node returned to the pool at `t`.
     fn on_node_recovery(&mut self, _t: f64, _node: usize) {}
+
+    /// A node started straggling at `t`: it runs at `speed` × nominal
+    /// until restored (a repeat degrade re-samples the severity).
+    fn on_node_degraded(
+        &mut self,
+        _t: f64,
+        _node: usize,
+        _speed: f64,
+    ) {
+    }
+
+    /// A straggling node returned to full speed at `t`.
+    fn on_node_restored(&mut self, _t: f64, _node: usize) {}
 
     /// A job was evicted at `t`: `lost_s` seconds of in-flight work
     /// rolled back, `penalty_s` of checkpoint-restore delay before it
@@ -282,6 +299,13 @@ impl SimObserver for FaultObserver {
         lost_s: f64,
         penalty_s: f64,
     ) {
+        // straggler migrations are *voluntary* evictions (a policy
+        // choice, not a fault) — they are accounted by
+        // [`StragglerObserver`] so the fault columns keep meaning
+        // "damage the environment inflicted"
+        if cause == EvictCause::StragglerMigration {
+            return;
+        }
         self.restarts += 1;
         if cause == EvictCause::Preemption {
             self.preemptions += 1;
@@ -310,6 +334,91 @@ impl SimObserver for FaultObserver {
             1.0
         } else {
             met as f64 / jobs.len() as f64
+        };
+    }
+}
+
+/// Straggler accounting: degrade/restore episodes per node, total
+/// degraded node-time, the time-weighted severity of that time, and
+/// the voluntary migrations detection-aware policies performed.
+///
+/// *degraded_node_time_s* sums, over nodes, the simulated seconds each
+/// spent degraded (episodes still open at the end of the run are
+/// closed at `t_end`). *straggler_slowdown* is the time-weighted mean
+/// of `1/speed` over that degraded time (1.0 when no node ever
+/// degraded) — "how slow was a degraded node, while degraded".
+/// *migrations* counts [`EvictCause::StragglerMigration`] evictions.
+#[derive(Debug)]
+pub struct StragglerObserver {
+    /// per node: (episode start, episode speed) while degraded
+    open: Vec<Option<(f64, f64)>>,
+    pub node_degrades: u64,
+    pub migrations: u64,
+    pub degraded_node_time_s: f64,
+    /// Σ episode_duration / episode_speed
+    weighted_slow_s: f64,
+    pub straggler_slowdown: f64,
+}
+
+impl StragglerObserver {
+    pub fn new(n_nodes: usize) -> StragglerObserver {
+        StragglerObserver {
+            open: vec![None; n_nodes],
+            node_degrades: 0,
+            migrations: 0,
+            degraded_node_time_s: 0.0,
+            weighted_slow_s: 0.0,
+            straggler_slowdown: 1.0,
+        }
+    }
+
+    fn close_episode(&mut self, node: usize, t: f64) {
+        if let Some(Some((start, speed))) =
+            self.open.get_mut(node).map(Option::take)
+        {
+            let dur = (t - start).max(0.0);
+            self.degraded_node_time_s += dur;
+            self.weighted_slow_s += dur / speed;
+        }
+    }
+}
+
+impl SimObserver for StragglerObserver {
+    fn on_node_degraded(&mut self, t: f64, node: usize, speed: f64) {
+        // a repeat degrade closes the running episode (severity
+        // changed) and opens a new one at the new speed
+        self.close_episode(node, t);
+        if node < self.open.len() {
+            self.open[node] = Some((t, speed));
+        }
+        self.node_degrades += 1;
+    }
+
+    fn on_node_restored(&mut self, t: f64, node: usize) {
+        self.close_episode(node, t);
+    }
+
+    fn on_evict(
+        &mut self,
+        _t: f64,
+        _job: &JobState,
+        cause: EvictCause,
+        _lost_s: f64,
+        _penalty_s: f64,
+    ) {
+        if cause == EvictCause::StragglerMigration {
+            self.migrations += 1;
+        }
+    }
+
+    fn on_finish(&mut self, t_end: f64, _jobs: &[&JobState]) {
+        for node in 0..self.open.len() {
+            self.close_episode(node, t_end);
+        }
+        self.straggler_slowdown = if self.degraded_node_time_s > 0.0 {
+            self.weighted_slow_s / self.degraded_node_time_s
+        } else {
+            1.0
         };
     }
 }
@@ -452,6 +561,62 @@ mod tests {
         o.on_finish(200.0, &[&a, &b]);
         let want = (100.0 * 4.0 + 50.0 * 4.0) / 200.0;
         assert!((o.goodput - want).abs() < 1e-9, "{}", o.goodput);
+    }
+
+    #[test]
+    fn straggler_observer_episode_accounting() {
+        let mut o = StragglerObserver::new(3);
+        assert_eq!(o.straggler_slowdown, 1.0);
+        // node 1: degraded to 0.5 over [10, 40): 30 node-seconds at 2x
+        o.on_node_degraded(10.0, 1, 0.5);
+        o.on_node_restored(40.0, 1);
+        // node 2: degraded to 0.25 at 50, never restored — closed at
+        // t_end=100: 50 node-seconds at 4x
+        o.on_node_degraded(50.0, 2, 0.25);
+        // restore of a healthy node is a no-op
+        o.on_node_restored(60.0, 0);
+        o.on_finish(100.0, &[]);
+        assert_eq!(o.node_degrades, 2);
+        assert!((o.degraded_node_time_s - 80.0).abs() < 1e-9);
+        // time-weighted 1/speed: (30*2 + 50*4) / 80 = 3.25
+        assert!(
+            (o.straggler_slowdown - 3.25).abs() < 1e-9,
+            "{}",
+            o.straggler_slowdown
+        );
+    }
+
+    #[test]
+    fn straggler_observer_repeat_degrade_resamples_severity() {
+        let mut o = StragglerObserver::new(1);
+        o.on_node_degraded(0.0, 0, 0.5); // [0,10) at 2x
+        o.on_node_degraded(10.0, 0, 0.25); // [10,20) at 4x
+        o.on_node_restored(20.0, 0);
+        o.on_finish(30.0, &[]);
+        assert_eq!(o.node_degrades, 2);
+        assert!((o.degraded_node_time_s - 20.0).abs() < 1e-9);
+        assert!(
+            (o.straggler_slowdown - 3.0).abs() < 1e-9,
+            "{}",
+            o.straggler_slowdown
+        );
+    }
+
+    #[test]
+    fn straggler_observer_counts_migrations_fault_observer_does_not() {
+        let mut s = StragglerObserver::new(2);
+        let mut f = FaultObserver::new(3.0);
+        let j = job_state(0, 0.0);
+        s.on_evict(5.0, &j, EvictCause::StragglerMigration, 0.2, 3.0);
+        s.on_evict(6.0, &j, EvictCause::Preemption, 0.2, 3.0);
+        f.on_evict(5.0, &j, EvictCause::StragglerMigration, 0.2, 3.0);
+        f.on_evict(6.0, &j, EvictCause::Preemption, 0.2, 3.0);
+        assert_eq!(s.migrations, 1);
+        // the fault accountant ignores voluntary migrations entirely
+        assert_eq!(f.restarts, 1);
+        assert_eq!(f.preemptions, 1);
+        assert!((f.lost_step_time_s - 0.2).abs() < 1e-12);
+        assert!((f.restore_delay_s - 3.0).abs() < 1e-12);
     }
 
     #[test]

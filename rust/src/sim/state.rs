@@ -15,7 +15,9 @@ use crate::kernelsim::overlap::iter_time;
 use crate::kernelsim::AimdController;
 use crate::scheduler::predictor::GroupPerf;
 use crate::scheduler::predictor::Predictor;
-use crate::scheduler::{urgency, Candidate, GroupState, PolicyHooks};
+use crate::scheduler::{
+    urgency, Candidate, GroupState, NodeView, PolicyHooks,
+};
 use crate::util::f64_cmp;
 use crate::workload::JobSpec;
 
@@ -55,13 +57,28 @@ pub struct Eviction {
 }
 
 /// A group currently executing at a fixed step rate. The rate only
-/// changes at scheduling rounds (regroup or AIMD update), which is what
-/// lets the engine compute completion times exactly.
+/// changes at scheduling rounds (regroup or AIMD update) or at a
+/// straggler degrade/restore instant ([`SimState::set_node_speed`]),
+/// which is what lets the engine compute completion times exactly.
+///
+/// `step_time` is the *effective* step time — the planned
+/// `base_step_time` divided by `speed`, the slowest multiplier among
+/// the gang's nodes (a fused group is gang-synchronous, so one
+/// degraded node paces every step). With all nodes healthy
+/// `speed == 1.0` and `step_time` is bit-identical to
+/// `base_step_time` (IEEE division by 1.0 is exact), which is what
+/// keeps straggler-free runs byte-identical to the pre-straggler
+/// engine.
 #[derive(Debug)]
 pub struct RunningGroup {
     pub job_ids: Vec<u64>,
     pub alloc: Allocation,
+    /// effective step time: `base_step_time / speed`
     pub step_time: f64,
+    /// planned speed-1 step time (plan or AIMD-refreshed)
+    pub base_step_time: f64,
+    /// slowest node multiplier across the gang (1.0 = healthy)
+    pub speed: f64,
     pub compute_util: f64,
     pub aimd: Option<AimdController>,
     /// comp/comm decomposition for online AIMD re-evaluation
@@ -149,14 +166,18 @@ impl SimState {
                         .min(AIMD_OBS_PER_ADVANCE)
                         as usize;
                     for _ in 0..steps {
+                        // the controller sees what a wall clock would:
+                        // the *effective* step time, straggler drag
+                        // included (÷1.0 is exact when healthy)
                         let t_step = iter_time(
                             g.comp_s, g.comm_s, c.n(), g.oh, g.lat,
-                        );
+                        ) / g.speed;
                         c.observe(t_step);
                     }
-                    g.step_time = iter_time(
+                    g.base_step_time = iter_time(
                         g.comp_s, g.comm_s, c.n(), g.oh, g.lat,
                     );
+                    g.step_time = g.base_step_time / g.speed;
                 }
             }
         }
@@ -314,6 +335,80 @@ impl SimState {
         self.allocator.set_down(node, false);
     }
 
+    /// Set `node`'s throughput multiplier (straggler degrade/restore)
+    /// and re-price every running group whose gang touches it *at this
+    /// instant*: progress already accrued at the old rate stays
+    /// (the engine advances time before applying the event), and the
+    /// group's effective step time switches to
+    /// `base_step_time / min-node-speed` from now on — the in-progress
+    /// fractional step is thereby re-priced exactly at the transition,
+    /// with no discretization. The following scheduling round
+    /// re-derives completion events from the new rates through the
+    /// ordinary epoch-staleness machinery.
+    pub fn set_node_speed(&mut self, node: usize, speed: f64) {
+        self.allocator.set_speed(node, speed);
+        for g in &mut self.running {
+            if g.alloc.gpus.iter().any(|gpu| gpu.node == node) {
+                g.speed = self.allocator.alloc_speed(&g.alloc);
+                g.step_time = g.base_step_time / g.speed;
+            }
+        }
+    }
+
+    /// Straggler migration (mechanism half; the *decision* — which
+    /// nodes are flagged — comes from the detection estimator via the
+    /// engine). Every uncompleted job whose owned gang touches a
+    /// `flagged` node (estimated slowdown past the migrate threshold)
+    /// is evicted exactly like a preemption: in-flight fractional step
+    /// rolled back at the group's effective rate, gang released,
+    /// checkpoint-restore penalty charged, requeued — admission then
+    /// re-places it preferring nodes outside `avoid` (the suspected
+    /// set, a superset of `flagged`). Jobs are migrated only while
+    /// enough free capacity remains outside `avoid` to re-place them
+    /// all at this instant; the guard is best-effort, not a
+    /// reservation — competing queued jobs admitted during the restore
+    /// window can still take that capacity first, in which case the
+    /// avoid-fallback may land a migrated job back on a slow node (a
+    /// slow GPU beats no GPU). Returns the evictions in job-id order.
+    pub fn migrate_stragglers(
+        &mut self,
+        flagged: &[bool],
+        avoid: &[bool],
+        t: f64,
+        penalty: &HashMap<u64, f64>,
+    ) -> Vec<Eviction> {
+        let mut budget =
+            self.allocator.available_gpus_avoiding(avoid);
+        let mut ids: Vec<u64> = self
+            .allocations
+            .iter()
+            .filter(|(id, a)| {
+                self.states[*id].completed_at.is_none()
+                    && a.gpus.iter().any(|g| {
+                        flagged.get(g.node).copied().unwrap_or(false)
+                    })
+            })
+            .map(|(id, _)| *id)
+            .collect();
+        ids.sort_unstable();
+        let mut evictions = vec![];
+        for id in ids {
+            let need = self.states[&id].spec.gpus;
+            if need > budget {
+                continue;
+            }
+            budget -= need;
+            // mechanically identical to an exogenous preemption:
+            // group removal, rollback priced at the group rate, gang
+            // release, restore window, requeue (the job holds an
+            // allocation, so this never returns None)
+            if let Some(e) = self.preempt(id, t, penalty) {
+                evictions.push(e);
+            }
+        }
+        evictions
+    }
+
     /// Exogenously preempt job `id` at time `t` (spot reclaim /
     /// higher-priority tenant). A no-op unless the job is currently
     /// placed (running in a group or holding a gang). If its group had
@@ -349,13 +444,19 @@ impl SimState {
     }
 
     /// Allocate GPUs to queued jobs (FIFO; id breaks submit-time ties
-    /// so the order never depends on map order). Returns jobs admitted
-    /// for the first time (for observers).
+    /// so the order never depends on map order). When a detection-aware
+    /// policy supplies `avoid` (suspected stragglers), placements
+    /// prefer unflagged nodes and fall back to flagged ones only when
+    /// nothing else fits ([`Allocator::allocate_avoiding`]); `None` is
+    /// the ordinary oblivious path, bit-identical to the
+    /// pre-straggler engine. Returns jobs admitted for the first time
+    /// (for observers).
     pub fn admit_queued(
         &mut self,
         max_concurrent: usize,
         predictor: &mut Predictor,
         t: f64,
+        avoid: Option<&[bool]>,
     ) -> Vec<u64> {
         let states = &self.states;
         self.queue.sort_by(|a, b| {
@@ -386,7 +487,13 @@ impl SimState {
             let spec = self.states[&id].spec.clone();
             let cap_ok = running_count + admitted_now < max_concurrent;
             if cap_ok {
-                if let Some(a) = self.allocator.allocate(spec.gpus) {
+                let got = match avoid {
+                    Some(av) => {
+                        self.allocator.allocate_avoiding(spec.gpus, av)
+                    }
+                    None => self.allocator.allocate(spec.gpus),
+                };
+                if let Some(a) = got {
                     let iso = predictor
                         .isolated_step_time(&spec, &a)
                         .unwrap_or(f64::INFINITY);
@@ -471,6 +578,7 @@ impl SimState {
         &mut self,
         groups: &mut Vec<(GroupState, GroupPerf)>,
         hooks: &dyn PolicyHooks,
+        view: &NodeView,
         predictor: &mut Predictor,
         sched: &SchedulerConfig,
         max_concurrent: usize,
@@ -497,6 +605,7 @@ impl SimState {
             match hooks.elastic_admit(
                 &spec,
                 groups.as_slice(),
+                view,
                 predictor,
                 sched,
             ) {
@@ -585,7 +694,7 @@ impl SimState {
             } else {
                 1e-6
             };
-            let step_time = match &aimd {
+            let base_step_time = match &aimd {
                 Some(c) => iter_time(
                     perf.plan.comp_s,
                     perf.plan.comm_s,
@@ -595,10 +704,15 @@ impl SimState {
                 ),
                 None => perf.step_time_s,
             };
+            // straggler drag: the gang runs at its slowest node's
+            // multiplier (exactly base/1.0 = base when healthy)
+            let speed = self.allocator.alloc_speed(&g.alloc);
             self.running.push(RunningGroup {
                 job_ids: ids,
                 alloc: g.alloc,
-                step_time,
+                step_time: base_step_time / speed,
+                base_step_time,
+                speed,
                 compute_util: perf.compute_util,
                 comp_s: perf.plan.comp_s,
                 comm_s: perf.plan.comm_s,

@@ -2,13 +2,16 @@
 //!
 //! A [`SweepGrid`] is the cartesian product of the evaluation axes every
 //! figure of the paper varies: policy × job count × cluster size ×
-//! arrival-rate scale × trace month × node MTBF × seed.
-//! [`SweepGrid::points`] enumerates the cells in a fixed row-major
-//! order, so a sweep's output is a pure function of the grid regardless
-//! of how many worker threads execute it. The MTBF axis (seconds; 0 =
-//! no churn) opens the failure/SLO workload dimension: every other
-//! fault knob (MTTR, preemption rate, restore cost model) comes from
-//! the grid's base config.
+//! arrival-rate scale × trace month × node MTBF × straggler MTBS ×
+//! seed. [`SweepGrid::points`] enumerates the cells in a fixed
+//! row-major order, so a sweep's output is a pure function of the grid
+//! regardless of how many worker threads execute it. The MTBF axis
+//! (seconds; 0 = no churn) opens the failure/SLO workload dimension;
+//! the straggler axis (mean seconds between degrade episodes per node;
+//! 0 = no stragglers) opens the degraded-node dimension. Every other
+//! fault/straggler knob (MTTR, preemption rate, restore cost model,
+//! severity bounds, detection thresholds) comes from the grid's base
+//! config.
 
 use crate::cluster::ClusterSpec;
 use crate::config::{ExperimentConfig, Policy};
@@ -38,6 +41,10 @@ pub struct SweepGrid {
     /// node MTBF values in seconds; 0 disables node failures for the
     /// cell (other fault knobs come from `base.faults`)
     pub mtbfs: Vec<f64>,
+    /// straggler MTBS values in seconds (mean time between degrade
+    /// episodes per node); 0 disables stragglers for the cell (other
+    /// straggler knobs come from `base.stragglers`)
+    pub stragglers: Vec<f64>,
     pub seeds: Vec<u64>,
 }
 
@@ -51,6 +58,7 @@ impl Default for SweepGrid {
             rate_scales: vec![1.0],
             months: vec![1],
             mtbfs: vec![base.faults.mtbf_s],
+            stragglers: vec![base.stragglers.mtbs_s],
             seeds: vec![base.seed],
             base,
         }
@@ -66,6 +74,7 @@ impl SweepGrid {
             * self.rate_scales.len()
             * self.months.len()
             * self.mtbfs.len()
+            * self.stragglers.len()
             * self.seeds.len()
     }
 
@@ -83,6 +92,7 @@ impl SweepGrid {
             ("rate_scales", self.rate_scales.is_empty()),
             ("months", self.months.is_empty()),
             ("mtbfs", self.mtbfs.is_empty()),
+            ("stragglers", self.stragglers.is_empty()),
             ("seeds", self.seeds.is_empty()),
         ] {
             if empty {
@@ -108,18 +118,21 @@ impl SweepGrid {
                     for &rate_scale in &self.rate_scales {
                         for &month in &self.months {
                             for &mtbf_s in &self.mtbfs {
-                                for &seed in &self.seeds {
-                                    out.push(SweepPoint {
-                                        index,
-                                        policy,
-                                        n_jobs,
-                                        gpus,
-                                        rate_scale,
-                                        month,
-                                        mtbf_s,
-                                        seed,
-                                    });
-                                    index += 1;
+                                for &mtbs in &self.stragglers {
+                                    for &seed in &self.seeds {
+                                        out.push(SweepPoint {
+                                            index,
+                                            policy,
+                                            n_jobs,
+                                            gpus,
+                                            rate_scale,
+                                            month,
+                                            mtbf_s,
+                                            straggler_mtbs_s: mtbs,
+                                            seed,
+                                        });
+                                        index += 1;
+                                    }
                                 }
                             }
                         }
@@ -143,6 +156,8 @@ pub struct SweepPoint {
     pub month: usize,
     /// node MTBF in seconds (0 = no node failures for this cell)
     pub mtbf_s: f64,
+    /// straggler MTBS in seconds (0 = no stragglers for this cell)
+    pub straggler_mtbs_s: f64,
     pub seed: u64,
 }
 
@@ -156,28 +171,32 @@ impl SweepPoint {
         cfg.cluster = ClusterSpec::with_gpus(self.gpus);
         cfg.trace = month_profile(self.month).scaled(self.rate_scale);
         cfg.faults.mtbf_s = self.mtbf_s;
+        cfg.stragglers.mtbs_s = self.straggler_mtbs_s;
         cfg.seed = self.seed;
         cfg
     }
 
     /// Short machine-friendly label, e.g.
-    /// `tlora/j200/g128/r1x/m1/f0/s42`.
+    /// `tlora/j200/g128/r1x/m1/f0/d0/s42`.
     pub fn label(&self) -> String {
         format!("{}/s{}", self.cell_key(), self.seed)
     }
 
     /// Scenario key ignoring the seed — replicas of one scenario share a
     /// cell key and are aggregated together by the report layer. The
-    /// `f` component is the node MTBF in seconds (0 = fault-free).
+    /// `f` component is the node MTBF in seconds (0 = fault-free); the
+    /// `d` component is the straggler MTBS in seconds (0 = no
+    /// degraded nodes).
     pub fn cell_key(&self) -> String {
         format!(
-            "{}/j{}/g{}/r{}x/m{}/f{}",
+            "{}/j{}/g{}/r{}x/m{}/f{}/d{}",
             self.policy.slug(),
             self.n_jobs,
             self.gpus,
             self.rate_scale,
             self.month,
-            self.mtbf_s
+            self.mtbf_s,
+            self.straggler_mtbs_s
         )
     }
 }
@@ -253,6 +272,12 @@ mod tests {
         let mut g = grid();
         g.mtbfs = vec![-5.0];
         assert!(g.validate().is_err());
+        let mut g = grid();
+        g.stragglers.clear();
+        assert!(g.validate().is_err());
+        let mut g = grid();
+        g.stragglers = vec![-60.0];
+        assert!(g.validate().is_err());
         assert!(grid().validate().is_ok());
     }
 
@@ -267,13 +292,40 @@ mod tests {
         assert_eq!(pts[0].mtbf_s, 0.0);
         assert_eq!(pts[3].mtbf_s, 1800.0);
         assert_ne!(pts[0].cell_key(), pts[3].cell_key());
-        assert!(pts[0].cell_key().ends_with("/f0"));
-        assert!(pts[3].cell_key().ends_with("/f1800"));
+        assert!(pts[0].cell_key().ends_with("/f0/d0"));
+        assert!(pts[3].cell_key().ends_with("/f1800/d0"));
         let cfg0 = pts[0].config(&g.base);
         let cfg1 = pts[3].config(&g.base);
         assert!(!cfg0.faults.enabled());
         assert_eq!(cfg1.faults.mtbf_s, 1800.0);
         assert!(cfg1.faults.enabled());
+        assert!(cfg0.validate().is_ok() && cfg1.validate().is_ok());
+    }
+
+    #[test]
+    fn straggler_axis_enumerates_and_applies() {
+        let mut g = grid();
+        g.stragglers = vec![0.0, 1200.0];
+        assert_eq!(g.len(), 2 * 2 * 2 * 2 * 3);
+        let pts = g.points();
+        assert_eq!(pts.len(), g.len());
+        // straggler MTBS varies faster than MTBF, slower than seed
+        assert_eq!(pts[0].straggler_mtbs_s, 0.0);
+        assert_eq!(pts[3].straggler_mtbs_s, 1200.0);
+        assert_ne!(pts[0].cell_key(), pts[3].cell_key());
+        assert!(pts[0].cell_key().ends_with("/f0/d0"));
+        assert!(pts[3].cell_key().ends_with("/f0/d1200"));
+        let cfg0 = pts[0].config(&g.base);
+        let cfg1 = pts[3].config(&g.base);
+        assert!(!cfg0.stragglers.enabled());
+        assert_eq!(cfg1.stragglers.mtbs_s, 1200.0);
+        assert!(cfg1.stragglers.enabled());
+        // non-axis straggler knobs ride along from the base config
+        assert_eq!(
+            cfg1.stragglers.severity_min,
+            g.base.stragglers.severity_min
+        );
+        assert_eq!(cfg1.stragglers.detect, g.base.stragglers.detect);
         assert!(cfg0.validate().is_ok() && cfg1.validate().is_ok());
     }
 }

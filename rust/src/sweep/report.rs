@@ -30,10 +30,17 @@ pub struct CellSummary {
     pub goodput: (f64, f64),
     /// fraction of jobs meeting their SLO deadline
     pub slo_attainment: (f64, f64),
+    /// time-weighted severity of degraded node-time (1.0 = no
+    /// stragglers)
+    pub straggler_slowdown: (f64, f64),
     /// total evictions across the cell's replicas
     pub restarts: u64,
     /// total node-failure events across the cell's replicas
     pub node_failures: u64,
+    /// total straggler degrade episodes across the cell's replicas
+    pub node_degrades: u64,
+    /// total voluntary straggler migrations across the cell's replicas
+    pub migrations: u64,
     /// total jobs that never completed across the cell's replicas —
     /// nonzero means the scenario silently truncated work and its
     /// JCT/throughput numbers are not comparable
@@ -80,6 +87,9 @@ pub fn aggregate(run: &SweepRun) -> Vec<CellSummary> {
                 mean_slowdown: col(&|p| p.result.mean_slowdown),
                 goodput: col(&|p| p.result.goodput),
                 slo_attainment: col(&|p| p.result.slo_attainment),
+                straggler_slowdown: col(&|p| {
+                    p.result.straggler_slowdown
+                }),
                 restarts: pts
                     .iter()
                     .map(|p| p.result.restarts)
@@ -87,6 +97,14 @@ pub fn aggregate(run: &SweepRun) -> Vec<CellSummary> {
                 node_failures: pts
                     .iter()
                     .map(|p| p.result.node_failures)
+                    .sum(),
+                node_degrades: pts
+                    .iter()
+                    .map(|p| p.result.node_degrades)
+                    .sum(),
+                migrations: pts
+                    .iter()
+                    .map(|p| p.result.migrations)
                     .sum(),
                 incomplete: pts
                     .iter()
@@ -111,7 +129,7 @@ pub fn sweep_table(title: &str, cells: &[CellSummary]) -> Table {
         title,
         &["scenario", "seeds", "thr (samples/s)", "goodput",
           "mean JCT (s)", "p99 JCT (s)", "GPU util", "slowdown",
-          "SLO", "restarts", "incomplete"],
+          "SLO", "restarts", "migr", "incomplete"],
     );
     for c in cells {
         t.row(&[
@@ -141,6 +159,7 @@ pub fn sweep_table(title: &str, cells: &[CellSummary]) -> Table {
                 }
             ),
             c.restarts.to_string(),
+            c.migrations.to_string(),
             // warning column: jobs cut off before completion make the
             // cell's other metrics incomparable
             if c.incomplete == 0 {
@@ -159,10 +178,12 @@ pub fn to_csv(run: &SweepRun) -> String {
     let mut t = Table::new(
         "sweep",
         &["index", "policy", "n_jobs", "gpus", "rate_scale", "month",
-          "mtbf_s", "seed", "throughput", "goodput", "mean_jct",
-          "p99_jct", "gpu_util", "makespan", "mean_slowdown",
-          "slo_attainment", "node_failures", "preemptions", "restarts",
-          "lost_step_time_s", "restore_delay_s", "sched_rounds",
+          "mtbf_s", "straggler_mtbs_s", "seed", "throughput",
+          "goodput", "mean_jct", "p99_jct", "gpu_util", "makespan",
+          "mean_slowdown", "slo_attainment", "node_failures",
+          "preemptions", "restarts", "lost_step_time_s",
+          "restore_delay_s", "node_degrades", "degraded_time_s",
+          "straggler_slowdown", "migrations", "sched_rounds",
           "events", "probes", "completed", "incomplete"],
     );
     for p in &run.points {
@@ -174,6 +195,7 @@ pub fn to_csv(run: &SweepRun) -> String {
             p.point.rate_scale.to_string(),
             p.point.month.to_string(),
             p.point.mtbf_s.to_string(),
+            p.point.straggler_mtbs_s.to_string(),
             p.point.seed.to_string(),
             format!("{:.6}", p.result.avg_throughput),
             format!("{:.6}", p.result.goodput),
@@ -188,6 +210,10 @@ pub fn to_csv(run: &SweepRun) -> String {
             p.result.restarts.to_string(),
             format!("{:.6}", p.result.lost_step_time_s),
             format!("{:.6}", p.result.restore_delay_s),
+            p.result.node_degrades.to_string(),
+            format!("{:.6}", p.result.degraded_node_time_s),
+            format!("{:.6}", p.result.straggler_slowdown),
+            p.result.migrations.to_string(),
             p.result.sched_rounds.to_string(),
             p.result.events.to_string(),
             p.result.scheduler_probes.to_string(),
@@ -229,6 +255,7 @@ fn to_json_with(run: &SweepRun, include_timing: bool) -> Json {
                 .set("rate_scale", p.point.rate_scale)
                 .set("month", p.point.month)
                 .set("mtbf_s", p.point.mtbf_s)
+                .set("straggler_mtbs_s", p.point.straggler_mtbs_s)
                 .set("seed", p.point.seed)
                 .set("throughput", p.result.avg_throughput)
                 .set("goodput", p.result.goodput)
@@ -243,6 +270,16 @@ fn to_json_with(run: &SweepRun, include_timing: bool) -> Json {
                 .set("restarts", p.result.restarts)
                 .set("lost_step_time_s", p.result.lost_step_time_s)
                 .set("restore_delay_s", p.result.restore_delay_s)
+                .set("node_degrades", p.result.node_degrades)
+                .set(
+                    "degraded_time_s",
+                    p.result.degraded_node_time_s,
+                )
+                .set(
+                    "straggler_slowdown",
+                    p.result.straggler_slowdown,
+                )
+                .set("migrations", p.result.migrations)
                 .set("sched_rounds", p.result.sched_rounds)
                 .set("events", p.result.events)
                 .set("scheduler_probes", p.result.scheduler_probes)
@@ -271,8 +308,14 @@ fn to_json_with(run: &SweepRun, include_timing: bool) -> Json {
                 .set("makespan", ci(c.makespan))
                 .set("mean_slowdown", ci(c.mean_slowdown))
                 .set("slo_attainment", ci(c.slo_attainment))
+                .set(
+                    "straggler_slowdown",
+                    ci(c.straggler_slowdown),
+                )
                 .set("restarts", c.restarts)
                 .set("node_failures", c.node_failures)
+                .set("node_degrades", c.node_degrades)
+                .set("migrations", c.migrations)
                 .set("incomplete", c.incomplete)
         })
         .collect();
@@ -356,7 +399,7 @@ mod tests {
         let run = run_small();
         let t = sweep_table("demo", &aggregate(&run));
         let s = t.render();
-        assert!(s.contains("tlora/j8/g16/r2x/m1/f0"), "{s}");
+        assert!(s.contains("tlora/j8/g16/r2x/m1/f0/d0"), "{s}");
     }
 
     #[test]
@@ -375,6 +418,9 @@ mod tests {
             assert!(p.get("goodput").is_some());
             assert!(p.get("slo_attainment").is_some());
             assert!(p.get("mtbf_s").is_some());
+            assert!(p.get("straggler_mtbs_s").is_some());
+            assert!(p.get("straggler_slowdown").is_some());
+            assert!(p.get("migrations").is_some());
         }
         // canonical output is reproducible byte-for-byte
         let again = to_json_canonical(&runner::run(
@@ -403,6 +449,9 @@ mod tests {
         let cells = aggregate(&run);
         assert_eq!(cells[0].restarts, 0);
         assert_eq!(cells[0].node_failures, 0);
+        assert_eq!(cells[0].node_degrades, 0);
+        assert_eq!(cells[0].migrations, 0);
+        assert_eq!(cells[0].straggler_slowdown.0, 1.0);
         assert!(cells[0].goodput.0 > 0.0);
         assert!(
             (0.0..=1.0).contains(&cells[0].slo_attainment.0),
@@ -411,9 +460,17 @@ mod tests {
         );
         let csv = to_csv(&run);
         let header = csv.lines().next().unwrap();
-        for col in
-            ["mtbf_s", "goodput", "slo_attainment", "restarts"]
-        {
+        for col in [
+            "mtbf_s",
+            "goodput",
+            "slo_attainment",
+            "restarts",
+            "straggler_mtbs_s",
+            "node_degrades",
+            "degraded_time_s",
+            "straggler_slowdown",
+            "migrations",
+        ] {
             assert!(header.contains(col), "{header}");
         }
     }

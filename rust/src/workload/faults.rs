@@ -24,6 +24,15 @@
 //! * [`synthesize_node_faults`] — materialize the renewal process up to
 //!   a horizon as a sorted script; its prefix is exactly what the
 //!   engine's lazy draws produce, which the module tests pin.
+//! * [`StragglerModel`] / [`ScriptedStraggler`] — the *degraded* (not
+//!   dead) fault mode: a node keeps its GPUs but runs every co-located
+//!   group at a fraction of its nominal rate. Same per-node seeded
+//!   renewal construction as [`NodeFaultModel`] (healthy spans with
+//!   mean `mtbs_s`, degraded spans with mean `mtts_s`), plus a sampled
+//!   *severity* — the node's speed multiplier in
+//!   `[severity_min, severity_max]` — drawn per episode.
+//!   [`synthesize_stragglers`] materializes the stream like
+//!   `synthesize_node_faults` does for failures.
 
 use crate::util::f64_cmp;
 use crate::util::rng::Rng;
@@ -138,6 +147,147 @@ impl PreemptionModel {
         let target = *self.rng.choice(&self.job_ids);
         (dt, target)
     }
+}
+
+/// One deterministic injected straggler transition: at `time`, `node`
+/// starts running at `speed` × its nominal rate. `speed` in (0, 1) is
+/// a degrade; `speed >= 1` restores the node (scripts normally use
+/// exactly 1.0). Threaded through
+/// `sim::EngineOptions::straggler_script` for pinned scenarios.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScriptedStraggler {
+    pub time: f64,
+    pub node: u64,
+    pub speed: f64,
+}
+
+/// Salt for straggler streams — distinct from [`FAULT_SALT`] so a
+/// config running both fault models never correlates their draws.
+const STRAGGLER_SALT: u64 = 0x5708_661E;
+
+/// Per-node straggler renewal model: healthy spans exponential with
+/// mean `mtbs_s`, degraded spans exponential with mean `mtts_s`, and a
+/// per-episode severity (the node's speed multiplier) uniform in
+/// `[severity_min, severity_max]`. Each node owns an independent RNG
+/// stream pure in `(seed, node)`, like [`NodeFaultModel`] — the engine
+/// interleaving draws across nodes never shifts a node's sequence.
+///
+/// Lazy draw order per node (pinned by [`synthesize_stragglers`] and
+/// the module tests): healthy span → (severity, degraded span) →
+/// healthy span → ...
+#[derive(Debug)]
+pub struct StragglerModel {
+    mtbs_s: f64,
+    mtts_s: f64,
+    severity_min: f64,
+    severity_max: f64,
+    rngs: Vec<Rng>,
+}
+
+impl StragglerModel {
+    /// `mtbs_s`/`mtts_s` must be > 0 (a zero MTBS means "stragglers
+    /// disabled" and callers should not build the model); severities
+    /// must satisfy `0 < severity_min <= severity_max < 1` — a
+    /// degraded node is strictly slower, never stopped.
+    pub fn new(
+        mtbs_s: f64,
+        mtts_s: f64,
+        severity_min: f64,
+        severity_max: f64,
+        n_nodes: usize,
+        seed: u64,
+    ) -> StragglerModel {
+        assert!(mtbs_s > 0.0 && mtts_s > 0.0, "mtbs/mtts must be > 0");
+        assert!(
+            severity_min > 0.0
+                && severity_min <= severity_max
+                && severity_max < 1.0,
+            "severity bounds must satisfy 0 < min <= max < 1"
+        );
+        let rngs = (0..n_nodes)
+            .map(|n| {
+                Rng::new(
+                    seed ^ STRAGGLER_SALT
+                        ^ (n as u64 + 1)
+                            .wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                )
+            })
+            .collect();
+        StragglerModel {
+            mtbs_s,
+            mtts_s,
+            severity_min,
+            severity_max,
+            rngs,
+        }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.rngs.len()
+    }
+
+    /// Draw the next healthy span for `node` (seconds until it starts
+    /// straggling, measured from now / from restore).
+    pub fn healthy_span(&mut self, node: usize) -> f64 {
+        self.rngs[node].exponential(1.0 / self.mtbs_s)
+    }
+
+    /// Draw one degrade episode for `node`: `(speed, duration_s)` —
+    /// the sampled severity (speed multiplier in
+    /// `[severity_min, severity_max]`) and how long it lasts.
+    pub fn episode(&mut self, node: usize) -> (f64, f64) {
+        let speed = self.rngs[node]
+            .range_f64(self.severity_min, self.severity_max);
+        let dur = self.rngs[node].exponential(1.0 / self.mtts_s);
+        (speed, dur)
+    }
+}
+
+/// Materialize the per-node straggler renewal process as a sorted
+/// script covering `[0, horizon_s)` — degrade entries carry the
+/// sampled severity, each followed by its `speed = 1.0` restore (the
+/// restore may land beyond the horizon so no node straggles forever).
+/// Its prefix is exactly what the engine's lazy draws produce.
+pub fn synthesize_stragglers(
+    mtbs_s: f64,
+    mtts_s: f64,
+    severity_min: f64,
+    severity_max: f64,
+    n_nodes: usize,
+    seed: u64,
+    horizon_s: f64,
+) -> Vec<ScriptedStraggler> {
+    let mut model = StragglerModel::new(
+        mtbs_s,
+        mtts_s,
+        severity_min,
+        severity_max,
+        n_nodes,
+        seed,
+    );
+    let mut out = vec![];
+    for node in 0..n_nodes {
+        let mut t = model.healthy_span(node);
+        while t < horizon_s {
+            let (speed, dur) = model.episode(node);
+            out.push(ScriptedStraggler {
+                time: t,
+                node: node as u64,
+                speed,
+            });
+            let restore = t + dur;
+            out.push(ScriptedStraggler {
+                time: restore,
+                node: node as u64,
+                speed: 1.0,
+            });
+            t = restore + model.healthy_span(node);
+        }
+    }
+    out.sort_by(|a, b| {
+        f64_cmp(a.time, b.time).then(a.node.cmp(&b.node))
+    });
+    out
 }
 
 /// Materialize the per-node renewal process as a sorted fault script
@@ -267,6 +417,89 @@ mod tests {
                     "recovery {i} node {node}"
                 );
                 t = rec + model.uptime(node as usize);
+                i += 2;
+            }
+            assert_eq!(i, evs.len());
+        }
+    }
+
+    #[test]
+    fn straggler_streams_deterministic_and_independent() {
+        let mut a = StragglerModel::new(1000.0, 200.0, 0.2, 0.5, 4, 7);
+        let mut b = StragglerModel::new(1000.0, 200.0, 0.2, 0.5, 4, 7);
+        for node in 0..4 {
+            for _ in 0..20 {
+                assert_eq!(
+                    a.healthy_span(node),
+                    b.healthy_span(node)
+                );
+                assert_eq!(a.episode(node), b.episode(node));
+            }
+        }
+        // a node's stream is untouched by draws on other nodes
+        let mut c = StragglerModel::new(1000.0, 200.0, 0.2, 0.5, 4, 7);
+        let mut d = StragglerModel::new(1000.0, 200.0, 0.2, 0.5, 4, 7);
+        for _ in 0..50 {
+            let _ = d.healthy_span(0);
+            let _ = d.episode(0);
+        }
+        assert_eq!(c.healthy_span(3), d.healthy_span(3));
+        // and straggler streams never alias the failure streams for
+        // the same experiment seed
+        let mut f = NodeFaultModel::new(1000.0, 200.0, 4, 7);
+        let mut s = StragglerModel::new(1000.0, 200.0, 0.2, 0.5, 4, 7);
+        assert_ne!(f.uptime(0), s.healthy_span(0));
+    }
+
+    #[test]
+    fn straggler_severity_within_bounds() {
+        let mut m = StragglerModel::new(500.0, 100.0, 0.25, 0.6, 1, 3);
+        for _ in 0..2_000 {
+            let (speed, dur) = m.episode(0);
+            assert!((0.25..=0.6).contains(&speed), "{speed}");
+            assert!(dur >= 0.0);
+        }
+    }
+
+    #[test]
+    fn synthesized_stragglers_alternate_and_match_lazy_draws() {
+        let script = synthesize_stragglers(
+            300.0, 60.0, 0.2, 0.5, 3, 11, 10_000.0,
+        );
+        assert!(!script.is_empty());
+        for w in script.windows(2) {
+            assert!(w[0].time <= w[1].time);
+        }
+        let mut model =
+            StragglerModel::new(300.0, 60.0, 0.2, 0.5, 3, 11);
+        for node in 0..3u64 {
+            let evs: Vec<&ScriptedStraggler> = script
+                .iter()
+                .filter(|s| s.node == node)
+                .collect();
+            // degrade (speed < 1) / restore (speed == 1) alternate and
+            // every degrade has its restore in the script
+            for (i, s) in evs.iter().enumerate() {
+                if i % 2 == 0 {
+                    assert!(s.speed < 1.0, "node {node} event {i}");
+                } else {
+                    assert_eq!(s.speed, 1.0, "node {node} event {i}");
+                }
+            }
+            assert_eq!(evs.len() % 2, 0, "node {node} left degraded");
+            // the script is exactly the lazy draw sequence
+            let mut t = model.healthy_span(node as usize);
+            let mut i = 0;
+            while t < 10_000.0 {
+                let (speed, dur) = model.episode(node as usize);
+                assert_eq!(evs[i].time, t, "degrade {i} node {node}");
+                assert_eq!(evs[i].speed, speed);
+                assert_eq!(
+                    evs[i + 1].time,
+                    t + dur,
+                    "restore {i} node {node}"
+                );
+                t = t + dur + model.healthy_span(node as usize);
                 i += 2;
             }
             assert_eq!(i, evs.len());

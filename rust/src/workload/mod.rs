@@ -8,15 +8,17 @@
 //! concurrency scaling, lognormal service durations, power-of-two GPU
 //! gangs) and [`trace`] loads real CSVs with the same schema if provided.
 //! [`faults`] adds the churn dimension: seeded per-node MTBF/MTTR
-//! failure streams, Poisson preemptions, and deterministic injected
-//! fault scripts.
+//! failure streams, Poisson preemptions, per-node straggler
+//! (degraded-node) renewal streams with sampled severities, and
+//! deterministic injected fault/straggler scripts.
 
 pub mod faults;
 pub mod trace;
 
 pub use faults::{
-    synthesize_node_faults, FaultKind, NodeFaultModel, PreemptionModel,
-    ScriptedFault,
+    synthesize_node_faults, synthesize_stragglers, FaultKind,
+    NodeFaultModel, PreemptionModel, ScriptedFault, ScriptedStraggler,
+    StragglerModel,
 };
 pub use trace::{TraceGenerator, TraceProfile, load_csv, save_csv};
 

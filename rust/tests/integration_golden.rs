@@ -2,7 +2,10 @@
 //! canonical JSON output is committed as a diffable fixture, turning
 //! the determinism contract into an artifact a code review can read.
 //!
-//! The pinned grid (keep in sync with `golden_grid()` below):
+//! The pinned grid (keep in sync with `golden_grid()` below; the
+//! straggler axis stays at its 0 default, so the fixture doubles as
+//! the straggler-free differential reference —
+//! `straggler_machinery_is_byte_free_when_disabled`):
 //!
 //! ```text
 //! tlora sweep --policies tlora,megatron --n-jobs 10 --gpus 16 \
@@ -60,7 +63,7 @@ fn golden_faulted_sweep_is_bit_identical_across_threads_and_runs() {
     assert_eq!(points.len(), g.len());
     assert_eq!(
         points[0].get("label").unwrap().as_str().unwrap(),
-        "tlora/j10/g16/r2x/m1/f0/s7"
+        "tlora/j10/g16/r2x/m1/f0/d0/s7"
     );
     let mut churned = 0u64;
     for p in points {
@@ -78,6 +81,17 @@ fn golden_faulted_sweep_is_bit_identical_across_threads_and_runs() {
         } else {
             churned += failures;
         }
+        // the golden grid is straggler-free: its degraded-node
+        // columns must be exactly quiescent
+        assert_eq!(
+            p.get("node_degrades").unwrap().as_i64().unwrap(),
+            0,
+            "straggler episode in a straggler-free golden cell"
+        );
+        assert_eq!(
+            p.get("migrations").unwrap().as_i64().unwrap(),
+            0
+        );
     }
     assert!(churned > 0, "no faulted cell saw a single failure");
 
@@ -103,4 +117,41 @@ fn golden_faulted_sweep_is_bit_identical_across_threads_and_runs() {
             );
         }
     }
+}
+
+#[test]
+fn straggler_machinery_is_byte_free_when_disabled() {
+    // differential regression for the straggler subsystem: on a
+    // straggler-free grid (the golden grid — MTBS 0), every piece of
+    // the new machinery must be a no-op down to the byte. Three
+    // configurations that differ only in dormant straggler knobs must
+    // produce identical canonical JSON:
+    //   1. the golden grid as-is (stragglers axis defaulted to 0),
+    //   2. the same grid with the axis spelled out explicitly as 0,
+    //   3. the same grid with detection force-disabled in the base
+    //      config (no estimator could have existed either way — this
+    //      pins that the detect flag alone never perturbs dynamics).
+    // Together with the fixture comparison above, this proves the new
+    // event kinds, per-node speed bookkeeping (step_time = base/1.0),
+    // and avoid-aware admission are zero-cost when disabled.
+    let g = golden_grid();
+    let base = to_json_canonical(&run(&g, 2).unwrap()).to_pretty();
+
+    let mut explicit = golden_grid();
+    explicit.stragglers = vec![0.0];
+    let explicit_out =
+        to_json_canonical(&run(&explicit, 2).unwrap()).to_pretty();
+    assert_eq!(
+        base, explicit_out,
+        "explicit --stragglers 0 diverged from the default axis"
+    );
+
+    let mut oblivious = golden_grid();
+    oblivious.base.stragglers.detect = false;
+    let oblivious_out =
+        to_json_canonical(&run(&oblivious, 2).unwrap()).to_pretty();
+    assert_eq!(
+        base, oblivious_out,
+        "stragglers.detect changed a straggler-free run"
+    );
 }

@@ -77,6 +77,13 @@ fn assert_bit_identical(a: &SimResult, b: &SimResult, label: &str) {
         a.slo_attainment == b.slo_attainment,
         "{label}: slo attainment"
     );
+    assert_eq!(a.node_degrades, b.node_degrades, "{label}: degrades");
+    assert_eq!(a.migrations, b.migrations, "{label}: migrations");
+    assert!(
+        a.degraded_node_time_s == b.degraded_node_time_s
+            && a.straggler_slowdown == b.straggler_slowdown,
+        "{label}: straggler accounting"
+    );
 }
 
 #[test]
@@ -126,6 +133,52 @@ fn faulted_grid_is_bit_identical_across_thread_counts() {
     assert!(churn > 0, "faulted cells produced no churn");
     // each faulted cell equals a direct simulate of its config
     for p in serial.points.iter().filter(|p| p.point.mtbf_s > 0.0) {
+        let direct = simulate(&p.point.config(&g.base));
+        assert_bit_identical(&p.result, &direct, &p.point.label());
+    }
+}
+
+#[test]
+fn straggler_grid_is_bit_identical_across_thread_counts() {
+    // the straggler axis rides the same determinism contract: per-node
+    // degrade/restore streams are pure functions of (seed, node), and
+    // the detection estimator is a pure function of the event stream,
+    // so a degraded sweep must not depend on worker count either
+    let mut g = small_grid();
+    g.rate_scales = vec![2.0];
+    g.stragglers = vec![0.0, 600.0];
+    let serial = run(&g, 1).unwrap();
+    let parallel = run(&g, 4).unwrap();
+    let mut degrades = 0u64;
+    for (a, b) in serial.points.iter().zip(&parallel.points) {
+        assert_eq!(a.point, b.point);
+        assert_bit_identical(&a.result, &b.result, &a.point.label());
+        if a.point.straggler_mtbs_s == 0.0 {
+            assert_eq!(
+                a.result.node_degrades,
+                0,
+                "{}",
+                a.point.label()
+            );
+            assert_eq!(a.result.degraded_node_time_s, 0.0);
+            assert_eq!(a.result.straggler_slowdown, 1.0);
+            assert_eq!(a.result.migrations, 0);
+        } else {
+            degrades += a.result.node_degrades;
+            assert!(
+                a.result.straggler_slowdown >= 1.0,
+                "{}",
+                a.point.label()
+            );
+        }
+    }
+    assert!(degrades > 0, "straggler cells produced no episodes");
+    // each degraded cell equals a direct simulate of its config
+    for p in serial
+        .points
+        .iter()
+        .filter(|p| p.point.straggler_mtbs_s > 0.0)
+    {
         let direct = simulate(&p.point.config(&g.base));
         assert_bit_identical(&p.result, &direct, &p.point.label());
     }

@@ -12,13 +12,20 @@
 //!    per-step time above its solo baseline by more than its Δ^max,
 //!    recomputed here from the predictor's isolated step time rather
 //!    than trusting the scheduler's recorded slowdowns;
-//! 4. the extended event queue — random batches over all six event
+//! 4. the extended event queue — random batches over all eight event
 //!    kinds pop in `(time, kind, job_id, epoch)` order and are a
 //!    permutation of what was pushed; epoch staleness discards exactly
 //!    the schedule-derived events with an older stamp;
 //! 5. conservation under failure injection — with node churn and
 //!    preemptions active, every job still ends the run in exactly one
-//!    of `jct` / `incomplete_jobs`.
+//!    of `jct` / `incomplete_jobs`;
+//! 6. straggler exactness — a single scripted multiplier `m` on a solo
+//!    group's node stretches its completion by exactly the analytic
+//!    amount (and restores exactly at the scripted instant);
+//! 7. straggler robustness — rates stay finite and non-negative under
+//!    random degrade/restore interleavings, and job conservation
+//!    holds under seeded straggler churn (with and without node
+//!    failures), mirroring the failure-churn property.
 
 use std::collections::HashSet;
 
@@ -30,7 +37,9 @@ use tlora::scheduler::{schedule, Candidate};
 use tlora::sim::events::{Event, EventKind, EventQueue};
 use tlora::sim::{simulate, simulate_jobs};
 use tlora::util::f64_cmp;
-use tlora::util::prop::{gen_pair, gen_usize, gen_vec, prop_check};
+use tlora::util::prop::{
+    gen_f64, gen_pair, gen_usize, gen_vec, prop_check,
+};
 use tlora::util::rng::Rng;
 use tlora::workload::trace::{TraceGenerator, TraceProfile};
 use tlora::workload::JobSpec;
@@ -182,11 +191,13 @@ fn prop_jobs_are_conserved_even_with_unsatisfiable_requests() {
 // Extended event queue: ordering, permutation, staleness
 // ---------------------------------------------------------------------
 
-const ALL_KINDS: [EventKind; 6] = [
+const ALL_KINDS: [EventKind; 8] = [
     EventKind::Arrival,
     EventKind::Completion,
     EventKind::NodeFailure,
     EventKind::NodeRecovery,
+    EventKind::NodeDegraded,
+    EventKind::NodeRestored,
     EventKind::Preemption,
     EventKind::ReschedulePoint,
 ];
@@ -199,8 +210,10 @@ fn kind_rank(k: EventKind) -> u8 {
         EventKind::Completion => 1,
         EventKind::NodeFailure => 2,
         EventKind::NodeRecovery => 3,
-        EventKind::Preemption => 4,
-        EventKind::ReschedulePoint => 5,
+        EventKind::NodeDegraded => 4,
+        EventKind::NodeRestored => 5,
+        EventKind::Preemption => 6,
+        EventKind::ReschedulePoint => 7,
     }
 }
 
@@ -227,7 +240,7 @@ fn event_key(e: &Event) -> (u64, u8, u64, u64) {
 fn prop_event_queue_pops_in_time_kind_job_epoch_order() {
     let g = gen_vec(
         gen_pair(
-            gen_pair(gen_usize(0, 12), gen_usize(0, 5)),
+            gen_pair(gen_usize(0, 12), gen_usize(0, 7)),
             gen_pair(gen_usize(0, 6), gen_usize(0, 3)),
         ),
         0,
@@ -270,7 +283,7 @@ fn prop_stale_epoch_events_are_discarded_exactly() {
     let g = gen_pair(
         gen_vec(
             gen_pair(
-                gen_pair(gen_usize(0, 12), gen_usize(0, 5)),
+                gen_pair(gen_usize(0, 12), gen_usize(0, 7)),
                 gen_pair(gen_usize(0, 6), gen_usize(0, 3)),
             ),
             0,
@@ -360,6 +373,246 @@ fn prop_jobs_conserved_under_node_churn_and_preemption() {
                 return false;
             }
             if r.lost_step_time_s < 0.0 || r.restore_delay_s < 0.0 {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+// ---------------------------------------------------------------------
+// Straggler properties
+// ---------------------------------------------------------------------
+
+/// One 1-GPU job on an otherwise empty cluster: Megatron keeps it solo
+/// with no AIMD, so its step rate is the analytic planner rate and the
+/// straggler algebra is exact.
+fn solo_job(total_steps: u64) -> JobSpec {
+    JobSpec {
+        id: 0,
+        base_model: "llama3-8b".into(),
+        rank: 8,
+        batch_size: 4,
+        seq_len: 512,
+        gpus: 1,
+        total_steps,
+        submit_time: 0.0,
+        max_slowdown: 100.0,
+    }
+}
+
+fn solo_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.policy = Policy::Megatron;
+    cfg.n_jobs = 1;
+    cfg.cluster = ClusterSpec::with_gpus(16);
+    cfg
+}
+
+fn run_solo(
+    script: Vec<tlora::workload::faults::ScriptedStraggler>,
+) -> tlora::sim::SimResult {
+    let opts = tlora::sim::EngineOptions {
+        straggler_script: script,
+        ..tlora::sim::EngineOptions::default()
+    };
+    tlora::sim::simulate_jobs_with(
+        &solo_cfg(),
+        vec![solo_job(200)],
+        &opts,
+        &mut [],
+    )
+}
+
+#[test]
+fn prop_scripted_multiplier_scales_solo_throughput_exactly() {
+    // 6. exactness — a node degraded to speed m from t=0 stretches a
+    //    solo job's completion by exactly 1/m (measured throughput
+    //    scales by exactly m), and a scripted restore at t2 switches
+    //    the rate at exactly that instant:
+    //    jct = t2 + (jct_baseline - t2 * m)
+    use tlora::workload::faults::ScriptedStraggler;
+    let baseline = run_solo(vec![]);
+    assert_eq!(baseline.jct.len(), 1);
+    let jct0 = baseline.jct[0].1;
+    assert!(jct0 > 0.0 && jct0.is_finite());
+    prop_check(8, &gen_f64(0.2, 0.9), |&m| {
+        // degraded for the whole run: slowdown is exactly 1/m
+        let degraded = run_solo(vec![ScriptedStraggler {
+            time: 0.0,
+            node: 0,
+            speed: m,
+        }]);
+        if degraded.jct.len() != 1 {
+            return false;
+        }
+        let jct1 = degraded.jct[0].1;
+        if !((jct1 * m - jct0).abs() <= 1e-9 * jct0) {
+            return false;
+        }
+        if degraded.node_degrades != 1 {
+            return false;
+        }
+        // degraded metrics: the node stayed degraded to the end
+        if (degraded.degraded_node_time_s - degraded.makespan).abs()
+            > 1e-9 * degraded.makespan
+        {
+            return false;
+        }
+        if (degraded.straggler_slowdown - 1.0 / m).abs() > 1e-9 / m {
+            return false;
+        }
+        // restore mid-run: the rate switches exactly at t2
+        let t2 = 0.5 * jct1;
+        let restored = run_solo(vec![
+            ScriptedStraggler {
+                time: 0.0,
+                node: 0,
+                speed: m,
+            },
+            ScriptedStraggler {
+                time: t2,
+                node: 0,
+                speed: 1.0,
+            },
+        ]);
+        if restored.jct.len() != 1 {
+            return false;
+        }
+        let want = t2 + (jct0 - t2 * m);
+        (restored.jct[0].1 - want).abs() <= 1e-9 * want
+    });
+}
+
+#[test]
+fn prop_rates_stay_finite_under_random_straggler_interleavings() {
+    // 7a. robustness — arbitrary degrade/restore interleavings (wrong
+    //     orders, repeated degrades, restores of healthy nodes) never
+    //     produce non-finite rates, negative accounting, or lost jobs
+    use tlora::workload::faults::ScriptedStraggler;
+    let g = gen_pair(
+        gen_usize(1, 4000),
+        gen_vec(
+            gen_pair(
+                gen_pair(gen_f64(0.0, 3000.0), gen_usize(0, 1)),
+                gen_f64(0.15, 1.3),
+            ),
+            1,
+            12,
+        ),
+    );
+    prop_check(10, &g, |(seed, raw)| {
+        let mut seen = HashSet::new();
+        let script: Vec<ScriptedStraggler> = raw
+            .iter()
+            .map(|&((time, node), speed)| ScriptedStraggler {
+                time,
+                node: node as u64,
+                speed,
+            })
+            // the engine rejects two entries for one (time, node);
+            // random (and especially shrunken) scripts may collide
+            .filter(|e| seen.insert((e.time.to_bits(), e.node)))
+            .collect();
+        for policy in [Policy::TLora, Policy::Megatron] {
+            let mut cfg = ExperimentConfig::default();
+            cfg.policy = policy;
+            cfg.n_jobs = 8;
+            cfg.cluster = ClusterSpec::with_gpus(16);
+            cfg.seed = *seed as u64;
+            cfg.trace = TraceProfile::month1().scaled(2.0);
+            let jobs =
+                TraceGenerator::new(cfg.trace.clone(), cfg.seed)
+                    .generate(cfg.n_jobs);
+            let opts = tlora::sim::EngineOptions {
+                straggler_script: script.clone(),
+                ..tlora::sim::EngineOptions::default()
+            };
+            let r = tlora::sim::simulate_jobs_with(
+                &cfg,
+                jobs,
+                &opts,
+                &mut [],
+            );
+            if !r.jct.iter().all(|&(_, v)| v.is_finite() && v > 0.0) {
+                return false;
+            }
+            if r.jct.len() + r.incomplete_jobs.len() != cfg.n_jobs {
+                return false;
+            }
+            if !(r.makespan.is_finite() && r.makespan >= 0.0) {
+                return false;
+            }
+            if !(r.degraded_node_time_s.is_finite()
+                && r.degraded_node_time_s >= 0.0)
+            {
+                return false;
+            }
+            if !(r.straggler_slowdown.is_finite()
+                && r.straggler_slowdown > 0.0)
+            {
+                return false;
+            }
+            if !(r.goodput.is_finite() && r.goodput >= 0.0) {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_jobs_conserved_under_straggler_churn() {
+    // 7b. conservation — with the seeded straggler model active (and
+    //     node failures layered on top for half the cases), every job
+    //     still ends the run in exactly one of `jct` /
+    //     `incomplete_jobs`, and straggler accounting stays consistent
+    prop_check(6, &gen_usize(0, 10_000), |&seed| {
+        for policy in [Policy::TLora, Policy::Megatron] {
+            let mut cfg = ExperimentConfig::default();
+            cfg.policy = policy;
+            cfg.n_jobs = 10 + seed % 6;
+            cfg.cluster = ClusterSpec::with_gpus(16);
+            cfg.seed = seed as u64;
+            cfg.trace = TraceProfile::month1().scaled(2.0);
+            cfg.stragglers.mtbs_s =
+                1_500.0 + (seed % 5) as f64 * 400.0;
+            cfg.stragglers.mtts_s = 300.0;
+            if seed % 2 == 0 {
+                // straggler + failure churn together
+                cfg.faults.mtbf_s = 3_000.0;
+                cfg.faults.mttr_s = 200.0;
+            }
+            let r = simulate(&cfg);
+            let mut seen: Vec<u64> = r
+                .jct
+                .iter()
+                .map(|&(id, _)| id)
+                .chain(r.incomplete_jobs.iter().copied())
+                .collect();
+            seen.sort_unstable();
+            let n_seen = seen.len();
+            seen.dedup();
+            if n_seen != cfg.n_jobs || seen.len() != cfg.n_jobs {
+                return false;
+            }
+            if !r.jct.iter().all(|&(_, v)| v.is_finite() && v > 0.0) {
+                return false;
+            }
+            // straggler accounting is internally consistent
+            if r.node_degrades == 0
+                && (r.degraded_node_time_s != 0.0
+                    || r.migrations != 0)
+            {
+                return false;
+            }
+            if r.straggler_slowdown < 1.0
+                || !r.straggler_slowdown.is_finite()
+            {
+                return false;
+            }
+            // only detection-aware policies migrate
+            if policy == Policy::Megatron && r.migrations != 0 {
                 return false;
             }
         }
