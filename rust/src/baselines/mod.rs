@@ -20,6 +20,7 @@ pub fn mlora_schedule(
     cfg: &SchedulerConfig,
 ) -> ScheduleOutcome {
     let probes0 = predictor.probes;
+    let hits0 = predictor.cache_hits();
     // FIFO: submission order
     candidates.sort_by(|a, b| {
         crate::util::f64_cmp(a.job.submit_time, b.job.submit_time)
@@ -76,6 +77,7 @@ pub fn mlora_schedule(
         merges_intra: merges,
         merges_inter: 0,
         predictor_probes: predictor.probes - probes0,
+        plan_cache_hits: predictor.cache_hits() - hits0,
     }
 }
 
@@ -86,6 +88,7 @@ pub fn megatron_schedule(
     predictor: &mut Predictor,
 ) -> ScheduleOutcome {
     let probes0 = predictor.probes;
+    let hits0 = predictor.cache_hits();
     let mut out = vec![];
     for c in candidates {
         let g = GroupState {
@@ -103,6 +106,7 @@ pub fn megatron_schedule(
         merges_intra: 0,
         merges_inter: 0,
         predictor_probes: predictor.probes - probes0,
+        plan_cache_hits: predictor.cache_hits() - hits0,
     }
 }
 

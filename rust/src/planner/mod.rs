@@ -133,6 +133,100 @@ pub fn plan(
     best.ok_or_else(|| any_oom.unwrap_or(PlanError::NoGpus))
 }
 
+/// What a plan may *legally* depend on — the cache-key contract the
+/// predictor's shape-level plan cache is built on (DESIGN.md
+/// §Performance):
+///
+/// 1. the fused model's content: base architecture plus the *ordered*
+///    per-adapter `(rank, batch, seq)` sequence (ordered, not a
+///    multiset — f64 accumulation over the adapter branches is not
+///    associative in bits, so two orders of the same adapters may
+///    produce different low-order bits);
+/// 2. the allocation's **node-equality pattern**: every bandwidth
+///    query ([`ClusterSpec::bandwidth`], tier latencies,
+///    `spans_nodes`) depends only on whether two GPUs share a node,
+///    never on *which* physical node or local GPU index they occupy;
+/// 3. the [`PlanOptions`] and the (per-predictor, fixed)
+///    [`ClusterSpec`].
+///
+/// [`PlanShapeKey`] captures exactly these: two (ssm, alloc) pairs with
+/// equal keys are guaranteed bit-identical [`plan`] outputs, so probing
+/// the same group shape on different physical nodes — the dominant
+/// pattern in binary-cut partner search and `allocate_avoiding`
+/// fallbacks — can be served from cache.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct PlanShapeKey {
+    /// base model name (uniquely determines the [`crate::model::arch::ModelArch`])
+    arch: String,
+    /// ordered adapter content: (rank, batch_size, seq_len) per job
+    adapters: Vec<(usize, usize, usize)>,
+    /// canonical node pattern: one label per GPU in allocation order,
+    /// nodes relabeled by first appearance ([`alloc_shape`])
+    shape: Vec<u32>,
+    /// the [`PlanOptions`] fields, hashed structurally
+    opts: (bool, Option<usize>, usize),
+}
+
+impl PlanShapeKey {
+    /// The canonical shape key of planning `ssm` on `alloc` under
+    /// `opts`.
+    pub fn of(ssm: &Ssm, alloc: &Allocation, opts: &PlanOptions)
+        -> PlanShapeKey {
+        PlanShapeKey {
+            arch: ssm.arch.name.clone(),
+            adapters: ssm
+                .adapters
+                .iter()
+                .map(|a| (a.rank, a.batch_size, a.seq_len))
+                .collect(),
+            shape: alloc_shape(alloc),
+            opts: (opts.fused_kernel, opts.n_nano, opts.n_nano_max),
+        }
+    }
+}
+
+/// Canonical node pattern of an allocation: node ids relabeled by
+/// first appearance, one entry per GPU in allocation order. Two
+/// allocations with equal patterns are indistinguishable to the
+/// planner — `[n5,n5,n9] → [0,0,1]` and `[n2,n2,n7] → [0,0,1]` plan
+/// identically; `[n5,n9,n5] → [0,1,0]` does not collapse with them
+/// (the TP subgroup is an allocation-order prefix, so order matters).
+pub fn alloc_shape(alloc: &Allocation) -> Vec<u32> {
+    let mut labels: Vec<(usize, u32)> = vec![]; // (node, label)
+    let mut out = Vec::with_capacity(alloc.gpus.len());
+    for g in &alloc.gpus {
+        let label = match labels.iter().find(|(n, _)| *n == g.node) {
+            Some(&(_, l)) => l,
+            None => {
+                let l = labels.len() as u32;
+                labels.push((g.node, l));
+                l
+            }
+        };
+        out.push(label);
+    }
+    out
+}
+
+/// Ordered per-node run-length key of an allocation: `(node, count)`
+/// for each maximal run of same-node GPUs in allocation order. Keeps
+/// the physical node ids (unlike [`alloc_shape`]) but drops the local
+/// GPU indices, which plans cannot depend on — the predictor's
+/// *exact-level* cache keys use this.
+pub fn alloc_node_runs(alloc: &Allocation) -> Vec<(usize, u32)> {
+    let mut out: Vec<(usize, u32)> = vec![];
+    for g in &alloc.gpus {
+        if let Some(last) = out.last_mut() {
+            if last.0 == g.node {
+                last.1 += 1;
+                continue;
+            }
+        }
+        out.push((g.node, 1));
+    }
+    out
+}
+
 /// Plan under a forced (pp, tp) shape instead of searching. Used for
 /// like-for-like comparisons where the shape search would otherwise
 /// change underneath (e.g. the spread-placement tests comparing the
@@ -528,6 +622,100 @@ mod tests {
         for w in p.stages.windows(2) {
             assert_eq!(w[0].end, w[1].begin);
         }
+    }
+
+    #[test]
+    fn alloc_shape_relabels_by_first_appearance() {
+        use crate::cluster::GpuId;
+        let a = Allocation {
+            gpus: vec![
+                GpuId { node: 5, idx: 3 },
+                GpuId { node: 5, idx: 0 },
+                GpuId { node: 9, idx: 1 },
+            ],
+        };
+        let b = Allocation {
+            gpus: vec![
+                GpuId { node: 2, idx: 7 },
+                GpuId { node: 2, idx: 4 },
+                GpuId { node: 7, idx: 0 },
+            ],
+        };
+        assert_eq!(alloc_shape(&a), vec![0, 0, 1]);
+        assert_eq!(alloc_shape(&a), alloc_shape(&b));
+        // interleaved order is a *different* pattern: the TP subgroup
+        // is an allocation-order prefix
+        let c = Allocation {
+            gpus: vec![
+                GpuId { node: 5, idx: 3 },
+                GpuId { node: 9, idx: 1 },
+                GpuId { node: 5, idx: 0 },
+            ],
+        };
+        assert_eq!(alloc_shape(&c), vec![0, 1, 0]);
+        assert_ne!(alloc_shape(&a), alloc_shape(&c));
+    }
+
+    #[test]
+    fn alloc_node_runs_drop_idx_keep_order() {
+        use crate::cluster::GpuId;
+        let a = Allocation {
+            gpus: vec![
+                GpuId { node: 1, idx: 3 },
+                GpuId { node: 1, idx: 0 },
+                GpuId { node: 4, idx: 1 },
+                GpuId { node: 1, idx: 7 },
+            ],
+        };
+        assert_eq!(alloc_node_runs(&a), vec![(1, 2), (4, 1), (1, 1)]);
+        // same nodes, different local indices: identical key
+        let b = Allocation {
+            gpus: vec![
+                GpuId { node: 1, idx: 5 },
+                GpuId { node: 1, idx: 6 },
+                GpuId { node: 4, idx: 0 },
+                GpuId { node: 1, idx: 2 },
+            ],
+        };
+        assert_eq!(alloc_node_runs(&a), alloc_node_runs(&b));
+    }
+
+    #[test]
+    fn same_shape_allocations_plan_bit_identically() {
+        // the PlanShapeKey contract: equal keys ⇒ bit-identical plans.
+        // Same per-node GPU pattern on different physical nodes (and
+        // different local indices) must produce the same plan.
+        use crate::cluster::GpuId;
+        let spec = ClusterSpec::default_128();
+        let ssm =
+            Ssm::fuse(&[job(0, 8, 4, 512), job(1, 4, 2, 256)]).unwrap();
+        let opts = PlanOptions::default();
+        let a = Allocation {
+            gpus: vec![
+                GpuId { node: 0, idx: 0 },
+                GpuId { node: 0, idx: 1 },
+                GpuId { node: 1, idx: 0 },
+                GpuId { node: 1, idx: 1 },
+            ],
+        };
+        let b = Allocation {
+            gpus: vec![
+                GpuId { node: 7, idx: 5 },
+                GpuId { node: 7, idx: 2 },
+                GpuId { node: 3, idx: 6 },
+                GpuId { node: 3, idx: 1 },
+            ],
+        };
+        assert_eq!(
+            PlanShapeKey::of(&ssm, &a, &opts),
+            PlanShapeKey::of(&ssm, &b, &opts)
+        );
+        let pa = plan(&ssm, &a, &spec, &opts).unwrap();
+        let pb = plan(&ssm, &b, &spec, &opts).unwrap();
+        assert_eq!(pa.step_time_s.to_bits(), pb.step_time_s.to_bits());
+        assert_eq!(pa.comm_s.to_bits(), pb.comm_s.to_bits());
+        assert_eq!(pa.comp_s.to_bits(), pb.comp_s.to_bits());
+        assert_eq!(pa, pb);
     }
 
     #[test]

@@ -54,7 +54,12 @@ pub struct ScheduleOutcome {
     /// merges accepted per tier (intra-node, inter-node) — Fig. 6b data
     pub merges_intra: usize,
     pub merges_inter: usize,
+    /// planner evaluations this round (shape-level cache misses)
     pub predictor_probes: u64,
+    /// predictor queries this round the caches absorbed (exact +
+    /// shape level) — probing one group shape on different nodes,
+    /// the dominant binary-cut pattern, lands here
+    pub plan_cache_hits: u64,
 }
 
 /// One round of Algorithm 1 over the runnable jobs.
@@ -70,6 +75,7 @@ pub fn schedule(
     cfg: &SchedulerConfig,
 ) -> ScheduleOutcome {
     let probes0 = predictor.probes;
+    let hits0 = predictor.cache_hits();
     let mut queue: Vec<GroupState> = candidates
         .into_iter()
         .map(GroupState::from_candidate)
@@ -121,6 +127,7 @@ pub fn schedule(
         merges_intra,
         merges_inter,
         predictor_probes: predictor.probes - probes0,
+        plan_cache_hits: predictor.cache_hits() - hits0,
     }
 }
 

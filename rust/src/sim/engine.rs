@@ -69,6 +69,19 @@ pub struct EngineOptions {
     /// pinned scenarios like "node 0 runs at 0.25× from t=100"
     /// (`workload::faults::ScriptedStraggler`; `speed >= 1` restores).
     pub straggler_script: Vec<ScriptedStraggler>,
+    /// Enable the predictor's shape-level plan cache (default). `false`
+    /// is *cold mode*: every plan-level consult runs the planner — the
+    /// cached-vs-cold differential in `tests/integration_perf.rs`
+    /// pins that the cache never changes a single output bit.
+    pub plan_shape_cache: bool,
+    /// Re-issue every running job's completion event every round (the
+    /// pre-dirty-set behavior, re-pushing the *anchored* instants so
+    /// the valid-event stream is comparable bit-for-bit). Default off:
+    /// only *dirty* jobs — rate bits changed, progress continuity
+    /// broken, or newly running — get their event re-derived. The
+    /// dirty-vs-global differential proves per-job epochs discard
+    /// exactly the events a global bump would have.
+    pub global_reissue: bool,
 }
 
 impl Default for EngineOptions {
@@ -78,6 +91,8 @@ impl Default for EngineOptions {
             aimd_settle_obs: 256,
             fault_script: vec![],
             straggler_script: vec![],
+            plan_shape_cache: true,
+            global_reissue: false,
         }
     }
 }
@@ -349,7 +364,26 @@ pub struct Engine<'a> {
     estimator: Option<NodeSpeedEstimator>,
     /// last time `observe_speeds` ran (estimator bookkeeping)
     last_obs_t: f64,
+    /// scheduling-round counter; stamps (and stales) *reschedule
+    /// points* only — completions use the per-job epochs below
     epoch: u64,
+    /// per-job completion-event epoch: a Completion event is valid iff
+    /// its stamp equals its job's current entry, so re-deriving one
+    /// job's completion never discards any other job's live event
+    completion_epoch: HashMap<u64, u64>,
+    /// live anchored completion per running job: (event time, the
+    /// effective step-time bits it was derived under). While the rate
+    /// bits are unchanged and progress advanced only by continuous
+    /// execution, the anchored instant is exact — no re-derivation
+    /// needed (a clean group's completion is invariant across rounds:
+    /// t₁ + (rem₀ − (t₁−t₀)/st)·st = t₀ + rem₀·st).
+    completion_anchor: HashMap<u64, (f64, u64)>,
+    /// jobs whose steps_done jumped discontinuously this round
+    /// (eviction rollback) — membership-only set, never iterated, so
+    /// HashSet nondeterminism cannot leak into the event stream
+    dirty_jobs: std::collections::HashSet<u64>,
+    /// stale events discarded on pop (heap-churn diagnostic)
+    stale_discards: u64,
     sched_rounds: u64,
     events_processed: u64,
     arrivals_pending: usize,
@@ -485,8 +519,11 @@ impl<'a> Engine<'a> {
         } else {
             None
         };
+        let mut predictor =
+            Predictor::new(cfg.cluster.clone(), plan_opts);
+        predictor.set_shape_cache(opts.plan_shape_cache);
         Engine {
-            predictor: Predictor::new(cfg.cluster.clone(), plan_opts),
+            predictor,
             state: SimState::new(cfg, &jobs),
             events,
             obs: ObserverSet {
@@ -504,6 +541,10 @@ impl<'a> Engine<'a> {
             estimator,
             last_obs_t: 0.0,
             epoch: 0,
+            completion_epoch: HashMap::new(),
+            completion_anchor: HashMap::new(),
+            dirty_jobs: std::collections::HashSet::new(),
+            stale_discards: 0,
             sched_rounds: 0,
             events_processed: 0,
             arrivals_pending: n_jobs,
@@ -517,11 +558,20 @@ impl<'a> Engine<'a> {
     }
 
     /// Is the event still meaningful? Exogenous events (arrivals,
-    /// faults) always are; completion and reschedule events go stale
-    /// when a later round re-derived step rates (and re-issued events)
-    /// under a newer epoch ([`Event::is_stale`]).
+    /// faults) always are. Completions are valid iff their stamp
+    /// matches their job's *per-job* epoch — re-deriving one dirty
+    /// job's event leaves every untouched job's live event valid, the
+    /// heap-churn win over the old global bump. Reschedule points
+    /// keep the global round-epoch semantics ([`Event::is_stale`]).
     fn is_valid(&self, ev: &Event) -> bool {
-        !ev.is_stale(self.epoch)
+        match ev.kind {
+            EventKind::Completion => self
+                .completion_epoch
+                .get(&ev.job_id)
+                .is_some_and(|&e| e == ev.epoch),
+            EventKind::ReschedulePoint => !ev.is_stale(self.epoch),
+            _ => true,
+        }
     }
 
     fn pop_next_valid(&mut self) -> Option<Event> {
@@ -529,6 +579,7 @@ impl<'a> Engine<'a> {
             if self.is_valid(&ev) {
                 return Some(ev);
             }
+            self.stale_discards += 1;
         }
         None
     }
@@ -540,6 +591,7 @@ impl<'a> Engine<'a> {
             let ev = *self.events.peek()?;
             if !self.is_valid(&ev) {
                 self.events.pop();
+                self.stale_discards += 1;
                 continue;
             }
             if ev.time == t {
@@ -579,6 +631,10 @@ impl<'a> Engine<'a> {
             self.state.fail_node(node, t, &self.faults.penalties);
         self.obs.node_failure(t, node, extra);
         for e in &evs {
+            // rollback broke progress continuity: the job's anchored
+            // completion (if any) must not survive a same-round
+            // re-admission with coincidentally equal rate bits
+            self.dirty_jobs.insert(e.job_id);
             self.obs.evict(
                 t,
                 &self.state.states[&e.job_id],
@@ -749,6 +805,7 @@ impl<'a> Engine<'a> {
         if let Some(e) =
             self.state.preempt(id, t, &self.faults.penalties)
         {
+            self.dirty_jobs.insert(e.job_id);
             self.obs.evict(
                 t,
                 &self.state.states[&id],
@@ -811,6 +868,7 @@ impl<'a> Engine<'a> {
                     &self.faults.penalties,
                 );
                 for e in &evs {
+                    self.dirty_jobs.insert(e.job_id);
                     self.obs.evict(
                         t,
                         &self.state.states[&e.job_id],
@@ -867,21 +925,73 @@ impl<'a> Engine<'a> {
             self.cfg,
         );
 
-        // exact completion events from the current step rates
+        // exact completion events, dirty-group re-derivation: a
+        // running job keeps its live anchored event unless (a) its
+        // group's effective step-time bits changed (regroup, AIMD
+        // refresh, straggler re-pricing — install_groups recomputes
+        // the same bits for an untouched group), (b) its progress
+        // jumped discontinuously (eviction rollback; `dirty_jobs`),
+        // or (c) it has no live event. Heap churn drops from
+        // O(running × rounds) to O(touched × rounds).
+        //
+        // First: jobs that held a live completion but are no longer
+        // running (evicted, re-queued, completed) — bump their epoch
+        // so the orphaned event is discarded on pop, exactly as the
+        // old global bump would have. (Key iteration order never
+        // reaches the event stream: only per-key map mutations.)
+        let running_ids: std::collections::HashSet<u64> = self
+            .state
+            .running
+            .iter()
+            .flat_map(|g| g.job_ids.iter().copied())
+            .collect();
+        let gone: Vec<u64> = self
+            .completion_anchor
+            .keys()
+            .filter(|&&id| !running_ids.contains(&id))
+            .copied()
+            .collect();
+        for id in gone {
+            *self.completion_epoch.entry(id).or_insert(0) += 1;
+            self.completion_anchor.remove(&id);
+        }
         for g in &self.state.running {
+            let bits = g.step_time.to_bits();
             for id in &g.job_ids {
-                let st = &self.state.states[id];
-                let remaining = (st.spec.total_steps as f64
-                    - st.steps_done)
-                    .max(0.0);
+                let anchored =
+                    self.completion_anchor.get(id).copied();
+                let clean = !self.dirty_jobs.contains(id)
+                    && anchored.is_some_and(|(_, b)| b == bits);
+                if clean && !self.opts.global_reissue {
+                    continue;
+                }
+                let time = if clean {
+                    // global-reissue mode re-pushes the *anchored*
+                    // instant (not a recomputation, whose low-order
+                    // bits would drift with the round timestamp), so
+                    // its valid-event stream is bit-identical to
+                    // dirty mode — the differential test's contract
+                    anchored.unwrap().0
+                } else {
+                    let st = &self.state.states[id];
+                    let remaining = (st.spec.total_steps as f64
+                        - st.steps_done)
+                        .max(0.0);
+                    t + remaining * g.step_time
+                };
+                let e =
+                    self.completion_epoch.entry(*id).or_insert(0);
+                *e += 1;
+                self.completion_anchor.insert(*id, (time, bits));
                 self.events.push(Event {
-                    time: t + remaining * g.step_time,
+                    time,
                     kind: EventKind::Completion,
                     job_id: *id,
-                    epoch: self.epoch,
+                    epoch: *e,
                 });
             }
         }
+        self.dirty_jobs.clear();
 
         // bound the interval until the next round
         let h = self.cfg.scheduler.horizon_s;
@@ -964,6 +1074,8 @@ impl<'a> Engine<'a> {
             n_groups: self.state.running.len(),
             n_running,
             n_queued: self.state.queue.len(),
+            probes: self.predictor.probes,
+            plan_cache_hits: self.predictor.cache_hits(),
         }
     }
 
@@ -1172,8 +1284,10 @@ impl<'a> Engine<'a> {
                 &mut self.obs.grouping.grouping_ratio,
             ),
             scheduler_probes: self.predictor.probes,
+            plan_cache_hits: self.predictor.cache_hits(),
             sched_rounds: self.sched_rounds,
             events: self.events_processed,
+            events_stale: self.stale_discards,
             incomplete_jobs: std::mem::take(
                 &mut self.obs.completion.incomplete,
             ),

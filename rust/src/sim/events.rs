@@ -36,14 +36,27 @@
 //! restore-then-degrade inversion; both rank before `Preemption`, so
 //! an eviction priced at the degrade instant sees the new rate.
 //!
-//! Completion and reschedule events are *epoch-stamped*: every
-//! scheduling round bumps the engine epoch and re-derives completion
-//! times from the (possibly regrouped, AIMD-updated) step rates, so
-//! events from earlier epochs are stale and discarded on pop instead of
-//! being searched for and removed from the heap. Arrivals and fault
-//! events (failure / recovery / preemption) are *exogenous*: they come
-//! from the trace or the seeded fault model, not from the schedule, so
-//! they never go stale ([`Event::is_stale`]).
+//! Completion and reschedule events are *epoch-stamped*; superseded
+//! copies are discarded lazily on pop instead of being searched for
+//! and removed from the heap. The two kinds use different epoch
+//! spaces:
+//!
+//! * **Reschedule points** carry the global round counter — every
+//!   round re-derives the next bound, so older stamps are stale
+//!   ([`Event::is_stale`]).
+//! * **Completions** carry a *per-job* epoch (tracked by the engine,
+//!   not by this module): a job's event is re-derived only when its
+//!   group's effective step rate changed bitwise, its progress broke
+//!   continuity (eviction rollback), or it started/stopped running —
+//!   an untouched group's completion instant is invariant across
+//!   rounds, so its event stays live and heap churn is O(touched ×
+//!   rounds) instead of O(running × rounds). The dirty-vs-global
+//!   differential in `tests/integration_perf.rs` pins that this
+//!   discards exactly the events a global per-round bump would have.
+//!
+//! Arrivals and fault events (failure / recovery / degrade / restore /
+//! preemption) are *exogenous*: they come from the trace or the seeded
+//! fault model, not from the schedule, so they never go stale.
 
 use std::cmp::{Ordering, Reverse};
 use std::collections::BinaryHeap;
@@ -114,12 +127,13 @@ pub struct Event {
 }
 
 impl Event {
-    /// Is this event obsolete under the engine's current scheduling
-    /// epoch? Completion and reschedule events are re-derived every
-    /// round (step rates may have changed), so an older stamp means a
-    /// newer copy supersedes this one. Exogenous events — arrivals and
-    /// the fault kinds — are facts about the outside world and are
-    /// never stale.
+    /// Is this event obsolete under `current_epoch`? Schedule-derived
+    /// kinds (completions, reschedule points) go stale when a newer
+    /// stamp supersedes theirs; exogenous events — arrivals and the
+    /// fault kinds — are facts about the outside world and are never
+    /// stale. The engine passes the global round counter for
+    /// reschedule points and the owning job's *per-job* completion
+    /// epoch for completions (see the module docs).
     pub fn is_stale(&self, current_epoch: u64) -> bool {
         match self.kind {
             EventKind::Arrival

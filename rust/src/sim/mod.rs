@@ -75,14 +75,22 @@ pub struct SimResult {
     /// per size-class grouping ratio (Fig. 6b): fraction of running
     /// time each class spent co-located
     pub grouping_ratio: HashMap<&'static str, f64>,
-    /// total scheduler probes (cost diagnostics)
+    /// planner evaluations — the predictor's shape-level cache
+    /// misses (the `sched_scaling` bench's gated quantity)
     pub scheduler_probes: u64,
+    /// predictor queries absorbed by the exact + shape cache levels
+    /// (`hits / (hits + probes)` is the cache hit-rate)
+    pub plan_cache_hits: u64,
     /// scheduling rounds the engine ran (the event-driven analogue of
     /// the old per-horizon iteration count)
     pub sched_rounds: u64,
     /// events processed (arrivals, completions, node failures /
     /// recoveries, preemptions, reschedule points)
     pub events: u64,
+    /// stale events discarded on pop (superseded completions /
+    /// reschedule points — the dirty-set re-derivation's heap-churn
+    /// diagnostic)
+    pub events_stale: u64,
     /// jobs that never completed (unsatisfiable requests or the `t_max`
     /// safety valve) — previously these vanished from `jct` silently
     pub incomplete_jobs: Vec<u64>,
@@ -120,6 +128,19 @@ pub struct SimResult {
 impl SimResult {
     pub fn jct_values(&self) -> Vec<f64> {
         self.jct.iter().map(|&(_, v)| v).collect()
+    }
+
+    /// Fraction of predictor queries served from either cache level:
+    /// `plan_cache_hits / (plan_cache_hits + scheduler_probes)`
+    /// (0.0 when no queries ran). The cell-aggregated counterpart is
+    /// `sweep::CellSummary::cache_hit_rate`.
+    pub fn plan_cache_rate(&self) -> f64 {
+        let total = self.plan_cache_hits + self.scheduler_probes;
+        if total == 0 {
+            0.0
+        } else {
+            self.plan_cache_hits as f64 / total as f64
+        }
     }
 }
 

@@ -37,6 +37,13 @@ pub struct RoundStats {
     pub n_running: usize,
     /// jobs still queued after this round's admission
     pub n_queued: usize,
+    /// cumulative planner evaluations so far (the predictor's
+    /// shape-level cache misses — `SimResult::scheduler_probes` is
+    /// the final value)
+    pub probes: u64,
+    /// cumulative predictor queries the caches absorbed so far
+    /// (exact + shape level)
+    pub plan_cache_hits: u64,
 }
 
 /// Why a job was evicted mid-run.
@@ -488,6 +495,8 @@ mod tests {
             n_groups: 0,
             n_running: 0,
             n_queued: 0,
+            probes: 0,
+            plan_cache_hits: 0,
         };
         o.on_round(&stats(0.0, 10.0));
         o.on_round(&stats(100.0, 0.0)); // drain tail: zero throughput

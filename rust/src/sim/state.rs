@@ -661,6 +661,15 @@ impl SimState {
     /// controllers across rounds keyed by group membership. Step rates
     /// come from the carried controller's current nano count (fused
     /// policies) or the plain plan (unfused).
+    ///
+    /// **Bitwise-rate contract** (the engine's dirty-set completion
+    /// re-derivation depends on it): for a group whose membership,
+    /// allocation, plan, AIMD nano count, and node speeds are all
+    /// unchanged, this recomputes *bit-identical* `step_time` —
+    /// every input below is either carried state or a pure function
+    /// of it (`iter_time`, `alloc_speed`, IEEE division). The engine
+    /// compares `step_time.to_bits()` against each job's anchored
+    /// completion record; equal bits ⇒ the live event stays valid.
     pub fn install_groups(
         &mut self,
         groups: Vec<(GroupState, GroupPerf)>,

@@ -41,10 +41,29 @@ pub struct CellSummary {
     pub node_degrades: u64,
     /// total voluntary straggler migrations across the cell's replicas
     pub migrations: u64,
+    /// total planner evaluations (shape-cache misses) across the
+    /// cell's replicas — the scheduler-cost column the scaling bench
+    /// gates on (previously only totalled run-wide, invisible per cell)
+    pub probes: u64,
+    /// total predictor queries the caches absorbed across the cell's
+    /// replicas
+    pub plan_cache_hits: u64,
     /// total jobs that never completed across the cell's replicas —
     /// nonzero means the scenario silently truncated work and its
     /// JCT/throughput numbers are not comparable
     pub incomplete: usize,
+}
+
+impl CellSummary {
+    /// Fraction of the cell's predictor queries served from cache.
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.probes + self.plan_cache_hits;
+        if total == 0 {
+            0.0
+        } else {
+            self.plan_cache_hits as f64 / total as f64
+        }
+    }
 }
 
 /// Aggregate a run's points into per-scenario summaries, preserving the
@@ -106,6 +125,14 @@ pub fn aggregate(run: &SweepRun) -> Vec<CellSummary> {
                     .iter()
                     .map(|p| p.result.migrations)
                     .sum(),
+                probes: pts
+                    .iter()
+                    .map(|p| p.result.scheduler_probes)
+                    .sum(),
+                plan_cache_hits: pts
+                    .iter()
+                    .map(|p| p.result.plan_cache_hits)
+                    .sum(),
                 incomplete: pts
                     .iter()
                     .map(|p| p.result.incomplete_jobs.len())
@@ -129,7 +156,7 @@ pub fn sweep_table(title: &str, cells: &[CellSummary]) -> Table {
         title,
         &["scenario", "seeds", "thr (samples/s)", "goodput",
           "mean JCT (s)", "p99 JCT (s)", "GPU util", "slowdown",
-          "SLO", "restarts", "migr", "incomplete"],
+          "SLO", "restarts", "migr", "probes", "hit%", "incomplete"],
     );
     for c in cells {
         t.row(&[
@@ -160,6 +187,8 @@ pub fn sweep_table(title: &str, cells: &[CellSummary]) -> Table {
             ),
             c.restarts.to_string(),
             c.migrations.to_string(),
+            c.probes.to_string(),
+            format!("{:.1}%", c.cache_hit_rate() * 100.0),
             // warning column: jobs cut off before completion make the
             // cell's other metrics incomparable
             if c.incomplete == 0 {
@@ -184,7 +213,8 @@ pub fn to_csv(run: &SweepRun) -> String {
           "preemptions", "restarts", "lost_step_time_s",
           "restore_delay_s", "node_degrades", "degraded_time_s",
           "straggler_slowdown", "migrations", "sched_rounds",
-          "events", "probes", "completed", "incomplete"],
+          "events", "events_stale", "probes", "plan_cache_hits",
+          "completed", "incomplete"],
     );
     for p in &run.points {
         t.row(&[
@@ -216,7 +246,9 @@ pub fn to_csv(run: &SweepRun) -> String {
             p.result.migrations.to_string(),
             p.result.sched_rounds.to_string(),
             p.result.events.to_string(),
+            p.result.events_stale.to_string(),
             p.result.scheduler_probes.to_string(),
+            p.result.plan_cache_hits.to_string(),
             p.result.jct.len().to_string(),
             p.result.incomplete_jobs.len().to_string(),
         ]);
@@ -282,7 +314,9 @@ fn to_json_with(run: &SweepRun, include_timing: bool) -> Json {
                 .set("migrations", p.result.migrations)
                 .set("sched_rounds", p.result.sched_rounds)
                 .set("events", p.result.events)
+                .set("events_stale", p.result.events_stale)
                 .set("scheduler_probes", p.result.scheduler_probes)
+                .set("plan_cache_hits", p.result.plan_cache_hits)
                 .set("completed", p.result.jct.len())
                 .set("incomplete", p.result.incomplete_jobs.len());
             if include_timing {
@@ -316,6 +350,9 @@ fn to_json_with(run: &SweepRun, include_timing: bool) -> Json {
                 .set("node_failures", c.node_failures)
                 .set("node_degrades", c.node_degrades)
                 .set("migrations", c.migrations)
+                .set("scheduler_probes", c.probes)
+                .set("plan_cache_hits", c.plan_cache_hits)
+                .set("plan_cache_rate", c.cache_hit_rate())
                 .set("incomplete", c.incomplete)
         })
         .collect();
@@ -324,9 +361,15 @@ fn to_json_with(run: &SweepRun, include_timing: bool) -> Json {
         .iter()
         .map(|p| p.result.scheduler_probes)
         .sum();
+    let total_hits: u64 = run
+        .points
+        .iter()
+        .map(|p| p.result.plan_cache_hits)
+        .sum();
     let mut j = Json::obj()
         .set("n_points", run.points.len())
         .set("scheduler_probes", total_probes)
+        .set("plan_cache_hits", total_hits)
         .set("points", Json::Arr(points))
         .set("cells", Json::Arr(cells));
     if include_timing {
@@ -421,6 +464,9 @@ mod tests {
             assert!(p.get("straggler_mtbs_s").is_some());
             assert!(p.get("straggler_slowdown").is_some());
             assert!(p.get("migrations").is_some());
+            assert!(p.get("scheduler_probes").is_some());
+            assert!(p.get("plan_cache_hits").is_some());
+            assert!(p.get("events_stale").is_some());
         }
         // canonical output is reproducible byte-for-byte
         let again = to_json_canonical(&runner::run(
@@ -470,8 +516,47 @@ mod tests {
             "degraded_time_s",
             "straggler_slowdown",
             "migrations",
+            "events_stale",
+            "plan_cache_hits",
         ] {
             assert!(header.contains(col), "{header}");
         }
+    }
+
+    #[test]
+    fn cells_carry_probe_and_cache_columns() {
+        // satellite fix: scheduler_probes was totalled run-wide but
+        // missing from the per-cell aggregates — cells now carry
+        // probes, cache hits, and the derived hit rate in table, JSON
+        // and accessor form
+        let run = run_small();
+        let cells = aggregate(&run);
+        let per_point: u64 = run
+            .points
+            .iter()
+            .map(|p| p.result.scheduler_probes)
+            .sum();
+        assert_eq!(cells[0].probes, per_point);
+        assert!(cells[0].probes > 0, "no planner evaluations at all");
+        assert!(
+            cells[0].plan_cache_hits > 0,
+            "a real simulation must hit the predictor caches"
+        );
+        let rate = cells[0].cache_hit_rate();
+        assert!((0.0..=1.0).contains(&rate), "{rate}");
+        let j = crate::util::json::parse(&to_json(&run).to_string())
+            .unwrap();
+        let cell = &j.get("cells").unwrap().as_arr().unwrap()[0];
+        assert_eq!(
+            cell.get("scheduler_probes")
+                .unwrap()
+                .as_i64()
+                .unwrap() as u64,
+            per_point
+        );
+        assert!(cell.get("plan_cache_rate").is_some());
+        let t = sweep_table("demo", &cells).render();
+        assert!(t.contains("probes"), "{t}");
+        assert!(t.contains("hit%"), "{t}");
     }
 }

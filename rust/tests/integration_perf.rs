@@ -1,0 +1,226 @@
+//! Differential regressions for the performance subsystem: the
+//! shape-level plan cache and the dirty-group completion
+//! re-derivation must be *pure* optimizations — every canonical
+//! output bit identical to the unoptimized paths, only the cost
+//! counters allowed to move.
+//!
+//! Two switchable reference modes make that checkable inside one
+//! build (no blessed fixture needed):
+//!
+//! * `EngineOptions::plan_shape_cache = false` — *cold* predictor:
+//!   every plan-level consult runs the planner;
+//! * `EngineOptions::global_reissue = true` — the pre-dirty-set
+//!   behavior: every running job's completion re-pushed every round
+//!   (with its anchored instant), per-round epoch churn included.
+
+use tlora::config::Policy;
+use tlora::sim::{simulate_jobs_with, EngineOptions};
+use tlora::sweep::{to_json_canonical, PointResult, SweepGrid, SweepRun};
+use tlora::workload::trace::TraceGenerator;
+
+/// The golden grid (tests/integration_golden.rs), reused so these
+/// differentials cover the exact scenarios the fixture pins: two
+/// policies, fault-free and faulted cells, two seeds.
+fn golden_grid() -> SweepGrid {
+    let mut g = SweepGrid::default();
+    g.policies = vec![Policy::TLora, Policy::Megatron];
+    g.n_jobs = vec![10];
+    g.gpus = vec![16];
+    g.rate_scales = vec![2.0];
+    g.months = vec![1];
+    g.mtbfs = vec![0.0, 900.0];
+    g.seeds = vec![7, 8];
+    g
+}
+
+/// A straggler-active cell: exercises `set_node_speed` re-pricing and
+/// detection-driven migration through the dirty-set machinery.
+fn straggler_grid() -> SweepGrid {
+    let mut g = SweepGrid::default();
+    g.policies = vec![Policy::TLora];
+    g.n_jobs = vec![10];
+    g.gpus = vec![16];
+    g.rate_scales = vec![2.0];
+    g.months = vec![1];
+    g.stragglers = vec![600.0];
+    g.seeds = vec![7];
+    g
+}
+
+/// Run every grid cell serially under explicit engine options (the
+/// sweep runner hard-codes the default options, so the differentials
+/// drive the engine directly and assemble the run by hand).
+fn run_with_opts(g: &SweepGrid, opts: &EngineOptions) -> SweepRun {
+    let points = g
+        .points()
+        .into_iter()
+        .map(|p| {
+            let cfg = p.config(&g.base);
+            let jobs =
+                TraceGenerator::new(cfg.trace.clone(), cfg.seed)
+                    .generate(cfg.n_jobs);
+            let result = simulate_jobs_with(&cfg, jobs, opts, &mut []);
+            PointResult {
+                point: p,
+                result,
+                wall_s: 0.0,
+            }
+        })
+        .collect();
+    SweepRun {
+        points,
+        n_threads: 1,
+        wall_s: 0.0,
+    }
+}
+
+/// Zero the cost counters that the compared modes are *defined* to
+/// disagree on, so the remaining canonical JSON — every simulated
+/// quantity — must match byte for byte.
+fn scrub(run: &mut SweepRun, probes: bool, stale: bool) {
+    for p in &mut run.points {
+        if probes {
+            p.result.scheduler_probes = 0;
+            p.result.plan_cache_hits = 0;
+        }
+        if stale {
+            p.result.events_stale = 0;
+        }
+    }
+}
+
+#[test]
+fn cached_vs_cold_golden_grid_is_byte_identical() {
+    let g = golden_grid();
+    let mut warm = run_with_opts(&g, &EngineOptions::default());
+    let mut cold = run_with_opts(
+        &g,
+        &EngineOptions {
+            plan_shape_cache: false,
+            ..EngineOptions::default()
+        },
+    );
+    let warm_probes: u64 = warm
+        .points
+        .iter()
+        .map(|p| p.result.scheduler_probes)
+        .sum();
+    let cold_probes: u64 = cold
+        .points
+        .iter()
+        .map(|p| p.result.scheduler_probes)
+        .sum();
+    assert!(
+        warm_probes < cold_probes,
+        "shape cache saved nothing: {warm_probes} vs {cold_probes}"
+    );
+    // the acceptance bar: >=30% fewer planner evaluations on the
+    // pinned dense-arrival grid (in practice the per-round residual
+    // refresh alone collapses far more than that)
+    assert!(
+        (warm_probes as f64) <= 0.7 * cold_probes as f64,
+        "probe drop under 30%: {warm_probes} vs {cold_probes}"
+    );
+    for (w, c) in warm.points.iter().zip(&cold.points) {
+        assert_eq!(
+            w.result.sched_rounds, c.result.sched_rounds,
+            "{}: caching changed the round count",
+            w.point.label()
+        );
+        assert_eq!(
+            w.result.events, c.result.events,
+            "{}: caching changed the event stream",
+            w.point.label()
+        );
+    }
+    // only the cost counters may differ; every simulated output bit
+    // must survive the cache
+    scrub(&mut warm, true, false);
+    scrub(&mut cold, true, false);
+    assert_eq!(
+        to_json_canonical(&warm).to_pretty(),
+        to_json_canonical(&cold).to_pretty(),
+        "the shape-level plan cache changed simulation output"
+    );
+}
+
+#[test]
+fn dirty_vs_global_completion_reissue_is_byte_identical() {
+    // property (satellite): per-job completion epochs discard exactly
+    // the events a global per-round bump would have — the valid-event
+    // stream, and therefore every output byte, is identical; only the
+    // stale-discard churn differs (and must be strictly *lower* under
+    // the dirty set)
+    for (name, g) in
+        [("golden", golden_grid()), ("straggler", straggler_grid())]
+    {
+        let mut dirty = run_with_opts(&g, &EngineOptions::default());
+        let mut global = run_with_opts(
+            &g,
+            &EngineOptions {
+                global_reissue: true,
+                ..EngineOptions::default()
+            },
+        );
+        let stale_dirty: u64 = dirty
+            .points
+            .iter()
+            .map(|p| p.result.events_stale)
+            .sum();
+        let stale_global: u64 = global
+            .points
+            .iter()
+            .map(|p| p.result.events_stale)
+            .sum();
+        assert!(
+            stale_dirty < stale_global,
+            "{name}: dirty-set derivation discarded {stale_dirty} \
+             stale events vs global reissue's {stale_global} — no \
+             heap-churn win"
+        );
+        for (d, gl) in dirty.points.iter().zip(&global.points) {
+            assert_eq!(
+                d.result.events,
+                gl.result.events,
+                "{name}/{}: valid-event streams diverged",
+                d.point.label()
+            );
+            assert_eq!(
+                d.result.jct.len() + d.result.incomplete_jobs.len(),
+                d.point.n_jobs,
+                "{name}/{}: job conservation",
+                d.point.label()
+            );
+        }
+        scrub(&mut dirty, false, true);
+        scrub(&mut global, false, true);
+        assert_eq!(
+            to_json_canonical(&dirty).to_pretty(),
+            to_json_canonical(&global).to_pretty(),
+            "{name}: dirty-set completion re-derivation changed \
+             simulation output"
+        );
+    }
+}
+
+#[test]
+fn dirty_reissue_composes_with_cold_cache() {
+    // the two optimizations are orthogonal: flipping both reference
+    // switches at once still reproduces the optimized output
+    let g = straggler_grid();
+    let mut fast = run_with_opts(&g, &EngineOptions::default());
+    let mut slow = run_with_opts(
+        &g,
+        &EngineOptions {
+            plan_shape_cache: false,
+            global_reissue: true,
+            ..EngineOptions::default()
+        },
+    );
+    scrub(&mut fast, true, true);
+    scrub(&mut slow, true, true);
+    assert_eq!(
+        to_json_canonical(&fast).to_pretty(),
+        to_json_canonical(&slow).to_pretty()
+    );
+}
