@@ -36,6 +36,64 @@ impl GpuSpec {
     }
 }
 
+/// One hardware generation ("tier"): static performance multipliers
+/// relative to the reference GPU ([`GpuSpec::a100_80g`]).
+///
+/// Tiers model *fleet heterogeneity* — a permanent property of a node's
+/// hardware — and are deliberately distinct from the straggler
+/// subsystem's dynamic per-node `speed` multipliers (a transient fault
+/// property). The planner prices tiers into every plan's step time, so
+/// the detection estimator's observed/planned ratio stays ~1.0 on a
+/// slow generation: **a slow generation is not a straggler**.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HardwareTier {
+    /// generation label, e.g. "a100", "h100", "v100"
+    pub name: String,
+    /// effective FLOP/s multiplier vs the reference GPU
+    pub compute_mult: f64,
+    /// link-bandwidth multiplier (NVLink/IB endpoints on this tier)
+    pub bw_mult: f64,
+    /// HBM-capacity multiplier
+    pub mem_mult: f64,
+}
+
+impl HardwareTier {
+    /// The reference tier: the A100-80G every multiplier is 1.0 of.
+    pub fn reference() -> HardwareTier {
+        HardwareTier {
+            name: "a100".into(),
+            compute_mult: 1.0,
+            bw_mult: 1.0,
+            mem_mult: 1.0,
+        }
+    }
+
+    /// Exactly the reference multipliers (all 1.0): nodes on such a
+    /// tier take the homogeneous code paths bit-for-bit.
+    pub fn is_reference(&self) -> bool {
+        self.compute_mult == 1.0
+            && self.bw_mult == 1.0
+            && self.mem_mult == 1.0
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        for (what, v) in [
+            ("compute_mult", self.compute_mult),
+            ("bw_mult", self.bw_mult),
+            ("mem_mult", self.mem_mult),
+        ] {
+            if !(v.is_finite() && v > 0.0) {
+                return Err(format!(
+                    "hardware tier {:?}: {what} must be finite and \
+                     > 0, got {v}",
+                    self.name
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
 /// Cluster shape: `n_nodes` nodes × `gpus_per_node` GPUs.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ClusterSpec {
@@ -48,6 +106,15 @@ pub struct ClusterSpec {
     pub ib_bw: f64,
     /// inter-node latency seconds
     pub ib_latency_s: f64,
+    /// hardware generations present in the fleet (never empty; a
+    /// homogeneous cluster carries a single reference tier)
+    pub tiers: Vec<HardwareTier>,
+    /// per-node tier assignment, applied cyclically
+    /// (`node_tier[node % len]`); empty = every node on tier 0
+    pub node_tier: Vec<usize>,
+    /// the `--hardware-mix` string this spec was built from (empty for
+    /// homogeneous clusters; label only, never consulted for pricing)
+    pub hardware_mix: String,
 }
 
 impl ClusterSpec {
@@ -66,12 +133,148 @@ impl ClusterSpec {
             nvlink_bw: 600e9,
             ib_bw: 12.5e9, // 100 Gb/s
             ib_latency_s: 5e-6,
+            tiers: vec![HardwareTier::reference()],
+            node_tier: vec![],
+            hardware_mix: String::new(),
         }
+    }
+
+    /// [`ClusterSpec::with_gpus`] with a `--hardware-mix` applied (see
+    /// [`parse_hardware_mix`]). An empty mix string is exactly
+    /// `with_gpus`.
+    pub fn with_gpus_mix(n: usize, mix: &str) -> Result<ClusterSpec, String> {
+        let mut spec = ClusterSpec::with_gpus(n);
+        spec.apply_hardware_mix(mix)?;
+        Ok(spec)
+    }
+
+    /// Install the tiers and cyclic node pattern described by `mix`
+    /// (empty = reset to the homogeneous reference fleet).
+    pub fn apply_hardware_mix(&mut self, mix: &str) -> Result<(), String> {
+        if mix.is_empty() {
+            self.tiers = vec![HardwareTier::reference()];
+            self.node_tier = vec![];
+            self.hardware_mix = String::new();
+            return Ok(());
+        }
+        let (tiers, pattern) = parse_hardware_mix(mix)?;
+        self.tiers = tiers;
+        self.node_tier = pattern;
+        self.hardware_mix = mix.to_string();
+        Ok(())
     }
 
     pub fn total_gpus(&self) -> usize {
         self.n_nodes * self.gpus_per_node
     }
+
+    /// Tier index of `node` (cyclic pattern; tier 0 when no pattern).
+    pub fn tier_index(&self, node: usize) -> usize {
+        if self.node_tier.is_empty() {
+            0
+        } else {
+            self.node_tier[node % self.node_tier.len()]
+                .min(self.tiers.len().saturating_sub(1))
+        }
+    }
+
+    pub fn tier_of(&self, node: usize) -> &HardwareTier {
+        &self.tiers[self.tier_index(node)]
+    }
+
+    /// Effective-FLOP/s multiplier of `node` vs the reference GPU.
+    pub fn compute_mult(&self, node: usize) -> f64 {
+        self.tier_of(node).compute_mult
+    }
+
+    /// Link-bandwidth multiplier of `node`.
+    pub fn bw_mult(&self, node: usize) -> f64 {
+        self.tier_of(node).bw_mult
+    }
+
+    /// HBM capacity of one GPU on `node` (tier-scaled).
+    pub fn mem_bytes_of(&self, node: usize) -> f64 {
+        self.gpu.mem_bytes * self.tier_of(node).mem_mult
+    }
+
+    /// Does every node sit on a reference (all-1.0) tier? Homogeneous
+    /// clusters take the pre-tier code paths bit-for-bit; callers gate
+    /// summation-order-sensitive math on this (repeated per-GPU
+    /// addition is not bit-equal to `n as f64 *`).
+    pub fn is_uniform_reference(&self) -> bool {
+        self.tiers.iter().all(HardwareTier::is_reference)
+            || (0..self.n_nodes)
+                .all(|n| self.tier_of(n).is_reference())
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.tiers.is_empty() {
+            return Err("cluster has no hardware tiers".into());
+        }
+        for t in &self.tiers {
+            t.validate()?;
+        }
+        for &ti in &self.node_tier {
+            if ti >= self.tiers.len() {
+                return Err(format!(
+                    "node_tier index {ti} out of range ({} tiers)",
+                    self.tiers.len()
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Parse a `--hardware-mix` string into a tier list and a cyclic
+/// per-node tier pattern.
+///
+/// Syntax: colon-separated generations, each optionally weighted —
+/// `"a100*3:h100"` means "repeating groups of 3 A100 nodes then 1 H100
+/// node". Generation names resolve through the calibration table in
+/// [`crate::model::cost::tier_by_name`]. A single unweighted
+/// generation (e.g. `"h100"`) is a homogeneous non-reference fleet.
+pub fn parse_hardware_mix(
+    mix: &str,
+) -> Result<(Vec<HardwareTier>, Vec<usize>), String> {
+    let mut tiers: Vec<HardwareTier> = vec![];
+    let mut pattern: Vec<usize> = vec![];
+    for part in mix.split(':') {
+        let part = part.trim();
+        if part.is_empty() {
+            return Err(format!("empty generation in mix {mix:?}"));
+        }
+        let (name, count) = match part.split_once('*') {
+            Some((n, c)) => {
+                let count: usize = c.trim().parse().map_err(|_| {
+                    format!("bad weight {c:?} in mix {mix:?}")
+                })?;
+                if count == 0 {
+                    return Err(format!(
+                        "zero weight for {n:?} in mix {mix:?}"
+                    ));
+                }
+                (n.trim(), count)
+            }
+            None => (part, 1),
+        };
+        let tier = crate::model::cost::tier_by_name(name)
+            .ok_or_else(|| {
+                format!("unknown hardware generation {name:?}")
+            })?;
+        let idx = match tiers.iter().position(|t| t == &tier) {
+            Some(i) => i,
+            None => {
+                tiers.push(tier);
+                tiers.len() - 1
+            }
+        };
+        pattern.extend(std::iter::repeat(idx).take(count));
+    }
+    if tiers.is_empty() {
+        return Err(format!("empty hardware mix {mix:?}"));
+    }
+    Ok((tiers, pattern))
 }
 
 /// Identifies one GPU as (node, local index).
@@ -101,13 +304,18 @@ impl ClusterSpec {
         }
     }
 
-    /// Point-to-point bandwidth between two GPUs (bytes/s).
+    /// Point-to-point bandwidth between two GPUs (bytes/s), scaled by
+    /// the slower endpoint's hardware-tier bandwidth multiplier (×1.0
+    /// — bit-exact — on homogeneous fleets). `bottleneck_bandwidth`,
+    /// `allreduce_time` and `p2p_time` inherit the scaling, so every
+    /// comm term the planner prices is tier-aware.
     pub fn bandwidth(&self, a: GpuId, b: GpuId) -> f64 {
-        match self.tier(a, b) {
+        let base = match self.tier(a, b) {
             Tier::SameGpu => self.gpu.hbm_bw,
             Tier::IntraNode => self.nvlink_bw,
             Tier::InterNode => self.ib_bw,
-        }
+        };
+        base * self.bw_mult(a.node).min(self.bw_mult(b.node))
     }
 
     /// Slowest link bandwidth across a set of GPUs — ring-collective
@@ -259,6 +467,18 @@ impl Allocator {
 
     pub fn node_speed(&self, node: usize) -> f64 {
         self.speed[node]
+    }
+
+    /// Hardware tier of `node` — the *static* fleet-heterogeneity
+    /// axis, deliberately distinct from the dynamic straggler `speed`
+    /// above: tiers are priced into plans, speeds are observed faults.
+    pub fn tier_of(&self, node: usize) -> &HardwareTier {
+        self.spec.tier_of(node)
+    }
+
+    /// Static compute multiplier of `node`'s generation.
+    pub fn compute_mult(&self, node: usize) -> f64 {
+        self.spec.compute_mult(node)
     }
 
     /// Effective speed of a gang allocation: the *slowest* node it
@@ -616,6 +836,93 @@ mod tests {
             let y = b.allocate_avoiding(n, &avoid);
             assert_eq!(x, y, "n={n}");
         }
+    }
+
+    #[test]
+    fn default_spec_is_uniform_reference() {
+        let s = ClusterSpec::default_128();
+        assert_eq!(s.tiers.len(), 1);
+        assert!(s.tiers[0].is_reference());
+        assert!(s.node_tier.is_empty());
+        assert!(s.is_uniform_reference());
+        assert_eq!(s.tier_index(0), 0);
+        assert_eq!(s.compute_mult(5), 1.0);
+        assert_eq!(s.mem_bytes_of(5), s.gpu.mem_bytes);
+        assert!(s.validate().is_ok());
+    }
+
+    #[test]
+    fn hardware_mix_parses_weighted_round_robin() {
+        let (tiers, pattern) =
+            parse_hardware_mix("a100*3:h100").unwrap();
+        assert_eq!(tiers.len(), 2);
+        assert_eq!(tiers[0].name, "a100");
+        assert!(tiers[0].is_reference());
+        assert_eq!(tiers[1].name, "h100");
+        assert!(tiers[1].compute_mult > 1.0);
+        assert_eq!(pattern, vec![0, 0, 0, 1]);
+        // pattern applies cyclically over nodes
+        let s = ClusterSpec::with_gpus_mix(128, "a100*3:h100").unwrap();
+        assert!(!s.is_uniform_reference());
+        assert_eq!(s.tier_of(0).name, "a100");
+        assert_eq!(s.tier_of(3).name, "h100");
+        assert_eq!(s.tier_of(7).name, "h100");
+        assert_eq!(s.tier_of(4).name, "a100");
+        assert!(s.validate().is_ok());
+        assert_eq!(s.hardware_mix, "a100*3:h100");
+    }
+
+    #[test]
+    fn hardware_mix_rejects_garbage() {
+        assert!(parse_hardware_mix("notagpu").is_err());
+        assert!(parse_hardware_mix("a100*0").is_err());
+        assert!(parse_hardware_mix("a100*x").is_err());
+        assert!(parse_hardware_mix("a100::h100").is_err());
+        let mut s = ClusterSpec::with_gpus(16);
+        s.tiers.clear();
+        assert!(s.validate().is_err());
+        let mut s = ClusterSpec::with_gpus(16);
+        s.node_tier = vec![3];
+        assert!(s.validate().is_err());
+        let mut s = ClusterSpec::with_gpus(16);
+        s.tiers[0].compute_mult = 0.0;
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn empty_mix_resets_to_reference() {
+        let mut s = ClusterSpec::with_gpus_mix(32, "v100").unwrap();
+        assert!(!s.is_uniform_reference());
+        s.apply_hardware_mix("").unwrap();
+        assert_eq!(s, ClusterSpec::with_gpus(32));
+    }
+
+    #[test]
+    fn bandwidth_scales_with_slower_endpoint_tier() {
+        let mut s = spec4x4();
+        // node 1 on a half-bandwidth tier
+        s.tiers.push(HardwareTier {
+            name: "slowlink".into(),
+            compute_mult: 1.0,
+            bw_mult: 0.5,
+            mem_mult: 1.0,
+        });
+        s.node_tier = vec![0, 1, 0, 0];
+        let a = GpuId { node: 0, idx: 0 };
+        let b = GpuId { node: 2, idx: 0 };
+        let c = GpuId { node: 1, idx: 0 };
+        // reference-pair links keep the base rate bit-for-bit
+        assert_eq!(s.bandwidth(a, b), s.ib_bw);
+        // any link touching the slow tier runs at its multiplier
+        assert_eq!(s.bandwidth(a, c), s.ib_bw * 0.5);
+        let d = GpuId { node: 1, idx: 1 };
+        assert_eq!(s.bandwidth(c, d), s.nvlink_bw * 0.5);
+        // collectives inherit the scaled bottleneck
+        assert!(
+            s.allreduce_time(&[a, c], 1e8)
+                > s.allreduce_time(&[a, b], 1e8)
+        );
+        assert!(s.p2p_time(a, c, 1e8) > s.p2p_time(a, b, 1e8));
     }
 
     #[test]

@@ -173,6 +173,19 @@ pub struct FaultConfig {
     /// Adam moments, `model::cost`/`LoraSpec::train_state_bytes`) is
     /// read back, bytes/second.
     pub ckpt_read_bw: f64,
+    /// Checkpoint cadence in steps (>= 1): a durable checkpoint exists
+    /// at every multiple of this count, and an eviction rolls progress
+    /// back to the last such boundary. The default of 1 models the
+    /// optimistic every-step checkpoint the engine historically
+    /// assumed — and keeps its accounting byte-identical
+    /// (`floor(steps / 1.0) * 1.0 == floor(steps)` in IEEE bits).
+    pub ckpt_interval_steps: u64,
+    /// Seconds to write one periodic checkpoint. Charged into the
+    /// effective step time as `ckpt_write_s / ckpt_interval_steps`
+    /// (amortized), so cheap-but-rare and dear-but-frequent cadences
+    /// trade off faithfully. 0 (the default) adds exactly nothing
+    /// (`x + 0.0 == x` in IEEE bits).
+    pub ckpt_write_s: f64,
     /// SLO deadline factor: a job meets its deadline when
     /// `jct <= slo_factor * max_slowdown * total_steps *
     /// iso_step_time` (queueing + churn allowance on top of its
@@ -188,6 +201,8 @@ impl Default for FaultConfig {
             preempt_rate: 0.0,
             restore_overhead_s: 30.0,
             ckpt_read_bw: 1.0e9,
+            ckpt_interval_steps: 1,
+            ckpt_write_s: 0.0,
             slo_factor: 3.0,
         }
     }
@@ -211,6 +226,17 @@ impl FaultConfig {
         }
         if self.ckpt_read_bw <= 0.0 {
             return Err("faults: ckpt_read_bw must be > 0".into());
+        }
+        if self.ckpt_interval_steps == 0 {
+            return Err(
+                "faults: ckpt_interval_steps must be >= 1".into()
+            );
+        }
+        if !(self.ckpt_write_s >= 0.0 && self.ckpt_write_s.is_finite())
+        {
+            return Err(
+                "faults: ckpt_write_s must be finite and >= 0".into()
+            );
         }
         if self.slo_factor <= 0.0 {
             return Err("faults: slo_factor must be > 0".into());
@@ -389,6 +415,7 @@ impl ExperimentConfig {
         }
         self.faults.validate()?;
         self.stragglers.validate()?;
+        self.cluster.validate()?;
         Ok(())
     }
 
@@ -424,7 +451,17 @@ impl ExperimentConfig {
                         self.faults.restore_overhead_s,
                     )
                     .set("ckpt_read_bw", self.faults.ckpt_read_bw)
+                    .set(
+                        "ckpt_interval_steps",
+                        self.faults.ckpt_interval_steps,
+                    )
+                    .set("ckpt_write_s", self.faults.ckpt_write_s)
                     .set("slo_factor", self.faults.slo_factor),
+            )
+            .set(
+                "hardware",
+                Json::obj()
+                    .set("mix", self.cluster.hardware_mix.as_str()),
             )
             .set(
                 "stragglers",
@@ -454,7 +491,12 @@ impl ExperimentConfig {
                 .ok_or_else(|| format!("unknown policy {p}"))?;
         }
         if let Some(n) = j.get("n_gpus").and_then(Json::as_usize) {
+            // rebuilding the cluster must not drop a previously applied
+            // hardware mix (e.g. config file sets the mix, a later CLI
+            // override resizes the fleet)
+            let mix = self.cluster.hardware_mix.clone();
             self.cluster = ClusterSpec::with_gpus(n);
+            self.cluster.apply_hardware_mix(&mix)?;
         }
         if let Some(n) = j.get("n_jobs").and_then(Json::as_usize) {
             self.n_jobs = n;
@@ -523,6 +565,16 @@ impl ExperimentConfig {
             {
                 self.faults.ckpt_read_bw = v;
             }
+            if let Some(v) =
+                f.get("ckpt_interval_steps").and_then(Json::as_i64)
+            {
+                self.faults.ckpt_interval_steps = v.max(0) as u64;
+            }
+            if let Some(v) =
+                f.get("ckpt_write_s").and_then(Json::as_f64)
+            {
+                self.faults.ckpt_write_s = v;
+            }
             if let Some(v) = f.get("slo_factor").and_then(Json::as_f64)
             {
                 self.faults.slo_factor = v;
@@ -567,6 +619,13 @@ impl ExperimentConfig {
                 s.get("rehab_tau_s").and_then(Json::as_f64)
             {
                 self.stragglers.rehab_tau_s = v;
+            }
+        }
+        // applied after `n_gpus` (which rebuilds the cluster): the mix
+        // layers tiers onto whatever fleet size is now in effect
+        if let Some(h) = j.get("hardware") {
+            if let Some(m) = h.get("mix").and_then(Json::as_str) {
+                self.cluster.apply_hardware_mix(m)?;
             }
         }
         self.validate()
@@ -778,6 +837,88 @@ mod tests {
         let mut c = ExperimentConfig::default();
         c.stragglers.rehab_tau_s = 0.0;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn ckpt_cadence_defaults_pin_legacy_accounting() {
+        // the optimistic every-step checkpoint the engine historically
+        // assumed: interval 1, free writes — the byte-identity
+        // differential in sim depends on these exact defaults
+        let f = FaultConfig::default();
+        assert_eq!(f.ckpt_interval_steps, 1);
+        assert_eq!(f.ckpt_write_s, 0.0);
+        assert!(f.validate().is_ok());
+    }
+
+    #[test]
+    fn ckpt_cadence_roundtrips_and_validates() {
+        let mut c = ExperimentConfig::default();
+        c.faults.ckpt_interval_steps = 25;
+        c.faults.ckpt_write_s = 4.5;
+        let j = json::parse(&c.to_json().to_string()).unwrap();
+        let back = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(back.faults, c.faults);
+        // partial override keeps the other knobs
+        let j = json::parse(
+            r#"{"faults": {"ckpt_interval_steps": 10}}"#,
+        )
+        .unwrap();
+        let c2 = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(c2.faults.ckpt_interval_steps, 10);
+        assert_eq!(c2.faults.ckpt_write_s, 0.0);
+        // rejections
+        let mut c = ExperimentConfig::default();
+        c.faults.ckpt_interval_steps = 0;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.faults.ckpt_write_s = -1.0;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.faults.ckpt_write_s = f64::INFINITY;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn hardware_section_roundtrips_through_json() {
+        let mut c = ExperimentConfig::default();
+        c.cluster.apply_hardware_mix("a100*3:h100").unwrap();
+        let j = json::parse(&c.to_json().to_string()).unwrap();
+        let back = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(back.cluster, c.cluster);
+        assert!(!back.cluster.is_uniform_reference());
+        // default emits an empty mix and loads back homogeneous
+        let d = ExperimentConfig::default();
+        let j = json::parse(&d.to_json().to_string()).unwrap();
+        assert_eq!(j.path("hardware.mix").unwrap().as_str(), Some(""));
+        let back = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(back.cluster, d.cluster);
+    }
+
+    #[test]
+    fn hardware_mix_survives_n_gpus_override_and_rejects_garbage() {
+        // mix from one apply, fleet resize from a later one: the
+        // resized cluster keeps its tiers
+        let mut c = ExperimentConfig::default();
+        let j = json::parse(r#"{"hardware": {"mix": "a100:v100"}}"#)
+            .unwrap();
+        c.apply_json(&j).unwrap();
+        let j = json::parse(r#"{"n_gpus": 32}"#).unwrap();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.cluster.total_gpus(), 32);
+        assert_eq!(c.cluster.hardware_mix, "a100:v100");
+        assert!(!c.cluster.is_uniform_reference());
+        // both in one document: order of application is n_gpus first
+        let j = json::parse(
+            r#"{"n_gpus": 64, "hardware": {"mix": "h100"}}"#,
+        )
+        .unwrap();
+        let c2 = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(c2.cluster.total_gpus(), 64);
+        assert_eq!(c2.cluster.hardware_mix, "h100");
+        // unknown generation is a load error
+        let j = json::parse(r#"{"hardware": {"mix": "tpu9"}}"#)
+            .unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
     }
 
     #[test]

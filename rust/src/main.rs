@@ -5,11 +5,12 @@
 //!                 [--n-gpus N] [--seed S] [--month 1|2|3] [--rate-scale F]
 //!                 [--mtbf S] [--mttr S] [--preempt-rate R]
 //!                 [--straggler-mtbs S] [--straggler-mtts S]
-//!                 [--straggler-oblivious]
+//!                 [--straggler-oblivious] [--hardware-mix SPEC]
 //! tlora compare   [--n-jobs N] [--n-gpus N] [--seed S]     # all policies
 //! tlora sweep     [--policies a,b|all] [--n-jobs N,..] [--gpus N,..]
 //!                 [--rate-scales F,..] [--months M,..] [--mtbfs S,..]
-//!                 [--stragglers S,..] [--seeds S,..] [--threads T]
+//!                 [--stragglers S,..] [--hardware-mix SPEC,..]
+//!                 [--seeds S,..] [--threads T]
 //!                 [--out-json f] [--out-csv f] [--canonical]
 //! tlora train     [--variant tiny|small|...] [--steps N] [--seed S]
 //! tlora microbench [--steps N]
@@ -73,9 +74,16 @@ Straggler flags: --straggler-mtbs SECONDS (mean time between degrade
               (mean episode length) --straggler-oblivious (disable
               detection even for detection-capable policies;
               severity/detection knobs via --config JSON 'stragglers')
+Hardware flags: --hardware-mix SPEC, a cyclic per-node tier pattern
+              over calibrated generations, e.g. 'a100*3:h100' (three
+              A100 nodes per H100 node). Known tiers: a100 (reference),
+              h100, a100-40g, v100, a10g. simulate/compare take one
+              mix; sweep takes a comma list as a grid axis and reports
+              per-tier utilization columns for mixed cells
 Sweep flags:  --policies a,b|all --n-jobs N,.. --gpus N,..
               --rate-scales F,.. --months M,.. --mtbfs S,..
-              --stragglers S,.. --seeds S,.. --threads T
+              --stragglers S,.. --hardware-mix SPEC,..
+              --seeds S,.. --threads T
               --out-json FILE --out-csv FILE
               --canonical (strip wall-clock/thread fields from JSON so
               runs diff bit-exactly; used by the golden-trace fixture)
@@ -90,6 +98,9 @@ fn build_config(args: &Args) -> Result<ExperimentConfig, String> {
     cfg.n_jobs = args.get_usize("n-jobs", 100)?;
     let n_gpus = args.get_usize("n-gpus", 128)?;
     cfg.cluster = tlora::cluster::ClusterSpec::with_gpus(n_gpus);
+    if let Some(mix) = args.get("hardware-mix") {
+        cfg.cluster.apply_hardware_mix(mix)?;
+    }
     cfg.seed = args.get_u64("seed", 42)?;
     cfg.trace = match args.get_usize("month", 1)? {
         2 => TraceProfile::month2(),
@@ -337,6 +348,11 @@ fn cmd_sweep(args: &Args) -> i32 {
             args,
             "stragglers",
             vec![grid.base.stragglers.mtbs_s],
+        )?;
+        grid.hardware_mixes = parse_list(
+            args,
+            "hardware-mix",
+            vec![grid.base.cluster.hardware_mix.clone()],
         )?;
         grid.seeds = parse_list(args, "seeds", vec![grid.base.seed])?;
         grid.validate()?;

@@ -1,4 +1,14 @@
 //! Model architecture registry.
+//!
+//! Also the natural home for the *hardware-generation* axis the
+//! planner prices models against: [`HardwareTier`] (re-exported from
+//! [`crate::cluster`]) describes a GPU generation as multipliers
+//! relative to the reference A100-80G, and
+//! [`crate::model::cost::known_tiers`] is the per-generation
+//! calibration table the `--hardware-mix` parser resolves names
+//! through.
+
+pub use crate::cluster::HardwareTier;
 
 /// A decoder-only transformer architecture (the frozen backbone of an
 /// SSM). Dimensions follow the usual GPT/Llama conventions.

@@ -8,6 +8,55 @@
 //! asymmetry that makes LoRA training cheap and co-location attractive.
 
 use super::arch::{LoraSpec, ModelArch};
+use crate::cluster::HardwareTier;
+
+/// Per-generation calibration table: hardware tiers as multipliers
+/// relative to the reference A100-80G ([`GpuSpec::a100_80g`]
+/// (crate::cluster::GpuSpec::a100_80g)). Compute multipliers follow
+/// peak dense bf16 FLOP/s ratios, bandwidth multipliers the NVLink
+/// generation, memory multipliers the HBM capacity. `--hardware-mix`
+/// strings resolve generation names through this table.
+pub fn known_tiers() -> Vec<HardwareTier> {
+    vec![
+        // the reference itself: A100-80G, all multipliers 1.0
+        HardwareTier::reference(),
+        // H100-80G: ~989 vs 312 TFLOP/s bf16, NVLink4 900 vs 600 GB/s
+        HardwareTier {
+            name: "h100".into(),
+            compute_mult: 3.17,
+            bw_mult: 1.5,
+            mem_mult: 1.0,
+        },
+        // A100-40G: same silicon, half the HBM
+        HardwareTier {
+            name: "a100-40g".into(),
+            compute_mult: 1.0,
+            bw_mult: 1.0,
+            mem_mult: 0.5,
+        },
+        // V100-32G: ~125 TFLOP/s fp16, NVLink2 300 GB/s, 32 GB
+        HardwareTier {
+            name: "v100".into(),
+            compute_mult: 0.4,
+            bw_mult: 0.5,
+            mem_mult: 0.4,
+        },
+        // A10G-24G: ~125 TFLOP/s bf16, PCIe-class links, 24 GB
+        HardwareTier {
+            name: "a10g".into(),
+            compute_mult: 0.4,
+            bw_mult: 0.11,
+            mem_mult: 0.3,
+        },
+    ]
+}
+
+/// Look up a calibration tier by generation name (case-insensitive).
+pub fn tier_by_name(name: &str) -> Option<HardwareTier> {
+    known_tiers()
+        .into_iter()
+        .find(|t| t.name.eq_ignore_ascii_case(name))
+}
 
 /// Cost of one transformer layer for a given token count.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -246,6 +295,22 @@ mod tests {
             checkpoint_bytes(&a, &LoraSpec::new(8)),
             LoraSpec::new(8).params(&a) as f64 * 12.0
         );
+    }
+
+    #[test]
+    fn calibration_table_is_reference_anchored_and_valid() {
+        let tiers = known_tiers();
+        assert!(tiers[0].is_reference(), "tier 0 must be the reference");
+        for t in &tiers {
+            t.validate().unwrap();
+        }
+        // every generation resolves by name, case-insensitively
+        assert_eq!(tier_by_name("a100").unwrap(), tiers[0]);
+        assert_eq!(tier_by_name("H100").unwrap().name, "h100");
+        assert!(tier_by_name("h100").unwrap().compute_mult > 1.0);
+        assert!(tier_by_name("v100").unwrap().compute_mult < 1.0);
+        assert!(tier_by_name("a100-40g").unwrap().mem_mult < 1.0);
+        assert!(tier_by_name("tpu").is_none());
     }
 
     #[test]

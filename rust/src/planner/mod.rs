@@ -31,7 +31,8 @@ pub struct Stage {
     /// 1..=L = transformer layers, L+1 = head)
     pub begin: usize,
     pub end: usize,
-    /// full-batch compute seconds on this stage (at chosen tp)
+    /// full-batch compute seconds on this stage (at chosen tp, scaled
+    /// by the stage's hardware-tier compute multiplier)
     pub compute_s: f64,
 }
 
@@ -146,7 +147,16 @@ pub fn plan(
 ///    query ([`ClusterSpec::bandwidth`], tier latencies,
 ///    `spans_nodes`) depends only on whether two GPUs share a node,
 ///    never on *which* physical node or local GPU index they occupy;
-/// 3. the [`PlanOptions`] and the (per-predictor, fixed)
+/// 3. the allocation's **hardware-tier pattern**: on mixed fleets the
+///    per-stage compute weighting, bandwidth scaling and memory check
+///    all read the per-GPU tier multipliers, so the key carries the
+///    first-appearance-relabeled tier labels *plus* the multiplier
+///    bit-patterns of the tiers touched, in first-appearance order
+///    (labels alone would collapse different generations that happen
+///    to pattern-match). Allocations touching only reference tiers
+///    canonicalize to empty tier components, so homogeneous fleets
+///    key — and cache — exactly as before;
+/// 4. the [`PlanOptions`] and the (per-predictor, fixed)
 ///    [`ClusterSpec`].
 ///
 /// [`PlanShapeKey`] captures exactly these: two (ssm, alloc) pairs with
@@ -163,15 +173,57 @@ pub struct PlanShapeKey {
     /// canonical node pattern: one label per GPU in allocation order,
     /// nodes relabeled by first appearance ([`alloc_shape`])
     shape: Vec<u32>,
+    /// canonical tier pattern: one tier label per GPU in allocation
+    /// order, tiers relabeled by first appearance (empty when every
+    /// touched tier is the reference)
+    tier_shape: Vec<u32>,
+    /// (compute, bw, mem) multiplier bit-patterns of the touched
+    /// tiers, in first-appearance order (empty when all-reference)
+    tier_table: Vec<(u64, u64, u64)>,
     /// the [`PlanOptions`] fields, hashed structurally
     opts: (bool, Option<usize>, usize),
 }
 
 impl PlanShapeKey {
     /// The canonical shape key of planning `ssm` on `alloc` under
-    /// `opts`.
-    pub fn of(ssm: &Ssm, alloc: &Allocation, opts: &PlanOptions)
-        -> PlanShapeKey {
+    /// `opts`, on a fleet described by `spec`.
+    pub fn of(
+        ssm: &Ssm,
+        alloc: &Allocation,
+        spec: &ClusterSpec,
+        opts: &PlanOptions,
+    ) -> PlanShapeKey {
+        let mut tier_shape = Vec::with_capacity(alloc.gpus.len());
+        let mut seen: Vec<usize> = vec![]; // tier indices, 1st-appear
+        let mut all_reference = true;
+        for g in &alloc.gpus {
+            let ti = spec.tier_index(g.node);
+            all_reference &= spec.tiers[ti].is_reference();
+            let label = match seen.iter().position(|&t| t == ti) {
+                Some(l) => l as u32,
+                None => {
+                    seen.push(ti);
+                    (seen.len() - 1) as u32
+                }
+            };
+            tier_shape.push(label);
+        }
+        let (tier_shape, tier_table) = if all_reference {
+            (vec![], vec![])
+        } else {
+            let table = seen
+                .iter()
+                .map(|&ti| {
+                    let t = &spec.tiers[ti];
+                    (
+                        t.compute_mult.to_bits(),
+                        t.bw_mult.to_bits(),
+                        t.mem_mult.to_bits(),
+                    )
+                })
+                .collect();
+            (tier_shape, table)
+        };
         PlanShapeKey {
             arch: ssm.arch.name.clone(),
             adapters: ssm
@@ -180,6 +232,8 @@ impl PlanShapeKey {
                 .map(|a| (a.rank, a.batch_size, a.seq_len))
                 .collect(),
             shape: alloc_shape(alloc),
+            tier_shape,
+            tier_table,
             opts: (opts.fused_kernel, opts.n_nano, opts.n_nano_max),
         }
     }
@@ -282,17 +336,23 @@ fn plan_fixed(
     let ways = pp * tp;
 
     // ---- memory feasibility ----
+    // the tightest GPU paces feasibility: every model-parallel shard
+    // must fit on its device, and the smallest tier hosts one of them
+    // (×1.0 — bit-exact — on homogeneous fleets)
+    let min_mem_mult = alloc
+        .gpus
+        .iter()
+        .map(|g| spec.tier_of(g.node).mem_mult)
+        .fold(f64::INFINITY, f64::min);
     let jobs: Vec<(LoraSpec, usize, usize)> = ssm
         .adapters
         .iter()
         .map(|a| (LoraSpec::new(a.rank), a.batch_size, a.seq_len))
         .collect();
     let mem = memory_of(&ssm.arch, &jobs, ways).total();
-    if mem > gpu.mem_bytes {
-        return Err(PlanError::OutOfMemory {
-            need: mem,
-            have: gpu.mem_bytes,
-        });
+    let have = gpu.mem_bytes * min_mem_mult;
+    if mem > have {
+        return Err(PlanError::OutOfMemory { need: mem, have });
     }
 
     // ---- microbatch count (needed for the efficiency model) ----
@@ -355,13 +415,32 @@ fn plan_fixed(
     };
 
     // ---- pipeline partition (DP over contiguous stages) ----
-    let stages_cut = partition_dp(&layer_times, pp);
+    // stage s occupies the allocation-order GPU chunk
+    // [s*tp, (s+1)*tp); a gang-synchronous stage runs at its slowest
+    // member's generation, so the DP weighs each candidate segment by
+    // the hosting stage's minimum compute multiplier (all 1.0 —
+    // bit-exact — on homogeneous fleets). On mixed fleets this skews
+    // layers toward fast stages, which is what lets pipeline splits
+    // beat tensor parallelism (TP is paced by the slowest member of
+    // the whole gang).
+    debug_assert_eq!(alloc.n_gpus(), pp * tp);
+    let stage_mults: Vec<f64> = (0..pp)
+        .map(|s| {
+            alloc.gpus[s * tp..(s + 1) * tp]
+                .iter()
+                .map(|g| spec.compute_mult(g.node))
+                .fold(f64::INFINITY, f64::min)
+        })
+        .collect();
+    let stages_cut = partition_dp_weighted(&layer_times, &stage_mults);
     let stages: Vec<Stage> = stages_cut
         .iter()
-        .map(|&(b, e)| Stage {
+        .enumerate()
+        .map(|(i, &(b, e))| Stage {
             begin: b,
             end: e,
-            compute_s: layer_times[b..e].iter().sum(),
+            compute_s: layer_times[b..e].iter().sum::<f64>()
+                / stage_mults[i],
         })
         .collect();
     let max_stage = stages
@@ -419,8 +498,19 @@ fn plan_fixed(
 
     // ---- utilization ----
     let useful_flops: f64 = layer_flops.iter().sum::<f64>();
-    let compute_util = useful_flops
-        / (alloc.n_gpus() as f64 * gpu.peak_flops * step_time);
+    // aggregate peak of the gang. Gated on uniformity: repeated
+    // per-GPU addition is NOT bit-equal to `n as f64 *`, so the
+    // homogeneous path must keep the original multiplication form
+    let total_peak = if spec.is_uniform_reference() {
+        alloc.n_gpus() as f64 * gpu.peak_flops
+    } else {
+        alloc
+            .gpus
+            .iter()
+            .map(|g| gpu.peak_flops * spec.compute_mult(g.node))
+            .sum::<f64>()
+    };
+    let compute_util = useful_flops / (total_peak * step_time);
 
     Ok(ParallelPlan {
         pp,
@@ -435,6 +525,52 @@ fn plan_fixed(
         compute_util,
         n_nano,
     })
+}
+
+/// [`partition_dp`] with per-stage compute multipliers: segment
+/// `[j, i)` assigned to stage `s` costs `seg(j, i) / mults[s]`, so the
+/// DP minimizes the maximum *tier-scaled* stage time. With all-1.0
+/// multipliers every cost is bit-identical to the unweighted DP
+/// (`x / 1.0 == x` in IEEE bits) and the returned cuts match
+/// [`partition_dp`] exactly — the homogeneous-fleet differential
+/// depends on that.
+fn partition_dp_weighted(
+    times: &[f64],
+    mults: &[f64],
+) -> Vec<(usize, usize)> {
+    let l = times.len();
+    let k = mults.len().min(l).max(1);
+    let mut pre = vec![0.0; l + 1];
+    for i in 0..l {
+        pre[i + 1] = pre[i] + times[i];
+    }
+    let seg = |a: usize, b: usize| pre[b] - pre[a]; // [a, b)
+
+    let inf = f64::INFINITY;
+    let mut dp = vec![vec![inf; l + 1]; k + 1];
+    let mut cut = vec![vec![0usize; l + 1]; k + 1];
+    dp[0][0] = 0.0;
+    for s in 1..=k {
+        let w = mults.get(s - 1).copied().unwrap_or(1.0);
+        for i in s..=l {
+            for j in (s - 1)..i {
+                let cost = dp[s - 1][j].max(seg(j, i) / w);
+                if cost < dp[s][i] {
+                    dp[s][i] = cost;
+                    cut[s][i] = j;
+                }
+            }
+        }
+    }
+    let mut bounds = vec![];
+    let mut i = l;
+    for s in (1..=k).rev() {
+        let j = cut[s][i];
+        bounds.push((j, i));
+        i = j;
+    }
+    bounds.reverse();
+    bounds
 }
 
 /// Partition `times` into `k` contiguous stages minimizing the maximum
@@ -707,8 +843,8 @@ mod tests {
             ],
         };
         assert_eq!(
-            PlanShapeKey::of(&ssm, &a, &opts),
-            PlanShapeKey::of(&ssm, &b, &opts)
+            PlanShapeKey::of(&ssm, &a, &spec, &opts),
+            PlanShapeKey::of(&ssm, &b, &spec, &opts)
         );
         let pa = plan(&ssm, &a, &spec, &opts).unwrap();
         let pb = plan(&ssm, &b, &spec, &opts).unwrap();
@@ -716,6 +852,171 @@ mod tests {
         assert_eq!(pa.comm_s.to_bits(), pb.comm_s.to_bits());
         assert_eq!(pa.comp_s.to_bits(), pb.comp_s.to_bits());
         assert_eq!(pa, pb);
+    }
+
+    #[test]
+    fn weighted_dp_with_unit_mults_matches_unweighted() {
+        // x / 1.0 == x in IEEE bits, so the weighted DP must return
+        // exactly the cuts of the classic DP — the homogeneous-fleet
+        // byte-identity differential rests on this.
+        let times = vec![1.0, 1.0, 1.0, 1.0, 4.0, 1.0, 1.0, 1.0];
+        for k in 1..=4 {
+            assert_eq!(
+                partition_dp_weighted(&times, &vec![1.0; k]),
+                partition_dp(&times, k),
+                "k={k}"
+            );
+        }
+        assert_eq!(
+            partition_dp_weighted(&[1.0], &[1.0; 4]),
+            partition_dp(&[1.0], 4)
+        );
+    }
+
+    #[test]
+    fn weighted_dp_skews_layers_toward_fast_stage() {
+        // stage 0 twice as fast as stage 1: balancing seg/2.0 against
+        // seg/1.0 must hand the fast stage the larger layer share
+        let times = vec![1.0; 12];
+        let cuts = partition_dp_weighted(&times, &[2.0, 1.0]);
+        assert_eq!(cuts.len(), 2);
+        let fast = cuts[0].1 - cuts[0].0;
+        let slow = cuts[1].1 - cuts[1].0;
+        assert!(fast > slow, "fast={fast} slow={slow}");
+        assert_eq!(fast + slow, times.len());
+    }
+
+    #[test]
+    fn homogeneous_spec_keys_have_empty_tier_components() {
+        let (spec, alloc) = setup(4);
+        let ssm = Ssm::fuse(&[job(0, 8, 4, 512)]).unwrap();
+        let key =
+            PlanShapeKey::of(&ssm, &alloc, &spec, &PlanOptions::default());
+        assert!(key.tier_shape.is_empty());
+        assert!(key.tier_table.is_empty());
+    }
+
+    #[test]
+    fn distinct_tier_patterns_give_distinct_keys_and_plans() {
+        use crate::cluster::GpuId;
+        let homo = ClusterSpec::default_128();
+        let mut mixed = ClusterSpec::default_128();
+        mixed.apply_hardware_mix("a100:v100").unwrap();
+        let ssm =
+            Ssm::fuse(&[job(0, 8, 4, 512), job(1, 4, 2, 256)]).unwrap();
+        let opts = PlanOptions::default();
+        // nodes 0 (a100) and 1 (v100) under the alternating mix
+        let a = Allocation {
+            gpus: vec![
+                GpuId { node: 0, idx: 0 },
+                GpuId { node: 0, idx: 1 },
+                GpuId { node: 1, idx: 0 },
+                GpuId { node: 1, idx: 1 },
+            ],
+        };
+        let k_homo = PlanShapeKey::of(&ssm, &a, &homo, &opts);
+        let k_mixed = PlanShapeKey::of(&ssm, &a, &mixed, &opts);
+        assert_ne!(k_homo, k_mixed);
+        assert!(!k_mixed.tier_shape.is_empty());
+        assert_eq!(k_mixed.tier_table.len(), 2);
+        // and the plans genuinely differ: the v100 half slows the gang
+        let p_homo = plan(&ssm, &a, &homo, &opts).unwrap();
+        let p_mixed = plan(&ssm, &a, &mixed, &opts).unwrap();
+        assert!(
+            p_mixed.step_time_s > p_homo.step_time_s,
+            "{} vs {}",
+            p_mixed.step_time_s,
+            p_homo.step_time_s
+        );
+        // same labels, opposite tier order: the multiplier bit-pattern
+        // table must keep the keys apart (labels alone would collapse)
+        let c = Allocation {
+            gpus: vec![
+                GpuId { node: 1, idx: 0 },
+                GpuId { node: 1, idx: 1 },
+                GpuId { node: 2, idx: 0 },
+                GpuId { node: 2, idx: 1 },
+            ],
+        };
+        let k_rev = PlanShapeKey::of(&ssm, &c, &mixed, &opts);
+        assert_eq!(k_mixed.tier_shape, k_rev.tier_shape);
+        assert_ne!(k_mixed, k_rev);
+    }
+
+    #[test]
+    fn same_tier_pattern_on_other_nodes_keys_and_plans_equal() {
+        use crate::cluster::GpuId;
+        let mut spec = ClusterSpec::default_128();
+        spec.apply_hardware_mix("a100:v100").unwrap();
+        let ssm =
+            Ssm::fuse(&[job(0, 8, 4, 512), job(1, 4, 2, 256)]).unwrap();
+        let opts = PlanOptions::default();
+        // nodes (0,1) and (2,3) carry the same (a100, v100) pattern
+        let a = Allocation {
+            gpus: vec![
+                GpuId { node: 0, idx: 0 },
+                GpuId { node: 0, idx: 1 },
+                GpuId { node: 1, idx: 0 },
+                GpuId { node: 1, idx: 1 },
+            ],
+        };
+        let b = Allocation {
+            gpus: vec![
+                GpuId { node: 2, idx: 5 },
+                GpuId { node: 2, idx: 2 },
+                GpuId { node: 3, idx: 6 },
+                GpuId { node: 3, idx: 1 },
+            ],
+        };
+        assert_eq!(
+            PlanShapeKey::of(&ssm, &a, &spec, &opts),
+            PlanShapeKey::of(&ssm, &b, &spec, &opts)
+        );
+        let pa = plan(&ssm, &a, &spec, &opts).unwrap();
+        let pb = plan(&ssm, &b, &spec, &opts).unwrap();
+        assert_eq!(pa.step_time_s.to_bits(), pb.step_time_s.to_bits());
+        assert_eq!(pa, pb);
+    }
+
+    #[test]
+    fn pipeline_split_beats_tp_on_strongly_mixed_pair() {
+        // a 10x-slower second GPU paces the whole gang under tp=2, but a
+        // pipeline split hands the slow stage a sliver of layers — the
+        // cost search must pick pp=2 (the acceptance criterion's
+        // "pipeline plans selected where cost-optimal")
+        use crate::cluster::{GpuId, HardwareTier};
+        let mut spec = ClusterSpec::default_128();
+        spec.tiers.push(HardwareTier {
+            name: "slow10".into(),
+            compute_mult: 0.1,
+            bw_mult: 1.0,
+            mem_mult: 1.0,
+        });
+        spec.node_tier = vec![0, 1]; // odd nodes 10x slower
+        spec.validate().unwrap();
+        let ssm = Ssm::fuse(&[job(0, 8, 8, 512)]).unwrap();
+        let opts = PlanOptions::default();
+        let alloc = Allocation {
+            gpus: vec![
+                GpuId { node: 0, idx: 0 },
+                GpuId { node: 1, idx: 0 },
+            ],
+        };
+        let best = plan(&ssm, &alloc, &spec, &opts).unwrap();
+        let forced_tp =
+            plan_with_shape(&ssm, &alloc, &spec, &opts, 1, 2).unwrap();
+        assert_eq!(best.pp, 2, "best shape {:?}", (best.pp, best.tp));
+        assert!(
+            best.step_time_s < forced_tp.step_time_s,
+            "{} vs {}",
+            best.step_time_s,
+            forced_tp.step_time_s
+        );
+        // the fast stage (allocation prefix, node 0) carries more layers
+        assert_eq!(best.stages.len(), 2);
+        let fast = best.stages[0].end - best.stages[0].begin;
+        let slow = best.stages[1].end - best.stages[1].begin;
+        assert!(fast > slow, "fast={fast} slow={slow}");
     }
 
     #[test]

@@ -155,7 +155,7 @@ impl Predictor {
             self.probes += 1;
             return plan(ssm, alloc, &self.spec, &self.opts);
         }
-        let key = PlanShapeKey::of(ssm, alloc, &self.opts);
+        let key = PlanShapeKey::of(ssm, alloc, &self.spec, &self.opts);
         if let Some(r) = self.shape_cache.get(&key) {
             self.shape_hits += 1;
             return r.clone();

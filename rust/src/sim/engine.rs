@@ -36,7 +36,7 @@ use crate::model::cost::restore_time_s;
 use crate::planner::PlanOptions;
 use crate::scheduler::predictor::Predictor;
 use crate::scheduler::{NodeSpeedEstimator, NodeView, PolicyHooks};
-use crate::util::stats::Summary;
+use crate::util::stats::{Summary, TimeWeighted};
 use crate::workload::faults::{
     FaultKind, NodeFaultModel, PreemptionModel, ScriptedFault,
     ScriptedStraggler, StragglerModel,
@@ -238,6 +238,18 @@ fn restore_penalties(
         .collect()
 }
 
+/// Per-hardware-tier utilization accounting for mixed fleets. `None`
+/// on uniform-reference clusters: constructing it would add float work
+/// to the homogeneous path, which must stay byte-identical to pre-tier
+/// builds (`SimResult::tier_util` is simply empty there).
+struct TierUtilTracker {
+    /// GPU count per tier (the busy-fraction denominator); a tier with
+    /// no mapped nodes keeps count 0 and reports utilization 0
+    gpus: Vec<f64>,
+    /// time-weighted busy fraction per tier
+    acc: Vec<TimeWeighted>,
+}
+
 /// Origin tag for exogenous fault events, carried in the (otherwise
 /// unused) `epoch` field: model-originated events chain the next draw
 /// from their seeded stream when handled; scripted events (epoch 0)
@@ -364,6 +376,8 @@ pub struct Engine<'a> {
     estimator: Option<NodeSpeedEstimator>,
     /// last time `observe_speeds` ran (estimator bookkeeping)
     last_obs_t: f64,
+    /// per-tier utilization accumulators (mixed fleets only)
+    tier_util: Option<TierUtilTracker>,
     /// scheduling-round counter; stamps (and stales) *reschedule
     /// points* only — completions use the per-job epochs below
     epoch: u64,
@@ -522,6 +536,19 @@ impl<'a> Engine<'a> {
         let mut predictor =
             Predictor::new(cfg.cluster.clone(), plan_opts);
         predictor.set_shape_cache(opts.plan_shape_cache);
+        let tier_util = if cfg.cluster.is_uniform_reference() {
+            None
+        } else {
+            let mut gpus = vec![0.0; cfg.cluster.tiers.len()];
+            for node in 0..cfg.cluster.n_nodes {
+                gpus[cfg.cluster.tier_index(node)] +=
+                    cfg.cluster.gpus_per_node as f64;
+            }
+            Some(TierUtilTracker {
+                acc: vec![TimeWeighted::default(); gpus.len()],
+                gpus,
+            })
+        };
         Engine {
             predictor,
             state: SimState::new(cfg, &jobs),
@@ -540,6 +567,7 @@ impl<'a> Engine<'a> {
             stragglers,
             estimator,
             last_obs_t: 0.0,
+            tier_util,
             epoch: 0,
             completion_epoch: HashMap::new(),
             completion_anchor: HashMap::new(),
@@ -1046,8 +1074,32 @@ impl<'a> Engine<'a> {
             });
         }
 
+        self.observe_tier_util(t);
         let stats = self.round_stats(t);
         self.obs.round(&stats, extra);
+    }
+
+    /// Record the per-tier busy-GPU fraction taking effect at `t`
+    /// (mixed fleets only): each running gang contributes its
+    /// `compute_util` once per member GPU, attributed to that GPU's
+    /// tier. The step function is closed at the makespan when the
+    /// result is assembled.
+    fn observe_tier_util(&mut self, t: f64) {
+        let Some(tr) = &mut self.tier_util else {
+            return;
+        };
+        let mut busy = vec![0.0; tr.gpus.len()];
+        for g in &self.state.running {
+            for gpu in &g.alloc.gpus {
+                busy[self.cfg.cluster.tier_index(gpu.node)] +=
+                    g.compute_util;
+            }
+        }
+        for (i, tw) in tr.acc.iter_mut().enumerate() {
+            if tr.gpus[i] > 0.0 {
+                tw.add(t, busy[i] / tr.gpus[i]);
+            }
+        }
     }
 
     fn round_stats(&self, t: f64) -> RoundStats {
@@ -1263,6 +1315,24 @@ impl<'a> Engine<'a> {
             .windowed_averages(self.cfg.scheduler.horizon_s);
         let (avg_throughput_full, avg_gpu_util_full) =
             self.obs.timeline.full_averages();
+        let tier_util = match &mut self.tier_util {
+            Some(tr) => self
+                .cfg
+                .cluster
+                .tiers
+                .iter()
+                .enumerate()
+                .map(|(i, tier)| {
+                    let u = if tr.gpus[i] > 0.0 {
+                        tr.acc[i].finish(makespan)
+                    } else {
+                        0.0
+                    };
+                    (tier.name.clone(), u)
+                })
+                .collect(),
+            None => vec![],
+        };
 
         SimResult {
             policy: self.cfg.policy,
@@ -1309,6 +1379,7 @@ impl<'a> Engine<'a> {
                 .stragglers
                 .straggler_slowdown,
             migrations: self.obs.stragglers.migrations,
+            tier_util,
         }
     }
 }

@@ -123,6 +123,12 @@ pub struct SimResult {
     /// voluntary straggler-migration evictions performed by
     /// detection-aware policies (0 for oblivious runs)
     pub migrations: u64,
+    /// per-hardware-tier time-averaged GPU utilization in [0,1],
+    /// ordered by tier index (`(tier name, utilization)`). Empty on
+    /// uniform-reference clusters — the accumulators are never even
+    /// constructed there, so homogeneous runs stay byte-identical to
+    /// pre-tier builds.
+    pub tier_util: Vec<(String, f64)>,
 }
 
 impl SimResult {
@@ -349,6 +355,66 @@ mod tests {
         assert_eq!(r.degraded_node_time_s, 0.0);
         assert_eq!(r.straggler_slowdown, 1.0);
         assert_eq!(r.migrations, 0);
+    }
+
+    #[test]
+    fn tier_util_empty_on_homogeneous_and_bounded_on_mixed() {
+        // homogeneous fleets never construct the per-tier
+        // accumulators (byte-identity gate)
+        let r = simulate(&small_cfg(Policy::TLora));
+        assert!(r.tier_util.is_empty());
+        // a mixed fleet reports one bounded entry per tier, in tier
+        // order, and the run is deterministic
+        let mut cfg = small_cfg(Policy::TLora);
+        cfg.cluster.apply_hardware_mix("a100:v100").unwrap();
+        let r = simulate(&cfg);
+        assert_eq!(r.tier_util.len(), 2);
+        assert_eq!(r.tier_util[0].0, "a100");
+        assert_eq!(r.tier_util[1].0, "v100");
+        for (name, u) in &r.tier_util {
+            assert!(
+                (0.0..=1.0).contains(u),
+                "{name} utilization {u} out of [0,1]"
+            );
+        }
+        assert!(!r.jct.is_empty());
+        let r2 = simulate(&cfg);
+        assert_eq!(r.jct, r2.jct);
+        assert_eq!(r.tier_util, r2.tier_util);
+    }
+
+    #[test]
+    fn slow_generation_is_not_flagged_as_straggler() {
+        // the tier multiplier is priced into every plan's baseline
+        // step time, so on a healthy mixed fleet the detector sees
+        // observed/planned ratios of ~1.0 even on the 0.4x v100
+        // nodes. Detection is forced active via a no-op scripted
+        // straggler source (speed 1.0 = already healthy); if tier
+        // slowness leaked into the slowdown estimate, the v100 nodes
+        // would cross migrate_threshold (1.6 < 1/0.4) and trigger
+        // spurious migrations.
+        let mut cfg = small_cfg(Policy::TLora);
+        cfg.cluster.apply_hardware_mix("a100:v100").unwrap();
+        assert!(cfg.stragglers.detect);
+        let jobs = TraceGenerator::new(cfg.trace.clone(), cfg.seed)
+            .generate(cfg.n_jobs);
+        let opts = EngineOptions {
+            straggler_script: vec![
+                crate::workload::faults::ScriptedStraggler {
+                    time: 0.0,
+                    node: 0,
+                    speed: 1.0,
+                },
+            ],
+            ..EngineOptions::default()
+        };
+        let r = simulate_jobs_with(&cfg, jobs, &opts, &mut []);
+        assert_eq!(
+            r.migrations, 0,
+            "tier slowness misread as straggling"
+        );
+        assert_eq!(r.node_degrades, 0);
+        assert_eq!(r.restarts, 0);
     }
 
     #[test]

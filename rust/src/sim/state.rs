@@ -49,8 +49,10 @@ pub struct JobState {
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Eviction {
     pub job_id: u64,
-    /// simulated seconds of rolled-back in-flight work (the fractional
-    /// step in progress at eviction — checkpoints persist whole steps)
+    /// simulated seconds of rolled-back in-flight work (progress past
+    /// the last durable checkpoint boundary — every
+    /// `FaultConfig::ckpt_interval_steps` steps; at the default
+    /// cadence of 1 this is just the fractional step in progress)
     pub lost_s: f64,
     /// checkpoint-restore delay charged before the job may run again
     pub penalty_s: f64,
@@ -104,6 +106,17 @@ pub struct SimState {
     pub completed: usize,
     /// current simulated time; advances only via [`SimState::advance_to`]
     pub now: f64,
+    /// checkpoint cadence in steps, as f64
+    /// (`FaultConfig::ckpt_interval_steps`, >= 1): a durable
+    /// checkpoint exists at every multiple, and evictions roll back to
+    /// the last such boundary. At the default of 1.0 the rollback is
+    /// bit-identical to the legacy fractional-step accounting
+    /// (`floor(x / 1.0) * 1.0 == floor(x)` in IEEE bits).
+    ckpt_interval: f64,
+    /// periodic checkpoint-write cost amortized per step
+    /// (`ckpt_write_s / ckpt_interval_steps`), charged into every
+    /// group's base step time; 0.0 by default (`x + 0.0 == x`)
+    ckpt_oh_per_step: f64,
 }
 
 impl SimState {
@@ -127,6 +140,7 @@ impl SimState {
                 )
             })
             .collect();
+        let k = cfg.faults.ckpt_interval_steps.max(1) as f64;
         SimState {
             states,
             queue: vec![],
@@ -135,6 +149,8 @@ impl SimState {
             allocator: Allocator::new(cfg.cluster.clone()),
             completed: 0,
             now: 0.0,
+            ckpt_interval: k,
+            ckpt_oh_per_step: cfg.faults.ckpt_write_s / k,
         }
     }
 
@@ -145,6 +161,7 @@ impl SimState {
     /// its step rate for the *next* interval.
     pub fn advance_to(&mut self, t: f64) {
         let dt = t - self.now;
+        let ckpt_oh = self.ckpt_oh_per_step;
         if dt > 0.0 {
             for g in &mut self.running {
                 let step = g.step_time;
@@ -168,15 +185,17 @@ impl SimState {
                     for _ in 0..steps {
                         // the controller sees what a wall clock would:
                         // the *effective* step time, straggler drag
-                        // included (÷1.0 is exact when healthy)
-                        let t_step = iter_time(
+                        // and amortized checkpoint writes included
+                        // (÷1.0 and +0.0 are exact when healthy/free)
+                        let t_step = (iter_time(
                             g.comp_s, g.comm_s, c.n(), g.oh, g.lat,
-                        ) / g.speed;
+                        ) + ckpt_oh)
+                            / g.speed;
                         c.observe(t_step);
                     }
                     g.base_step_time = iter_time(
                         g.comp_s, g.comm_s, c.n(), g.oh, g.lat,
-                    );
+                    ) + ckpt_oh;
                     g.step_time = g.base_step_time / g.speed;
                 }
             }
@@ -236,10 +255,13 @@ impl SimState {
         }
     }
 
-    /// Evict one uncompleted job at time `t`: roll back its in-flight
-    /// fractional step (checkpoints persist whole steps; `step_time`
-    /// prices the lost fraction, 0 when the job was not running),
-    /// release its owned gang, stamp its restore window, and requeue it.
+    /// Evict one uncompleted job at time `t`: roll back its progress to
+    /// the last durable checkpoint boundary (every
+    /// `ckpt_interval` steps; `step_time` prices the lost work, 0 when
+    /// the job was not running), release its owned gang, stamp its
+    /// restore window, and requeue it. At the default cadence of 1 the
+    /// boundary is the last whole step — the historical optimistic
+    /// accounting, bit-for-bit.
     fn evict(
         &mut self,
         id: u64,
@@ -252,9 +274,10 @@ impl SimState {
         }
         let p = *penalty.get(&id).unwrap_or(&0.0);
         let st = self.states.get_mut(&id).unwrap();
-        let whole = st.steps_done.floor();
-        let lost = (st.steps_done - whole) * step_time;
-        st.steps_done = whole;
+        let k = self.ckpt_interval;
+        let boundary = (st.steps_done / k).floor() * k;
+        let lost = (st.steps_done - boundary) * step_time;
+        st.steps_done = boundary;
         st.restart_at = t + p;
         st.restarts += 1;
         self.queue.push(id);
@@ -364,10 +387,15 @@ impl SimState {
     /// checkpoint-restore penalty charged, requeued — admission then
     /// re-places it preferring nodes outside `avoid` (the suspected
     /// set, a superset of `flagged`). Jobs are migrated only while
-    /// enough free capacity remains outside `avoid` to re-place them
-    /// all at this instant; the guard is best-effort, not a
-    /// reservation — competing queued jobs admitted during the restore
-    /// window can still take that capacity first, in which case the
+    /// enough capacity to re-place them all exists outside `avoid` at
+    /// this instant — counting both GPUs currently free there *and*
+    /// the GPUs the migrating gang itself releases on unflagged nodes
+    /// (a gang straddling one slow node frees its healthy-node share
+    /// as part of the move; ignoring that credit starved exactly the
+    /// most common migration, the partially-affected gang on a full
+    /// cluster). The guard is best-effort, not a reservation —
+    /// competing queued jobs admitted during the restore window can
+    /// still take that capacity first, in which case the
     /// avoid-fallback may land a migrated job back on a slow node (a
     /// slow GPU beats no GPU). Returns the evictions in job-id order.
     pub fn migrate_stragglers(
@@ -394,10 +422,23 @@ impl SimState {
         let mut evictions = vec![];
         for id in ids {
             let need = self.states[&id].spec.gpus;
-            if need > budget {
+            // GPUs this gang gives back on usable nodes when it moves:
+            // they join the pool its own re-placement draws from
+            let self_credit = self.allocations[&id]
+                .gpus
+                .iter()
+                .filter(|g| {
+                    !self.allocator.is_down(g.node)
+                        && !avoid
+                            .get(g.node)
+                            .copied()
+                            .unwrap_or(false)
+                })
+                .count();
+            if need > budget + self_credit {
                 continue;
             }
-            budget -= need;
+            budget = budget + self_credit - need;
             // mechanically identical to an exogenous preemption:
             // group removal, rollback priced at the group rate, gang
             // release, restore window, requeue (the job holds an
@@ -703,6 +744,8 @@ impl SimState {
             } else {
                 1e-6
             };
+            // amortized periodic checkpoint writes ride on every step
+            // (+0.0 — bit-exact — at the default free cadence)
             let base_step_time = match &aimd {
                 Some(c) => iter_time(
                     perf.plan.comp_s,
@@ -712,7 +755,7 @@ impl SimState {
                     lat,
                 ),
                 None => perf.step_time_s,
-            };
+            } + self.ckpt_oh_per_step;
             // straggler drag: the gang runs at its slowest node's
             // multiplier (exactly base/1.0 = base when healthy)
             let speed = self.allocator.alloc_speed(&g.alloc);
@@ -739,5 +782,195 @@ impl SimState {
         let mut ids: Vec<u64> = self.states.keys().copied().collect();
         ids.sort_unstable();
         ids.iter().map(|id| &self.states[id]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::planner::PlanOptions;
+
+    fn job(id: u64, gpus: usize) -> JobSpec {
+        JobSpec {
+            id,
+            base_model: "llama3-8b".into(),
+            rank: 8,
+            batch_size: 4,
+            seq_len: 512,
+            gpus,
+            total_steps: 100,
+            submit_time: 0.0,
+            max_slowdown: 1.5,
+        }
+    }
+
+    /// Place `id` on `alloc` with a synthetic running group at a fixed
+    /// step rate, so evictions price rolled-back work.
+    fn place(st: &mut SimState, id: u64, alloc: Allocation, step: f64) {
+        st.states.get_mut(&id).unwrap().admitted_at = Some(0.0);
+        st.running.push(RunningGroup {
+            job_ids: vec![id],
+            alloc: alloc.clone(),
+            step_time: step,
+            base_step_time: step,
+            speed: 1.0,
+            compute_util: 0.5,
+            aimd: None,
+            comp_s: step,
+            comm_s: 0.0,
+            oh: 0.0,
+            lat: 0.0,
+        });
+        st.allocations.insert(id, alloc);
+    }
+
+    #[test]
+    fn eviction_rolls_back_to_checkpoint_boundary() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.faults.ckpt_interval_steps = 5;
+        let jobs = vec![job(1, 2)];
+        let mut st = SimState::new(&cfg, &jobs);
+        let a = st.allocator.allocate(2).unwrap();
+        place(&mut st, 1, a, 3.0);
+        st.states.get_mut(&1).unwrap().steps_done = 12.7;
+        let penalty: HashMap<u64, f64> = [(1, 7.0)].into();
+        let e = st.preempt(1, 50.0, &penalty).unwrap();
+        // last durable boundary is step 10, not step 12: the whole
+        // steps since it are lost too
+        assert_eq!(st.states[&1].steps_done, 10.0);
+        assert!((e.lost_s - 2.7 * 3.0).abs() < 1e-9, "{}", e.lost_s);
+        assert_eq!(e.penalty_s, 7.0);
+        assert_eq!(st.states[&1].restart_at, 57.0);
+        assert_eq!(st.states[&1].restarts, 1);
+    }
+
+    #[test]
+    fn default_cadence_rollback_is_bitwise_legacy() {
+        // the differential the byte-identity criterion rests on:
+        // floor(x / 1.0) * 1.0 == floor(x) in IEEE bits
+        for x in [0.0, 0.25, 7.6, 123.999, 1e6 + 0.5, 3.9e15] {
+            assert_eq!(
+                ((x / 1.0).floor() * 1.0).to_bits(),
+                x.floor().to_bits(),
+                "{x}"
+            );
+        }
+        // and through the public eviction path at the default config
+        let cfg = ExperimentConfig::default();
+        let jobs = vec![job(1, 2)];
+        let mut st = SimState::new(&cfg, &jobs);
+        let a = st.allocator.allocate(2).unwrap();
+        place(&mut st, 1, a, 2.0);
+        st.states.get_mut(&1).unwrap().steps_done = 7.6;
+        let e = st.preempt(1, 10.0, &HashMap::new()).unwrap();
+        assert_eq!(st.states[&1].steps_done, 7.0);
+        assert!((e.lost_s - 0.6 * 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ckpt_write_overhead_charged_into_step_time() {
+        let jobs = vec![job(1, 2)];
+        let mut cfg = ExperimentConfig::default();
+        cfg.faults.ckpt_interval_steps = 10;
+        cfg.faults.ckpt_write_s = 5.0;
+        let mut pred = Predictor::new(
+            cfg.cluster.clone(),
+            PlanOptions::default(),
+        );
+        let mut st = SimState::new(&cfg, &jobs);
+        let a = st.allocator.allocate(2).unwrap();
+        let perf = pred.group_perf(&jobs, &a).unwrap();
+        let g = GroupState {
+            jobs: jobs.clone(),
+            alloc: a.clone(),
+            urgency: 0.0,
+            residual: 0.0,
+        };
+        st.allocations.insert(1, a.clone());
+        st.install_groups(vec![(g, perf.clone())], false, &cfg);
+        // 5 s every 10 steps = 0.5 s/step on top of the planned rate
+        assert_eq!(
+            st.running[0].base_step_time.to_bits(),
+            (perf.step_time_s + 0.5).to_bits()
+        );
+        // default cadence charges exactly nothing, bit-for-bit
+        let cfg0 = ExperimentConfig::default();
+        let mut st0 = SimState::new(&cfg0, &jobs);
+        let a0 = st0.allocator.allocate(2).unwrap();
+        let perf0 = pred.group_perf(&jobs, &a0).unwrap();
+        let g0 = GroupState {
+            jobs: jobs.clone(),
+            alloc: a0.clone(),
+            urgency: 0.0,
+            residual: 0.0,
+        };
+        st0.allocations.insert(1, a0);
+        st0.install_groups(vec![(g0, perf0.clone())], false, &cfg0);
+        assert_eq!(
+            st0.running[0].base_step_time.to_bits(),
+            perf0.step_time_s.to_bits()
+        );
+    }
+
+    #[test]
+    fn migration_credits_gang_self_released_capacity() {
+        // 3 nodes x 8 GPUs; the gang holds node 0 + node 1, node 0 is
+        // flagged. Free capacity outside `avoid` is only node 2's
+        // 8 GPUs — less than the 16 needed — but the move itself frees
+        // the gang's 8 GPUs on (unflagged) node 1. Pre-fix this
+        // migration was refused; it must now proceed and re-place
+        // entirely off the flagged node.
+        let mut cfg = ExperimentConfig::default();
+        cfg.cluster = ClusterSpec::with_gpus(24);
+        let jobs = vec![job(1, 16)];
+        let mut st = SimState::new(&cfg, &jobs);
+        let a = st.allocator.allocate(16).unwrap();
+        assert_eq!(a.nodes(), vec![0, 1], "spill layout changed");
+        place(&mut st, 1, a, 2.0);
+        st.states.get_mut(&1).unwrap().steps_done = 3.5;
+        let flagged = [true, false, false];
+        let ev = st.migrate_stragglers(
+            &flagged,
+            &flagged,
+            100.0,
+            &HashMap::new(),
+        );
+        assert_eq!(ev.len(), 1, "partially-affected gang not migrated");
+        assert_eq!(ev[0].job_id, 1);
+        assert_eq!(st.states[&1].steps_done, 3.0);
+        assert!((ev[0].lost_s - 0.5 * 2.0).abs() < 1e-9);
+        // re-placement lands entirely on unflagged nodes
+        let mut pred = Predictor::new(
+            cfg.cluster.clone(),
+            PlanOptions::default(),
+        );
+        st.admit_queued(128, &mut pred, 100.0, Some(&flagged));
+        let a = &st.allocations[&1];
+        assert_eq!(a.n_gpus(), 16);
+        assert!(a.gpus.iter().all(|g| g.node != 0));
+    }
+
+    #[test]
+    fn migration_still_refused_without_real_capacity() {
+        // both gang nodes flagged: the self-credit is zero and node 2
+        // alone cannot host 16 GPUs — the guard must still refuse
+        let mut cfg = ExperimentConfig::default();
+        cfg.cluster = ClusterSpec::with_gpus(24);
+        let jobs = vec![job(1, 16)];
+        let mut st = SimState::new(&cfg, &jobs);
+        let a = st.allocator.allocate(16).unwrap();
+        place(&mut st, 1, a, 2.0);
+        st.states.get_mut(&1).unwrap().steps_done = 3.5;
+        let flagged = [true, true, false];
+        let ev = st.migrate_stragglers(
+            &flagged,
+            &flagged,
+            100.0,
+            &HashMap::new(),
+        );
+        assert!(ev.is_empty());
+        assert_eq!(st.states[&1].steps_done, 3.5);
+        assert_eq!(st.states[&1].restarts, 0);
     }
 }

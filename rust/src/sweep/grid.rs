@@ -45,6 +45,11 @@ pub struct SweepGrid {
     /// episodes per node); 0 disables stragglers for the cell (other
     /// straggler knobs come from `base.stragglers`)
     pub stragglers: Vec<f64>,
+    /// hardware-mix strings (`cluster::parse_hardware_mix` syntax,
+    /// e.g. `"a100*3:h100"`); the empty string is the homogeneous
+    /// reference fleet and keeps the cell key byte-identical to
+    /// pre-tier sweeps
+    pub hardware_mixes: Vec<String>,
     pub seeds: Vec<u64>,
 }
 
@@ -59,6 +64,7 @@ impl Default for SweepGrid {
             months: vec![1],
             mtbfs: vec![base.faults.mtbf_s],
             stragglers: vec![base.stragglers.mtbs_s],
+            hardware_mixes: vec![base.cluster.hardware_mix.clone()],
             seeds: vec![base.seed],
             base,
         }
@@ -75,6 +81,7 @@ impl SweepGrid {
             * self.months.len()
             * self.mtbfs.len()
             * self.stragglers.len()
+            * self.hardware_mixes.len()
             * self.seeds.len()
     }
 
@@ -93,11 +100,19 @@ impl SweepGrid {
             ("months", self.months.is_empty()),
             ("mtbfs", self.mtbfs.is_empty()),
             ("stragglers", self.stragglers.is_empty()),
+            ("hardware_mixes", self.hardware_mixes.is_empty()),
             ("seeds", self.seeds.is_empty()),
         ] {
             if empty {
                 return Err(format!("sweep axis {axis} is empty"));
             }
+        }
+        // reject malformed mix strings up front so `SweepPoint::config`
+        // (which is infallible) can rely on them parsing
+        for m in &self.hardware_mixes {
+            ClusterSpec::with_gpus(8)
+                .apply_hardware_mix(m)
+                .map_err(|e| format!("hardware mix {m:?}: {e}"))?;
         }
         for p in self.points() {
             p.config(&self.base)
@@ -119,19 +134,24 @@ impl SweepGrid {
                         for &month in &self.months {
                             for &mtbf_s in &self.mtbfs {
                                 for &mtbs in &self.stragglers {
-                                    for &seed in &self.seeds {
-                                        out.push(SweepPoint {
-                                            index,
-                                            policy,
-                                            n_jobs,
-                                            gpus,
-                                            rate_scale,
-                                            month,
-                                            mtbf_s,
-                                            straggler_mtbs_s: mtbs,
-                                            seed,
-                                        });
-                                        index += 1;
+                                    for mix in &self.hardware_mixes {
+                                        for &seed in &self.seeds {
+                                            out.push(SweepPoint {
+                                                index,
+                                                policy,
+                                                n_jobs,
+                                                gpus,
+                                                rate_scale,
+                                                month,
+                                                mtbf_s,
+                                                straggler_mtbs_s:
+                                                    mtbs,
+                                                hardware_mix: mix
+                                                    .clone(),
+                                                seed,
+                                            });
+                                            index += 1;
+                                        }
                                     }
                                 }
                             }
@@ -158,6 +178,8 @@ pub struct SweepPoint {
     pub mtbf_s: f64,
     /// straggler MTBS in seconds (0 = no stragglers for this cell)
     pub straggler_mtbs_s: f64,
+    /// hardware-mix string ("" = homogeneous reference fleet)
+    pub hardware_mix: String,
     pub seed: u64,
 }
 
@@ -169,6 +191,9 @@ impl SweepPoint {
         cfg.policy = self.policy;
         cfg.n_jobs = self.n_jobs;
         cfg.cluster = ClusterSpec::with_gpus(self.gpus);
+        cfg.cluster
+            .apply_hardware_mix(&self.hardware_mix)
+            .expect("SweepGrid::validate rejects malformed mixes");
         cfg.trace = month_profile(self.month).scaled(self.rate_scale);
         cfg.faults.mtbf_s = self.mtbf_s;
         cfg.stragglers.mtbs_s = self.straggler_mtbs_s;
@@ -186,9 +211,11 @@ impl SweepPoint {
     /// cell key and are aggregated together by the report layer. The
     /// `f` component is the node MTBF in seconds (0 = fault-free); the
     /// `d` component is the straggler MTBS in seconds (0 = no
-    /// degraded nodes).
+    /// degraded nodes). A trailing `/h<mix>` component appears only
+    /// for heterogeneous cells, so homogeneous sweep keys stay
+    /// byte-identical to pre-tier builds.
     pub fn cell_key(&self) -> String {
-        format!(
+        let mut key = format!(
             "{}/j{}/g{}/r{}x/m{}/f{}/d{}",
             self.policy.slug(),
             self.n_jobs,
@@ -197,7 +224,12 @@ impl SweepPoint {
             self.month,
             self.mtbf_s,
             self.straggler_mtbs_s
-        )
+        );
+        if !self.hardware_mix.is_empty() {
+            key.push_str("/h");
+            key.push_str(&self.hardware_mix);
+        }
+        key
     }
 }
 
@@ -327,5 +359,41 @@ mod tests {
         );
         assert_eq!(cfg1.stragglers.detect, g.base.stragglers.detect);
         assert!(cfg0.validate().is_ok() && cfg1.validate().is_ok());
+    }
+
+    #[test]
+    fn hardware_mix_axis_enumerates_and_applies() {
+        let mut g = grid();
+        g.hardware_mixes = vec!["".into(), "a100:v100".into()];
+        assert_eq!(g.len(), 2 * 2 * 2 * 2 * 3);
+        let pts = g.points();
+        assert_eq!(pts.len(), g.len());
+        // mix varies faster than straggler MTBS, slower than seed
+        assert_eq!(pts[0].hardware_mix, "");
+        assert_eq!(pts[3].hardware_mix, "a100:v100");
+        // the homogeneous cell's key is byte-identical to the
+        // pre-tier format; only mixed cells grow the /h component
+        assert!(pts[0].cell_key().ends_with("/f0/d0"));
+        assert!(pts[3].cell_key().ends_with("/f0/d0/ha100:v100"));
+        assert_ne!(pts[0].cell_key(), pts[3].cell_key());
+        let cfg0 = pts[0].config(&g.base);
+        let cfg1 = pts[3].config(&g.base);
+        assert!(cfg0.cluster.is_uniform_reference());
+        assert!(!cfg1.cluster.is_uniform_reference());
+        assert_eq!(cfg1.cluster.tiers.len(), 2);
+        assert_eq!(cfg1.cluster.hardware_mix, "a100:v100");
+        // the mix survives the gpus-axis cluster rebuild
+        assert_eq!(cfg1.cluster.total_gpus(), pts[3].gpus);
+        assert!(cfg0.validate().is_ok() && cfg1.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_malformed_hardware_mix() {
+        let mut g = grid();
+        g.hardware_mixes = vec!["tpu9".into()];
+        assert!(g.validate().is_err());
+        let mut g = grid();
+        g.hardware_mixes.clear();
+        assert!(g.validate().is_err());
     }
 }

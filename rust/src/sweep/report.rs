@@ -52,6 +52,12 @@ pub struct CellSummary {
     /// nonzero means the scenario silently truncated work and its
     /// JCT/throughput numbers are not comparable
     pub incomplete: usize,
+    /// per-hardware-tier time-averaged utilization pooled across the
+    /// cell's replicas, in tier order (`(tier name, (mean, ci95))`);
+    /// empty for homogeneous cells — the tier columns are gated on
+    /// this so single-tier reports stay byte-identical to pre-tier
+    /// builds
+    pub tier_util: Vec<(String, (f64, f64))>,
 }
 
 impl CellSummary {
@@ -137,29 +143,68 @@ pub fn aggregate(run: &SweepRun) -> Vec<CellSummary> {
                     .iter()
                     .map(|p| p.result.incomplete_jobs.len())
                     .sum(),
+                tier_util: pts[0]
+                    .result
+                    .tier_util
+                    .iter()
+                    .enumerate()
+                    .map(|(i, (name, _))| {
+                        let xs: Vec<f64> = pts
+                            .iter()
+                            .map(|p| {
+                                p.result
+                                    .tier_util
+                                    .get(i)
+                                    .map_or(0.0, |&(_, u)| u)
+                            })
+                            .collect();
+                        (name.clone(), mean_ci95(&xs))
+                    })
+                    .collect(),
             }
         })
         .collect()
 }
 
-fn pm(v: (f64, f64), digits: usize) -> String {
-    if v.1 > 0.0 {
-        format!("{:.d$} ±{:.d$}", v.0, v.1, d = digits)
+/// Clamp a metric to finite before emission. A cell whose every job
+/// was cut off has no completed-JCT sample, so its mean/p99 come out
+/// NaN; emitted verbatim that poisoned the report — NaN has no JSON
+/// encoding (the writer falls back to `null`, breaking the numeric
+/// schema and any canonical byte-diff) and rendered literally in the
+/// table/CSV. 0.0 next to the `incomplete` warning column is the
+/// honest encoding; finite values pass through bit-unchanged.
+fn fin(x: f64) -> f64 {
+    if x.is_finite() {
+        x
     } else {
-        format!("{:.d$}", v.0, d = digits)
+        0.0
     }
 }
 
-/// Render the aggregated scenarios as an aligned table.
+fn pm(v: (f64, f64), digits: usize) -> String {
+    let (m, c) = (fin(v.0), fin(v.1));
+    if c > 0.0 {
+        format!("{m:.d$} ±{c:.d$}", d = digits)
+    } else {
+        format!("{m:.d$}", d = digits)
+    }
+}
+
+/// Render the aggregated scenarios as an aligned table. The `tier
+/// util` column appears only when some cell is heterogeneous, so
+/// homogeneous sweeps render byte-identically to pre-tier builds.
 pub fn sweep_table(title: &str, cells: &[CellSummary]) -> Table {
-    let mut t = Table::new(
-        title,
-        &["scenario", "seeds", "thr (samples/s)", "goodput",
+    let het = cells.iter().any(|c| !c.tier_util.is_empty());
+    let mut headers =
+        vec!["scenario", "seeds", "thr (samples/s)", "goodput",
           "mean JCT (s)", "p99 JCT (s)", "GPU util", "slowdown",
-          "SLO", "restarts", "migr", "probes", "hit%", "incomplete"],
-    );
+          "SLO", "restarts", "migr", "probes", "hit%", "incomplete"];
+    if het {
+        headers.push("tier util");
+    }
+    let mut t = Table::new(title, &headers);
     for c in cells {
-        t.row(&[
+        let mut row = vec![
             c.key.clone(),
             c.n_seeds.to_string(),
             pm(c.throughput, 2),
@@ -196,17 +241,36 @@ pub fn sweep_table(title: &str, cells: &[CellSummary]) -> Table {
             } else {
                 format!("{} UNFINISHED", c.incomplete)
             },
-        ]);
+        ];
+        if het {
+            row.push(if c.tier_util.is_empty() {
+                "-".into()
+            } else {
+                c.tier_util
+                    .iter()
+                    .map(|(n, v)| {
+                        format!("{n}:{:.1}%", fin(v.0) * 100.0)
+                    })
+                    .collect::<Vec<_>>()
+                    .join(" ")
+            });
+        }
+        t.row(&row);
     }
     t
 }
 
 /// Per-point CSV (one row per simulated cell) through the shared
-/// [`Table`] CSV path.
+/// [`Table`] CSV path. The `hardware_mix` / `tier_util` columns
+/// appear only when some point is heterogeneous, keeping homogeneous
+/// CSV output byte-identical to pre-tier builds.
 pub fn to_csv(run: &SweepRun) -> String {
-    let mut t = Table::new(
-        "sweep",
-        &["index", "policy", "n_jobs", "gpus", "rate_scale", "month",
+    let het = run
+        .points
+        .iter()
+        .any(|p| !p.point.hardware_mix.is_empty());
+    let mut headers =
+        vec!["index", "policy", "n_jobs", "gpus", "rate_scale", "month",
           "mtbf_s", "straggler_mtbs_s", "seed", "throughput",
           "goodput", "mean_jct", "p99_jct", "gpu_util", "makespan",
           "mean_slowdown", "slo_attainment", "node_failures",
@@ -214,10 +278,14 @@ pub fn to_csv(run: &SweepRun) -> String {
           "restore_delay_s", "node_degrades", "degraded_time_s",
           "straggler_slowdown", "migrations", "sched_rounds",
           "events", "events_stale", "probes", "plan_cache_hits",
-          "completed", "incomplete"],
-    );
+          "completed", "incomplete"];
+    if het {
+        headers.push("hardware_mix");
+        headers.push("tier_util");
+    }
+    let mut t = Table::new("sweep", &headers);
     for p in &run.points {
-        t.row(&[
+        let mut row = vec![
             p.point.index.to_string(),
             p.point.policy.slug().to_string(),
             p.point.n_jobs.to_string(),
@@ -227,22 +295,22 @@ pub fn to_csv(run: &SweepRun) -> String {
             p.point.mtbf_s.to_string(),
             p.point.straggler_mtbs_s.to_string(),
             p.point.seed.to_string(),
-            format!("{:.6}", p.result.avg_throughput),
-            format!("{:.6}", p.result.goodput),
-            format!("{:.6}", p.result.mean_jct),
-            format!("{:.6}", p.result.p99_jct),
-            format!("{:.6}", p.result.avg_gpu_util),
-            format!("{:.6}", p.result.makespan),
-            format!("{:.6}", p.result.mean_slowdown),
-            format!("{:.6}", p.result.slo_attainment),
+            format!("{:.6}", fin(p.result.avg_throughput)),
+            format!("{:.6}", fin(p.result.goodput)),
+            format!("{:.6}", fin(p.result.mean_jct)),
+            format!("{:.6}", fin(p.result.p99_jct)),
+            format!("{:.6}", fin(p.result.avg_gpu_util)),
+            format!("{:.6}", fin(p.result.makespan)),
+            format!("{:.6}", fin(p.result.mean_slowdown)),
+            format!("{:.6}", fin(p.result.slo_attainment)),
             p.result.node_failures.to_string(),
             p.result.preemptions.to_string(),
             p.result.restarts.to_string(),
-            format!("{:.6}", p.result.lost_step_time_s),
-            format!("{:.6}", p.result.restore_delay_s),
+            format!("{:.6}", fin(p.result.lost_step_time_s)),
+            format!("{:.6}", fin(p.result.restore_delay_s)),
             p.result.node_degrades.to_string(),
-            format!("{:.6}", p.result.degraded_node_time_s),
-            format!("{:.6}", p.result.straggler_slowdown),
+            format!("{:.6}", fin(p.result.degraded_node_time_s)),
+            format!("{:.6}", fin(p.result.straggler_slowdown)),
             p.result.migrations.to_string(),
             p.result.sched_rounds.to_string(),
             p.result.events.to_string(),
@@ -251,7 +319,19 @@ pub fn to_csv(run: &SweepRun) -> String {
             p.result.plan_cache_hits.to_string(),
             p.result.jct.len().to_string(),
             p.result.incomplete_jobs.len().to_string(),
-        ]);
+        ];
+        if het {
+            row.push(p.point.hardware_mix.clone());
+            row.push(
+                p.result
+                    .tier_util
+                    .iter()
+                    .map(|(n, u)| format!("{n}:{:.6}", fin(*u)))
+                    .collect::<Vec<_>>()
+                    .join(";"),
+            );
+        }
+        t.row(&row);
     }
     t.to_csv()
 }
@@ -289,27 +369,36 @@ fn to_json_with(run: &SweepRun, include_timing: bool) -> Json {
                 .set("mtbf_s", p.point.mtbf_s)
                 .set("straggler_mtbs_s", p.point.straggler_mtbs_s)
                 .set("seed", p.point.seed)
-                .set("throughput", p.result.avg_throughput)
-                .set("goodput", p.result.goodput)
-                .set("mean_jct", p.result.mean_jct)
-                .set("p99_jct", p.result.p99_jct)
-                .set("gpu_util", p.result.avg_gpu_util)
-                .set("makespan", p.result.makespan)
-                .set("mean_slowdown", p.result.mean_slowdown)
-                .set("slo_attainment", p.result.slo_attainment)
+                .set("throughput", fin(p.result.avg_throughput))
+                .set("goodput", fin(p.result.goodput))
+                .set("mean_jct", fin(p.result.mean_jct))
+                .set("p99_jct", fin(p.result.p99_jct))
+                .set("gpu_util", fin(p.result.avg_gpu_util))
+                .set("makespan", fin(p.result.makespan))
+                .set("mean_slowdown", fin(p.result.mean_slowdown))
+                .set(
+                    "slo_attainment",
+                    fin(p.result.slo_attainment),
+                )
                 .set("node_failures", p.result.node_failures)
                 .set("preemptions", p.result.preemptions)
                 .set("restarts", p.result.restarts)
-                .set("lost_step_time_s", p.result.lost_step_time_s)
-                .set("restore_delay_s", p.result.restore_delay_s)
+                .set(
+                    "lost_step_time_s",
+                    fin(p.result.lost_step_time_s),
+                )
+                .set(
+                    "restore_delay_s",
+                    fin(p.result.restore_delay_s),
+                )
                 .set("node_degrades", p.result.node_degrades)
                 .set(
                     "degraded_time_s",
-                    p.result.degraded_node_time_s,
+                    fin(p.result.degraded_node_time_s),
                 )
                 .set(
                     "straggler_slowdown",
-                    p.result.straggler_slowdown,
+                    fin(p.result.straggler_slowdown),
                 )
                 .set("migrations", p.result.migrations)
                 .set("sched_rounds", p.result.sched_rounds)
@@ -319,6 +408,30 @@ fn to_json_with(run: &SweepRun, include_timing: bool) -> Json {
                 .set("plan_cache_hits", p.result.plan_cache_hits)
                 .set("completed", p.result.jct.len())
                 .set("incomplete", p.result.incomplete_jobs.len());
+            // gated on heterogeneity: homogeneous points carry no
+            // hardware fields, so their JSON is byte-identical to
+            // pre-tier builds
+            if !p.point.hardware_mix.is_empty() {
+                j = j
+                    .set(
+                        "hardware_mix",
+                        p.point.hardware_mix.as_str(),
+                    )
+                    .set(
+                        "tier_util",
+                        Json::Arr(
+                            p.result
+                                .tier_util
+                                .iter()
+                                .map(|(n, u)| {
+                                    Json::obj()
+                                        .set("tier", n.as_str())
+                                        .set("util", fin(*u))
+                                })
+                                .collect(),
+                        ),
+                    );
+            }
             if include_timing {
                 j = j.set("wall_s", p.wall_s);
             }
@@ -329,9 +442,12 @@ fn to_json_with(run: &SweepRun, include_timing: bool) -> Json {
         .iter()
         .map(|c| {
             let ci = |v: (f64, f64)| {
-                Json::Arr(vec![Json::Num(v.0), Json::Num(v.1)])
+                Json::Arr(vec![
+                    Json::Num(fin(v.0)),
+                    Json::Num(fin(v.1)),
+                ])
             };
-            Json::obj()
+            let mut j = Json::obj()
                 .set("key", c.key.clone())
                 .set("n_seeds", c.n_seeds)
                 .set("throughput", ci(c.throughput))
@@ -353,7 +469,28 @@ fn to_json_with(run: &SweepRun, include_timing: bool) -> Json {
                 .set("scheduler_probes", c.probes)
                 .set("plan_cache_hits", c.plan_cache_hits)
                 .set("plan_cache_rate", c.cache_hit_rate())
-                .set("incomplete", c.incomplete)
+                .set("incomplete", c.incomplete);
+            if !c.point.hardware_mix.is_empty() {
+                j = j
+                    .set(
+                        "hardware_mix",
+                        c.point.hardware_mix.as_str(),
+                    )
+                    .set(
+                        "tier_util",
+                        Json::Arr(
+                            c.tier_util
+                                .iter()
+                                .map(|(n, v)| {
+                                    Json::obj()
+                                        .set("tier", n.as_str())
+                                        .set("util", ci(*v))
+                                })
+                                .collect(),
+                        ),
+                    );
+            }
+            j
         })
         .collect();
     let total_probes: u64 = run
@@ -558,5 +695,112 @@ mod tests {
         let t = sweep_table("demo", &cells).render();
         assert!(t.contains("probes"), "{t}");
         assert!(t.contains("hit%"), "{t}");
+    }
+
+    #[test]
+    fn all_incomplete_cell_emits_finite_numbers() {
+        // satellite fix: a cell whose every job was cut off has no
+        // completed-JCT sample, so its mean/p99 aggregate to NaN —
+        // which leaked into the canonical JSON (as `null`, breaking
+        // the numeric schema) and rendered literally in table/CSV
+        let mut run = run_small();
+        for p in &mut run.points {
+            p.result.jct.clear();
+            p.result.incomplete_jobs = vec![1, 2, 3];
+            p.result.mean_jct = f64::NAN;
+            p.result.p99_jct = f64::NAN;
+            p.result.mean_slowdown = f64::INFINITY;
+        }
+        let s = to_json_canonical(&run).to_pretty();
+        assert!(!s.contains("NaN"), "{s}");
+        assert!(!s.contains("null"), "{s}");
+        let back = json::parse(&s).unwrap();
+        let pt = &back.get("points").unwrap().as_arr().unwrap()[0];
+        assert_eq!(pt.get("mean_jct").unwrap().as_f64().unwrap(), 0.0);
+        assert_eq!(
+            pt.get("mean_slowdown").unwrap().as_f64().unwrap(),
+            0.0
+        );
+        let cell = &back.get("cells").unwrap().as_arr().unwrap()[0];
+        let mj = cell.get("mean_jct").unwrap().as_arr().unwrap();
+        assert_eq!(mj[0].as_f64().unwrap(), 0.0);
+        let csv = to_csv(&run);
+        assert!(!csv.contains("NaN") && !csv.contains("inf"), "{csv}");
+        let cells = aggregate(&run);
+        let t = sweep_table("demo", &cells).render();
+        assert!(!t.contains("NaN"), "{t}");
+        assert!(t.contains("UNFINISHED"), "{t}");
+    }
+
+    fn run_mixed() -> SweepRun {
+        let mut g = SweepGrid::default();
+        g.policies = vec![Policy::TLora];
+        g.n_jobs = vec![6];
+        g.gpus = vec![16];
+        g.rate_scales = vec![2.0];
+        g.months = vec![1];
+        g.hardware_mixes = vec!["a100:v100".into()];
+        g.seeds = vec![3];
+        runner::run(&g, 1).unwrap()
+    }
+
+    #[test]
+    fn tier_columns_appear_only_for_mixed_cells() {
+        // homogeneous sweeps keep the pre-tier schema byte-for-byte
+        let homo = run_small();
+        let header =
+            to_csv(&homo).lines().next().unwrap().to_string();
+        assert!(!header.contains("hardware_mix"), "{header}");
+        assert!(!header.contains("tier_util"), "{header}");
+        let j = json::parse(&to_json_canonical(&homo).to_string())
+            .unwrap();
+        let pt = &j.get("points").unwrap().as_arr().unwrap()[0];
+        assert!(pt.get("hardware_mix").is_none());
+        assert!(pt.get("tier_util").is_none());
+        assert!(aggregate(&homo)[0].tier_util.is_empty());
+
+        // mixed sweeps carry the gated columns end to end
+        let mixed = run_mixed();
+        let csv = to_csv(&mixed);
+        let header = csv.lines().next().unwrap();
+        assert!(
+            header.contains("hardware_mix")
+                && header.contains("tier_util"),
+            "{header}"
+        );
+        assert!(csv.contains("a100:v100"), "{csv}");
+        let j = json::parse(&to_json_canonical(&mixed).to_string())
+            .unwrap();
+        let pt = &j.get("points").unwrap().as_arr().unwrap()[0];
+        assert_eq!(
+            pt.get("hardware_mix").unwrap().as_str().unwrap(),
+            "a100:v100"
+        );
+        let tu = pt.get("tier_util").unwrap().as_arr().unwrap();
+        assert_eq!(tu.len(), 2);
+        assert_eq!(
+            tu[0].get("tier").unwrap().as_str().unwrap(),
+            "a100"
+        );
+        assert_eq!(
+            tu[1].get("tier").unwrap().as_str().unwrap(),
+            "v100"
+        );
+        let cells = aggregate(&mixed);
+        assert_eq!(cells[0].tier_util.len(), 2);
+        assert!(
+            cells[0].key.ends_with("/ha100:v100"),
+            "{}",
+            cells[0].key
+        );
+        for (name, (m, _)) in &cells[0].tier_util {
+            assert!(
+                (0.0..=1.0).contains(m),
+                "{name} utilization {m} out of [0,1]"
+            );
+        }
+        let t = sweep_table("demo", &cells).render();
+        assert!(t.contains("tier util"), "{t}");
+        assert!(t.contains("a100:"), "{t}");
     }
 }

@@ -5,7 +5,12 @@
 //! The pinned grid (keep in sync with `golden_grid()` below; the
 //! straggler axis stays at its 0 default, so the fixture doubles as
 //! the straggler-free differential reference —
-//! `straggler_machinery_is_byte_free_when_disabled`):
+//! `straggler_machinery_is_byte_free_when_disabled` — and the
+//! hardware axis stays at its homogeneous-reference default, so it
+//! also pins that the tier/pipeline machinery, the checkpoint-cadence
+//! defaults (`ckpt_interval_steps = 1`, `ckpt_write_s = 0`), and the
+//! gated tier-utilization report columns are byte-free until a mixed
+//! fleet is requested):
 //!
 //! ```text
 //! tlora sweep --policies tlora,megatron --n-jobs 10 --gpus 16 \

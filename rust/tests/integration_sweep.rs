@@ -84,6 +84,7 @@ fn assert_bit_identical(a: &SimResult, b: &SimResult, label: &str) {
             && a.straggler_slowdown == b.straggler_slowdown,
         "{label}: straggler accounting"
     );
+    assert_eq!(a.tier_util, b.tier_util, "{label}: tier util");
 }
 
 #[test]
@@ -178,6 +179,84 @@ fn straggler_grid_is_bit_identical_across_thread_counts() {
         .points
         .iter()
         .filter(|p| p.point.straggler_mtbs_s > 0.0)
+    {
+        let direct = simulate(&p.point.config(&g.base));
+        assert_bit_identical(&p.result, &direct, &p.point.label());
+    }
+}
+
+#[test]
+fn explicit_reference_tier_is_bitwise_free() {
+    // "a100" is the reference generation: all-1.0 multipliers are
+    // exact float no-ops (x*1.0 == x bitwise) and the plan-cache key
+    // canonicalizes all-reference tier patterns to the homogeneous
+    // form, so a sweep that names the reference tier explicitly must
+    // replay the default fleet bit-for-bit — the tier machinery is
+    // free until a genuinely mixed fleet is requested
+    let g = small_grid();
+    let mut gm = small_grid();
+    gm.hardware_mixes = vec!["a100".into()];
+    let a = run(&g, 2).unwrap();
+    let b = run(&gm, 2).unwrap();
+    assert_eq!(a.points.len(), b.points.len());
+    for (x, y) in a.points.iter().zip(&b.points) {
+        // only the cell key grows the explicit /h component
+        assert_eq!(
+            format!("{}/ha100", x.point.cell_key()),
+            y.point.cell_key()
+        );
+        assert_bit_identical(&x.result, &y.result, &y.point.label());
+        // uniform-reference fleets never build tier accumulators
+        assert!(y.result.tier_util.is_empty());
+    }
+}
+
+#[test]
+fn mixed_tier_grid_is_bit_identical_across_thread_counts() {
+    // the hardware-mix axis rides the same determinism contract:
+    // tiers are a static property priced into plans, so a mixed-fleet
+    // sweep must not depend on worker count, and its canonical JSON
+    // must diff byte-exactly between 1 and 8 threads
+    let mut g = small_grid();
+    g.rate_scales = vec![2.0];
+    g.hardware_mixes = vec!["".into(), "a100:v100".into()];
+    let serial = run(&g, 1).unwrap();
+    let parallel = run(&g, 8).unwrap();
+    assert_eq!(serial.points.len(), g.len());
+    for (a, b) in serial.points.iter().zip(&parallel.points) {
+        assert_eq!(a.point, b.point);
+        assert_bit_identical(&a.result, &b.result, &a.point.label());
+        if a.point.hardware_mix.is_empty() {
+            assert!(
+                a.result.tier_util.is_empty(),
+                "{}",
+                a.point.label()
+            );
+        } else {
+            assert_eq!(
+                a.result.tier_util.len(),
+                2,
+                "{}",
+                a.point.label()
+            );
+            for (name, u) in &a.result.tier_util {
+                assert!(
+                    (0.0..=1.0).contains(u),
+                    "{}: {name} util {u}",
+                    a.point.label()
+                );
+            }
+        }
+    }
+    assert_eq!(
+        tlora::sweep::to_json_canonical(&serial).to_pretty(),
+        tlora::sweep::to_json_canonical(&parallel).to_pretty()
+    );
+    // each mixed cell equals a direct simulate of its config
+    for p in serial
+        .points
+        .iter()
+        .filter(|p| !p.point.hardware_mix.is_empty())
     {
         let direct = simulate(&p.point.config(&g.base));
         assert_bit_identical(&p.result, &direct, &p.point.label());
