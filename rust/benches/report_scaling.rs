@@ -1,0 +1,516 @@
+//! Report-path scaling (§Perf deliverable: million-arrival sweeps in
+//! O(1) report memory), behind the `report-scale` CI job:
+//!
+//! 1. **Streaming vs legacy differential** — the streaming report
+//!    ([`StreamReport`]) must emit byte-identical canonical JSON and
+//!    CSV to the legacy collect-then-emit path on a real multi-cell
+//!    grid, at threads 1 and 4. Divergences are localized with the
+//!    lazy byte-range differ (`json::diff`) so a failure names the
+//!    first diverging path, not just "bytes differ".
+//! 2. **O(1) allocation gate** — a counting global allocator measures
+//!    the report path's peak live-byte growth while feeding P ∈
+//!    {16, 64, 256} point results through file-backed sinks
+//!    ([`Spool::file`]). Peak growth at P=256 must stay within 1.5×
+//!    (+64 KiB slack) of P=16: the streaming path holds one cell
+//!    accumulator and per-point scratch, never the result tree. The
+//!    legacy tree path's peak is recorded alongside, informationally.
+//! 3. **Arrival-scale smoke** — the hyperscale diurnal/tenant-mix
+//!    generator produces `BENCH_REPORT_ARRIVALS` jobs (default 100k;
+//!    `BENCH_REPORT_FULL=1` raises the default to 1M) with monotone
+//!    ids, bounded submit-time jitter, and visible day/night density
+//!    modulation; a modest diurnal simulation with a [`LoadObserver`]
+//!    attached must leave canonical results untouched (the observer
+//!    is passive) while binning the load profile.
+//!
+//! Results land in `BENCH_report.json` (override: `BENCH_REPORT_OUT`);
+//! any check failure exits nonzero, so the CI job is a real gate.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::io::Write;
+use std::sync::atomic::{AtomicUsize, Ordering::Relaxed};
+
+use tlora::bench_util::{section, time_once};
+use tlora::config::{ExperimentConfig, Policy};
+use tlora::metrics::Table;
+use tlora::sim::{simulate_jobs_with, EngineOptions, LoadObserver};
+use tlora::sweep::{
+    run_streaming, to_csv, to_json_canonical, PointResult, Spool,
+    StreamReport, SweepGrid, SweepRun,
+};
+use tlora::util::json::{self, Json};
+use tlora::workload::trace::{
+    DiurnalProfile, TraceGenerator, TraceProfile,
+};
+
+// ---- counting allocator -------------------------------------------------
+
+/// Thin wrapper over the system allocator tracking live bytes, the
+/// high-water mark, and total allocation count. The bench resets the
+/// peak to the current live size before each measured region, so
+/// `PEAK - live_at_reset` is the region's peak memory *growth*.
+struct CountingAlloc;
+
+static LIVE: AtomicUsize = AtomicUsize::new(0);
+static PEAK: AtomicUsize = AtomicUsize::new(0);
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc(layout);
+        if !p.is_null() {
+            let live =
+                LIVE.fetch_add(layout.size(), Relaxed) + layout.size();
+            PEAK.fetch_max(live, Relaxed);
+            ALLOCS.fetch_add(1, Relaxed);
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, p: *mut u8, layout: Layout) {
+        System.dealloc(p, layout);
+        LIVE.fetch_sub(layout.size(), Relaxed);
+    }
+
+    unsafe fn realloc(
+        &self,
+        p: *mut u8,
+        layout: Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        let q = System.realloc(p, layout, new_size);
+        if !q.is_null() {
+            if new_size >= layout.size() {
+                let grown = new_size - layout.size();
+                let live = LIVE.fetch_add(grown, Relaxed) + grown;
+                PEAK.fetch_max(live, Relaxed);
+            } else {
+                LIVE.fetch_sub(layout.size() - new_size, Relaxed);
+            }
+            ALLOCS.fetch_add(1, Relaxed);
+        }
+        q
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Collapse the high-water mark down to the current live size and
+/// return that live size; subsequent `PEAK - returned` is the peak
+/// growth of the region that follows.
+fn reset_peak() -> usize {
+    let live = LIVE.load(Relaxed);
+    PEAK.store(live, Relaxed);
+    live
+}
+
+// ---- section 1: streaming vs legacy differential ------------------------
+
+fn differential_grid() -> SweepGrid {
+    let mut g = SweepGrid::default();
+    g.policies = vec![Policy::TLora, Policy::Megatron];
+    g.n_jobs = vec![12];
+    g.gpus = vec![32];
+    g.rate_scales = vec![2.0];
+    g.months = vec![1];
+    g.mtbfs = vec![0.0, 900.0];
+    g.seeds = vec![7, 8];
+    g
+}
+
+/// Run the streaming report over `grid` with in-memory sinks and
+/// return (canonical JSON, CSV).
+fn stream_outputs(grid: &SweepGrid, threads: usize) -> (String, String) {
+    let mut jbuf: Vec<u8> = Vec::new();
+    let mut cbuf: Vec<u8> = Vec::new();
+    let mut report = StreamReport::new(grid, false)
+        .with_json(&mut jbuf, Spool::memory())
+        .with_csv(&mut cbuf);
+    let stats = run_streaming(grid, threads, &mut |pr| {
+        report.point(&pr).map_err(|e| format!("report emission: {e}"))
+    })
+    .expect("differential grid sweep failed");
+    report
+        .finish(stats.n_threads, stats.wall_s)
+        .expect("stream finish failed");
+    (
+        String::from_utf8(jbuf).expect("canonical JSON is UTF-8"),
+        String::from_utf8(cbuf).expect("CSV is UTF-8"),
+    )
+}
+
+/// Compare two canonical JSON strings; on mismatch, localize the first
+/// divergence with the lazy differ and record a failure.
+fn check_json_identical(
+    name: &str,
+    legacy: &str,
+    streamed: &str,
+    failures: &mut Vec<String>,
+) -> bool {
+    if legacy == streamed {
+        println!("{name}: byte-identical ({} bytes)", legacy.len());
+        return true;
+    }
+    match json::diff(legacy, streamed) {
+        Some(d) => failures.push(format!("{name} diverges at {d}")),
+        None => failures.push(format!(
+            "{name}: bytes differ but no semantic divergence — \
+             whitespace/formatting drift between writers"
+        )),
+    }
+    false
+}
+
+/// Compare two CSV strings line-by-line; record the first differing
+/// line on mismatch.
+fn check_csv_identical(
+    name: &str,
+    legacy: &str,
+    streamed: &str,
+    failures: &mut Vec<String>,
+) -> bool {
+    if legacy == streamed {
+        println!("{name}: byte-identical ({} bytes)", legacy.len());
+        return true;
+    }
+    let line = legacy
+        .lines()
+        .zip(streamed.lines())
+        .position(|(a, b)| a != b)
+        .map(|i| i + 1)
+        .unwrap_or_else(|| {
+            legacy.lines().count().min(streamed.lines().count()) + 1
+        });
+    failures.push(format!("{name} diverges at line {line}"));
+    false
+}
+
+fn differential(failures: &mut Vec<String>) -> Json {
+    section("report_scaling — streaming vs legacy differential");
+    let grid = differential_grid();
+    let run = tlora::sweep::run(&grid, 2)
+        .expect("legacy differential sweep failed");
+    let legacy_json = to_json_canonical(&run).to_pretty();
+    let legacy_csv = to_csv(&run);
+
+    let mut identical = true;
+    for threads in [1usize, 4] {
+        let (sj, sc) = stream_outputs(&grid, threads);
+        identical &= check_json_identical(
+            &format!("canonical JSON (threads {threads})"),
+            &legacy_json,
+            &sj,
+            failures,
+        );
+        identical &= check_csv_identical(
+            &format!("CSV (threads {threads})"),
+            &legacy_csv,
+            &sc,
+            failures,
+        );
+    }
+    Json::obj()
+        .set("points", grid.len())
+        .set("json_bytes", legacy_json.len())
+        .set("csv_bytes", legacy_csv.len())
+        .set("identical", identical)
+}
+
+// ---- section 2: O(1) allocation gate ------------------------------------
+
+const ALLOC_MAX_RATIO: f64 = 1.5;
+const ALLOC_SLACK_BYTES: usize = 64 * 1024;
+
+/// Clone `template` into `n` synthetic point results in one cell
+/// (seed varies fastest and is not part of the cell key, so every
+/// point lands in the same accumulator).
+fn synth_points(template: &PointResult, n: usize) -> Vec<PointResult> {
+    (0..n)
+        .map(|i| {
+            let mut p = template.clone();
+            p.point.index = i;
+            p.point.seed = template.point.seed + i as u64;
+            p
+        })
+        .collect()
+}
+
+fn alloc_gate(failures: &mut Vec<String>) -> Json {
+    section("report_scaling — O(1) report-path allocation gate");
+
+    // One small real simulation supplies the template result; the gate
+    // measures report-path memory, not simulation cost.
+    let mut g = SweepGrid::default();
+    g.policies = vec![Policy::TLora];
+    g.n_jobs = vec![16];
+    g.gpus = vec![16];
+    g.rate_scales = vec![2.0];
+    g.months = vec![1];
+    g.seeds = vec![5];
+    let run = tlora::sweep::run(&g, 1)
+        .expect("template simulation failed");
+    let template = run.points[0].clone();
+
+    let dir = std::env::temp_dir()
+        .join(format!("tlora_report_bench_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("temp dir");
+
+    let mut t = Table::new(
+        "streaming report peak memory growth (file sinks)",
+        &["points", "peak growth (KiB)", "allocs", "allocs/point"],
+    );
+    let mut rows = vec![];
+    let mut peaks = vec![];
+    for p in [16usize, 64, 256] {
+        let pts = synth_points(&template, p);
+        let jpath = dir.join(format!("out_{p}.json"));
+        let cpath = dir.join(format!("out_{p}.csv"));
+        let spath = dir.join(format!("spool_{p}.tmp"));
+        let mut jout = std::io::BufWriter::new(
+            std::fs::File::create(&jpath).expect("json sink"),
+        );
+        let mut cout = std::io::BufWriter::new(
+            std::fs::File::create(&cpath).expect("csv sink"),
+        );
+        let spool = Spool::file(&spath).expect("spool file");
+        let mut report = StreamReport::new(&g, false)
+            .with_json(&mut jout, spool)
+            .with_csv(&mut cout);
+
+        let live0 = reset_peak();
+        let allocs0 = ALLOCS.load(Relaxed);
+        for pt in &pts {
+            report.point(pt).expect("stream point");
+        }
+        let cells = report.finish(1, 0.0).expect("stream finish");
+        let peak_growth =
+            PEAK.load(Relaxed).saturating_sub(live0);
+        let allocs = ALLOCS.load(Relaxed) - allocs0;
+        assert_eq!(cells.len(), 1, "synthetic points span one cell");
+        drop(cells);
+        jout.flush().expect("json flush");
+        cout.flush().expect("csv flush");
+
+        t.row(&[
+            p.to_string(),
+            format!("{:.1}", peak_growth as f64 / 1024.0),
+            allocs.to_string(),
+            format!("{:.0}", allocs as f64 / p as f64),
+        ]);
+        rows.push(
+            Json::obj()
+                .set("points", p)
+                .set("peak_growth_bytes", peak_growth as u64)
+                .set("allocs", allocs as u64),
+        );
+        peaks.push((p, peak_growth));
+    }
+    t.print();
+
+    // Legacy tree path at the largest P, informational: it holds every
+    // point's JSON tree before writing, so its peak scales with P.
+    let pts = synth_points(&template, 256);
+    let legacy_run = SweepRun {
+        points: pts,
+        n_threads: 1,
+        wall_s: 0.0,
+    };
+    let live0 = reset_peak();
+    let lj = to_json_canonical(&legacy_run).to_pretty();
+    let lc = to_csv(&legacy_run);
+    let legacy_peak = PEAK.load(Relaxed).saturating_sub(live0);
+    drop((lj, lc));
+    println!(
+        "legacy tree path at 256 points: {:.1} KiB peak growth \
+         (informational)",
+        legacy_peak as f64 / 1024.0
+    );
+
+    let (small_p, small_peak) = peaks[0];
+    let (big_p, big_peak) = *peaks.last().unwrap();
+    let bound = small_peak as f64 * ALLOC_MAX_RATIO
+        + ALLOC_SLACK_BYTES as f64;
+    if big_peak as f64 > bound {
+        failures.push(format!(
+            "report-path peak memory grew from {small_peak} bytes at \
+             P={small_p} to {big_peak} bytes at P={big_p} — exceeds \
+             the O(1) bound ({ALLOC_MAX_RATIO}x + \
+             {ALLOC_SLACK_BYTES} B slack)"
+        ));
+    } else {
+        println!(
+            "gate ok: peak growth {big_peak} B at P={big_p} within \
+             {ALLOC_MAX_RATIO}x of {small_peak} B at P={small_p} \
+             (+{ALLOC_SLACK_BYTES} B slack)"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+
+    Json::obj()
+        .set("points", Json::Arr(rows))
+        .set("max_ratio", ALLOC_MAX_RATIO)
+        .set("slack_bytes", ALLOC_SLACK_BYTES as u64)
+        .set("legacy_peak_growth_bytes", legacy_peak as u64)
+}
+
+// ---- section 3: arrival-scale smoke -------------------------------------
+
+fn arrival_smoke(failures: &mut Vec<String>) -> Json {
+    section("report_scaling — hyperscale arrival generator smoke");
+    let full = std::env::var("BENCH_REPORT_FULL")
+        .map(|v| v == "1")
+        .unwrap_or(false);
+    let n: usize = std::env::var("BENCH_REPORT_ARRIVALS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if full { 1_000_000 } else { 100_000 });
+
+    let profile = TraceProfile::hyperscale();
+    let (jobs, gen_wall) =
+        time_once(|| TraceGenerator::new(profile, 11).generate(n));
+    println!(
+        "generated {n} arrivals in {gen_wall:.2}s \
+         ({:.0} jobs/s)",
+        n as f64 / gen_wall.max(1e-9)
+    );
+    if jobs.len() != n {
+        failures.push(format!(
+            "generator produced {} jobs, requested {n}",
+            jobs.len()
+        ));
+    }
+    if !jobs.windows(2).all(|w| w[0].id < w[1].id) {
+        failures.push("generated job ids are not increasing".into());
+    }
+    // Burst jitter may locally reorder submit times; anything beyond
+    // 30 simulated seconds means the arrival process itself broke.
+    let disorder = jobs
+        .windows(2)
+        .filter(|w| w[1].submit_time + 30.0 < w[0].submit_time)
+        .count();
+    if disorder > 0 {
+        failures.push(format!(
+            "{disorder} arrival pairs out of order by >30s"
+        ));
+    }
+
+    // Day/night modulation: the daily sinusoid (phase 0) is above the
+    // mean rate for the first half of each period.
+    let period = 86_400.0;
+    let (mut on, mut off) = (0usize, 0usize);
+    for j in &jobs {
+        if j.submit_time % period < period / 2.0 {
+            on += 1;
+        } else {
+            off += 1;
+        }
+    }
+    let ratio = on as f64 / off.max(1) as f64;
+    println!(
+        "diurnal density: {on} on-peak vs {off} off-peak arrivals \
+         ({ratio:.2}x)"
+    );
+    if ratio < 1.2 {
+        failures.push(format!(
+            "diurnal modulation invisible in arrival density: \
+             on/off ratio {ratio:.2} < 1.2"
+        ));
+    }
+
+    // A modest diurnal simulation with a LoadObserver attached must be
+    // byte-free: the observer feeds no SimResult field.
+    let mut cfg = ExperimentConfig::default();
+    cfg.n_jobs = 240;
+    cfg.seed = 11;
+    cfg.trace.burst_prob = 0.0;
+    cfg.trace.diurnal = Some(DiurnalProfile {
+        period_s: 4000.0,
+        amplitude: 0.8,
+        phase: 0.0,
+    });
+    let sim_jobs = TraceGenerator::new(cfg.trace.clone(), cfg.seed)
+        .generate(cfg.n_jobs);
+    let mut load = LoadObserver::new(1000.0);
+    let (observed, sim_wall) = time_once(|| {
+        simulate_jobs_with(
+            &cfg,
+            sim_jobs.clone(),
+            &EngineOptions::default(),
+            &mut [&mut load],
+        )
+    });
+    let bare = simulate_jobs_with(
+        &cfg,
+        sim_jobs,
+        &EngineOptions::default(),
+        &mut [],
+    );
+    if observed.jct != bare.jct || observed.makespan != bare.makespan
+    {
+        failures.push(
+            "LoadObserver perturbed simulation results — observers \
+             must be passive"
+                .into(),
+        );
+    }
+    if load.bins.is_empty() || load.peak_running() == 0 {
+        failures.push(
+            "LoadObserver recorded no load bins on a diurnal trace"
+                .into(),
+        );
+    }
+    println!(
+        "diurnal sim: {} jobs in {sim_wall:.2}s, {} load bins, peak \
+         {} running",
+        cfg.n_jobs,
+        load.bins.len(),
+        load.peak_running()
+    );
+
+    Json::obj()
+        .set("arrivals", n)
+        .set("gen_wall_s", gen_wall)
+        .set("jobs_per_s", n as f64 / gen_wall.max(1e-9))
+        .set("disorder_pairs", disorder as u64)
+        .set("diurnal_on_off_ratio", ratio)
+        .set("load_bins", load.bins.len())
+        .set("peak_running", load.peak_running())
+}
+
+fn main() {
+    let mut failures: Vec<String> = vec![];
+    let differential = differential(&mut failures);
+    let alloc_gate = alloc_gate(&mut failures);
+    let arrival = arrival_smoke(&mut failures);
+
+    let out_path = std::env::var("BENCH_REPORT_OUT")
+        .unwrap_or_else(|_| "BENCH_report.json".into());
+    let report = Json::obj()
+        .set("differential", differential)
+        .set("alloc_gate", alloc_gate)
+        .set("arrival_smoke", arrival)
+        .set(
+            "failures",
+            Json::Arr(
+                failures
+                    .iter()
+                    .map(|f| Json::Str(f.clone()))
+                    .collect(),
+            ),
+        );
+    match std::fs::write(&out_path, report.to_pretty()) {
+        Ok(()) => println!("\nwrote {out_path}"),
+        Err(e) => {
+            failures.push(format!("could not write {out_path}: {e}"))
+        }
+    }
+
+    if !failures.is_empty() {
+        eprintln!("\nreport_scaling FAILURES:");
+        for f in &failures {
+            eprintln!("  - {f}");
+        }
+        std::process::exit(1);
+    }
+    println!("\nreport_scaling: all checks passed");
+}

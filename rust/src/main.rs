@@ -12,9 +12,11 @@
 //!                 [--stragglers S,..] [--hardware-mix SPEC,..]
 //!                 [--seeds S,..] [--threads T]
 //!                 [--out-json f] [--out-csv f] [--canonical]
+//!                 [--legacy-report]
 //! tlora train     [--variant tiny|small|...] [--steps N] [--seed S]
 //! tlora microbench [--steps N]
 //! tlora trace-gen [--n-jobs N] [--month M] [--seed S] [--out file.csv]
+//!                 [--hyperscale] [--diurnal-amp F] [--diurnal-period S]
 //! ```
 
 use std::path::PathBuf;
@@ -23,7 +25,9 @@ use tlora::cli::Args;
 use tlora::config::{ExperimentConfig, Policy};
 use tlora::metrics::Table;
 use tlora::sim::simulate;
-use tlora::workload::trace::{save_csv, TraceGenerator, TraceProfile};
+use tlora::workload::trace::{
+    save_csv, DiurnalProfile, TraceGenerator, TraceProfile,
+};
 
 fn main() -> std::process::ExitCode {
     let args = match Args::parse() {
@@ -87,6 +91,14 @@ Sweep flags:  --policies a,b|all --n-jobs N,.. --gpus N,..
               --out-json FILE --out-csv FILE
               --canonical (strip wall-clock/thread fields from JSON so
               runs diff bit-exactly; used by the golden-trace fixture)
+              --legacy-report (collect every point before writing
+              reports, the pre-streaming path; the default streams
+              rows as workers finish in O(1) report memory, emitting
+              byte-identical output)
+Trace-gen flags: --hyperscale (dense diurnal multi-tenant preset for
+              million-arrival traces) --diurnal-amp F (sinusoidal
+              day/night arrival swing, 0..1) --diurnal-period S
+              (cycle length, default 86400)
 ";
 
 fn build_config(args: &Args) -> Result<ExperimentConfig, String> {
@@ -381,7 +393,55 @@ fn cmd_sweep(args: &Args) -> i32 {
         grid.len(),
         threads.min(grid.len().max(1))
     );
-    let run = match tlora::sweep::run(&grid, threads) {
+    // --legacy-report: collect-everything path, kept as the
+    // differential reference for the streaming writer (the two are
+    // pinned byte-identical in tests/integration_report_stream.rs)
+    if args.has("legacy-report") {
+        return cmd_sweep_legacy(args, &grid, threads);
+    }
+    let json_path = args.get("out-json");
+    let csv_path = args.get("out-csv");
+    let json_opt = json_path.map(|p| {
+        // --canonical: strip wall-clock + thread-count fields so the
+        // file is bit-identical across runs and thread counts (golden
+        // fixtures, CI determinism diffs)
+        (std::path::Path::new(p), args.has("canonical"))
+    });
+    let (cells, stats) = match tlora::sweep::run_streaming_report(
+        &grid,
+        threads,
+        json_opt,
+        csv_path.map(std::path::Path::new),
+    ) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("sweep failed: {e}");
+            return 1;
+        }
+    };
+    tlora::sweep::sweep_table(
+        &format!(
+            "sweep — {} cells in {:.2}s on {} threads",
+            stats.n_points, stats.wall_s, stats.n_threads
+        ),
+        &cells,
+    )
+    .print();
+    if let Some(path) = json_path {
+        println!("JSON report -> {path}");
+    }
+    if let Some(path) = csv_path {
+        println!("CSV report -> {path}");
+    }
+    0
+}
+
+fn cmd_sweep_legacy(
+    args: &Args,
+    grid: &tlora::sweep::SweepGrid,
+    threads: usize,
+) -> i32 {
+    let run = match tlora::sweep::run(grid, threads) {
         Ok(r) => r,
         Err(e) => {
             eprintln!("sweep failed: {e}");
@@ -400,9 +460,6 @@ fn cmd_sweep(args: &Args) -> i32 {
     )
     .print();
     if let Some(path) = args.get("out-json") {
-        // --canonical: strip wall-clock + thread-count fields so the
-        // file is bit-identical across runs and thread counts (golden
-        // fixtures, CI determinism diffs)
         let text = if args.has("canonical") {
             tlora::sweep::to_json_canonical(&run).to_pretty()
         } else {
@@ -560,11 +617,50 @@ fn cmd_microbench(args: &Args) -> i32 {
 fn cmd_trace_gen(args: &Args) -> i32 {
     let n = args.get_usize("n-jobs", 100).unwrap_or(100);
     let seed = args.get_u64("seed", 42).unwrap_or(42);
-    let profile = match args.get_usize("month", 1).unwrap_or(1) {
-        2 => TraceProfile::month2(),
-        3 => TraceProfile::month3(),
-        _ => TraceProfile::month1(),
+    let mut profile = if args.has("hyperscale") {
+        TraceProfile::hyperscale()
+    } else {
+        match args.get_usize("month", 1).unwrap_or(1) {
+            2 => TraceProfile::month2(),
+            3 => TraceProfile::month3(),
+            _ => TraceProfile::month1(),
+        }
     };
+    let period = match args.get_f64("diurnal-period", 86_400.0) {
+        Ok(v) if v > 0.0 => v,
+        Ok(v) => {
+            eprintln!("--diurnal-period: must be positive, got {v}");
+            return 2;
+        }
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            return 2;
+        }
+    };
+    if args.get("diurnal-amp").is_some() {
+        let amp = match args.get_f64("diurnal-amp", 0.0) {
+            Ok(a) if (0.0..1.0).contains(&a) => a,
+            Ok(a) => {
+                eprintln!("--diurnal-amp: must be in [0, 1), got {a}");
+                return 2;
+            }
+            Err(e) => {
+                eprintln!("argument error: {e}");
+                return 2;
+            }
+        };
+        profile.diurnal = Some(DiurnalProfile {
+            period_s: period,
+            amplitude: amp,
+            phase: 0.0,
+        });
+    } else if let Some(d) = profile.diurnal.as_mut() {
+        // --hyperscale already enables a daily cycle; let
+        // --diurnal-period reshape it without restating the amplitude
+        if args.get("diurnal-period").is_some() {
+            d.period_s = period;
+        }
+    }
     let jobs = TraceGenerator::new(profile, seed).generate(n);
     let csv = save_csv(&jobs);
     match args.get("out") {

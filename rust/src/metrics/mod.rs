@@ -84,7 +84,9 @@ impl Table {
     }
 }
 
-fn csv_field(f: &str) -> String {
+/// RFC-4180 field quoting. Public so the streaming report writer
+/// emits rows through the exact same bytes as [`Table::to_csv`].
+pub fn csv_field(f: &str) -> String {
     if f.contains(',') || f.contains('"') || f.contains('\n')
         || f.contains('\r')
     {
@@ -94,7 +96,8 @@ fn csv_field(f: &str) -> String {
     }
 }
 
-fn csv_row(cells: &[String]) -> String {
+/// One CSV row (no trailing newline) — see [`csv_field`].
+pub fn csv_row(cells: &[String]) -> String {
     let mut out = String::new();
     for (i, c) in cells.iter().enumerate() {
         if i > 0 {

@@ -35,8 +35,8 @@ pub mod state;
 
 pub use engine::{Engine, EngineOptions};
 pub use observer::{
-    EvictCause, FaultObserver, RoundStats, SimObserver,
-    StragglerObserver,
+    EvictCause, FaultObserver, LoadBin, LoadObserver, RoundStats,
+    SimObserver, StragglerObserver,
 };
 pub use state::{Eviction, JobState, RunningGroup, SimState};
 

@@ -455,6 +455,77 @@ impl SimObserver for SlowdownObserver {
     }
 }
 
+/// One fixed-width time bin of cluster load (see [`LoadObserver`]).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LoadBin {
+    /// scheduling rounds that fell in this bin
+    pub rounds: u64,
+    pub admits: u64,
+    pub completions: u64,
+    /// peak running jobs observed at any round in the bin
+    pub max_running: usize,
+    /// peak queued jobs observed at any round in the bin
+    pub max_queued: usize,
+}
+
+/// Time-binned load profile: admission/completion churn and peak
+/// running/queue depth per fixed-width bin. Built for diurnal traces —
+/// a day/night arrival cycle should show up as load-bin modulation —
+/// and for million-arrival sweeps, where memory is O(makespan /
+/// bin_s), never O(jobs). Purely additive: it feeds no `SimResult`
+/// field, so attaching it cannot perturb canonical outputs.
+#[derive(Debug)]
+pub struct LoadObserver {
+    bin_s: f64,
+    pub bins: Vec<LoadBin>,
+}
+
+impl LoadObserver {
+    pub fn new(bin_s: f64) -> LoadObserver {
+        assert!(bin_s > 0.0, "bin width must be positive");
+        LoadObserver {
+            bin_s,
+            bins: Vec::new(),
+        }
+    }
+
+    fn bin_at(&mut self, t: f64) -> &mut LoadBin {
+        let i = (t.max(0.0) / self.bin_s) as usize;
+        if i >= self.bins.len() {
+            self.bins.resize(i + 1, LoadBin::default());
+        }
+        &mut self.bins[i]
+    }
+
+    /// Bin width in simulated seconds.
+    pub fn bin_s(&self) -> f64 {
+        self.bin_s
+    }
+
+    /// Peak concurrently-running jobs across the whole run.
+    pub fn peak_running(&self) -> usize {
+        self.bins.iter().map(|b| b.max_running).max().unwrap_or(0)
+    }
+}
+
+impl SimObserver for LoadObserver {
+    fn on_admit(&mut self, t: f64, _job: &JobState) {
+        self.bin_at(t).admits += 1;
+    }
+
+    fn on_complete(&mut self, t: f64, _job: &JobState) {
+        self.bin_at(t).completions += 1;
+    }
+
+    fn on_round(&mut self, s: &RoundStats) {
+        let (running, queued) = (s.n_running, s.n_queued);
+        let bin = self.bin_at(s.t);
+        bin.rounds += 1;
+        bin.max_running = bin.max_running.max(running);
+        bin.max_queued = bin.max_queued.max(queued);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -626,6 +697,68 @@ mod tests {
         assert_eq!(f.preemptions, 1);
         assert!((f.lost_step_time_s - 0.2).abs() < 1e-12);
         assert!((f.restore_delay_s - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn load_observer_bins_admits_and_peaks() {
+        let mut o = LoadObserver::new(10.0);
+        let round = |t: f64, running: usize, queued: usize| RoundStats {
+            t,
+            inst_throughput: 0.0,
+            busy_gpus: 0.0,
+            total_gpus: 16.0,
+            n_groups: 0,
+            n_running: running,
+            n_queued: queued,
+            probes: 0,
+            plan_cache_hits: 0,
+        };
+        let j = job_state(0, 0.0);
+        o.on_admit(1.0, &j);
+        o.on_admit(2.0, &j);
+        o.on_round(&round(3.0, 2, 5));
+        o.on_round(&round(9.0, 4, 1));
+        o.on_complete(25.0, &j);
+        o.on_round(&round(25.0, 1, 0));
+        assert_eq!(o.bins.len(), 3);
+        assert_eq!(o.bins[0].admits, 2);
+        assert_eq!(o.bins[0].rounds, 2);
+        assert_eq!(o.bins[0].max_running, 4);
+        assert_eq!(o.bins[0].max_queued, 5);
+        assert_eq!(o.bins[1], LoadBin::default()); // gap bin
+        assert_eq!(o.bins[2].completions, 1);
+        assert_eq!(o.peak_running(), 4);
+        assert!((o.bin_s() - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn load_observer_is_passive_in_simulation() {
+        // attach to a real run: simulate_jobs_with must produce the
+        // same SimResult with and without the observer attached
+        use crate::config::ExperimentConfig;
+        use crate::sim::{simulate_jobs_with, EngineOptions};
+        use crate::workload::{TraceGenerator, TraceProfile};
+
+        let cfg = ExperimentConfig::default();
+        let jobs = TraceGenerator::new(TraceProfile::month1(), 3)
+            .generate(20);
+        let mut load = LoadObserver::new(600.0);
+        let with = simulate_jobs_with(
+            &cfg,
+            jobs.clone(),
+            &EngineOptions::default(),
+            &mut [&mut load],
+        );
+        let without = simulate_jobs_with(
+            &cfg,
+            jobs,
+            &EngineOptions::default(),
+            &mut [],
+        );
+        assert_eq!(with.jct, without.jct);
+        assert_eq!(with.makespan, without.makespan);
+        assert!(load.bins.iter().map(|b| b.rounds).sum::<u64>() > 0);
+        assert!(load.peak_running() > 0);
     }
 
     #[test]

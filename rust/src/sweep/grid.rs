@@ -85,6 +85,15 @@ impl SweepGrid {
             * self.seeds.len()
     }
 
+    /// True when any cell of the grid requests a non-default hardware
+    /// mix. The streaming report derives its gated `hardware_mix` /
+    /// `tier_util` columns from this *before* any point completes;
+    /// it equals the legacy writers' any-point check because every
+    /// point's mix comes verbatim from this axis.
+    pub fn is_heterogeneous(&self) -> bool {
+        self.hardware_mixes.iter().any(|m| !m.is_empty())
+    }
+
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

@@ -11,12 +11,17 @@
 //! * [`grid`] — [`SweepGrid`] (the declarative cartesian product) and
 //!   [`SweepPoint`] (one cell, in a fixed enumeration order);
 //! * [`runner`] — the `std::thread` + channel executor. Simulations are
-//!   pure functions of their config, and results are re-sorted by cell
-//!   index, so output is bit-identical across thread counts and runs;
+//!   pure functions of their config; [`run_streaming`] delivers results
+//!   in strict grid-index order through a bounded reorder buffer, so
+//!   output is bit-identical across thread counts and runs;
 //! * [`report`] — per-scenario aggregation across seed replicas
 //!   (`mean ± 95% CI` via [`crate::util::stats::mean_ci95`]) and
 //!   table/CSV/JSON emission through [`crate::metrics`] and
-//!   [`crate::util::json`].
+//!   [`crate::util::json`]. This is the legacy collect-then-emit path,
+//!   kept as the differential reference for —
+//! * [`stream`] — the O(1)-memory emit-as-you-aggregate report writer
+//!   ([`StreamReport`]), byte-identical to [`report`] on every output
+//!   form and the default CLI path (DESIGN.md §Streaming reports).
 //!
 //! CLI: `tlora sweep --policies tlora,mlora --gpus 32,64,128
 //! --rate-scales 0.5,1,2 --seeds 41,42,43 --threads 8 --out-json s.json
@@ -25,11 +30,13 @@
 pub mod grid;
 pub mod runner;
 pub mod report;
+pub mod stream;
 
 pub use grid::{month_profile, SweepGrid, SweepPoint};
 pub use report::{
     aggregate, sweep_table, to_csv, to_json, to_json_canonical,
     CellSummary,
 };
-pub use runner::{default_threads, run, run_parallel, PointResult,
-                 SweepRun};
+pub use runner::{default_threads, reorder_capacity, run, run_parallel,
+                 run_streaming, PointResult, StreamStats, SweepRun};
+pub use stream::{run_streaming_report, Spool, StreamReport};

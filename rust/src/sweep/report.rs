@@ -5,6 +5,13 @@
 //! [`crate::util::stats::mean_ci95`]. Emission goes through the shared
 //! reporting substrates: aligned tables / CSV via [`crate::metrics`]
 //! and JSON via [`crate::util::json`].
+//!
+//! The per-row builders ([`point_json`], [`cell_json`],
+//! [`csv_headers`], [`csv_point_row`]) are shared with the streaming
+//! writer in [`super::stream`]: both paths emit through the same
+//! functions, so their bytes cannot drift. This full-tree module
+//! survives as the differential reference (`--legacy-report` in the
+//! CLI) that the streaming path is pinned byte-identical against.
 
 use super::runner::{PointResult, SweepRun};
 use crate::metrics::Table;
@@ -173,7 +180,7 @@ pub fn aggregate(run: &SweepRun) -> Vec<CellSummary> {
 /// schema and any canonical byte-diff) and rendered literally in the
 /// table/CSV. 0.0 next to the `incomplete` warning column is the
 /// honest encoding; finite values pass through bit-unchanged.
-fn fin(x: f64) -> f64 {
+pub(crate) fn fin(x: f64) -> f64 {
     if x.is_finite() {
         x
     } else {
@@ -260,15 +267,9 @@ pub fn sweep_table(title: &str, cells: &[CellSummary]) -> Table {
     t
 }
 
-/// Per-point CSV (one row per simulated cell) through the shared
-/// [`Table`] CSV path. The `hardware_mix` / `tier_util` columns
-/// appear only when some point is heterogeneous, keeping homogeneous
-/// CSV output byte-identical to pre-tier builds.
-pub fn to_csv(run: &SweepRun) -> String {
-    let het = run
-        .points
-        .iter()
-        .any(|p| !p.point.hardware_mix.is_empty());
+/// CSV column names; `het` appends the heterogeneity-gated columns.
+/// Shared by the legacy and streaming CSV paths.
+pub(crate) fn csv_headers(het: bool) -> Vec<&'static str> {
     let mut headers =
         vec!["index", "policy", "n_jobs", "gpus", "rate_scale", "month",
           "mtbf_s", "straggler_mtbs_s", "seed", "throughput",
@@ -283,55 +284,73 @@ pub fn to_csv(run: &SweepRun) -> String {
         headers.push("hardware_mix");
         headers.push("tier_util");
     }
-    let mut t = Table::new("sweep", &headers);
+    headers
+}
+
+/// One point's CSV cells, in [`csv_headers`] order. Shared by the
+/// legacy and streaming CSV paths.
+pub(crate) fn csv_point_row(p: &PointResult, het: bool) -> Vec<String> {
+    let mut row = vec![
+        p.point.index.to_string(),
+        p.point.policy.slug().to_string(),
+        p.point.n_jobs.to_string(),
+        p.point.gpus.to_string(),
+        p.point.rate_scale.to_string(),
+        p.point.month.to_string(),
+        p.point.mtbf_s.to_string(),
+        p.point.straggler_mtbs_s.to_string(),
+        p.point.seed.to_string(),
+        format!("{:.6}", fin(p.result.avg_throughput)),
+        format!("{:.6}", fin(p.result.goodput)),
+        format!("{:.6}", fin(p.result.mean_jct)),
+        format!("{:.6}", fin(p.result.p99_jct)),
+        format!("{:.6}", fin(p.result.avg_gpu_util)),
+        format!("{:.6}", fin(p.result.makespan)),
+        format!("{:.6}", fin(p.result.mean_slowdown)),
+        format!("{:.6}", fin(p.result.slo_attainment)),
+        p.result.node_failures.to_string(),
+        p.result.preemptions.to_string(),
+        p.result.restarts.to_string(),
+        format!("{:.6}", fin(p.result.lost_step_time_s)),
+        format!("{:.6}", fin(p.result.restore_delay_s)),
+        p.result.node_degrades.to_string(),
+        format!("{:.6}", fin(p.result.degraded_node_time_s)),
+        format!("{:.6}", fin(p.result.straggler_slowdown)),
+        p.result.migrations.to_string(),
+        p.result.sched_rounds.to_string(),
+        p.result.events.to_string(),
+        p.result.events_stale.to_string(),
+        p.result.scheduler_probes.to_string(),
+        p.result.plan_cache_hits.to_string(),
+        p.result.jct.len().to_string(),
+        p.result.incomplete_jobs.len().to_string(),
+    ];
+    if het {
+        row.push(p.point.hardware_mix.clone());
+        row.push(
+            p.result
+                .tier_util
+                .iter()
+                .map(|(n, u)| format!("{n}:{:.6}", fin(*u)))
+                .collect::<Vec<_>>()
+                .join(";"),
+        );
+    }
+    row
+}
+
+/// Per-point CSV (one row per simulated cell) through the shared
+/// [`Table`] CSV path. The `hardware_mix` / `tier_util` columns
+/// appear only when some point is heterogeneous, keeping homogeneous
+/// CSV output byte-identical to pre-tier builds.
+pub fn to_csv(run: &SweepRun) -> String {
+    let het = run
+        .points
+        .iter()
+        .any(|p| !p.point.hardware_mix.is_empty());
+    let mut t = Table::new("sweep", &csv_headers(het));
     for p in &run.points {
-        let mut row = vec![
-            p.point.index.to_string(),
-            p.point.policy.slug().to_string(),
-            p.point.n_jobs.to_string(),
-            p.point.gpus.to_string(),
-            p.point.rate_scale.to_string(),
-            p.point.month.to_string(),
-            p.point.mtbf_s.to_string(),
-            p.point.straggler_mtbs_s.to_string(),
-            p.point.seed.to_string(),
-            format!("{:.6}", fin(p.result.avg_throughput)),
-            format!("{:.6}", fin(p.result.goodput)),
-            format!("{:.6}", fin(p.result.mean_jct)),
-            format!("{:.6}", fin(p.result.p99_jct)),
-            format!("{:.6}", fin(p.result.avg_gpu_util)),
-            format!("{:.6}", fin(p.result.makespan)),
-            format!("{:.6}", fin(p.result.mean_slowdown)),
-            format!("{:.6}", fin(p.result.slo_attainment)),
-            p.result.node_failures.to_string(),
-            p.result.preemptions.to_string(),
-            p.result.restarts.to_string(),
-            format!("{:.6}", fin(p.result.lost_step_time_s)),
-            format!("{:.6}", fin(p.result.restore_delay_s)),
-            p.result.node_degrades.to_string(),
-            format!("{:.6}", fin(p.result.degraded_node_time_s)),
-            format!("{:.6}", fin(p.result.straggler_slowdown)),
-            p.result.migrations.to_string(),
-            p.result.sched_rounds.to_string(),
-            p.result.events.to_string(),
-            p.result.events_stale.to_string(),
-            p.result.scheduler_probes.to_string(),
-            p.result.plan_cache_hits.to_string(),
-            p.result.jct.len().to_string(),
-            p.result.incomplete_jobs.len().to_string(),
-        ];
-        if het {
-            row.push(p.point.hardware_mix.clone());
-            row.push(
-                p.result
-                    .tier_util
-                    .iter()
-                    .map(|(n, u)| format!("{n}:{:.6}", fin(*u)))
-                    .collect::<Vec<_>>()
-                    .join(";"),
-            );
-        }
-        t.row(&row);
+        t.row(&csv_point_row(p, het));
     }
     t.to_csv()
 }
@@ -353,146 +372,132 @@ pub fn to_json_canonical(run: &SweepRun) -> Json {
     to_json_with(run, false)
 }
 
+/// One point's JSON object — the subtree under `points[i]`. Shared by
+/// the legacy full-tree writer and the streaming writer (which builds
+/// this small transient tree per row and frees it after emission, so
+/// report memory stays O(1) in point count).
+pub(crate) fn point_json(p: &PointResult, include_timing: bool) -> Json {
+    let mut j = Json::obj()
+        .set("index", p.point.index)
+        .set("label", p.point.label())
+        .set("policy", p.point.policy.slug())
+        .set("n_jobs", p.point.n_jobs)
+        .set("gpus", p.point.gpus)
+        .set("rate_scale", p.point.rate_scale)
+        .set("month", p.point.month)
+        .set("mtbf_s", p.point.mtbf_s)
+        .set("straggler_mtbs_s", p.point.straggler_mtbs_s)
+        .set("seed", p.point.seed)
+        .set("throughput", fin(p.result.avg_throughput))
+        .set("goodput", fin(p.result.goodput))
+        .set("mean_jct", fin(p.result.mean_jct))
+        .set("p99_jct", fin(p.result.p99_jct))
+        .set("gpu_util", fin(p.result.avg_gpu_util))
+        .set("makespan", fin(p.result.makespan))
+        .set("mean_slowdown", fin(p.result.mean_slowdown))
+        .set("slo_attainment", fin(p.result.slo_attainment))
+        .set("node_failures", p.result.node_failures)
+        .set("preemptions", p.result.preemptions)
+        .set("restarts", p.result.restarts)
+        .set("lost_step_time_s", fin(p.result.lost_step_time_s))
+        .set("restore_delay_s", fin(p.result.restore_delay_s))
+        .set("node_degrades", p.result.node_degrades)
+        .set(
+            "degraded_time_s",
+            fin(p.result.degraded_node_time_s),
+        )
+        .set(
+            "straggler_slowdown",
+            fin(p.result.straggler_slowdown),
+        )
+        .set("migrations", p.result.migrations)
+        .set("sched_rounds", p.result.sched_rounds)
+        .set("events", p.result.events)
+        .set("events_stale", p.result.events_stale)
+        .set("scheduler_probes", p.result.scheduler_probes)
+        .set("plan_cache_hits", p.result.plan_cache_hits)
+        .set("completed", p.result.jct.len())
+        .set("incomplete", p.result.incomplete_jobs.len());
+    // gated on heterogeneity: homogeneous points carry no hardware
+    // fields, so their JSON is byte-identical to pre-tier builds
+    if !p.point.hardware_mix.is_empty() {
+        j = j
+            .set("hardware_mix", p.point.hardware_mix.as_str())
+            .set(
+                "tier_util",
+                Json::Arr(
+                    p.result
+                        .tier_util
+                        .iter()
+                        .map(|(n, u)| {
+                            Json::obj()
+                                .set("tier", n.as_str())
+                                .set("util", fin(*u))
+                        })
+                        .collect(),
+                ),
+            );
+    }
+    if include_timing {
+        j = j.set("wall_s", p.wall_s);
+    }
+    j
+}
+
+/// One aggregated cell's JSON object — the subtree under `cells[i]`.
+/// Shared by the legacy and streaming writers.
+pub(crate) fn cell_json(c: &CellSummary) -> Json {
+    let ci = |v: (f64, f64)| {
+        Json::Arr(vec![Json::Num(fin(v.0)), Json::Num(fin(v.1))])
+    };
+    let mut j = Json::obj()
+        .set("key", c.key.clone())
+        .set("n_seeds", c.n_seeds)
+        .set("throughput", ci(c.throughput))
+        .set("goodput", ci(c.goodput))
+        .set("mean_jct", ci(c.mean_jct))
+        .set("p99_jct", ci(c.p99_jct))
+        .set("gpu_util", ci(c.gpu_util))
+        .set("makespan", ci(c.makespan))
+        .set("mean_slowdown", ci(c.mean_slowdown))
+        .set("slo_attainment", ci(c.slo_attainment))
+        .set("straggler_slowdown", ci(c.straggler_slowdown))
+        .set("restarts", c.restarts)
+        .set("node_failures", c.node_failures)
+        .set("node_degrades", c.node_degrades)
+        .set("migrations", c.migrations)
+        .set("scheduler_probes", c.probes)
+        .set("plan_cache_hits", c.plan_cache_hits)
+        .set("plan_cache_rate", c.cache_hit_rate())
+        .set("incomplete", c.incomplete);
+    if !c.point.hardware_mix.is_empty() {
+        j = j
+            .set("hardware_mix", c.point.hardware_mix.as_str())
+            .set(
+                "tier_util",
+                Json::Arr(
+                    c.tier_util
+                        .iter()
+                        .map(|(n, v)| {
+                            Json::obj()
+                                .set("tier", n.as_str())
+                                .set("util", ci(*v))
+                        })
+                        .collect(),
+                ),
+            );
+    }
+    j
+}
+
 fn to_json_with(run: &SweepRun, include_timing: bool) -> Json {
     let points: Vec<Json> = run
         .points
         .iter()
-        .map(|p| {
-            let mut j = Json::obj()
-                .set("index", p.point.index)
-                .set("label", p.point.label())
-                .set("policy", p.point.policy.slug())
-                .set("n_jobs", p.point.n_jobs)
-                .set("gpus", p.point.gpus)
-                .set("rate_scale", p.point.rate_scale)
-                .set("month", p.point.month)
-                .set("mtbf_s", p.point.mtbf_s)
-                .set("straggler_mtbs_s", p.point.straggler_mtbs_s)
-                .set("seed", p.point.seed)
-                .set("throughput", fin(p.result.avg_throughput))
-                .set("goodput", fin(p.result.goodput))
-                .set("mean_jct", fin(p.result.mean_jct))
-                .set("p99_jct", fin(p.result.p99_jct))
-                .set("gpu_util", fin(p.result.avg_gpu_util))
-                .set("makespan", fin(p.result.makespan))
-                .set("mean_slowdown", fin(p.result.mean_slowdown))
-                .set(
-                    "slo_attainment",
-                    fin(p.result.slo_attainment),
-                )
-                .set("node_failures", p.result.node_failures)
-                .set("preemptions", p.result.preemptions)
-                .set("restarts", p.result.restarts)
-                .set(
-                    "lost_step_time_s",
-                    fin(p.result.lost_step_time_s),
-                )
-                .set(
-                    "restore_delay_s",
-                    fin(p.result.restore_delay_s),
-                )
-                .set("node_degrades", p.result.node_degrades)
-                .set(
-                    "degraded_time_s",
-                    fin(p.result.degraded_node_time_s),
-                )
-                .set(
-                    "straggler_slowdown",
-                    fin(p.result.straggler_slowdown),
-                )
-                .set("migrations", p.result.migrations)
-                .set("sched_rounds", p.result.sched_rounds)
-                .set("events", p.result.events)
-                .set("events_stale", p.result.events_stale)
-                .set("scheduler_probes", p.result.scheduler_probes)
-                .set("plan_cache_hits", p.result.plan_cache_hits)
-                .set("completed", p.result.jct.len())
-                .set("incomplete", p.result.incomplete_jobs.len());
-            // gated on heterogeneity: homogeneous points carry no
-            // hardware fields, so their JSON is byte-identical to
-            // pre-tier builds
-            if !p.point.hardware_mix.is_empty() {
-                j = j
-                    .set(
-                        "hardware_mix",
-                        p.point.hardware_mix.as_str(),
-                    )
-                    .set(
-                        "tier_util",
-                        Json::Arr(
-                            p.result
-                                .tier_util
-                                .iter()
-                                .map(|(n, u)| {
-                                    Json::obj()
-                                        .set("tier", n.as_str())
-                                        .set("util", fin(*u))
-                                })
-                                .collect(),
-                        ),
-                    );
-            }
-            if include_timing {
-                j = j.set("wall_s", p.wall_s);
-            }
-            j
-        })
+        .map(|p| point_json(p, include_timing))
         .collect();
-    let cells: Vec<Json> = aggregate(run)
-        .iter()
-        .map(|c| {
-            let ci = |v: (f64, f64)| {
-                Json::Arr(vec![
-                    Json::Num(fin(v.0)),
-                    Json::Num(fin(v.1)),
-                ])
-            };
-            let mut j = Json::obj()
-                .set("key", c.key.clone())
-                .set("n_seeds", c.n_seeds)
-                .set("throughput", ci(c.throughput))
-                .set("goodput", ci(c.goodput))
-                .set("mean_jct", ci(c.mean_jct))
-                .set("p99_jct", ci(c.p99_jct))
-                .set("gpu_util", ci(c.gpu_util))
-                .set("makespan", ci(c.makespan))
-                .set("mean_slowdown", ci(c.mean_slowdown))
-                .set("slo_attainment", ci(c.slo_attainment))
-                .set(
-                    "straggler_slowdown",
-                    ci(c.straggler_slowdown),
-                )
-                .set("restarts", c.restarts)
-                .set("node_failures", c.node_failures)
-                .set("node_degrades", c.node_degrades)
-                .set("migrations", c.migrations)
-                .set("scheduler_probes", c.probes)
-                .set("plan_cache_hits", c.plan_cache_hits)
-                .set("plan_cache_rate", c.cache_hit_rate())
-                .set("incomplete", c.incomplete);
-            if !c.point.hardware_mix.is_empty() {
-                j = j
-                    .set(
-                        "hardware_mix",
-                        c.point.hardware_mix.as_str(),
-                    )
-                    .set(
-                        "tier_util",
-                        Json::Arr(
-                            c.tier_util
-                                .iter()
-                                .map(|(n, v)| {
-                                    Json::obj()
-                                        .set("tier", n.as_str())
-                                        .set("util", ci(*v))
-                                })
-                                .collect(),
-                        ),
-                    );
-            }
-            j
-        })
-        .collect();
+    let cells: Vec<Json> =
+        aggregate(run).iter().map(cell_json).collect();
     let total_probes: u64 = run
         .points
         .iter()

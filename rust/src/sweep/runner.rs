@@ -4,13 +4,24 @@
 //! atomic cursor, simulates each cell, and streams `(index, result)`
 //! pairs back over an mpsc channel. Each simulation is a pure function
 //! of its [`crate::config::ExperimentConfig`] (seed-deterministic RNG,
-//! no global state), and results are re-sorted by cell index before the
-//! run is returned — so a sweep's output is **bit-identical** on 1
+//! no global state), so a sweep's output is **bit-identical** on 1
 //! thread and on N threads, and across repeated runs. The cross-layer
 //! determinism tests in `tests/integration_sweep.rs` pin this down.
+//!
+//! Two execution modes share the same core:
+//! - [`run_streaming`] delivers each [`PointResult`] to a sink
+//!   callback *in strict grid-index order* while workers race ahead,
+//!   via a bounded reorder buffer: a worker may only start cell `i`
+//!   once `i < emitted_floor + capacity`, so at most
+//!   `reorder_capacity(n_threads)` results are ever alive. This is
+//!   what makes O(1)-memory streaming reports deterministic at any
+//!   thread count (DESIGN.md §Streaming reports).
+//! - [`run`] is the collect-everything form, expressed as a
+//!   streaming sink that pushes into a `Vec` — the two cannot drift.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Condvar, Mutex};
 use std::time::Instant;
 
 use super::grid::{SweepGrid, SweepPoint};
@@ -60,6 +71,15 @@ impl SweepRun {
     }
 }
 
+/// Execution statistics of a streaming sweep (the data a collected
+/// [`SweepRun`] would carry besides the points themselves).
+#[derive(Debug, Clone)]
+pub struct StreamStats {
+    pub n_points: usize,
+    pub n_threads: usize,
+    pub wall_s: f64,
+}
+
 /// Worker-thread count to use when the caller does not care: the
 /// machine's available parallelism.
 pub fn default_threads() -> usize {
@@ -68,25 +88,73 @@ pub fn default_threads() -> usize {
         .unwrap_or(1)
 }
 
-/// Run every cell of `grid` across `n_threads` workers.
-pub fn run(grid: &SweepGrid, n_threads: usize) -> Result<SweepRun, String> {
+/// In-flight bound of the reorder buffer: enough lookahead that
+/// workers never starve on one slow cell, small enough that report
+/// memory stays O(threads), not O(points).
+pub fn reorder_capacity(n_threads: usize) -> usize {
+    (2 * n_threads).max(4)
+}
+
+/// Run every cell of `grid` and hand each [`PointResult`] to `sink`
+/// in strict grid-index order, regardless of completion order or
+/// thread count.
+///
+/// Determinism rule (pinned by the differential report tests): the
+/// sink observes exactly the sequence index 0, 1, 2, …, so anything
+/// built from the stream — canonical JSON, CSV, online aggregates —
+/// is a pure function of the grid. Workers are credit-gated: cell `i`
+/// may only *start* once `i < emitted_floor + capacity`, which bounds
+/// buffered results by [`reorder_capacity`] and guarantees progress
+/// (the cell at the floor is always either buffered or actively
+/// simulating on an ungated worker).
+///
+/// A sink error aborts the sweep: gated workers are woken and drain
+/// out, and the error is returned.
+pub fn run_streaming(
+    grid: &SweepGrid,
+    n_threads: usize,
+    sink: &mut dyn FnMut(PointResult) -> Result<(), String>,
+) -> Result<StreamStats, String> {
     grid.validate()?;
     let points = grid.points();
     let n_threads = n_threads.max(1).min(points.len().max(1));
+    let cap = reorder_capacity(n_threads);
     let t0 = Instant::now();
 
     let (tx, rx) = mpsc::channel::<PointResult>();
     let cursor = AtomicUsize::new(0);
+    // emitted floor: index of the next result the sink is owed
+    let floor = Mutex::new(0usize);
+    let gate = Condvar::new();
+    let aborted = AtomicBool::new(false);
+
+    let mut next = 0usize;
+    let mut sink_err: Option<String> = None;
     {
         let points = &points;
         let cursor = &cursor;
         let base = &grid.base;
+        let floor = &floor;
+        let gate = &gate;
+        let aborted = &aborted;
         std::thread::scope(|scope| {
             for _ in 0..n_threads {
                 let tx = tx.clone();
                 scope.spawn(move || loop {
                     let i = cursor.fetch_add(1, Ordering::Relaxed);
                     if i >= points.len() {
+                        break;
+                    }
+                    {
+                        // wait for emission credit
+                        let mut f = floor.lock().unwrap();
+                        while i >= *f + cap
+                            && !aborted.load(Ordering::Relaxed)
+                        {
+                            f = gate.wait(f).unwrap();
+                        }
+                    }
+                    if aborted.load(Ordering::Relaxed) {
                         break;
                     }
                     let point = points[i].clone();
@@ -106,23 +174,71 @@ pub fn run(grid: &SweepGrid, n_threads: usize) -> Result<SweepRun, String> {
                     }
                 });
             }
+            drop(tx); // only workers hold senders now
+
+            // in-order drain through the bounded reorder buffer
+            let mut buffer: BTreeMap<usize, PointResult> =
+                BTreeMap::new();
+            'drain: while next < points.len() {
+                let pr = match rx.recv() {
+                    Ok(pr) => pr,
+                    Err(_) => break 'drain, // loss detected below
+                };
+                buffer.insert(pr.point.index, pr);
+                while let Some(pr) = buffer.remove(&next) {
+                    match sink(pr) {
+                        Ok(()) => {
+                            next += 1;
+                            *floor.lock().unwrap() = next;
+                            gate.notify_all();
+                        }
+                        Err(e) => {
+                            sink_err = Some(e);
+                            break 'drain;
+                        }
+                    }
+                }
+            }
+            if next < points.len() {
+                // early exit (sink error or lost worker): unhook any
+                // credit-gated workers so the scope can join
+                aborted.store(true, Ordering::Relaxed);
+                gate.notify_all();
+            }
         });
     }
-    drop(tx); // workers joined; close the channel so collection ends
 
-    let mut out: Vec<PointResult> = rx.iter().collect();
-    if out.len() != points.len() {
+    if let Some(e) = sink_err {
+        return Err(e);
+    }
+    if next != points.len() {
         return Err(format!(
             "sweep lost results: {} of {} cells reported",
-            out.len(),
+            next,
             points.len()
         ));
     }
-    out.sort_by_key(|p| p.point.index);
-    Ok(SweepRun {
-        points: out,
+    Ok(StreamStats {
+        n_points: points.len(),
         n_threads,
         wall_s: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Run every cell of `grid` across `n_threads` workers, collecting
+/// all results. Thin wrapper over [`run_streaming`]: the streamed
+/// in-order sequence is pushed into a `Vec`, so collected and
+/// streamed sweeps are the same bytes by construction.
+pub fn run(grid: &SweepGrid, n_threads: usize) -> Result<SweepRun, String> {
+    let mut points = Vec::new();
+    let stats = run_streaming(grid, n_threads, &mut |pr| {
+        points.push(pr);
+        Ok(())
+    })?;
+    Ok(SweepRun {
+        points,
+        n_threads: stats.n_threads,
+        wall_s: stats.wall_s,
     })
 }
 
@@ -179,5 +295,56 @@ mod tests {
         let mut g = tiny_grid();
         g.gpus = vec![];
         assert!(run(&g, 2).is_err());
+    }
+
+    #[test]
+    fn streaming_sink_sees_strict_index_order() {
+        // 8-cell grid, more threads than reorder credit — the sink
+        // must still observe 0,1,2,… with no gaps or repeats
+        let mut g = tiny_grid();
+        g.seeds = vec![5, 6, 7, 8];
+        let mut seen = 0usize;
+        let stats = run_streaming(&g, 8, &mut |pr| {
+            assert_eq!(pr.point.index, seen, "out-of-order emission");
+            seen += 1;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(seen, g.len());
+        assert_eq!(stats.n_points, g.len());
+    }
+
+    #[test]
+    fn streaming_sink_error_aborts_without_deadlock() {
+        // a failing sink must unhook credit-gated workers and return
+        // the error (regression test for the abort/notify handshake)
+        let mut g = tiny_grid();
+        g.seeds = vec![5, 6, 7, 8];
+        let err = run_streaming(&g, 8, &mut |pr| {
+            if pr.point.index >= 1 {
+                Err("sink exploded".into())
+            } else {
+                Ok(())
+            }
+        })
+        .unwrap_err();
+        assert!(err.contains("sink exploded"), "{err}");
+    }
+
+    #[test]
+    fn streamed_and_collected_runs_match() {
+        let g = tiny_grid();
+        let collected = run(&g, 2).unwrap();
+        let mut streamed = Vec::new();
+        run_streaming(&g, 2, &mut |pr| {
+            streamed.push(pr);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(streamed.len(), collected.points.len());
+        for (a, b) in streamed.iter().zip(&collected.points) {
+            assert_eq!(a.point.index, b.point.index);
+            assert_eq!(a.result.jct, b.result.jct);
+        }
     }
 }

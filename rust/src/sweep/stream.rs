@@ -1,0 +1,747 @@
+//! Streaming sweep reports: emit-as-you-aggregate in O(1) memory per
+//! point (DESIGN.md §Streaming reports).
+//!
+//! The legacy path ([`super::report`]) materializes every point, then
+//! a full `Json` tree — O(points) memory twice over, which caps sweep
+//! scale far below the million-arrival north star. This module emits
+//! each row the moment [`super::runner::run_streaming`] delivers it
+//! (in strict grid-index order — the reorder buffer makes that
+//! deterministic at any thread count) and aggregates cells online
+//! with [`Welford`] accumulators.
+//!
+//! **Byte contract:** every form this module writes — pretty JSON
+//! (canonical and timing), CSV, and the aligned table — is
+//! byte-identical to the legacy full-tree writer. That holds by
+//! construction, not by luck:
+//! - per-row subtrees come from the *same* builders
+//!   ([`super::report::point_json`] / [`cell_json`] /
+//!   [`csv_point_row`]) and are spliced into a hand-emitted envelope
+//!   that reproduces `Json::to_pretty`'s exact whitespace;
+//! - cell statistics use [`Welford`] accumulators, and the legacy
+//!   `mean_ci95` *is* a Welford fold over the same values in the same
+//!   order — bitwise-equal results;
+//! - seeds vary fastest in grid enumeration, so one cell's replicas
+//!   are adjacent in index order and a **single** live accumulator
+//!   suffices. (Grids with duplicated axis values would split a cell
+//!   across non-adjacent runs; that is detected and rejected — use
+//!   the legacy report for such grids.)
+//!
+//! Sorted-key JSON puts `cells` before `points`, but cells only
+//! finalize after their last replica. Cells therefore stream straight
+//! to the output while points stream to a [`Spool`] (a temp file for
+//! the CLI/bench, memory for tests) that is spliced — via a fixed
+//! 64 KiB buffer — between the two sections at `finish`. Peak memory
+//! is O(cells + threads), independent of point count; the
+//! `report_scaling` bench gates this with a counting allocator.
+
+use std::collections::HashSet;
+use std::io::{self, Read, Seek, Write};
+use std::path::PathBuf;
+
+use super::grid::SweepGrid;
+use super::report::{
+    cell_json, csv_headers, csv_point_row, point_json, CellSummary,
+};
+use super::runner::{run_streaming, PointResult, StreamStats};
+use crate::metrics::csv_row;
+use crate::util::json::Json;
+use crate::util::stats::Welford;
+
+fn bad_data(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg)
+}
+
+/// Where the streaming JSON writer parks the `points` section until
+/// the `cells` section (which sorts first) has fully streamed.
+pub enum Spool {
+    /// In-memory buffer — tests and callers that want the bytes back.
+    Memory(Vec<u8>),
+    /// On-disk temp file — the O(1)-memory path for CLI and benches.
+    /// Removed after splicing.
+    File {
+        w: io::BufWriter<std::fs::File>,
+        path: PathBuf,
+    },
+}
+
+impl Spool {
+    pub fn memory() -> Spool {
+        Spool::Memory(Vec::new())
+    }
+
+    /// Create (truncating) a read+write temp file at `path`.
+    pub fn file(path: impl Into<PathBuf>) -> io::Result<Spool> {
+        let path = path.into();
+        let f = std::fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(&path)?;
+        Ok(Spool::File {
+            w: io::BufWriter::new(f),
+            path,
+        })
+    }
+
+    fn write_all(&mut self, bytes: &[u8]) -> io::Result<()> {
+        match self {
+            Spool::Memory(buf) => {
+                buf.extend_from_slice(bytes);
+                Ok(())
+            }
+            Spool::File { w, .. } => w.write_all(bytes),
+        }
+    }
+
+    /// Copy the spooled bytes into `out` through a fixed-size buffer
+    /// and release the backing storage.
+    fn splice_into(self, out: &mut dyn Write) -> io::Result<()> {
+        match self {
+            Spool::Memory(buf) => out.write_all(&buf),
+            Spool::File { w, path } => {
+                let mut f =
+                    w.into_inner().map_err(|e| e.into_error())?;
+                f.rewind()?;
+                let mut buf = [0u8; 64 * 1024];
+                loop {
+                    let n = f.read(&mut buf)?;
+                    if n == 0 {
+                        break;
+                    }
+                    out.write_all(&buf[..n])?;
+                }
+                drop(f);
+                let _ = std::fs::remove_file(&path);
+                Ok(())
+            }
+        }
+    }
+}
+
+/// Run-wide totals the JSON envelope needs at `finish`.
+struct StreamTotals {
+    n_points: usize,
+    scheduler_probes: u64,
+    plan_cache_hits: u64,
+    /// `Some` only for the timing (non-canonical) form.
+    n_threads: Option<usize>,
+    wall_s: Option<f64>,
+}
+
+/// Streams the pretty-JSON report envelope: cells directly to `out`,
+/// points to the spool, totals stitched in at [`finish`]. The bytes
+/// match `to_json{_canonical}(run).to_pretty()` exactly (sorted top
+/// keys: `cells`, `n_points`, [`n_threads`], `plan_cache_hits`,
+/// `points`, `scheduler_probes`, [`wall_s`]).
+///
+/// [`finish`]: StreamJsonWriter::finish
+pub struct StreamJsonWriter<'a> {
+    out: &'a mut dyn Write,
+    spool: Spool,
+    n_cells: usize,
+    n_points: usize,
+}
+
+impl<'a> StreamJsonWriter<'a> {
+    pub fn new(out: &'a mut dyn Write, spool: Spool) -> Self {
+        StreamJsonWriter {
+            out,
+            spool,
+            n_cells: 0,
+            n_points: 0,
+        }
+    }
+
+    fn cell(&mut self, j: &Json) -> io::Result<()> {
+        if self.n_cells == 0 {
+            self.out.write_all(b"{\n  \"cells\": [\n    ")?;
+        } else {
+            self.out.write_all(b",\n    ")?;
+        }
+        self.out.write_all(j.to_pretty_at(2).as_bytes())?;
+        self.n_cells += 1;
+        Ok(())
+    }
+
+    fn point(&mut self, j: &Json) -> io::Result<()> {
+        if self.n_points == 0 {
+            self.spool.write_all(b"    ")?;
+        } else {
+            self.spool.write_all(b",\n    ")?;
+        }
+        self.spool.write_all(j.to_pretty_at(2).as_bytes())?;
+        self.n_points += 1;
+        Ok(())
+    }
+
+    fn finish(self, totals: &StreamTotals) -> io::Result<()> {
+        let StreamJsonWriter {
+            out,
+            spool,
+            n_cells,
+            n_points,
+        } = self;
+        if n_cells == 0 {
+            out.write_all(b"{\n  \"cells\": [],\n")?;
+        } else {
+            out.write_all(b"\n  ],\n")?;
+        }
+        out.write_all(
+            format!("  \"n_points\": {},\n", totals.n_points)
+                .as_bytes(),
+        )?;
+        if let Some(t) = totals.n_threads {
+            out.write_all(
+                format!("  \"n_threads\": {t},\n").as_bytes(),
+            )?;
+        }
+        out.write_all(
+            format!(
+                "  \"plan_cache_hits\": {},\n",
+                totals.plan_cache_hits
+            )
+            .as_bytes(),
+        )?;
+        if n_points == 0 {
+            out.write_all(b"  \"points\": [],\n")?;
+        } else {
+            out.write_all(b"  \"points\": [\n")?;
+            spool.splice_into(out)?;
+            out.write_all(b"\n  ],\n")?;
+        }
+        out.write_all(
+            format!(
+                "  \"scheduler_probes\": {}",
+                totals.scheduler_probes
+            )
+            .as_bytes(),
+        )?;
+        if let Some(w) = totals.wall_s {
+            // route through the Json writer so float bytes match
+            out.write_all(
+                format!(
+                    ",\n  \"wall_s\": {}\n",
+                    Json::Num(w).to_string()
+                )
+                .as_bytes(),
+            )?;
+        } else {
+            out.write_all(b"\n")?;
+        }
+        out.write_all(b"}\n")?;
+        out.flush()
+    }
+}
+
+/// Online per-cell aggregation: one [`Welford`] per CI-pair metric,
+/// plain sums for counters — the streaming equivalent of
+/// [`super::report::aggregate`]'s per-bucket computation, fed in the
+/// same (grid-index) order so the results are bitwise equal.
+struct CellAcc {
+    key: String,
+    point: super::grid::SweepPoint,
+    n_seeds: usize,
+    throughput: Welford,
+    mean_jct: Welford,
+    p99_jct: Welford,
+    gpu_util: Welford,
+    makespan: Welford,
+    mean_slowdown: Welford,
+    goodput: Welford,
+    slo_attainment: Welford,
+    straggler_slowdown: Welford,
+    restarts: u64,
+    node_failures: u64,
+    node_degrades: u64,
+    migrations: u64,
+    probes: u64,
+    plan_cache_hits: u64,
+    incomplete: usize,
+    /// tier names fixed by the cell's first replica (legacy rule)
+    tier_names: Vec<String>,
+    tier_utils: Vec<Welford>,
+}
+
+impl CellAcc {
+    fn new(key: String, p: &PointResult) -> CellAcc {
+        let tier_names: Vec<String> = p
+            .result
+            .tier_util
+            .iter()
+            .map(|(n, _)| n.clone())
+            .collect();
+        let tier_utils =
+            vec![Welford::default(); tier_names.len()];
+        let mut acc = CellAcc {
+            key,
+            point: p.point.clone(),
+            n_seeds: 0,
+            throughput: Welford::default(),
+            mean_jct: Welford::default(),
+            p99_jct: Welford::default(),
+            gpu_util: Welford::default(),
+            makespan: Welford::default(),
+            mean_slowdown: Welford::default(),
+            goodput: Welford::default(),
+            slo_attainment: Welford::default(),
+            straggler_slowdown: Welford::default(),
+            restarts: 0,
+            node_failures: 0,
+            node_degrades: 0,
+            migrations: 0,
+            probes: 0,
+            plan_cache_hits: 0,
+            incomplete: 0,
+            tier_names,
+            tier_utils,
+        };
+        acc.push(p);
+        acc
+    }
+
+    fn push(&mut self, p: &PointResult) {
+        // raw (un-clamped) values, exactly like the legacy column
+        // closures — fin() stays an emission-time concern
+        self.n_seeds += 1;
+        self.throughput.add(p.result.avg_throughput);
+        self.mean_jct.add(p.result.mean_jct);
+        self.p99_jct.add(p.result.p99_jct);
+        self.gpu_util.add(p.result.avg_gpu_util);
+        self.makespan.add(p.result.makespan);
+        self.mean_slowdown.add(p.result.mean_slowdown);
+        self.goodput.add(p.result.goodput);
+        self.slo_attainment.add(p.result.slo_attainment);
+        self.straggler_slowdown.add(p.result.straggler_slowdown);
+        self.restarts += p.result.restarts;
+        self.node_failures += p.result.node_failures;
+        self.node_degrades += p.result.node_degrades;
+        self.migrations += p.result.migrations;
+        self.probes += p.result.scheduler_probes;
+        self.plan_cache_hits += p.result.plan_cache_hits;
+        self.incomplete += p.result.incomplete_jobs.len();
+        for (i, w) in self.tier_utils.iter_mut().enumerate() {
+            w.add(
+                p.result
+                    .tier_util
+                    .get(i)
+                    .map_or(0.0, |&(_, u)| u),
+            );
+        }
+    }
+
+    fn finalize(self) -> CellSummary {
+        CellSummary {
+            key: self.key,
+            point: self.point,
+            n_seeds: self.n_seeds,
+            throughput: self.throughput.mean_ci95(),
+            mean_jct: self.mean_jct.mean_ci95(),
+            p99_jct: self.p99_jct.mean_ci95(),
+            gpu_util: self.gpu_util.mean_ci95(),
+            makespan: self.makespan.mean_ci95(),
+            mean_slowdown: self.mean_slowdown.mean_ci95(),
+            goodput: self.goodput.mean_ci95(),
+            slo_attainment: self.slo_attainment.mean_ci95(),
+            straggler_slowdown: self
+                .straggler_slowdown
+                .mean_ci95(),
+            restarts: self.restarts,
+            node_failures: self.node_failures,
+            node_degrades: self.node_degrades,
+            migrations: self.migrations,
+            probes: self.probes,
+            plan_cache_hits: self.plan_cache_hits,
+            incomplete: self.incomplete,
+            tier_util: self
+                .tier_names
+                .into_iter()
+                .zip(
+                    self.tier_utils
+                        .into_iter()
+                        .map(|w| w.mean_ci95()),
+                )
+                .collect(),
+        }
+    }
+}
+
+/// The emit-as-you-aggregate report core. Feed it [`PointResult`]s in
+/// strict grid-index order (what [`run_streaming`] delivers); each
+/// point is written to the attached sinks immediately and folded into
+/// the live cell accumulator, then freed. `finish` closes the JSON
+/// envelope and returns the aggregated cells (O(cells) — the only
+/// thing the table form needs to buffer, since an aligned table
+/// requires global column widths).
+pub struct StreamReport<'a> {
+    het: bool,
+    include_timing: bool,
+    json: Option<StreamJsonWriter<'a>>,
+    csv: Option<&'a mut dyn Write>,
+    csv_header_written: bool,
+    cells: Vec<CellSummary>,
+    seen_keys: HashSet<String>,
+    acc: Option<CellAcc>,
+    total_probes: u64,
+    total_hits: u64,
+    n_points: usize,
+}
+
+impl<'a> StreamReport<'a> {
+    /// `include_timing` selects the timing JSON form (per-point and
+    /// total `wall_s`, `n_threads`) vs the canonical form; it has no
+    /// effect on CSV/table output.
+    pub fn new(grid: &SweepGrid, include_timing: bool) -> Self {
+        StreamReport {
+            het: grid.is_heterogeneous(),
+            include_timing,
+            json: None,
+            csv: None,
+            csv_header_written: false,
+            cells: Vec::new(),
+            seen_keys: HashSet::new(),
+            acc: None,
+            total_probes: 0,
+            total_hits: 0,
+            n_points: 0,
+        }
+    }
+
+    /// Attach a JSON sink; `spool` buffers the `points` section (use
+    /// [`Spool::file`] for O(1) memory, [`Spool::memory`] in tests).
+    pub fn with_json(
+        mut self,
+        out: &'a mut dyn Write,
+        spool: Spool,
+    ) -> Self {
+        self.json = Some(StreamJsonWriter::new(out, spool));
+        self
+    }
+
+    /// Attach a CSV sink (header written with the first row).
+    pub fn with_csv(mut self, out: &'a mut dyn Write) -> Self {
+        self.csv = Some(out);
+        self
+    }
+
+    fn ensure_csv_header(&mut self) -> io::Result<()> {
+        if self.csv_header_written {
+            return Ok(());
+        }
+        if let Some(out) = self.csv.as_mut() {
+            let headers: Vec<String> = csv_headers(self.het)
+                .iter()
+                .map(|h| h.to_string())
+                .collect();
+            out.write_all(csv_row(&headers).as_bytes())?;
+            out.write_all(b"\n")?;
+        }
+        self.csv_header_written = true;
+        Ok(())
+    }
+
+    /// Ingest the next point (must arrive in strict index order).
+    pub fn point(&mut self, p: &PointResult) -> io::Result<()> {
+        if p.point.index != self.n_points {
+            return Err(bad_data(format!(
+                "streaming report fed out of order: got index {}, \
+                 expected {} — results must arrive in grid order",
+                p.point.index, self.n_points
+            )));
+        }
+        self.n_points += 1;
+        self.total_probes += p.result.scheduler_probes;
+        self.total_hits += p.result.plan_cache_hits;
+
+        // online aggregation: seeds are innermost in grid
+        // enumeration, so replicas of one cell arrive adjacently and
+        // a single live accumulator suffices
+        let key = p.point.cell_key();
+        match self.acc.as_mut() {
+            Some(acc) if acc.key == key => acc.push(p),
+            _ => {
+                if let Some(done) = self.acc.take() {
+                    self.emit_cell(done)?;
+                }
+                if !self.seen_keys.insert(key.clone()) {
+                    return Err(bad_data(format!(
+                        "cell key '{key}' reappeared non-adjacently \
+                         (duplicated axis values?); streaming \
+                         aggregation needs one contiguous run per \
+                         cell — use the legacy report for this grid"
+                    )));
+                }
+                self.acc = Some(CellAcc::new(key, p));
+            }
+        }
+
+        if let Some(json) = self.json.as_mut() {
+            json.point(&point_json(p, self.include_timing))?;
+        }
+        if self.csv.is_some() {
+            self.ensure_csv_header()?;
+            let row = csv_point_row(p, self.het);
+            let out = self.csv.as_mut().unwrap();
+            out.write_all(csv_row(&row).as_bytes())?;
+            out.write_all(b"\n")?;
+        }
+        Ok(())
+    }
+
+    fn emit_cell(&mut self, acc: CellAcc) -> io::Result<()> {
+        let c = acc.finalize();
+        if let Some(json) = self.json.as_mut() {
+            json.cell(&cell_json(&c))?;
+        }
+        self.cells.push(c);
+        Ok(())
+    }
+
+    /// Finalize the live cell, close the JSON envelope, flush CSV,
+    /// and return the aggregated cells in emission order (identical
+    /// to [`super::report::aggregate`] on the collected run).
+    pub fn finish(
+        mut self,
+        n_threads: usize,
+        wall_s: f64,
+    ) -> io::Result<Vec<CellSummary>> {
+        if let Some(done) = self.acc.take() {
+            self.emit_cell(done)?;
+        }
+        if let Some(json) = self.json.take() {
+            let totals = StreamTotals {
+                n_points: self.n_points,
+                scheduler_probes: self.total_probes,
+                plan_cache_hits: self.total_hits,
+                n_threads: self
+                    .include_timing
+                    .then_some(n_threads),
+                wall_s: self.include_timing.then_some(wall_s),
+            };
+            json.finish(&totals)?;
+        }
+        if self.csv.is_some() {
+            self.ensure_csv_header()?; // header even for empty grids
+            self.csv.as_mut().unwrap().flush()?;
+        }
+        Ok(self.cells)
+    }
+}
+
+/// CLI/bench convenience: run `grid` with the streaming executor,
+/// writing the requested report files as points complete. Returns the
+/// aggregated cells (for the table) and the run stats. `json`
+/// carries `(path, canonical)`; the points spool lives next to the
+/// JSON file as `<path>.points.tmp` and is removed after splicing.
+/// On error a partially-written file may remain (the legacy path
+/// writes nothing until the end — that is exactly the O(points)
+/// buffering this module exists to avoid).
+pub fn run_streaming_report(
+    grid: &SweepGrid,
+    n_threads: usize,
+    json: Option<(&std::path::Path, bool)>,
+    csv: Option<&std::path::Path>,
+) -> Result<(Vec<CellSummary>, StreamStats), String> {
+    let include_timing =
+        json.is_some_and(|(_, canonical)| !canonical);
+    let mut jfile = match json {
+        Some((p, _)) => Some(io::BufWriter::new(
+            std::fs::File::create(p).map_err(|e| {
+                format!("write {}: {e}", p.display())
+            })?,
+        )),
+        None => None,
+    };
+    let mut spool = match json {
+        Some((p, _)) => {
+            let mut os = p.as_os_str().to_owned();
+            os.push(".points.tmp");
+            Some(Spool::file(PathBuf::from(os)).map_err(|e| {
+                format!("spool for {}: {e}", p.display())
+            })?)
+        }
+        None => None,
+    };
+    let mut cfile = match csv {
+        Some(p) => Some(io::BufWriter::new(
+            std::fs::File::create(p).map_err(|e| {
+                format!("write {}: {e}", p.display())
+            })?,
+        )),
+        None => None,
+    };
+
+    let mut report = StreamReport::new(grid, include_timing);
+    if let Some(f) = jfile.as_mut() {
+        report = report.with_json(f, spool.take().unwrap());
+    }
+    if let Some(f) = cfile.as_mut() {
+        report = report.with_csv(f);
+    }
+    let stats = run_streaming(grid, n_threads, &mut |pr| {
+        report
+            .point(&pr)
+            .map_err(|e| format!("report emission: {e}"))
+    })?;
+    let cells = report
+        .finish(stats.n_threads, stats.wall_s)
+        .map_err(|e| format!("report finish: {e}"))?;
+    if let Some(mut f) = jfile {
+        f.flush().map_err(|e| format!("flush json report: {e}"))?;
+    }
+    if let Some(mut f) = cfile {
+        f.flush().map_err(|e| format!("flush csv report: {e}"))?;
+    }
+    Ok((cells, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Policy;
+    use crate::sweep::report::{
+        aggregate, sweep_table, to_csv, to_json, to_json_canonical,
+    };
+    use crate::sweep::runner;
+    use crate::sweep::SweepGrid;
+
+    fn small_grid() -> SweepGrid {
+        let mut g = SweepGrid::default();
+        g.policies = vec![Policy::TLora, Policy::Megatron];
+        g.n_jobs = vec![8];
+        g.gpus = vec![16];
+        g.rate_scales = vec![2.0];
+        g.months = vec![1];
+        g.seeds = vec![3, 4];
+        g
+    }
+
+    /// Feed a collected run through the streaming writer with memory
+    /// sinks; returns (json, csv, cells).
+    fn stream_all(
+        g: &SweepGrid,
+        run: &runner::SweepRun,
+        include_timing: bool,
+    ) -> (String, String, Vec<CellSummary>) {
+        let mut jbuf: Vec<u8> = Vec::new();
+        let mut cbuf: Vec<u8> = Vec::new();
+        let cells = {
+            let mut rep = StreamReport::new(g, include_timing)
+                .with_json(&mut jbuf, Spool::memory())
+                .with_csv(&mut cbuf);
+            for p in &run.points {
+                rep.point(p).unwrap();
+            }
+            rep.finish(run.n_threads, run.wall_s).unwrap()
+        };
+        (
+            String::from_utf8(jbuf).unwrap(),
+            String::from_utf8(cbuf).unwrap(),
+            cells,
+        )
+    }
+
+    #[test]
+    fn streaming_json_matches_legacy_bytes() {
+        let g = small_grid();
+        let run = runner::run(&g, 2).unwrap();
+        let (canon, csv, cells) = stream_all(&g, &run, false);
+        assert_eq!(canon, to_json_canonical(&run).to_pretty());
+        assert_eq!(csv, to_csv(&run));
+        let legacy = aggregate(&run);
+        assert_eq!(
+            sweep_table("t", &cells).render(),
+            sweep_table("t", &legacy).render()
+        );
+        // timing form too (same PointResults → same wall_s bytes)
+        let (timed, _, _) = stream_all(&g, &run, true);
+        assert_eq!(timed, to_json(&run).to_pretty());
+    }
+
+    #[test]
+    fn streaming_matches_legacy_on_heterogeneous_grid() {
+        let mut g = small_grid();
+        g.hardware_mixes = vec!["a100:v100".into()];
+        g.seeds = vec![3];
+        let run = runner::run(&g, 1).unwrap();
+        let (canon, csv, cells) = stream_all(&g, &run, false);
+        assert_eq!(canon, to_json_canonical(&run).to_pretty());
+        assert_eq!(csv, to_csv(&run));
+        assert!(csv.lines().next().unwrap().contains("tier_util"));
+        assert_eq!(
+            sweep_table("t", &cells).render(),
+            sweep_table("t", &aggregate(&run)).render()
+        );
+    }
+
+    #[test]
+    fn file_spool_splices_identically() {
+        let g = small_grid();
+        let run = runner::run(&g, 1).unwrap();
+        let tmp = std::env::temp_dir()
+            .join("tlora_stream_spool_test.points.tmp");
+        let mut jbuf: Vec<u8> = Vec::new();
+        {
+            let mut rep = StreamReport::new(&g, false)
+                .with_json(&mut jbuf, Spool::file(&tmp).unwrap());
+            for p in &run.points {
+                rep.point(p).unwrap();
+            }
+            rep.finish(run.n_threads, run.wall_s).unwrap();
+        }
+        assert_eq!(
+            String::from_utf8(jbuf).unwrap(),
+            to_json_canonical(&run).to_pretty()
+        );
+        assert!(!tmp.exists(), "spool temp file not cleaned up");
+    }
+
+    #[test]
+    fn out_of_order_and_duplicate_cells_rejected() {
+        let g = small_grid();
+        let run = runner::run(&g, 1).unwrap();
+        // out of order
+        let mut rep = StreamReport::new(&g, false);
+        let err =
+            rep.point(&run.points[1]).unwrap_err().to_string();
+        assert!(err.contains("out of order"), "{err}");
+        // duplicate non-adjacent cell key: replay point 0 (its cell
+        // closed when point 2's new key arrived)
+        let mut rep = StreamReport::new(&g, false);
+        rep.point(&run.points[0]).unwrap();
+        rep.point(&run.points[1]).unwrap();
+        rep.point(&run.points[2]).unwrap();
+        let mut replay = run.points[0].clone();
+        replay.point.index = 3;
+        let err = rep.point(&replay).unwrap_err().to_string();
+        assert!(err.contains("non-adjacently"), "{err}");
+    }
+
+    #[test]
+    fn end_to_end_files_match_legacy() {
+        let g = small_grid();
+        let dir = std::env::temp_dir();
+        let jpath = dir.join("tlora_stream_e2e.json");
+        let cpath = dir.join("tlora_stream_e2e.csv");
+        let (cells, stats) = run_streaming_report(
+            &g,
+            4,
+            Some((jpath.as_path(), true)),
+            Some(cpath.as_path()),
+        )
+        .unwrap();
+        assert_eq!(stats.n_points, g.len());
+        let run = runner::run(&g, 1).unwrap();
+        assert_eq!(
+            std::fs::read_to_string(&jpath).unwrap(),
+            to_json_canonical(&run).to_pretty()
+        );
+        assert_eq!(
+            std::fs::read_to_string(&cpath).unwrap(),
+            to_csv(&run)
+        );
+        assert_eq!(cells.len(), aggregate(&run).len());
+        let _ = std::fs::remove_file(&jpath);
+        let _ = std::fs::remove_file(&cpath);
+    }
+}

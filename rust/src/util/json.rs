@@ -1,13 +1,34 @@
-//! Minimal JSON: parser, printer, and typed accessors.
+//! Minimal JSON: parser, printer, typed accessors — plus a streaming
+//! layer that never builds a tree.
 //!
 //! Replaces serde_json (unavailable in the offline vendor set). Supports
 //! the full JSON grammar the project uses: objects, arrays, strings with
 //! escapes, numbers (f64 + exact i64 round-trip), booleans, null.
 //! `parse ∘ to_string == id` is property-tested in [`crate::util::prop`]'s
 //! test suite and below.
+//!
+//! The streaming layer (DESIGN.md §Streaming reports):
+//! - [`Lexer`] — a pull-based, allocation-free event lexer whose
+//!   [`Event`]s borrow slices of the input; [`visit`] is the callback
+//!   form.
+//! - [`path_f64`] / [`path_str`] — lazy byte-scanning path reads that
+//!   skip over everything off-path without materializing it.
+//! - [`diff`] — a byte-range differ over two canonical streams,
+//!   reporting the first divergent path + byte offsets; the golden and
+//!   threads-1-vs-8 determinism tests use it instead of tree equality.
+//!
+//! Both the tree parser and the lexer enforce [`MAX_DEPTH`] so
+//! adversarial depth-bomb inputs fail with a [`JsonError`] instead of
+//! overflowing the stack.
 
 use std::collections::BTreeMap;
 use std::fmt;
+
+/// Maximum container-nesting depth accepted by [`parse`] and
+/// [`Lexer`]. Deeper input returns a [`JsonError`] instead of
+/// recursing toward stack overflow. Generous: real reports nest ~5
+/// levels.
+pub const MAX_DEPTH: usize = 128;
 
 /// A JSON value. Object keys are sorted (BTreeMap) so printing is
 /// deterministic — required for artifact-manifest diffing.
@@ -36,6 +57,41 @@ impl fmt::Display for JsonError {
 }
 
 impl std::error::Error for JsonError {}
+
+impl JsonError {
+    /// 1-based (line, column) of `offset` within `text` — config
+    /// diagnostics point at the line the user has to fix.
+    pub fn line_col(&self, text: &str) -> (usize, usize) {
+        let upto = &text.as_bytes()[..self.offset.min(text.len())];
+        let line = upto.iter().filter(|&&b| b == b'\n').count() + 1;
+        let col =
+            upto.iter().rev().take_while(|&&b| b != b'\n').count() + 1;
+        (line, col)
+    }
+
+    /// Prefix the message with `path: line L, column C` context.
+    fn with_context(
+        mut self,
+        path: &std::path::Path,
+        text: &str,
+    ) -> JsonError {
+        let (line, col) = self.line_col(text);
+        self.msg = format!(
+            "{}: line {line}, column {col}: {}",
+            path.display(),
+            self.msg
+        );
+        self
+    }
+}
+
+/// Callers that accumulate errors as `String` (the CLI, the runtime
+/// manifest loader) keep working with `?` on [`JsonError`] results.
+impl From<JsonError> for String {
+    fn from(e: JsonError) -> String {
+        e.to_string()
+    }
+}
 
 impl Json {
     // ---------------- constructors ----------------
@@ -140,6 +196,16 @@ impl Json {
         let mut s = String::new();
         self.write_pretty(&mut s, 0);
         s.push('\n');
+        s
+    }
+
+    /// Pretty-print starting at a given indent level, with no
+    /// trailing newline — the streaming report writer splices per-row
+    /// subtrees into a hand-emitted envelope and must reproduce
+    /// [`Json::to_pretty`]'s bytes exactly.
+    pub fn to_pretty_at(&self, indent: usize) -> String {
+        let mut s = String::new();
+        self.write_pretty(&mut s, indent);
         s
     }
 
@@ -316,6 +382,7 @@ pub fn parse(input: &str) -> Result<Json, JsonError> {
     let mut p = Parser {
         bytes: input.as_bytes(),
         pos: 0,
+        depth: 0,
     };
     p.skip_ws();
     let v = p.value()?;
@@ -326,16 +393,22 @@ pub fn parse(input: &str) -> Result<Json, JsonError> {
     Ok(v)
 }
 
-/// Parse a JSON file.
-pub fn parse_file(path: &std::path::Path) -> Result<Json, String> {
-    let text = std::fs::read_to_string(path)
-        .map_err(|e| format!("read {}: {e}", path.display()))?;
-    parse(&text).map_err(|e| format!("parse {}: {e}", path.display()))
+/// Parse a JSON file. Both I/O and syntax failures surface as
+/// [`JsonError`]; syntax errors carry `path: line L, column C`
+/// context so config mistakes are actionable, and
+/// `From<JsonError> for String` keeps string-error call sites on `?`.
+pub fn parse_file(path: &std::path::Path) -> Result<Json, JsonError> {
+    let text = std::fs::read_to_string(path).map_err(|e| JsonError {
+        msg: format!("read {}: {e}", path.display()),
+        offset: 0,
+    })?;
+    parse(&text).map_err(|e| e.with_context(path, &text))
 }
 
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -367,8 +440,8 @@ impl<'a> Parser<'a> {
 
     fn value(&mut self) -> Result<Json, JsonError> {
         match self.peek() {
-            Some(b'{') => self.object(),
-            Some(b'[') => self.array(),
+            Some(b'{') => self.nested(Parser::object),
+            Some(b'[') => self.nested(Parser::array),
             Some(b'"') => Ok(Json::Str(self.string()?)),
             Some(b't') => self.lit("true", Json::Bool(true)),
             Some(b'f') => self.lit("false", Json::Bool(false)),
@@ -376,6 +449,24 @@ impl<'a> Parser<'a> {
             Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
             _ => Err(self.err("unexpected character")),
         }
+    }
+
+    /// Depth guard around container recursion: the parser's stack
+    /// usage is bounded by MAX_DEPTH frames, so a depth-bomb input
+    /// errors out instead of overflowing.
+    fn nested(
+        &mut self,
+        f: fn(&mut Parser<'a>) -> Result<Json, JsonError>,
+    ) -> Result<Json, JsonError> {
+        if self.depth >= MAX_DEPTH {
+            return Err(self.err(&format!(
+                "nesting exceeds depth limit ({MAX_DEPTH})"
+            )));
+        }
+        self.depth += 1;
+        let v = f(self)?;
+        self.depth -= 1;
+        Ok(v)
     }
 
     fn lit(&mut self, word: &str, v: Json) -> Result<Json, JsonError> {
@@ -555,6 +646,574 @@ impl<'a> Parser<'a> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Streaming layer: pull lexer, callback visitor, lazy path reads, differ
+// ---------------------------------------------------------------------------
+
+/// One lexical event. String-ish payloads borrow the input *raw*
+/// (escapes unprocessed — [`unescape`] decodes); numbers stay as the
+/// unparsed text slice. The lexer therefore allocates nothing per
+/// event.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Event<'a> {
+    ObjStart,
+    ObjEnd,
+    ArrStart,
+    ArrEnd,
+    /// Object key (raw string body, quotes stripped).
+    Key(&'a str),
+    /// String value (raw body, quotes stripped).
+    Str(&'a str),
+    /// Number value, unparsed (`"1.5"`, `"-3e2"`, …).
+    Num(&'a str),
+    Bool(bool),
+    Null,
+}
+
+/// Per-container lexer state: kind (`b'{'` / `b'['`), whether an
+/// element has been emitted (comma handling), and — for objects —
+/// whether a key has been consumed and a value is due next.
+#[derive(Clone, Copy)]
+struct LexFrame {
+    kind: u8,
+    has_elems: bool,
+    awaiting_value: bool,
+}
+
+/// Pull-based JSON lexer. Validates the same grammar as [`parse`]
+/// while allocating only its container stack (≤ [`MAX_DEPTH`]
+/// frames); every event borrows from the input. Drives [`visit`],
+/// [`path_f64`]/[`path_str`], and the lockstep byte-range [`diff`].
+pub struct Lexer<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    stack: Vec<LexFrame>,
+    started: bool,
+}
+
+impl<'a> Lexer<'a> {
+    pub fn new(input: &'a str) -> Lexer<'a> {
+        Lexer {
+            bytes: input.as_bytes(),
+            pos: 0,
+            stack: Vec::new(),
+            started: false,
+        }
+    }
+
+    /// Byte offset of the lexer cursor (just past the last event).
+    pub fn offset(&self) -> usize {
+        self.pos
+    }
+
+    /// Current container-nesting depth.
+    pub fn depth(&self) -> usize {
+        self.stack.len()
+    }
+
+    fn err(&self, msg: &str) -> JsonError {
+        JsonError {
+            msg: msg.to_string(),
+            offset: self.pos,
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r'))
+        {
+            self.pos += 1;
+        }
+    }
+
+    /// Next event, or `None` at clean end-of-input.
+    pub fn next_event(
+        &mut self,
+    ) -> Result<Option<Event<'a>>, JsonError> {
+        self.skip_ws();
+        let frame = match self.stack.last().copied() {
+            Some(f) => f,
+            None => {
+                // top level: exactly one value, then clean EOF
+                if self.started {
+                    return if self.pos == self.bytes.len() {
+                        Ok(None)
+                    } else {
+                        Err(self.err("trailing characters"))
+                    };
+                }
+                self.started = true;
+                return self.value_event().map(Some);
+            }
+        };
+        if frame.kind == b'{' && !frame.awaiting_value {
+            // expecting `}`, or (`,`) `"key":`
+            match self.peek() {
+                Some(b'}') => {
+                    self.pos += 1;
+                    self.stack.pop();
+                    return Ok(Some(Event::ObjEnd));
+                }
+                None => return Err(self.err("unterminated object")),
+                _ => {}
+            }
+            if frame.has_elems {
+                if self.peek() != Some(b',') {
+                    return Err(self.err("expected ',' or '}'"));
+                }
+                self.pos += 1;
+                self.skip_ws();
+            }
+            let key = self.raw_string()?;
+            self.skip_ws();
+            if self.peek() != Some(b':') {
+                return Err(self.err("expected ':'"));
+            }
+            self.pos += 1;
+            let top = self.stack.last_mut().unwrap();
+            top.has_elems = true;
+            top.awaiting_value = true;
+            return Ok(Some(Event::Key(key)));
+        }
+        if frame.kind == b'{' {
+            // the value after a key
+            self.stack.last_mut().unwrap().awaiting_value = false;
+            return self.value_event().map(Some);
+        }
+        // array element, `]`, or `,`
+        match self.peek() {
+            Some(b']') => {
+                self.pos += 1;
+                self.stack.pop();
+                return Ok(Some(Event::ArrEnd));
+            }
+            None => return Err(self.err("unterminated array")),
+            _ => {}
+        }
+        if frame.has_elems {
+            if self.peek() != Some(b',') {
+                return Err(self.err("expected ',' or ']'"));
+            }
+            self.pos += 1;
+            self.skip_ws();
+        }
+        self.stack.last_mut().unwrap().has_elems = true;
+        self.value_event().map(Some)
+    }
+
+    fn value_event(&mut self) -> Result<Event<'a>, JsonError> {
+        match self.peek() {
+            Some(b'{') | Some(b'[') => {
+                if self.stack.len() >= MAX_DEPTH {
+                    return Err(self.err(&format!(
+                        "nesting exceeds depth limit ({MAX_DEPTH})"
+                    )));
+                }
+                let kind = self.peek().unwrap();
+                self.pos += 1;
+                self.stack.push(LexFrame {
+                    kind,
+                    has_elems: false,
+                    awaiting_value: false,
+                });
+                Ok(if kind == b'{' {
+                    Event::ObjStart
+                } else {
+                    Event::ArrStart
+                })
+            }
+            Some(b'"') => Ok(Event::Str(self.raw_string()?)),
+            Some(b't') => self.lit("true", Event::Bool(true)),
+            Some(b'f') => self.lit("false", Event::Bool(false)),
+            Some(b'n') => self.lit("null", Event::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => {
+                Ok(Event::Num(self.raw_number()?))
+            }
+            _ => Err(self.err("unexpected character")),
+        }
+    }
+
+    fn lit(
+        &mut self,
+        word: &str,
+        ev: Event<'a>,
+    ) -> Result<Event<'a>, JsonError> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(ev)
+        } else {
+            Err(self.err(&format!("expected '{word}'")))
+        }
+    }
+
+    /// Scan a string, validating escapes but not decoding them;
+    /// returns the raw body (quotes stripped). Never allocates: the
+    /// slice borrows the input. Byte-wise scanning is safe because
+    /// `"` and `\` cannot occur inside a UTF-8 continuation sequence.
+    fn raw_string(&mut self) -> Result<&'a str, JsonError> {
+        if self.peek() != Some(b'"') {
+            return Err(self.err("expected string"));
+        }
+        self.pos += 1;
+        let start = self.pos;
+        loop {
+            match self.peek() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    let raw = std::str::from_utf8(
+                        &self.bytes[start..self.pos],
+                    )
+                    .map_err(|_| self.err("invalid utf-8"))?;
+                    self.pos += 1;
+                    return Ok(raw);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    match self.peek() {
+                        Some(
+                            b'"' | b'\\' | b'/' | b'b' | b'f' | b'n'
+                            | b'r' | b't',
+                        ) => self.pos += 1,
+                        Some(b'u') => {
+                            self.pos += 1;
+                            for _ in 0..4 {
+                                match self.peek() {
+                                    Some(c)
+                                        if c.is_ascii_hexdigit() =>
+                                    {
+                                        self.pos += 1
+                                    }
+                                    _ => {
+                                        return Err(
+                                            self.err("bad hex digit")
+                                        )
+                                    }
+                                }
+                            }
+                        }
+                        _ => return Err(self.err("bad escape")),
+                    }
+                }
+                Some(_) => self.pos += 1,
+            }
+        }
+    }
+
+    /// Scan a number token; acceptance matches the tree parser (which
+    /// defers validity to `str::parse`).
+    fn raw_number(&mut self) -> Result<&'a str, JsonError> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.pos += 1;
+        }
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit())
+            {
+                self.pos += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit())
+            {
+                self.pos += 1;
+            }
+        }
+        let text =
+            std::str::from_utf8(&self.bytes[start..self.pos])
+                .map_err(|_| self.err("invalid number"))?;
+        if text.parse::<f64>().is_err() {
+            return Err(self.err("invalid number"));
+        }
+        Ok(text)
+    }
+}
+
+/// Callback form of the lexer: feed every event of `input` to `f`
+/// without building a tree.
+pub fn visit<'a>(
+    input: &'a str,
+    mut f: impl FnMut(&Event<'a>),
+) -> Result<(), JsonError> {
+    let mut lx = Lexer::new(input);
+    while let Some(ev) = lx.next_event()? {
+        f(&ev);
+    }
+    Ok(())
+}
+
+/// Decode a raw string body (as borrowed by [`Event::Key`] /
+/// [`Event::Str`]) into its unescaped form — the inverse of the
+/// writer's escaping. Delegates to the tree parser's escape logic so
+/// the two layers cannot drift.
+pub fn unescape(raw: &str) -> Result<String, JsonError> {
+    let quoted = format!("\"{raw}\"");
+    let mut p = Parser {
+        bytes: quoted.as_bytes(),
+        pos: 0,
+        depth: 0,
+    };
+    let s = p.string()?;
+    if p.pos != quoted.len() {
+        return Err(JsonError {
+            msg: "unescaped quote in raw string".into(),
+            offset: p.pos,
+        });
+    }
+    Ok(s)
+}
+
+fn eof_err(lx: &Lexer) -> JsonError {
+    JsonError {
+        msg: "unexpected end of input".into(),
+        offset: lx.offset(),
+    }
+}
+
+/// Consume the remainder of the value that `ev` opened (no-op for
+/// scalars), leaving the lexer positioned after it.
+fn skip_value(lx: &mut Lexer, ev: &Event) -> Result<(), JsonError> {
+    match ev {
+        Event::ObjStart | Event::ArrStart => {
+            let target = lx.depth() - 1;
+            while lx.depth() > target {
+                lx.next_event()?.ok_or_else(|| eof_err(lx))?;
+            }
+            Ok(())
+        }
+        _ => Ok(()),
+    }
+}
+
+/// Lazily scan `input` for the value at `path` (object keys; array
+/// segments are decimal indices). Off-path subtrees are skipped
+/// byte-wise — nothing is parsed into memory. Returns the opening
+/// event of the value (`ObjStart`/`ArrStart` for containers), or
+/// `None` if any segment is absent.
+pub fn path_value<'a>(
+    input: &'a str,
+    path: &[&str],
+) -> Result<Option<Event<'a>>, JsonError> {
+    let mut lx = Lexer::new(input);
+    let mut ev = match lx.next_event()? {
+        Some(e) => e,
+        None => return Ok(None),
+    };
+    for seg in path {
+        match ev {
+            Event::ObjStart => {
+                let mut found = None;
+                loop {
+                    match lx.next_event()?.ok_or_else(|| eof_err(&lx))? {
+                        Event::Key(k) => {
+                            let hit = k == *seg
+                                || unescape(k)
+                                    .map(|u| u == *seg)
+                                    .unwrap_or(false);
+                            let v = lx
+                                .next_event()?
+                                .ok_or_else(|| eof_err(&lx))?;
+                            if hit {
+                                found = Some(v);
+                                break;
+                            }
+                            skip_value(&mut lx, &v)?;
+                        }
+                        Event::ObjEnd => break,
+                        _ => unreachable!("lexer yields keys in objects"),
+                    }
+                }
+                match found {
+                    Some(v) => ev = v,
+                    None => return Ok(None),
+                }
+            }
+            Event::ArrStart => {
+                let idx: usize = match seg.parse() {
+                    Ok(i) => i,
+                    Err(_) => return Ok(None),
+                };
+                let mut i = 0usize;
+                loop {
+                    match lx.next_event()?.ok_or_else(|| eof_err(&lx))? {
+                        Event::ArrEnd => return Ok(None),
+                        v => {
+                            if i == idx {
+                                ev = v;
+                                break;
+                            }
+                            skip_value(&mut lx, &v)?;
+                            i += 1;
+                        }
+                    }
+                }
+            }
+            _ => return Ok(None), // scalar mid-path
+        }
+    }
+    Ok(Some(ev))
+}
+
+/// Lazy numeric read at `path` — never builds a tree. `None` when the
+/// path is absent or not a number.
+pub fn path_f64(
+    input: &str,
+    path: &[&str],
+) -> Result<Option<f64>, JsonError> {
+    match path_value(input, path)? {
+        Some(Event::Num(s)) => Ok(s.parse().ok()),
+        _ => Ok(None),
+    }
+}
+
+/// Lazy string read at `path` — scans bytes, allocates only the
+/// returned (unescaped) string. `None` when absent or not a string.
+pub fn path_str(
+    input: &str,
+    path: &[&str],
+) -> Result<Option<String>, JsonError> {
+    match path_value(input, path)? {
+        Some(Event::Str(s)) => Ok(Some(unescape(s)?)),
+        _ => Ok(None),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Byte-range differ
+// ---------------------------------------------------------------------------
+
+/// First divergence between two JSON streams, located by lexing both
+/// in lockstep — memory stays bounded by nesting depth no matter how
+/// large the documents are.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JsonDiff {
+    /// Dotted/indexed path to the diverging value, e.g.
+    /// `$.points[3].label`.
+    pub path: String,
+    /// Byte offset just past the divergence in the left stream.
+    pub offset_a: usize,
+    /// Byte offset just past the divergence in the right stream.
+    pub offset_b: usize,
+    /// Human description of the two sides.
+    pub detail: String,
+}
+
+impl fmt::Display for JsonDiff {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} (byte {} vs {}): {}",
+            self.path, self.offset_a, self.offset_b, self.detail
+        )
+    }
+}
+
+enum DiffFrame {
+    Obj(Option<String>),
+    Arr(usize),
+}
+
+fn render_path(frames: &[DiffFrame]) -> String {
+    let mut s = String::from("$");
+    for f in frames {
+        match f {
+            DiffFrame::Obj(Some(k)) => {
+                s.push('.');
+                s.push_str(k);
+            }
+            DiffFrame::Obj(None) => s.push_str(".{}"),
+            DiffFrame::Arr(i) => s.push_str(&format!("[{i}]")),
+        }
+    }
+    s
+}
+
+/// Compare two canonical JSON streams lazily, token-by-token.
+/// `None` means lexically identical (for canonical output that is
+/// byte-identity up to insignificant whitespace — our writers pin
+/// whitespace too, so callers typically pre-check `a == b` and use
+/// this to *localize* the divergence). The first mismatching token,
+/// structural difference, or lex error is reported with the JSON path
+/// and both byte offsets.
+pub fn diff(a: &str, b: &str) -> Option<JsonDiff> {
+    let mut la = Lexer::new(a);
+    let mut lb = Lexer::new(b);
+    let mut frames: Vec<DiffFrame> = Vec::new();
+    loop {
+        let ea = la.next_event();
+        let eb = lb.next_event();
+        let at = |detail: String, frames: &[DiffFrame]| {
+            Some(JsonDiff {
+                path: render_path(frames),
+                offset_a: la.offset(),
+                offset_b: lb.offset(),
+                detail,
+            })
+        };
+        let (ea, eb) = match (ea, eb) {
+            (Err(e), _) => {
+                return at(
+                    format!("left stream invalid: {}", e.msg),
+                    &frames,
+                )
+            }
+            (_, Err(e)) => {
+                return at(
+                    format!("right stream invalid: {}", e.msg),
+                    &frames,
+                )
+            }
+            (Ok(None), Ok(None)) => return None,
+            (Ok(Some(_)), Ok(None)) => {
+                return at("left has extra trailing data".into(), &frames)
+            }
+            (Ok(None), Ok(Some(_))) => {
+                return at(
+                    "right has extra trailing data".into(),
+                    &frames,
+                )
+            }
+            (Ok(Some(x)), Ok(Some(y))) => (x, y),
+        };
+        if ea != eb {
+            return at(format!("{ea:?} != {eb:?}"), &frames);
+        }
+        // streams agree on this event — thread it through the path
+        match ea {
+            Event::ObjStart => frames.push(DiffFrame::Obj(None)),
+            Event::ArrStart => frames.push(DiffFrame::Arr(0)),
+            Event::ObjEnd | Event::ArrEnd => {
+                frames.pop();
+                if let Some(DiffFrame::Arr(i)) = frames.last_mut() {
+                    *i += 1;
+                }
+            }
+            Event::Key(k) => {
+                if let Some(DiffFrame::Obj(slot)) = frames.last_mut() {
+                    *slot = Some(
+                        unescape(k).unwrap_or_else(|_| k.to_string()),
+                    );
+                }
+            }
+            _ => {
+                if let Some(DiffFrame::Arr(i)) = frames.last_mut() {
+                    *i += 1;
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -642,5 +1301,339 @@ mod tests {
             let v = parse(&Json::Num(x).to_string()).unwrap();
             assert_eq!(v.as_f64().unwrap(), x);
         }
+    }
+
+    // ---------------- depth limit ----------------
+
+    #[test]
+    fn depth_bomb_rejected_not_overflowed() {
+        // regression: 10k-deep input used to overflow the parser's
+        // recursion; now both layers error at MAX_DEPTH
+        let bomb = "[".repeat(10_000) + &"]".repeat(10_000);
+        let err = parse(&bomb).unwrap_err();
+        assert!(err.msg.contains("depth limit"), "{}", err.msg);
+        let obomb = "{\"k\":".repeat(10_000) + "0"
+            + &"}".repeat(10_000);
+        assert!(parse(&obomb)
+            .unwrap_err()
+            .msg
+            .contains("depth limit"));
+        // the lexer enforces the same bound
+        let mut lx = Lexer::new(&bomb);
+        let res = loop {
+            match lx.next_event() {
+                Ok(Some(_)) => continue,
+                other => break other,
+            }
+        };
+        assert!(res.unwrap_err().msg.contains("depth limit"));
+    }
+
+    #[test]
+    fn deep_but_legal_nesting_parses() {
+        let n = MAX_DEPTH - 1;
+        let ok = "[".repeat(n) + "7" + &"]".repeat(n);
+        assert!(parse(&ok).is_ok());
+        let mut events = 0usize;
+        visit(&ok, |_| events += 1).unwrap();
+        assert_eq!(events, 2 * n + 1);
+    }
+
+    // ---------------- parse_file / line:column ----------------
+
+    #[test]
+    fn line_col_maps_offsets() {
+        let text = "{\n  \"a\": 1,\n  \"b\": nope\n}";
+        let err = parse(text).unwrap_err();
+        let (line, col) = err.line_col(text);
+        assert_eq!(line, 3);
+        assert!(col >= 8, "column {col}");
+    }
+
+    #[test]
+    fn parse_file_errors_are_json_errors_with_context() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("tlora_json_parse_file_test.json");
+        std::fs::write(&path, "{\n  \"a\": [1, 2,]\n}").unwrap();
+        let err = parse_file(&path).unwrap_err();
+        assert!(err.msg.contains("line 2"), "{}", err.msg);
+        assert!(
+            err.msg.contains("tlora_json_parse_file_test.json"),
+            "{}",
+            err.msg
+        );
+        // the String conversion used by `?` call sites keeps context
+        let s: String = err.into();
+        assert!(s.contains("line 2"), "{s}");
+        let _ = std::fs::remove_file(&path);
+        let missing = parse_file(&dir.join("tlora_definitely_absent"));
+        assert!(missing.unwrap_err().msg.starts_with("read "));
+    }
+
+    // ---------------- lexer ----------------
+
+    #[test]
+    fn lexer_event_sequence() {
+        let text = r#"{"a": [1, "x\n", true], "b": null}"#;
+        let mut got = Vec::new();
+        visit(text, |ev| got.push(format!("{ev:?}"))).unwrap();
+        assert_eq!(
+            got,
+            vec![
+                "ObjStart",
+                "Key(\"a\")",
+                "ArrStart",
+                "Num(\"1\")",
+                "Str(\"x\\\\n\")", // raw body: escapes undecoded
+                "Bool(true)",
+                "ArrEnd",
+                "Key(\"b\")",
+                "Null",
+                "ObjEnd",
+            ]
+        );
+    }
+
+    #[test]
+    fn lexer_rejects_what_parser_rejects() {
+        for bad in
+            ["{", "[1,]", "1 2", "{\"a\" 1}", "nul", "[1 2]", "{,}"]
+        {
+            let mut lx = Lexer::new(bad);
+            let res = loop {
+                match lx.next_event() {
+                    Ok(Some(_)) => continue,
+                    other => break other,
+                }
+            };
+            assert!(res.is_err(), "lexer accepted {bad:?}");
+            assert!(parse(bad).is_err(), "parser accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn unescape_decodes_raw_bodies() {
+        assert_eq!(unescape("x\\ny").unwrap(), "x\ny");
+        assert_eq!(unescape("\\u00e9").unwrap(), "é");
+        assert_eq!(unescape("plain").unwrap(), "plain");
+        assert!(unescape("broken\\").is_err());
+    }
+
+    // ---------------- lazy path reads ----------------
+
+    #[test]
+    fn path_reads_scan_without_parsing() {
+        let text = r#"{"cells": [{"key": "a", "v": [1.5, 0.25]},
+                                  {"key": "b", "v": [2.5, 0.5]}],
+                       "n_points": 4, "label": "run \"x\""}"#;
+        assert_eq!(
+            path_f64(text, &["n_points"]).unwrap(),
+            Some(4.0)
+        );
+        assert_eq!(
+            path_f64(text, &["cells", "1", "v", "0"]).unwrap(),
+            Some(2.5)
+        );
+        assert_eq!(
+            path_str(text, &["cells", "0", "key"]).unwrap(),
+            Some("a".into())
+        );
+        assert_eq!(
+            path_str(text, &["label"]).unwrap(),
+            Some("run \"x\"".into())
+        );
+        // absent / type-mismatched paths are None, not errors
+        assert_eq!(path_f64(text, &["absent"]).unwrap(), None);
+        assert_eq!(path_f64(text, &["cells", "9"]).unwrap(), None);
+        assert_eq!(path_str(text, &["n_points"]).unwrap(), None);
+        assert_eq!(
+            path_f64(text, &["label", "deeper"]).unwrap(),
+            None
+        );
+        // malformed input is an error even off-path
+        assert!(path_f64("{\"a\": [1,]}", &["b"]).is_err());
+    }
+
+    // ---------------- differ ----------------
+
+    #[test]
+    fn diff_identical_is_none() {
+        let v = Json::obj()
+            .set("a", 1i64)
+            .set("b", Json::Arr(vec![Json::Num(1.5), Json::Null]));
+        assert_eq!(diff(&v.to_pretty(), &v.to_pretty()), None);
+        // insignificant whitespace is invisible to the differ
+        assert_eq!(diff("[1, 2]", "[1,2]"), None);
+    }
+
+    #[test]
+    fn diff_localizes_first_divergence() {
+        let a = r#"{"points": [{"x": 1}, {"x": 2}]}"#;
+        let b = r#"{"points": [{"x": 1}, {"x": 3}]}"#;
+        let d = diff(a, b).unwrap();
+        assert_eq!(d.path, "$.points[1].x");
+        assert!(d.detail.contains('2') && d.detail.contains('3'));
+        assert!(d.offset_a > 0 && d.offset_b > 0);
+        let shown = d.to_string();
+        assert!(shown.contains("$.points[1].x"), "{shown}");
+    }
+
+    #[test]
+    fn diff_reports_structural_and_length_mismatches() {
+        let d = diff(r#"{"a": 1}"#, r#"{"a": [1]}"#).unwrap();
+        assert_eq!(d.path, "$.a");
+        let d = diff("[1, 2]", "[1, 2, 3]").unwrap();
+        assert_eq!(d.path, "$[2]");
+        let d = diff(r#"{"a": 1}"#, r#"{"b": 1}"#).unwrap();
+        assert_eq!(d.path, "$.{}");
+        assert!(diff("[]", "[]").is_none());
+        let d = diff("[]", "[] 1").unwrap();
+        assert!(d.detail.contains("invalid"), "{}", d.detail);
+    }
+
+    // ---------------- property tests ----------------
+
+    fn rand_json(r: &mut crate::util::rng::Rng, depth: usize) -> Json {
+        let pick = if depth == 0 {
+            r.range(0, 4) // scalars only at the leaves
+        } else {
+            r.range(0, 6)
+        };
+        match pick {
+            0 => Json::Null,
+            1 => Json::Bool(r.bool(0.5)),
+            // bounded so f64 round-trips exactly and stays Int-typed
+            2 => Json::Int(
+                r.range(0, 1 << 50) as i64
+                    - if r.bool(0.5) { 1 << 49 } else { 0 },
+            ),
+            3 => Json::Num(r.range_f64(-1e6, 1e6)),
+            4 => {
+                let n = r.range(0, 8);
+                Json::Str(
+                    (0..n)
+                        .map(|_| {
+                            *r.choice(&[
+                                'a', 'é', '"', '\\', '\n', '\t',
+                                '😀', ' ',
+                            ])
+                        })
+                        .collect(),
+                )
+            }
+            _ => {
+                let n = r.range(0, 4);
+                if r.bool(0.5) {
+                    Json::Arr(
+                        (0..n)
+                            .map(|_| rand_json(r, depth - 1))
+                            .collect(),
+                    )
+                } else {
+                    let mut m = BTreeMap::new();
+                    for i in 0..n {
+                        m.insert(
+                            format!("k{i}"),
+                            rand_json(r, depth - 1),
+                        );
+                    }
+                    Json::Obj(m)
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_parse_write_roundtrips() {
+        let gen = crate::util::prop::Gen::new(
+            |r| rand_json(r, 3),
+            |_| vec![],
+        );
+        crate::util::prop::prop_check(200, &gen, |v| {
+            parse(&v.to_string()).ok().as_ref() == Some(v)
+                && parse(&v.to_pretty()).ok().as_ref() == Some(v)
+        });
+    }
+
+    /// Replay a lexer stream back into a tree so the two layers can be
+    /// compared semantically (strings unescaped, numbers parsed).
+    fn tree_from_events(lx: &mut Lexer) -> Result<Json, JsonError> {
+        let ev = lx.next_event()?.expect("value expected");
+        tree_from(lx, ev)
+    }
+
+    fn tree_from(
+        lx: &mut Lexer,
+        ev: Event,
+    ) -> Result<Json, JsonError> {
+        Ok(match ev {
+            Event::Null => Json::Null,
+            Event::Bool(b) => Json::Bool(b),
+            Event::Num(s) => {
+                // same int-vs-float decision as the tree parser
+                if !s.contains(&['.', 'e', 'E'][..]) {
+                    if let Ok(i) = s.parse::<i64>() {
+                        return Ok(Json::Int(i));
+                    }
+                }
+                Json::Num(s.parse().unwrap())
+            }
+            Event::Str(s) => Json::Str(unescape(s)?),
+            Event::ArrStart => {
+                let mut a = Vec::new();
+                loop {
+                    match lx.next_event()?.expect("in array") {
+                        Event::ArrEnd => break,
+                        v => a.push(tree_from(lx, v)?),
+                    }
+                }
+                Json::Arr(a)
+            }
+            Event::ObjStart => {
+                let mut m = BTreeMap::new();
+                loop {
+                    match lx.next_event()?.expect("in object") {
+                        Event::ObjEnd => break,
+                        Event::Key(k) => {
+                            let v = lx
+                                .next_event()?
+                                .expect("value after key");
+                            m.insert(
+                                unescape(k)?,
+                                tree_from(lx, v)?,
+                            );
+                        }
+                        other => {
+                            panic!("unexpected in object: {other:?}")
+                        }
+                    }
+                }
+                Json::Obj(m)
+            }
+            Event::Key(_) | Event::ObjEnd | Event::ArrEnd => {
+                panic!("not a value event: {ev:?}")
+            }
+        })
+    }
+
+    #[test]
+    fn prop_lexer_equivalent_to_tree_parser() {
+        let gen = crate::util::prop::Gen::new(
+            |r| rand_json(r, 3),
+            |_| vec![],
+        );
+        crate::util::prop::prop_check(200, &gen, |v| {
+            for text in [v.to_string(), v.to_pretty()] {
+                let mut lx = Lexer::new(&text);
+                let rebuilt = tree_from_events(&mut lx).unwrap();
+                if lx.next_event().unwrap().is_some() {
+                    return false; // trailing events
+                }
+                if &rebuilt != v {
+                    return false;
+                }
+            }
+            true
+        });
     }
 }

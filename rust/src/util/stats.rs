@@ -84,15 +84,17 @@ pub fn mean(xs: &[f64]) -> f64 {
 /// approximation, `1.96 * s / sqrt(n)` with the sample standard
 /// deviation). Half-width is 0 for fewer than two observations. The
 /// sweep engine reports every aggregated metric as `mean ± ci95`.
+///
+/// Implemented as a [`Welford`] fold so the legacy collect-then-
+/// aggregate report path and the streaming online-accumulator path
+/// produce bit-identical results for the same observations in the
+/// same order.
 pub fn mean_ci95(xs: &[f64]) -> (f64, f64) {
-    let s = Summary::of(xs);
-    if s.n < 2 {
-        return (s.mean, 0.0);
+    let mut w = Welford::default();
+    for &x in xs {
+        w.add(x);
     }
-    let n = s.n as f64;
-    // Summary.std is the population σ; rescale to the sample estimate
-    let sample_var = s.std * s.std * n / (n - 1.0);
-    (s.mean, 1.96 * (sample_var / n).sqrt())
+    w.mean_ci95()
 }
 
 /// Empirical CDF sampled at `points` evenly-spaced quantiles —
@@ -207,6 +209,32 @@ impl Welford {
 
     pub fn std(&self) -> f64 {
         self.var().sqrt()
+    }
+
+    /// Unbiased (n-1) sample variance; 0 below two observations.
+    pub fn sample_var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    /// 95% confidence half-width of the mean (normal approximation);
+    /// 0 below two observations.
+    pub fn ci95(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            1.96 * (self.sample_var() / self.n as f64).sqrt()
+        }
+    }
+
+    /// `(mean, ci95)` — the pair every sweep-report metric is made of.
+    /// Bit-identical to the free [`mean_ci95`] over the same values in
+    /// the same order (that function is this fold).
+    pub fn mean_ci95(&self) -> (f64, f64) {
+        (self.mean, self.ci95())
     }
 }
 
@@ -331,6 +359,24 @@ mod tests {
         let s = Summary::of(&xs);
         assert!((w.mean() - s.mean).abs() < 1e-12);
         assert!((w.std() - s.std).abs() < 1e-12);
+    }
+
+    #[test]
+    fn welford_ci95_is_bitwise_the_batch_fold() {
+        // The streaming report's online accumulators must reproduce
+        // the legacy collect-then-aggregate bytes exactly; that holds
+        // because mean_ci95 *is* a Welford fold — pin the identity.
+        let xs = [0.125, 3.5, -2.75, 9.0, 9.0, 0.0625, 1e-9, 4.2];
+        for k in 0..=xs.len() {
+            let mut w = Welford::default();
+            for &x in &xs[..k] {
+                w.add(x);
+            }
+            let (bm, bc) = mean_ci95(&xs[..k]);
+            let (wm, wc) = w.mean_ci95();
+            assert_eq!(bm.to_bits(), wm.to_bits(), "mean k={k}");
+            assert_eq!(bc.to_bits(), wc.to_bits(), "ci k={k}");
+        }
     }
 
     #[test]

@@ -20,7 +20,8 @@ pub use faults::{
     NodeFaultModel, PreemptionModel, ScriptedFault, ScriptedStraggler,
     StragglerModel,
 };
-pub use trace::{TraceGenerator, TraceProfile, load_csv, save_csv};
+pub use trace::{load_csv, save_csv, DiurnalProfile, TenantClass,
+                TraceGenerator, TraceProfile};
 
 /// One LoRA fine-tuning job (fixed at submission, §A.1).
 #[derive(Debug, Clone, PartialEq)]

@@ -9,6 +9,52 @@
 use super::JobSpec;
 use crate::util::rng::Rng;
 
+/// Sinusoidal arrival-rate modulation for day/night load shapes:
+/// `rate(t) = rate · (1 + amplitude · sin(2πt/period + phase))`.
+/// Arrivals are drawn from the resulting nonhomogeneous Poisson
+/// process by thinning, so million-arrival traces stream out in O(1)
+/// memory per job like the homogeneous path.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DiurnalProfile {
+    pub period_s: f64,
+    /// peak-to-mean rate swing, in [0, 1)
+    pub amplitude: f64,
+    /// radians; 0 puts the peak a quarter-period after t=0
+    pub phase: f64,
+}
+
+impl DiurnalProfile {
+    /// A 24-hour cycle with the given amplitude.
+    pub fn daily(amplitude: f64) -> DiurnalProfile {
+        DiurnalProfile {
+            period_s: 86_400.0,
+            amplitude,
+            phase: 0.0,
+        }
+    }
+
+    /// Instantaneous rate multiplier at time `t`.
+    pub fn rate_factor(&self, t: f64) -> f64 {
+        1.0 + self.amplitude
+            * (std::f64::consts::TAU * t / self.period_s
+                + self.phase)
+                .sin()
+    }
+}
+
+/// One tenant population in a mixed workload. `weight` is the
+/// relative share of arrivals; `None` fields inherit the profile's
+/// catalogs, so a class only perturbs what it overrides.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantClass {
+    pub name: String,
+    pub weight: f64,
+    /// lognormal mu override for total training steps
+    pub steps_mu: Option<f64>,
+    pub gpu_gangs: Option<Vec<usize>>,
+    pub ranks: Option<Vec<usize>>,
+}
+
 /// Arrival/workload shape knobs.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TraceProfile {
@@ -29,6 +75,13 @@ pub struct TraceProfile {
     pub base_models: Vec<String>,
     /// Δ^max range (bounded-slowdown tolerance)
     pub max_slowdown: (f64, f64),
+    /// day/night arrival modulation; `None` keeps the homogeneous
+    /// Poisson process (and the exact pre-diurnal RNG stream — the
+    /// month profiles all disable it, so their traces are byte-stable)
+    pub diurnal: Option<DiurnalProfile>,
+    /// tenant mix; empty means one population drawn straight from the
+    /// profile catalogs (again the exact legacy RNG stream)
+    pub tenants: Vec<TenantClass>,
 }
 
 impl TraceProfile {
@@ -53,6 +106,8 @@ impl TraceProfile {
             gpu_gangs: vec![1, 1, 2, 2, 4, 8],
             base_models: vec!["llama3-8b".into(), "qwen3-8b".into()],
             max_slowdown: (1.2, 2.0),
+            diurnal: None,
+            tenants: vec![],
         }
     }
 
@@ -79,6 +134,41 @@ impl TraceProfile {
         self.rate *= factor;
         self
     }
+
+    /// Million-arrival stress shape for the report-scaling bench and
+    /// `trace-gen --hyperscale`: dense arrivals, a strong day/night
+    /// cycle, and a three-class tenant mix (interactive fine-tunes,
+    /// steady batch jobs, long-running research runs).
+    pub fn hyperscale() -> TraceProfile {
+        let mut p = TraceProfile::month1();
+        p.rate *= 8.0;
+        p.burst_prob = 0.15;
+        p.diurnal = Some(DiurnalProfile::daily(0.6));
+        p.tenants = vec![
+            TenantClass {
+                name: "interactive".into(),
+                weight: 0.6,
+                steps_mu: Some(6.9), // median ~1000 steps
+                gpu_gangs: Some(vec![1, 1, 2]),
+                ranks: None,
+            },
+            TenantClass {
+                name: "batch".into(),
+                weight: 0.3,
+                steps_mu: None,
+                gpu_gangs: None,
+                ranks: None,
+            },
+            TenantClass {
+                name: "research".into(),
+                weight: 0.1,
+                steps_mu: Some(9.6), // median ~15k steps
+                gpu_gangs: Some(vec![4, 8]),
+                ranks: Some(vec![8, 16]),
+            },
+        ];
+        p
+    }
 }
 
 /// Deterministic synthetic trace generator.
@@ -102,7 +192,7 @@ impl TraceGenerator {
         let mut t = 0.0;
         let mut id = 0u64;
         while jobs.len() < n {
-            t += self.rng.exponential(self.profile.rate);
+            t += self.next_arrival_gap(t);
             let burst = if self.rng.bool(self.profile.burst_prob) {
                 self.rng
                     .range(self.profile.burst_size.0, self.profile.burst_size.1)
@@ -122,19 +212,61 @@ impl TraceGenerator {
         jobs
     }
 
+    /// Seconds until the next arrival after time `t`. Homogeneous
+    /// profiles draw one exponential — the exact pre-diurnal RNG
+    /// stream. Diurnal profiles thin a candidate stream at the peak
+    /// rate: each candidate consumes one exponential plus one accept
+    /// draw, so memory stays O(1) at any trace length.
+    fn next_arrival_gap(&mut self, t: f64) -> f64 {
+        let p = &self.profile;
+        match &p.diurnal {
+            None => self.rng.exponential(p.rate),
+            Some(d) => {
+                let peak = p.rate * (1.0 + d.amplitude);
+                let mut gap = 0.0;
+                loop {
+                    gap += self.rng.exponential(peak);
+                    let accept =
+                        p.rate * d.rate_factor(t + gap) / peak;
+                    if self.rng.f64() < accept {
+                        return gap;
+                    }
+                }
+            }
+        }
+    }
+
     fn sample_job(&mut self, id: u64, submit_time: f64) -> JobSpec {
         let p = &self.profile;
+        // tenant class first (one weighted draw) — skipped entirely
+        // for empty mixes so legacy profiles keep their RNG stream
+        let tenant = if p.tenants.is_empty() {
+            None
+        } else {
+            let weights: Vec<f64> =
+                p.tenants.iter().map(|c| c.weight).collect();
+            Some(&p.tenants[self.rng.weighted(&weights)])
+        };
+        let steps_mu = tenant
+            .and_then(|c| c.steps_mu)
+            .unwrap_or(p.steps_mu);
+        let ranks = tenant
+            .and_then(|c| c.ranks.as_ref())
+            .unwrap_or(&p.ranks);
+        let gangs = tenant
+            .and_then(|c| c.gpu_gangs.as_ref())
+            .unwrap_or(&p.gpu_gangs);
         let steps = self
             .rng
-            .lognormal(p.steps_mu, p.steps_sigma)
+            .lognormal(steps_mu, p.steps_sigma)
             .clamp(20.0, 100_000.0) as u64;
         JobSpec {
             id,
             base_model: self.rng.choice(&p.base_models).clone(),
-            rank: *self.rng.choice(&p.ranks),
+            rank: *self.rng.choice(ranks),
             batch_size: *self.rng.choice(&p.batch_sizes),
             seq_len: *self.rng.choice(&p.seq_lens),
-            gpus: *self.rng.choice(&p.gpu_gangs),
+            gpus: *self.rng.choice(gangs),
             total_steps: steps,
             submit_time,
             max_slowdown: self
@@ -287,6 +419,99 @@ mod tests {
             assert_eq!(a.gpus, b.gpus);
             assert!((a.submit_time - b.submit_time).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn diurnal_generator_deterministic() {
+        let a = TraceGenerator::new(TraceProfile::hyperscale(), 11)
+            .generate(500);
+        let b = TraceGenerator::new(TraceProfile::hyperscale(), 11)
+            .generate(500);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn diurnal_modulates_arrival_density() {
+        // short period so a few thousand arrivals span many cycles;
+        // sin > 0 over the first half-period, so on-peak halves must
+        // collect clearly more arrivals than off-peak halves
+        let mut p = TraceProfile::month1();
+        p.burst_prob = 0.0; // isolate the arrival process
+        p.diurnal = Some(DiurnalProfile {
+            period_s: 2_000.0,
+            amplitude: 0.9,
+            phase: 0.0,
+        });
+        let jobs =
+            TraceGenerator::new(p, 5).generate(6_000);
+        let (mut on_peak, mut off_peak) = (0usize, 0usize);
+        for j in &jobs {
+            if j.submit_time % 2_000.0 < 1_000.0 {
+                on_peak += 1;
+            } else {
+                off_peak += 1;
+            }
+        }
+        let ratio = on_peak as f64 / off_peak as f64;
+        assert!(ratio > 1.5, "on/off-peak ratio {ratio}");
+    }
+
+    #[test]
+    fn diurnal_rate_factor_shape() {
+        let d = DiurnalProfile::daily(0.5);
+        assert!((d.rate_factor(0.0) - 1.0).abs() < 1e-12);
+        assert!((d.rate_factor(21_600.0) - 1.5).abs() < 1e-9);
+        assert!((d.rate_factor(64_800.0) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tenant_mix_overrides_catalogs() {
+        let mut p = TraceProfile::month1();
+        p.tenants = vec![TenantClass {
+            name: "gang8".into(),
+            weight: 1.0,
+            steps_mu: None,
+            gpu_gangs: Some(vec![8]),
+            ranks: Some(vec![16]),
+        }];
+        let jobs = TraceGenerator::new(p, 2).generate(100);
+        assert!(jobs.iter().all(|j| j.gpus == 8 && j.rank == 16));
+    }
+
+    #[test]
+    fn tenant_mix_respects_weights() {
+        // hyperscale: interactive (gangs ≤ 2) is 60% of arrivals and
+        // never draws the research gangs; spot-check the split via
+        // the gang catalogs, which partition the classes
+        let p = TraceProfile::hyperscale();
+        let jobs = TraceGenerator::new(p.clone(), 13).generate(2_000);
+        let small = jobs.iter().filter(|j| j.gpus <= 2).count();
+        assert!(
+            small as f64 / jobs.len() as f64 > 0.55,
+            "small-gang share {small}/{}",
+            jobs.len()
+        );
+        for j in &jobs {
+            assert!(
+                p.gpu_gangs.contains(&j.gpus) || j.gpus == 4 || j.gpus == 8,
+                "gang {} outside every catalog",
+                j.gpus
+            );
+        }
+    }
+
+    #[test]
+    fn hyperscale_sustains_large_traces() {
+        // the bench pushes this to 1M+; unit tests keep it quick
+        let jobs = TraceGenerator::new(TraceProfile::hyperscale(), 1)
+            .generate(100_000);
+        assert_eq!(jobs.len(), 100_000);
+        assert_eq!(jobs[99_999].id, 99_999);
+        let violations = jobs
+            .windows(2)
+            .filter(|w| w[1].submit_time < w[0].submit_time - 30.0)
+            .count();
+        assert_eq!(violations, 0);
     }
 
     #[test]

@@ -31,6 +31,21 @@
 
 use tlora::config::Policy;
 use tlora::sweep::{run, to_json_canonical, SweepGrid};
+use tlora::util::json;
+
+/// Panic with the first diverging JSON path (via the lazy byte-range
+/// differ) instead of dumping two multi-kilobyte canonical strings.
+fn assert_canonical_eq(expect: &str, got: &str, ctx: &str) {
+    if expect != got {
+        match json::diff(expect, got) {
+            Some(d) => panic!("{ctx}; first divergence at {d}"),
+            None => panic!(
+                "{ctx}; bytes differ but the lazy differ found no \
+                 semantic divergence (formatting drift)"
+            ),
+        }
+    }
+}
 
 fn golden_grid() -> SweepGrid {
     let mut g = SweepGrid::default();
@@ -56,9 +71,10 @@ fn golden_faulted_sweep_is_bit_identical_across_threads_and_runs() {
     let parallel = run(&g, 8).unwrap();
     let canon = to_json_canonical(&serial).to_pretty();
     let canon_par = to_json_canonical(&parallel).to_pretty();
-    assert_eq!(
-        canon, canon_par,
-        "canonical sweep JSON differs between --threads 1 and 8"
+    assert_canonical_eq(
+        &canon,
+        &canon_par,
+        "canonical sweep JSON differs between --threads 1 and 8",
     );
 
     // structural pins on the output itself (hold whether or not the
@@ -106,11 +122,12 @@ fn golden_faulted_sweep_is_bit_identical_across_threads_and_runs() {
         .ok()
         .filter(|s| !s.contains("UNBLESSED"));
     match blessed {
-        Some(expect) => assert_eq!(
-            canon, expect,
+        Some(expect) => assert_canonical_eq(
+            &expect,
+            &canon,
             "sweep output diverged from the committed golden \
              fixture; if the numeric change is intended, regenerate \
-             it (see the header of this file) and commit the diff"
+             it (see the header of this file) and commit the diff",
         ),
         None => {
             std::fs::create_dir_all(path.parent().unwrap()).unwrap();
@@ -146,17 +163,19 @@ fn straggler_machinery_is_byte_free_when_disabled() {
     explicit.stragglers = vec![0.0];
     let explicit_out =
         to_json_canonical(&run(&explicit, 2).unwrap()).to_pretty();
-    assert_eq!(
-        base, explicit_out,
-        "explicit --stragglers 0 diverged from the default axis"
+    assert_canonical_eq(
+        &base,
+        &explicit_out,
+        "explicit --stragglers 0 diverged from the default axis",
     );
 
     let mut oblivious = golden_grid();
     oblivious.base.stragglers.detect = false;
     let oblivious_out =
         to_json_canonical(&run(&oblivious, 2).unwrap()).to_pretty();
-    assert_eq!(
-        base, oblivious_out,
-        "stragglers.detect changed a straggler-free run"
+    assert_canonical_eq(
+        &base,
+        &oblivious_out,
+        "stragglers.detect changed a straggler-free run",
     );
 }

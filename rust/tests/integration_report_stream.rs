@@ -1,0 +1,124 @@
+//! Streaming-report differential: the O(1)-memory streaming writer
+//! ([`StreamReport`]) must be byte-identical to the legacy
+//! collect-then-emit path on the *golden grid* (the same pinned
+//! faulted sweep `integration_golden.rs` blesses), at thread counts 1
+//! and 8, across every output form — canonical JSON, CSV, and the
+//! rendered summary table. Failures are localized with the lazy
+//! byte-range differ (`json::diff`) so a regression names the first
+//! diverging path instead of dumping two multi-kilobyte strings.
+
+use tlora::config::Policy;
+use tlora::sweep::{
+    aggregate, run, run_streaming, sweep_table, to_csv,
+    to_json_canonical, Spool, StreamReport, SweepGrid,
+};
+use tlora::util::json;
+
+/// Keep in sync with `golden_grid()` in `integration_golden.rs`.
+fn golden_grid() -> SweepGrid {
+    let mut g = SweepGrid::default();
+    g.policies = vec![Policy::TLora, Policy::Megatron];
+    g.n_jobs = vec![10];
+    g.gpus = vec![16];
+    g.rate_scales = vec![2.0];
+    g.months = vec![1];
+    g.mtbfs = vec![0.0, 900.0];
+    g.seeds = vec![7, 8];
+    g
+}
+
+/// Panic with the first diverging JSON path when canonical streams
+/// differ; plain `assert_eq!` on multi-KB strings buries it.
+fn assert_canonical_eq(expect: &str, got: &str, ctx: &str) {
+    if expect != got {
+        match json::diff(expect, got) {
+            Some(d) => panic!("{ctx}: first divergence at {d}"),
+            None => panic!(
+                "{ctx}: bytes differ but the lazy differ found no \
+                 semantic divergence — formatting drift between \
+                 writers"
+            ),
+        }
+    }
+}
+
+/// Run the streaming report with in-memory sinks at `threads`.
+fn stream_outputs(
+    grid: &SweepGrid,
+    threads: usize,
+) -> (String, String, Vec<tlora::sweep::CellSummary>) {
+    let mut jbuf: Vec<u8> = Vec::new();
+    let mut cbuf: Vec<u8> = Vec::new();
+    let mut report = StreamReport::new(grid, false)
+        .with_json(&mut jbuf, Spool::memory())
+        .with_csv(&mut cbuf);
+    let stats = run_streaming(grid, threads, &mut |pr| {
+        report.point(&pr).map_err(|e| format!("emission: {e}"))
+    })
+    .unwrap();
+    let cells = report.finish(stats.n_threads, stats.wall_s).unwrap();
+    (
+        String::from_utf8(jbuf).unwrap(),
+        String::from_utf8(cbuf).unwrap(),
+        cells,
+    )
+}
+
+#[test]
+fn streaming_report_matches_legacy_on_golden_grid() {
+    let g = golden_grid();
+    let legacy_run = run(&g, 8).unwrap();
+    let legacy_json = to_json_canonical(&legacy_run).to_pretty();
+    let legacy_csv = to_csv(&legacy_run);
+    let legacy_table =
+        sweep_table("t", &aggregate(&legacy_run)).render();
+
+    for threads in [1usize, 8] {
+        let (sj, sc, cells) = stream_outputs(&g, threads);
+        assert_canonical_eq(
+            &legacy_json,
+            &sj,
+            &format!(
+                "streaming canonical JSON (threads {threads}) vs \
+                 legacy writer"
+            ),
+        );
+        assert_eq!(
+            legacy_csv, sc,
+            "streaming CSV diverged from legacy at threads {threads}"
+        );
+        assert_eq!(
+            legacy_table,
+            sweep_table("t", &cells).render(),
+            "streaming summary table diverged at threads {threads}"
+        );
+    }
+}
+
+#[test]
+fn duplicate_axis_values_are_rejected_not_misaggregated() {
+    // Duplicate axis values make a cell key reappear after its
+    // accumulator closed; the streaming writer must refuse (pointing
+    // at --legacy-report) rather than emit a second partial cell.
+    let mut g = SweepGrid::default();
+    g.policies = vec![Policy::TLora];
+    g.n_jobs = vec![10];
+    g.gpus = vec![16];
+    g.rate_scales = vec![2.0];
+    g.months = vec![1];
+    g.mtbfs = vec![0.0, 900.0, 0.0];
+    g.seeds = vec![7];
+    let points = {
+        let run = run(&g, 1).unwrap();
+        run.points
+    };
+    let mut rep = StreamReport::new(&g, false);
+    rep.point(&points[0]).unwrap();
+    rep.point(&points[1]).unwrap();
+    let err = rep.point(&points[2]).unwrap_err().to_string();
+    assert!(
+        err.contains("non-adjacently") && err.contains("legacy"),
+        "duplicate-cell error should direct to the legacy report: \
+         {err}"
+    );
+}

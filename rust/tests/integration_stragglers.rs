@@ -213,11 +213,15 @@ fn seeded_straggler_sweep_canonical_json_identical_threads_1_vs_8() {
     let parallel = run(&g, 8).unwrap();
     let canon = to_json_canonical(&serial).to_pretty();
     let canon_par = to_json_canonical(&parallel).to_pretty();
-    assert_eq!(
-        canon, canon_par,
-        "degraded-node canonical sweep JSON differs between \
-         --threads 1 and 8"
-    );
+    if canon != canon_par {
+        panic!(
+            "degraded-node canonical sweep JSON differs between \
+             --threads 1 and 8; first divergence at {}",
+            tlora::util::json::diff(&canon, &canon_par)
+                .map(|d| d.to_string())
+                .unwrap_or_else(|| "formatting drift".into())
+        );
+    }
     // and the degraded cells actually saw episodes
     let parsed = tlora::util::json::parse(&canon).unwrap();
     let mut degrades = 0i64;

@@ -248,10 +248,19 @@ fn mixed_tier_grid_is_bit_identical_across_thread_counts() {
             }
         }
     }
-    assert_eq!(
-        tlora::sweep::to_json_canonical(&serial).to_pretty(),
-        tlora::sweep::to_json_canonical(&parallel).to_pretty()
-    );
+    let canon =
+        tlora::sweep::to_json_canonical(&serial).to_pretty();
+    let canon_par =
+        tlora::sweep::to_json_canonical(&parallel).to_pretty();
+    if canon != canon_par {
+        panic!(
+            "mixed-tier canonical JSON differs across thread counts; \
+             first divergence at {}",
+            tlora::util::json::diff(&canon, &canon_par)
+                .map(|d| d.to_string())
+                .unwrap_or_else(|| "formatting drift".into())
+        );
+    }
     // each mixed cell equals a direct simulate of its config
     for p in serial
         .points
