@@ -94,6 +94,153 @@ impl HardwareTier {
     }
 }
 
+/// Physical topology tree above the node level: GPU < node < rack
+/// (shared switch / power domain) < region. Nodes pack into racks as
+/// contiguous blocks, racks into regions the same way. Cross-rack and
+/// cross-region links run at a multiplier of the IB base rate with
+/// their own latencies, and every rack with more than one configured
+/// rack becomes a named correlated-failure domain
+/// ([`ClusterSpec::failure_domains`]).
+///
+/// Byte-freedom contract: a flat topology ([`TopologySpec::is_flat`],
+/// the default) is never consulted — `bandwidth`/`allreduce_time`/
+/// `p2p_time` early-return the pre-topology math, the allocator keeps
+/// count-based scoring, and no report column or plan-cache key
+/// component is emitted — so untopologized runs stay bit-identical to
+/// pre-topology builds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TopologySpec {
+    /// number of racks (contiguous node blocks); 1 = flat
+    pub racks: usize,
+    /// number of regions (contiguous rack blocks); 1 = single region
+    pub regions: usize,
+    /// cross-rack bandwidth multiplier on the inter-node base rate
+    pub rack_bw: f64,
+    /// cross-region bandwidth multiplier on the inter-node base rate
+    pub region_bw: f64,
+    /// per-hop latency of a cross-rack link (seconds)
+    pub rack_latency_s: f64,
+    /// per-hop latency of a cross-region link (seconds)
+    pub region_latency_s: f64,
+    /// the `--topology` string this spec was parsed from (empty for
+    /// flat topologies; label only, never consulted for pricing)
+    pub spec_str: String,
+}
+
+impl TopologySpec {
+    /// The trivial single-rack tree every cluster starts with.
+    pub fn flat() -> TopologySpec {
+        TopologySpec {
+            racks: 1,
+            regions: 1,
+            rack_bw: 1.0,
+            region_bw: 1.0,
+            rack_latency_s: 5e-6,
+            region_latency_s: 1e-3,
+            spec_str: String::new(),
+        }
+    }
+
+    /// A trivial tree: one rack, one region. Flat topologies take the
+    /// pre-topology code paths bit-for-bit.
+    pub fn is_flat(&self) -> bool {
+        self.racks <= 1 && self.regions <= 1
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.racks == 0 || self.regions == 0 {
+            return Err(
+                "topology: racks and regions must be >= 1".into()
+            );
+        }
+        if self.regions > self.racks {
+            return Err(format!(
+                "topology: {} regions cannot partition {} racks",
+                self.regions, self.racks
+            ));
+        }
+        for (what, v) in [
+            ("rack_bw", self.rack_bw),
+            ("region_bw", self.region_bw),
+            ("rack_lat", self.rack_latency_s),
+            ("region_lat", self.region_latency_s),
+        ] {
+            if !(v.is_finite() && v > 0.0) {
+                return Err(format!(
+                    "topology: {what} must be finite and > 0, got {v}"
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Default for TopologySpec {
+    fn default() -> TopologySpec {
+        TopologySpec::flat()
+    }
+}
+
+/// Parse a `--topology` string into a [`TopologySpec`].
+///
+/// Syntax: colon-separated `key=value` pairs, e.g.
+/// `"racks=4:rack_bw=0.5"`. Known keys: `racks`, `regions`, `rack_bw`,
+/// `region_bw`, `rack_lat`, `region_lat` (latencies in seconds).
+/// Unspecified keys keep the flat defaults (bandwidth multiplier 1.0,
+/// rack latency = the IB default, region latency 1 ms). The empty
+/// string is exactly the flat topology.
+pub fn parse_topology(s: &str) -> Result<TopologySpec, String> {
+    let mut t = TopologySpec::flat();
+    if s.is_empty() {
+        return Ok(t);
+    }
+    for part in s.split(':') {
+        let part = part.trim();
+        let (k, v) = part.split_once('=').ok_or_else(|| {
+            format!(
+                "topology {s:?}: expected key=value, got {part:?}"
+            )
+        })?;
+        let (k, v) = (k.trim(), v.trim());
+        let bad =
+            || format!("topology {s:?}: bad value {v:?} for {k}");
+        match k {
+            "racks" => t.racks = v.parse().map_err(|_| bad())?,
+            "regions" => t.regions = v.parse().map_err(|_| bad())?,
+            "rack_bw" => t.rack_bw = v.parse().map_err(|_| bad())?,
+            "region_bw" => {
+                t.region_bw = v.parse().map_err(|_| bad())?
+            }
+            "rack_lat" => {
+                t.rack_latency_s = v.parse().map_err(|_| bad())?
+            }
+            "region_lat" => {
+                t.region_latency_s = v.parse().map_err(|_| bad())?
+            }
+            _ => {
+                return Err(format!(
+                    "topology {s:?}: unknown key {k:?} (known: \
+                     racks, regions, rack_bw, region_bw, rack_lat, \
+                     region_lat)"
+                ))
+            }
+        }
+    }
+    t.spec_str = s.to_string();
+    t.validate()?;
+    Ok(t)
+}
+
+/// A named set of nodes that fail or degrade together — one shared
+/// switch / power domain per rack, derived from the topology tree.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FailureDomain {
+    /// domain label, e.g. `"rack3"`
+    pub name: String,
+    /// the nodes under the domain (sorted, non-empty)
+    pub nodes: Vec<usize>,
+}
+
 /// Cluster shape: `n_nodes` nodes × `gpus_per_node` GPUs.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ClusterSpec {
@@ -115,6 +262,9 @@ pub struct ClusterSpec {
     /// the `--hardware-mix` string this spec was built from (empty for
     /// homogeneous clusters; label only, never consulted for pricing)
     pub hardware_mix: String,
+    /// the rack/region tree above the node level (flat by default;
+    /// see [`TopologySpec`] for the byte-freedom contract)
+    pub topology: TopologySpec,
 }
 
 impl ClusterSpec {
@@ -136,6 +286,7 @@ impl ClusterSpec {
             tiers: vec![HardwareTier::reference()],
             node_tier: vec![],
             hardware_mix: String::new(),
+            topology: TopologySpec::flat(),
         }
     }
 
@@ -162,6 +313,56 @@ impl ClusterSpec {
         self.node_tier = pattern;
         self.hardware_mix = mix.to_string();
         Ok(())
+    }
+
+    /// Install the rack/region tree described by `spec` (see
+    /// [`parse_topology`]; empty = reset to the flat topology).
+    pub fn apply_topology(&mut self, spec: &str) -> Result<(), String> {
+        self.topology = parse_topology(spec)?;
+        Ok(())
+    }
+
+    /// Rack of `node`: nodes pack into `topology.racks` contiguous
+    /// blocks (0 on flat topologies).
+    pub fn rack_of(&self, node: usize) -> usize {
+        let racks = self.topology.racks;
+        if racks <= 1 {
+            return 0;
+        }
+        let per = self.n_nodes.div_ceil(racks).max(1);
+        (node / per).min(racks - 1)
+    }
+
+    /// Region of `node`: racks pack into `topology.regions` contiguous
+    /// blocks (0 on single-region topologies).
+    pub fn region_of(&self, node: usize) -> usize {
+        let regions = self.topology.regions;
+        if regions <= 1 {
+            return 0;
+        }
+        let per = self.topology.racks.div_ceil(regions).max(1);
+        (self.rack_of(node) / per).min(regions - 1)
+    }
+
+    /// Named correlated-failure domains derived from the topology
+    /// tree: one per non-empty rack. Empty on flat topologies — a
+    /// single-rack cluster has no shared switch/power domain whose
+    /// loss would be distinguishable from independent node churn.
+    pub fn failure_domains(&self) -> Vec<FailureDomain> {
+        if self.topology.racks <= 1 {
+            return vec![];
+        }
+        let mut domains: Vec<FailureDomain> = (0..self.topology.racks)
+            .map(|r| FailureDomain {
+                name: format!("rack{r}"),
+                nodes: vec![],
+            })
+            .collect();
+        for node in 0..self.n_nodes {
+            domains[self.rack_of(node)].nodes.push(node);
+        }
+        domains.retain(|d| !d.nodes.is_empty());
+        domains
     }
 
     pub fn total_gpus(&self) -> usize {
@@ -222,6 +423,7 @@ impl ClusterSpec {
                 ));
             }
         }
+        self.topology.validate()?;
         Ok(())
     }
 }
@@ -306,16 +508,52 @@ impl ClusterSpec {
 
     /// Point-to-point bandwidth between two GPUs (bytes/s), scaled by
     /// the slower endpoint's hardware-tier bandwidth multiplier (×1.0
-    /// — bit-exact — on homogeneous fleets). `bottleneck_bandwidth`,
-    /// `allreduce_time` and `p2p_time` inherit the scaling, so every
-    /// comm term the planner prices is tier-aware.
+    /// — bit-exact — on homogeneous fleets) and, on non-flat
+    /// topologies, by the widest structural tier the link crosses
+    /// (cross-region beats cross-rack; flat topologies early-return
+    /// before any topology float op touches the value).
+    /// `bottleneck_bandwidth`, `allreduce_time` and `p2p_time` inherit
+    /// the scaling, so every comm term the planner prices is both
+    /// tier- and topology-aware.
     pub fn bandwidth(&self, a: GpuId, b: GpuId) -> f64 {
         let base = match self.tier(a, b) {
             Tier::SameGpu => self.gpu.hbm_bw,
             Tier::IntraNode => self.nvlink_bw,
             Tier::InterNode => self.ib_bw,
         };
-        base * self.bw_mult(a.node).min(self.bw_mult(b.node))
+        let bw = base * self.bw_mult(a.node).min(self.bw_mult(b.node));
+        if self.topology.is_flat() || a.node == b.node {
+            return bw;
+        }
+        if self.region_of(a.node) != self.region_of(b.node) {
+            bw * self.topology.region_bw
+        } else if self.rack_of(a.node) != self.rack_of(b.node) {
+            bw * self.topology.rack_bw
+        } else {
+            bw
+        }
+    }
+
+    /// Per-hop latency of a collective across `gpus`: the latency of
+    /// the widest structural tier the gang spans (intra-node 1 µs,
+    /// inter-node IB, then rack / region hops on non-flat topologies).
+    fn gang_latency(&self, gpus: &[GpuId]) -> f64 {
+        let cross_node =
+            gpus.iter().any(|g| g.node != gpus[0].node);
+        if !cross_node {
+            return 1e-6;
+        }
+        if !self.topology.is_flat() {
+            let r0 = self.region_of(gpus[0].node);
+            if gpus.iter().any(|g| self.region_of(g.node) != r0) {
+                return self.topology.region_latency_s;
+            }
+            let k0 = self.rack_of(gpus[0].node);
+            if gpus.iter().any(|g| self.rack_of(g.node) != k0) {
+                return self.topology.rack_latency_s;
+            }
+        }
+        self.ib_latency_s
     }
 
     /// Slowest link bandwidth across a set of GPUs — ring-collective
@@ -337,8 +575,7 @@ impl ClusterSpec {
             return 0.0;
         }
         let bw = self.bottleneck_bandwidth(gpus);
-        let cross_node = gpus.iter().any(|g| g.node != gpus[0].node);
-        let lat = if cross_node { self.ib_latency_s } else { 1e-6 };
+        let lat = self.gang_latency(gpus);
         // ring: 2(n-1)/n * bytes over the bottleneck link + per-step lat
         2.0 * (n as f64 - 1.0) / n as f64 * bytes / bw
             + 2.0 * (n as f64 - 1.0) * lat
@@ -349,11 +586,7 @@ impl ClusterSpec {
         if a == b {
             return 0.0;
         }
-        let lat = if a.node == b.node {
-            1e-6
-        } else {
-            self.ib_latency_s
-        };
+        let lat = self.gang_latency(&[a, b]);
         bytes / self.bandwidth(a, b) + lat
     }
 }
@@ -541,10 +774,34 @@ impl Allocator {
     /// Allocate `n` GPUs from healthy nodes, preferring (1) the single
     /// node with the tightest fit, then (2) spilling across the
     /// emptiest nodes.
+    ///
+    /// On heterogeneous fleets and non-flat topologies the spill is
+    /// *placement-aware* ([`Allocator::allocate_scored`]): candidate
+    /// placements are scored to prefer single-hardware-tier gangs
+    /// (gang-synchronous pacing means one slow-generation member taxes
+    /// every step) and minimal topology radius (fewest racks spanned),
+    /// falling back to a mixed gang rather than starving. On
+    /// uniform-reference flat clusters the count-based path runs
+    /// unchanged, and the scored path itself degenerates to the same
+    /// order there (pinned by the differential test below) — so the
+    /// scoring layer is byte-free when unused.
     pub fn allocate(&mut self, n: usize) -> Option<Allocation> {
         if n == 0 || self.available_gpus() < n {
             return None;
         }
+        if self.spec.is_uniform_reference()
+            && self.spec.topology.is_flat()
+        {
+            Some(self.allocate_flat(n))
+        } else {
+            Some(self.allocate_scored(n))
+        }
+    }
+
+    /// The pre-topology count-based path (callers guarantee
+    /// `available_gpus() >= n > 0`): best-fit single node, then spill
+    /// across the emptiest healthy nodes.
+    fn allocate_flat(&mut self, n: usize) -> Allocation {
         // best-fit single node
         let mut best: Option<(usize, usize)> = None; // (node, slack)
         for (node, f) in self.free.iter().enumerate() {
@@ -555,13 +812,8 @@ impl Allocator {
                 }
             }
         }
-        let mut gpus = Vec::with_capacity(n);
         if let Some((node, _)) = best {
-            for _ in 0..n {
-                let idx = self.free[node].pop().unwrap();
-                gpus.push(GpuId { node, idx });
-            }
-            return Some(Allocation { gpus });
+            return self.take_from_plan(&[(node, n)]);
         }
         // spill: fill from healthy nodes with the most free capacity
         // first
@@ -569,6 +821,7 @@ impl Allocator {
             .filter(|&i| !self.down[i])
             .collect();
         order.sort_by_key(|&i| std::cmp::Reverse(self.free[i].len()));
+        let mut gpus = Vec::with_capacity(n);
         let mut need = n;
         for node in order {
             while need > 0 {
@@ -584,8 +837,211 @@ impl Allocator {
                 break;
             }
         }
-        debug_assert_eq!(need, 0);
-        Some(Allocation { gpus })
+        assert_eq!(
+            need, 0,
+            "allocator invariant violated: spill fell {need} GPUs \
+             short of {n} despite available_gpus() >= n"
+        );
+        Allocation { gpus }
+    }
+
+    /// Placement-aware allocation (callers guarantee
+    /// `available_gpus() >= n > 0`). Single-node fits keep the
+    /// tightest-slack rule, breaking slack ties toward the faster
+    /// hardware generation. Spills enumerate one candidate per
+    /// hardware tier with enough healthy free capacity (a single-tier
+    /// gang) plus the whole healthy fleet as the never-starve
+    /// fallback, plan each rack-aware fill without mutating anything,
+    /// and commit the winner: single-tier beats mixed, then fewest
+    /// racks spanned, then the faster generation, then the lower tier
+    /// index. On a uniform-reference flat cluster every node is one
+    /// tier in one rack, so this reduces to exactly the count-based
+    /// order of [`Allocator::allocate_flat`].
+    fn allocate_scored(&mut self, n: usize) -> Allocation {
+        // best-fit single node (slack, then compute_mult desc, then
+        // first index — a single node is trivially single-tier and
+        // single-rack, so radius cannot discriminate here)
+        let mut best: Option<(usize, usize)> = None; // (node, slack)
+        for (node, f) in self.free.iter().enumerate() {
+            if self.down[node] || f.len() < n {
+                continue;
+            }
+            let slack = f.len() - n;
+            let better = match best {
+                None => true,
+                Some((b, s)) => {
+                    slack < s
+                        || (slack == s
+                            && self.spec.compute_mult(node)
+                                > self.spec.compute_mult(b))
+                }
+            };
+            if better {
+                best = Some((node, slack));
+            }
+        }
+        if let Some((node, _)) = best {
+            return self.take_from_plan(&[(node, n)]);
+        }
+        // one spill candidate per hardware tier that can hold the
+        // whole gang on healthy nodes
+        let mut winner: Option<(Vec<(usize, usize)>, usize, f64, usize)> =
+            None; // (plan, racks_spanned, compute_mult, tier idx)
+        for t in 0..self.spec.tiers.len() {
+            let nodes: Vec<usize> = (0..self.free.len())
+                .filter(|&i| {
+                    !self.down[i] && self.spec.tier_index(i) == t
+                })
+                .collect();
+            let Some(plan) = self.plan_spill(&nodes, n) else {
+                continue;
+            };
+            let racks = self.plan_rack_span(&plan);
+            let mult = self.spec.tiers[t].compute_mult;
+            let better = match &winner {
+                None => true,
+                Some((_, r, m, _)) => {
+                    racks < *r || (racks == *r && mult > *m)
+                }
+            };
+            if better {
+                winner = Some((plan, racks, mult, t));
+            }
+        }
+        if let Some((plan, ..)) = winner {
+            return self.take_from_plan(&plan);
+        }
+        // no single tier can hold the gang: mixed-tier fallback over
+        // the whole healthy fleet (still rack-aware) rather than
+        // starving
+        let nodes: Vec<usize> = (0..self.free.len())
+            .filter(|&i| !self.down[i])
+            .collect();
+        let plan = self.plan_spill(&nodes, n).unwrap_or_else(|| {
+            panic!(
+                "allocator invariant violated: healthy fleet cannot \
+                 hold {n} GPUs despite available_gpus() >= n"
+            )
+        });
+        self.take_from_plan(&plan)
+    }
+
+    /// Plan a spill of `n` GPUs over `nodes` (a healthy candidate
+    /// set) without mutating any free list; `None` if the set lacks
+    /// capacity. Rack-aware: a single rack that can hold the gang is
+    /// preferred (tightest rack wins, ties to the lower rack id);
+    /// otherwise racks fill fullest-first. Within any rack, nodes
+    /// fill most-free-first with index ties stable — on a flat
+    /// topology everything is one rack, so the plan is exactly the
+    /// count-based order.
+    fn plan_spill(
+        &self,
+        nodes: &[usize],
+        n: usize,
+    ) -> Option<Vec<(usize, usize)>> {
+        let total: usize =
+            nodes.iter().map(|&i| self.free[i].len()).sum();
+        if total < n {
+            return None;
+        }
+        // bucket candidate nodes by rack, preserving index order
+        let racks = self.spec.topology.racks.max(1);
+        let mut by_rack: Vec<Vec<usize>> = vec![vec![]; racks];
+        for &i in nodes {
+            by_rack[self.spec.rack_of(i)].push(i);
+        }
+        let rack_free = |r: &Vec<usize>| -> usize {
+            r.iter().map(|&i| self.free[i].len()).sum()
+        };
+        // a single rack that fits: tightest first, then lowest id
+        let mut best: Option<(usize, usize)> = None; // (rack, slack)
+        for (rid, r) in by_rack.iter().enumerate() {
+            let f = rack_free(r);
+            if f < n {
+                continue;
+            }
+            let slack = f - n;
+            if best.map_or(true, |(_, s)| slack < s) {
+                best = Some((rid, slack));
+            }
+        }
+        let rack_order: Vec<usize> = match best {
+            Some((rid, _)) => vec![rid],
+            None => {
+                // spill across racks, fullest rack first (fewest
+                // racks touched), ties to the lower rack id
+                let mut order: Vec<usize> = (0..racks)
+                    .filter(|&r| !by_rack[r].is_empty())
+                    .collect();
+                order.sort_by_key(|&r| {
+                    std::cmp::Reverse(rack_free(&by_rack[r]))
+                });
+                order
+            }
+        };
+        let mut plan: Vec<(usize, usize)> = vec![];
+        let mut need = n;
+        for rid in rack_order {
+            let mut order = by_rack[rid].clone();
+            order.sort_by_key(|&i| {
+                std::cmp::Reverse(self.free[i].len())
+            });
+            for node in order {
+                if need == 0 {
+                    break;
+                }
+                let take = self.free[node].len().min(need);
+                if take > 0 {
+                    plan.push((node, take));
+                    need -= take;
+                }
+            }
+            if need == 0 {
+                break;
+            }
+        }
+        if need == 0 {
+            Some(plan)
+        } else {
+            None
+        }
+    }
+
+    /// Distinct racks a planned fill would span.
+    fn plan_rack_span(&self, plan: &[(usize, usize)]) -> usize {
+        let mut racks: Vec<usize> = plan
+            .iter()
+            .map(|&(node, _)| self.spec.rack_of(node))
+            .collect();
+        racks.sort_unstable();
+        racks.dedup();
+        racks.len()
+    }
+
+    /// Commit a fill plan, popping `take` GPUs from each node's free
+    /// list. The pop is a checked invariant (the plan was derived from
+    /// the same free lists moments ago): a node coming up short here
+    /// means the bookkeeping is corrupt, and the panic names it
+    /// instead of unwrapping on `None`.
+    fn take_from_plan(
+        &mut self,
+        plan: &[(usize, usize)],
+    ) -> Allocation {
+        let mut gpus = Vec::new();
+        for &(node, take) in plan {
+            for _ in 0..take {
+                let idx =
+                    self.free[node].pop().unwrap_or_else(|| {
+                        panic!(
+                            "allocator invariant violated: node \
+                             {node} free list exhausted \
+                             mid-allocation (planned {take} GPUs)"
+                        )
+                    });
+                gpus.push(GpuId { node, idx });
+            }
+        }
+        Allocation { gpus }
     }
 
     /// Return an allocation's GPUs to the free pool.
@@ -923,6 +1379,388 @@ mod tests {
                 > s.allreduce_time(&[a, b], 1e8)
         );
         assert!(s.p2p_time(a, c, 1e8) > s.p2p_time(a, b, 1e8));
+    }
+
+    #[test]
+    fn topology_parse_roundtrip_and_defaults() {
+        let t = parse_topology("").unwrap();
+        assert_eq!(t, TopologySpec::flat());
+        assert!(t.is_flat());
+        let t = parse_topology("racks=4:rack_bw=0.5").unwrap();
+        assert!(!t.is_flat());
+        assert_eq!(t.racks, 4);
+        assert_eq!(t.regions, 1);
+        assert_eq!(t.rack_bw, 0.5);
+        assert_eq!(t.region_bw, 1.0);
+        assert_eq!(t.spec_str, "racks=4:rack_bw=0.5");
+        let t = parse_topology(
+            "racks=8:regions=2:region_bw=0.1:rack_lat=1e-5:\
+             region_lat=2e-3",
+        )
+        .unwrap();
+        assert_eq!((t.racks, t.regions), (8, 2));
+        assert_eq!(t.region_bw, 0.1);
+        assert_eq!(t.rack_latency_s, 1e-5);
+        assert_eq!(t.region_latency_s, 2e-3);
+    }
+
+    #[test]
+    fn topology_parse_rejects_garbage() {
+        assert!(parse_topology("racks").is_err());
+        assert!(parse_topology("racks=x").is_err());
+        assert!(parse_topology("racks=0").is_err());
+        assert!(parse_topology("rack_bw=0").is_err());
+        assert!(parse_topology("rack_bw=-1").is_err());
+        assert!(parse_topology("racks=2:regions=4").is_err());
+        assert!(parse_topology("turbo=9").is_err());
+        assert!(parse_topology("racks=4:").is_err());
+        let mut s = ClusterSpec::with_gpus(16);
+        s.topology.racks = 0;
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn empty_topology_resets_to_flat() {
+        let mut s = ClusterSpec::with_gpus(32);
+        s.apply_topology("racks=4").unwrap();
+        assert!(!s.topology.is_flat());
+        s.apply_topology("").unwrap();
+        assert_eq!(s, ClusterSpec::with_gpus(32));
+    }
+
+    #[test]
+    fn rack_and_region_blocks_are_contiguous() {
+        // 8 nodes, 4 racks, 2 regions: nodes pack 2 per rack, racks
+        // 2 per region
+        let mut s = ClusterSpec::with_gpus(64);
+        s.apply_topology("racks=4:regions=2").unwrap();
+        assert_eq!(s.n_nodes, 8);
+        let racks: Vec<usize> =
+            (0..8).map(|n| s.rack_of(n)).collect();
+        assert_eq!(racks, vec![0, 0, 1, 1, 2, 2, 3, 3]);
+        let regions: Vec<usize> =
+            (0..8).map(|n| s.region_of(n)).collect();
+        assert_eq!(regions, vec![0, 0, 0, 0, 1, 1, 1, 1]);
+        // flat topology: everything is rack 0 / region 0
+        let s = ClusterSpec::with_gpus(64);
+        assert!((0..8).all(|n| s.rack_of(n) == 0));
+        assert!((0..8).all(|n| s.region_of(n) == 0));
+        assert!(s.failure_domains().is_empty());
+    }
+
+    #[test]
+    fn failure_domains_partition_the_fleet() {
+        let mut s = ClusterSpec::with_gpus(64);
+        s.apply_topology("racks=4").unwrap();
+        let domains = s.failure_domains();
+        assert_eq!(domains.len(), 4);
+        let mut all: Vec<usize> = vec![];
+        for (r, d) in domains.iter().enumerate() {
+            assert_eq!(d.name, format!("rack{r}"));
+            assert!(!d.nodes.is_empty());
+            for &n in &d.nodes {
+                assert_eq!(s.rack_of(n), r);
+            }
+            all.extend_from_slice(&d.nodes);
+        }
+        all.sort_unstable();
+        assert_eq!(all, (0..8).collect::<Vec<_>>());
+        // more racks than nodes: trailing racks are simply empty
+        let mut s = ClusterSpec::with_gpus(16);
+        s.n_nodes = 3;
+        s.gpus_per_node = 4;
+        s.apply_topology("racks=4").unwrap();
+        let domains = s.failure_domains();
+        assert_eq!(domains.len(), 3);
+        assert!(domains.iter().all(|d| d.nodes.len() == 1));
+    }
+
+    #[test]
+    fn cross_rack_links_price_the_structural_tier() {
+        let mut s = spec4x4();
+        s.apply_topology("racks=2:rack_bw=0.5:rack_lat=1e-4")
+            .unwrap();
+        let a = GpuId { node: 0, idx: 0 };
+        let b = GpuId { node: 1, idx: 0 }; // same rack
+        let c = GpuId { node: 2, idx: 0 }; // other rack
+        // same-rack inter-node links keep the base rate bit-for-bit
+        assert_eq!(s.bandwidth(a, b), s.ib_bw);
+        assert_eq!(s.bandwidth(a, c), s.ib_bw * 0.5);
+        // intra-node untouched
+        assert_eq!(
+            s.bandwidth(a, GpuId { node: 0, idx: 1 }),
+            s.nvlink_bw
+        );
+        // collectives inherit the scaled bottleneck and the rack hop
+        // latency
+        assert!(
+            s.allreduce_time(&[a, c], 1e8)
+                > s.allreduce_time(&[a, b], 1e8)
+        );
+        assert!(s.p2p_time(a, c, 1e8) > s.p2p_time(a, b, 1e8));
+        // regions beat racks
+        let mut s2 = spec4x4();
+        s2.apply_topology(
+            "racks=4:regions=2:rack_bw=0.5:region_bw=0.1",
+        )
+        .unwrap();
+        let d = GpuId { node: 3, idx: 0 }; // other region
+        assert_eq!(s2.bandwidth(a, b), s2.ib_bw * 0.5);
+        assert_eq!(s2.bandwidth(a, d), s2.ib_bw * 0.1);
+    }
+
+    #[test]
+    fn flat_topology_pricing_is_bit_identical() {
+        // the topology hooks early-return on flat trees: every priced
+        // quantity must be bit-equal to an untouched spec's
+        let flat = spec4x4();
+        let mut labeled = spec4x4();
+        labeled.apply_topology("").unwrap();
+        assert_eq!(flat, labeled);
+        let gpus: Vec<GpuId> = (0..4)
+            .flat_map(|node| {
+                (0..2).map(move |idx| GpuId { node, idx })
+            })
+            .collect();
+        for &a in &gpus {
+            for &b in &gpus {
+                assert_eq!(
+                    flat.bandwidth(a, b).to_bits(),
+                    labeled.bandwidth(a, b).to_bits()
+                );
+                assert_eq!(
+                    flat.p2p_time(a, b, 1e8).to_bits(),
+                    labeled.p2p_time(a, b, 1e8).to_bits()
+                );
+            }
+        }
+        assert_eq!(
+            flat.allreduce_time(&gpus, 1e8).to_bits(),
+            labeled.allreduce_time(&gpus, 1e8).to_bits()
+        );
+    }
+
+    #[test]
+    fn scored_path_matches_flat_path_on_uniform_flat_cluster() {
+        // the differential the byte-freedom contract rests on: with
+        // one reference tier in one rack, the scored planner must
+        // reproduce the count-based allocation order bit-exactly,
+        // through arbitrary churn
+        let spec = {
+            let mut s = ClusterSpec::with_gpus(32);
+            s.n_nodes = 8;
+            s.gpus_per_node = 4;
+            s
+        };
+        for seed in 0..16u64 {
+            let mut rng = Rng::new(seed ^ 0x70_70);
+            let mut a = Allocator::new(spec.clone());
+            let mut b = Allocator::new(spec.clone());
+            let mut live: Vec<Allocation> = vec![];
+            for _ in 0..200 {
+                match rng.below(5) {
+                    0 | 1 | 2 => {
+                        let n = rng.range(1, 12);
+                        if n == 0 || a.available_gpus() < n {
+                            continue;
+                        }
+                        let x = a.allocate_flat(n);
+                        let y = b.allocate_scored(n);
+                        assert_eq!(x, y, "seed {seed}");
+                        live.push(x);
+                    }
+                    3 => {
+                        if !live.is_empty() {
+                            let i = rng.below(live.len());
+                            let x = live.swap_remove(i);
+                            a.release(&x);
+                            b.release(&x);
+                        }
+                    }
+                    _ => {
+                        let node = rng.below(8);
+                        let down = rng.bool(0.5);
+                        a.set_down(node, down);
+                        b.set_down(node, down);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_fleet_gang_lands_on_a_single_tier() {
+        // the tier-blind packing bug, pinned: nodes 0-2 are h100,
+        // node 3 is v100 (4 GPUs each); nodes 1 and 2 half-occupied.
+        // A gang of 8 cannot fit in one node, and the count-based
+        // spill (most-free-first: node 0 then node 3) split it across
+        // the h100/v100 boundary — gang-synchronous pacing then taxes
+        // every step at the slow generation. The scored path sees the
+        // h100 tier still holds 8 free GPUs and keeps the gang pure.
+        let mut spec = ClusterSpec::with_gpus(16);
+        spec.n_nodes = 4;
+        spec.gpus_per_node = 4;
+        spec.apply_hardware_mix("h100*3:v100").unwrap();
+        let mut a = Allocator::new(spec.clone());
+        // occupy 2 GPUs each on nodes 1 and 2 (steered via the avoid
+        // mask: the flagged nodes are treated as down for the ask)
+        let x1 = a
+            .allocate_avoiding(2, &[true, false, true, true])
+            .unwrap();
+        assert_eq!(x1.nodes(), vec![1]);
+        let x2 = a
+            .allocate_avoiding(2, &[true, true, false, true])
+            .unwrap();
+        assert_eq!(x2.nodes(), vec![2]);
+        // the old count-based order would have taken nodes 0 + 3
+        // (both 4 free) — asserted on a flat-path replay so the claim
+        // stays pinned to real code, not a comment
+        let mut blind = a.clone();
+        let split = blind.allocate_flat(8);
+        assert_eq!(split.nodes(), vec![0, 3]);
+        let tiers: std::collections::HashSet<&str> = split
+            .nodes()
+            .iter()
+            .map(|&n| spec.tier_of(n).name.as_str())
+            .collect();
+        assert_eq!(tiers.len(), 2, "old path split the tiers");
+        // the fixed placer keeps the gang on the h100 tier
+        let gang = a.allocate(8).unwrap();
+        assert_eq!(gang.n_gpus(), 8);
+        assert_eq!(gang.nodes(), vec![0, 1, 2]);
+        assert!(gang
+            .nodes()
+            .iter()
+            .all(|&n| spec.tier_of(n).name == "h100"));
+        // and the pure gang is strictly faster under gang-synchronous
+        // tier pacing: the slowest member's compute multiplier paces
+        // the gang (the planner-level step-time comparison is pinned
+        // in planner::tests)
+        let slowest = |al: &Allocation| -> f64 {
+            al.nodes()
+                .iter()
+                .map(|&n| spec.compute_mult(n))
+                .fold(f64::INFINITY, f64::min)
+        };
+        assert!(slowest(&gang) > slowest(&split));
+    }
+
+    #[test]
+    fn scored_spill_prefers_fewest_racks() {
+        // uniform hardware, 4 racks of 2 nodes, occupancy tuned so
+        // free counts deceive: nodes 2 and 4 hold the most free GPUs
+        // but sit in different racks, while rack 0 exactly fits the
+        // gang. Count-based most-free-first spans two racks; the
+        // scored path keeps the gang on one switch.
+        let mut spec = ClusterSpec::with_gpus(32);
+        spec.n_nodes = 8;
+        spec.gpus_per_node = 4;
+        spec.apply_topology("racks=4:rack_bw=0.5").unwrap();
+        let mut a = Allocator::new(spec.clone());
+        // free per node after steered pre-occupation:
+        //   rack0: n0=3 n1=3   rack1: n2=4 n3=1
+        //   rack2: n4=4 n5=1   rack3: n6=1 n7=1
+        for (node, take) in
+            [(0usize, 1usize), (1, 1), (3, 3), (5, 3), (6, 3), (7, 3)]
+        {
+            let avoid: Vec<bool> =
+                (0..8).map(|i| i != node).collect();
+            let x = a.allocate_avoiding(take, &avoid).unwrap();
+            assert_eq!(x.nodes(), vec![node]);
+        }
+        // the count-based order takes n2 + n4 — two racks (replayed
+        // on the flat path so the claim stays pinned to real code)
+        let mut blind = a.clone();
+        let split = blind.allocate_flat(6);
+        assert_eq!(split.nodes(), vec![2, 4]);
+        assert_eq!(
+            blind.spec().rack_of(2) == blind.spec().rack_of(4),
+            false
+        );
+        // the scored path lands the gang in rack 0 (tightest rack
+        // that fits: 6 free, slack 0)
+        let gang = a.allocate(6).unwrap();
+        assert_eq!(gang.nodes(), vec![0, 1]);
+        assert_eq!(
+            gang.nodes()
+                .iter()
+                .map(|&n| spec.rack_of(n))
+                .collect::<std::collections::HashSet<_>>()
+                .len(),
+            1
+        );
+        // and asks larger than any rack still spill across rack
+        // boundaries rather than starving
+        a.release(&gang);
+        let big = a.allocate(12).unwrap();
+        assert_eq!(big.n_gpus(), 12);
+    }
+
+    #[test]
+    fn allocator_churn_upholds_checked_invariants() {
+        // satellite prop test: interleave set_down / degrade /
+        // allocate_avoiding / release churn across seeds on a mixed
+        // topologized fleet; the checked pops inside allocate must
+        // never fire and capacity accounting must stay conserved
+        let mut spec = ClusterSpec::with_gpus(32);
+        spec.n_nodes = 8;
+        spec.gpus_per_node = 4;
+        spec.apply_hardware_mix("a100*2:v100*2").unwrap();
+        spec.apply_topology("racks=2:rack_bw=0.5").unwrap();
+        for seed in 0..16u64 {
+            let mut rng = Rng::new(seed ^ 0xC4_42);
+            let mut a = Allocator::new(spec.clone());
+            let mut live: Vec<Allocation> = vec![];
+            for _ in 0..300 {
+                match rng.below(8) {
+                    0 | 1 | 2 => {
+                        let n = rng.range(1, 10);
+                        let avoid: Vec<bool> =
+                            (0..8).map(|_| rng.bool(0.3)).collect();
+                        let before = a.available_gpus();
+                        match a.allocate_avoiding(n, &avoid) {
+                            Some(x) => {
+                                assert_eq!(x.n_gpus(), n);
+                                assert!(x
+                                    .gpus
+                                    .iter()
+                                    .all(|g| !a.is_down(g.node)));
+                                live.push(x);
+                            }
+                            None => {
+                                assert!(
+                                    before < n,
+                                    "refused {n} with {before} \
+                                     available (seed {seed})"
+                                );
+                            }
+                        }
+                    }
+                    3 | 4 => {
+                        if !live.is_empty() {
+                            let i = rng.below(live.len());
+                            let x = live.swap_remove(i);
+                            a.release(&x);
+                        }
+                    }
+                    5 => {
+                        let node = rng.below(8);
+                        a.set_down(node, rng.bool(0.5));
+                    }
+                    _ => {
+                        let node = rng.below(8);
+                        a.set_speed(
+                            node,
+                            rng.range_f64(0.1, 1.0),
+                        );
+                    }
+                }
+                // conservation: free + live == capacity
+                let held: usize =
+                    live.iter().map(|x| x.n_gpus()).sum();
+                assert_eq!(a.free_gpus() + held, 32);
+            }
+        }
     }
 
     #[test]

@@ -191,6 +191,15 @@ pub struct FaultConfig {
     /// iso_step_time` (queueing + churn allowance on top of its
     /// slowdown-adjusted ideal runtime).
     pub slo_factor: f64,
+    /// Mean time between *correlated* failure episodes per failure
+    /// domain (rack/switch), seconds, exponential. One episode fails
+    /// every node under the drawn domain at once. 0 disables; only
+    /// meaningful with a non-flat `--topology` (a flat cluster has no
+    /// domains).
+    pub domain_mtbf_s: f64,
+    /// Mean recovery time for a domain episode, seconds. Must be > 0
+    /// whenever `domain_mtbf_s` > 0.
+    pub domain_mttr_s: f64,
 }
 
 impl Default for FaultConfig {
@@ -204,6 +213,8 @@ impl Default for FaultConfig {
             ckpt_interval_steps: 1,
             ckpt_write_s: 0.0,
             slo_factor: 3.0,
+            domain_mtbf_s: 0.0,
+            domain_mttr_s: 600.0,
         }
     }
 }
@@ -240,6 +251,16 @@ impl FaultConfig {
         }
         if self.slo_factor <= 0.0 {
             return Err("faults: slo_factor must be > 0".into());
+        }
+        if self.domain_mtbf_s < 0.0 {
+            return Err("faults: domain_mtbf_s must be >= 0".into());
+        }
+        if self.domain_mtbf_s > 0.0 && self.domain_mttr_s <= 0.0 {
+            return Err(
+                "faults: domain_mttr_s must be > 0 with domain \
+                 episodes on"
+                    .into(),
+            );
         }
         Ok(())
     }
@@ -287,6 +308,14 @@ pub struct StragglerConfig {
     /// avoided node could never be exonerated — suspicion suppresses
     /// the very placements whose observations would clear it.
     pub rehab_tau_s: f64,
+    /// Mean time between *correlated* straggler episodes per failure
+    /// domain (shared switch / power domain), seconds, exponential.
+    /// One draw degrades every node under the domain to the same
+    /// sampled severity. 0 disables; needs a non-flat `--topology`.
+    pub domain_mtbs_s: f64,
+    /// Mean degraded-span duration for a domain episode, seconds.
+    /// Must be > 0 whenever `domain_mtbs_s` > 0.
+    pub domain_mtts_s: f64,
 }
 
 impl Default for StragglerConfig {
@@ -301,6 +330,8 @@ impl Default for StragglerConfig {
             detect_threshold: 1.25,
             migrate_threshold: 1.6,
             rehab_tau_s: 600.0,
+            domain_mtbs_s: 0.0,
+            domain_mtts_s: 900.0,
         }
     }
 }
@@ -351,6 +382,18 @@ impl StragglerConfig {
         if self.rehab_tau_s <= 0.0 {
             return Err(
                 "stragglers: rehab_tau_s must be > 0".into()
+            );
+        }
+        if self.domain_mtbs_s < 0.0 {
+            return Err(
+                "stragglers: domain_mtbs_s must be >= 0".into()
+            );
+        }
+        if self.domain_mtbs_s > 0.0 && self.domain_mtts_s <= 0.0 {
+            return Err(
+                "stragglers: domain_mtts_s must be > 0 with domain \
+                 episodes on"
+                    .into(),
             );
         }
         Ok(())
@@ -456,12 +499,21 @@ impl ExperimentConfig {
                         self.faults.ckpt_interval_steps,
                     )
                     .set("ckpt_write_s", self.faults.ckpt_write_s)
-                    .set("slo_factor", self.faults.slo_factor),
+                    .set("slo_factor", self.faults.slo_factor)
+                    .set("domain_mtbf_s", self.faults.domain_mtbf_s)
+                    .set("domain_mttr_s", self.faults.domain_mttr_s),
             )
             .set(
                 "hardware",
                 Json::obj()
                     .set("mix", self.cluster.hardware_mix.as_str()),
+            )
+            .set(
+                "topology",
+                Json::obj().set(
+                    "spec",
+                    self.cluster.topology.spec_str.as_str(),
+                ),
             )
             .set(
                 "stragglers",
@@ -480,7 +532,15 @@ impl ExperimentConfig {
                         "migrate_threshold",
                         self.stragglers.migrate_threshold,
                     )
-                    .set("rehab_tau_s", self.stragglers.rehab_tau_s),
+                    .set("rehab_tau_s", self.stragglers.rehab_tau_s)
+                    .set(
+                        "domain_mtbs_s",
+                        self.stragglers.domain_mtbs_s,
+                    )
+                    .set(
+                        "domain_mtts_s",
+                        self.stragglers.domain_mtts_s,
+                    ),
             )
     }
 
@@ -492,11 +552,13 @@ impl ExperimentConfig {
         }
         if let Some(n) = j.get("n_gpus").and_then(Json::as_usize) {
             // rebuilding the cluster must not drop a previously applied
-            // hardware mix (e.g. config file sets the mix, a later CLI
-            // override resizes the fleet)
+            // hardware mix or topology (e.g. config file sets them, a
+            // later CLI override resizes the fleet)
             let mix = self.cluster.hardware_mix.clone();
+            let topo = self.cluster.topology.spec_str.clone();
             self.cluster = ClusterSpec::with_gpus(n);
             self.cluster.apply_hardware_mix(&mix)?;
+            self.cluster.apply_topology(&topo)?;
         }
         if let Some(n) = j.get("n_jobs").and_then(Json::as_usize) {
             self.n_jobs = n;
@@ -579,6 +641,16 @@ impl ExperimentConfig {
             {
                 self.faults.slo_factor = v;
             }
+            if let Some(v) =
+                f.get("domain_mtbf_s").and_then(Json::as_f64)
+            {
+                self.faults.domain_mtbf_s = v;
+            }
+            if let Some(v) =
+                f.get("domain_mttr_s").and_then(Json::as_f64)
+            {
+                self.faults.domain_mttr_s = v;
+            }
         }
         if let Some(s) = j.get("stragglers") {
             if let Some(v) = s.get("mtbs_s").and_then(Json::as_f64) {
@@ -620,12 +692,27 @@ impl ExperimentConfig {
             {
                 self.stragglers.rehab_tau_s = v;
             }
+            if let Some(v) =
+                s.get("domain_mtbs_s").and_then(Json::as_f64)
+            {
+                self.stragglers.domain_mtbs_s = v;
+            }
+            if let Some(v) =
+                s.get("domain_mtts_s").and_then(Json::as_f64)
+            {
+                self.stragglers.domain_mtts_s = v;
+            }
         }
         // applied after `n_gpus` (which rebuilds the cluster): the mix
-        // layers tiers onto whatever fleet size is now in effect
+        // and topology layer onto whatever fleet size is now in effect
         if let Some(h) = j.get("hardware") {
             if let Some(m) = h.get("mix").and_then(Json::as_str) {
                 self.cluster.apply_hardware_mix(m)?;
+            }
+        }
+        if let Some(t) = j.get("topology") {
+            if let Some(s) = t.get("spec").and_then(Json::as_str) {
+                self.cluster.apply_topology(s)?;
             }
         }
         self.validate()
@@ -919,6 +1006,71 @@ mod tests {
         let j = json::parse(r#"{"hardware": {"mix": "tpu9"}}"#)
             .unwrap();
         assert!(ExperimentConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn topology_section_roundtrips_through_json() {
+        let mut c = ExperimentConfig::default();
+        c.cluster.apply_topology("racks=4:rack_bw=0.5").unwrap();
+        let j = json::parse(&c.to_json().to_string()).unwrap();
+        let back = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(back.cluster, c.cluster);
+        assert!(!back.cluster.topology.is_flat());
+        // default emits an empty spec and loads back flat
+        let d = ExperimentConfig::default();
+        let j = json::parse(&d.to_json().to_string()).unwrap();
+        assert_eq!(j.path("topology.spec").unwrap().as_str(), Some(""));
+        let back = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(back.cluster, d.cluster);
+    }
+
+    #[test]
+    fn topology_survives_n_gpus_override_and_rejects_garbage() {
+        let mut c = ExperimentConfig::default();
+        let j = json::parse(
+            r#"{"topology": {"spec": "racks=4:regions=2"}}"#,
+        )
+        .unwrap();
+        c.apply_json(&j).unwrap();
+        let j = json::parse(r#"{"n_gpus": 32}"#).unwrap();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.cluster.total_gpus(), 32);
+        assert_eq!(c.cluster.topology.racks, 4);
+        assert_eq!(c.cluster.topology.regions, 2);
+        // garbage specs are load errors
+        let j = json::parse(r#"{"topology": {"spec": "racks=zero"}}"#)
+            .unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn domain_fault_knobs_roundtrip_and_validate() {
+        let mut c = ExperimentConfig::default();
+        c.cluster.apply_topology("racks=4").unwrap();
+        c.faults.domain_mtbf_s = 7200.0;
+        c.faults.domain_mttr_s = 300.0;
+        c.stragglers.domain_mtbs_s = 3600.0;
+        c.stragglers.domain_mtts_s = 450.0;
+        let j = json::parse(&c.to_json().to_string()).unwrap();
+        let back = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(back.faults, c.faults);
+        assert_eq!(back.stragglers, c.stragglers);
+        // rejections
+        let mut c = ExperimentConfig::default();
+        c.faults.domain_mtbf_s = -1.0;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.faults.domain_mtbf_s = 100.0;
+        c.faults.domain_mttr_s = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.stragglers.domain_mtbs_s = 100.0;
+        c.stragglers.domain_mtts_s = 0.0;
+        assert!(c.validate().is_err());
+        // defaults keep everything off
+        let d = FaultConfig::default();
+        assert_eq!(d.domain_mtbf_s, 0.0);
+        assert_eq!(StragglerConfig::default().domain_mtbs_s, 0.0);
     }
 
     #[test]

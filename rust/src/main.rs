@@ -6,11 +6,12 @@
 //!                 [--mtbf S] [--mttr S] [--preempt-rate R]
 //!                 [--straggler-mtbs S] [--straggler-mtts S]
 //!                 [--straggler-oblivious] [--hardware-mix SPEC]
+//!                 [--topology SPEC] [--trace file.csv]
 //! tlora compare   [--n-jobs N] [--n-gpus N] [--seed S]     # all policies
 //! tlora sweep     [--policies a,b|all] [--n-jobs N,..] [--gpus N,..]
 //!                 [--rate-scales F,..] [--months M,..] [--mtbfs S,..]
 //!                 [--stragglers S,..] [--hardware-mix SPEC,..]
-//!                 [--seeds S,..] [--threads T]
+//!                 [--topology SPEC,..] [--seeds S,..] [--threads T]
 //!                 [--out-json f] [--out-csv f] [--canonical]
 //!                 [--legacy-report]
 //! tlora train     [--variant tiny|small|...] [--steps N] [--seed S]
@@ -84,10 +85,19 @@ Hardware flags: --hardware-mix SPEC, a cyclic per-node tier pattern
               h100, a100-40g, v100, a10g. simulate/compare take one
               mix; sweep takes a comma list as a grid axis and reports
               per-tier utilization columns for mixed cells
+Topology flags: --topology SPEC, a rack/region tree with per-tier
+              bandwidth discounts, e.g. 'racks=4:rack_bw=0.5' (keys:
+              racks, regions, rack_bw, region_bw, rack_lat,
+              region_lat; empty = flat single-switch cluster). The
+              allocator packs gangs into one tier and one rack when
+              it can; cross-rack/region traffic pays the discounted
+              bandwidth. simulate/compare take one spec; sweep takes
+              a comma list as a grid axis and reports rack-span
+              columns for non-flat cells
 Sweep flags:  --policies a,b|all --n-jobs N,.. --gpus N,..
               --rate-scales F,.. --months M,.. --mtbfs S,..
               --stragglers S,.. --hardware-mix SPEC,..
-              --seeds S,.. --threads T
+              --topology SPEC,.. --seeds S,.. --threads T
               --out-json FILE --out-csv FILE
               --canonical (strip wall-clock/thread fields from JSON so
               runs diff bit-exactly; used by the golden-trace fixture)
@@ -112,6 +122,9 @@ fn build_config(args: &Args) -> Result<ExperimentConfig, String> {
     cfg.cluster = tlora::cluster::ClusterSpec::with_gpus(n_gpus);
     if let Some(mix) = args.get("hardware-mix") {
         cfg.cluster.apply_hardware_mix(mix)?;
+    }
+    if let Some(topo) = args.get("topology") {
+        cfg.cluster.apply_topology(topo)?;
     }
     cfg.seed = args.get_u64("seed", 42)?;
     cfg.trace = match args.get_usize("month", 1)? {
@@ -153,16 +166,21 @@ fn cmd_simulate(args: &Args) -> i32 {
         }
     };
     // --trace file.csv replays an explicit (real or generated) trace
-    // instead of sampling from the synthetic profile
+    // instead of sampling from the synthetic profile. The CSV text is
+    // streamed line-by-line (never held in memory whole — a
+    // million-job trace parses in O(1) text memory); the engine still
+    // needs the parsed job vector to size its state tables.
     let r = if let Some(path) = args.get("trace") {
-        let text = match std::fs::read_to_string(path) {
-            Ok(t) => t,
+        let iter = match tlora::workload::trace::stream_csv_file(
+            std::path::Path::new(path),
+        ) {
+            Ok(it) => it,
             Err(e) => {
                 eprintln!("read {path}: {e}");
                 return 2;
             }
         };
-        match tlora::workload::trace::load_csv(&text) {
+        match iter.collect::<Result<Vec<_>, String>>() {
             Ok(jobs) => tlora::sim::simulate_jobs(&cfg, jobs),
             Err(e) => {
                 eprintln!("parse {path}: {e}");
@@ -365,6 +383,11 @@ fn cmd_sweep(args: &Args) -> i32 {
             args,
             "hardware-mix",
             vec![grid.base.cluster.hardware_mix.clone()],
+        )?;
+        grid.topologies = parse_list(
+            args,
+            "topology",
+            vec![grid.base.cluster.topology.spec_str.clone()],
         )?;
         grid.seeds = parse_list(args, "seeds", vec![grid.base.seed])?;
         grid.validate()?;

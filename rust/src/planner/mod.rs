@@ -156,7 +156,14 @@ pub fn plan(
 ///    to pattern-match). Allocations touching only reference tiers
 ///    canonicalize to empty tier components, so homogeneous fleets
 ///    key — and cache — exactly as before;
-/// 4. the [`PlanOptions`] and the (per-predictor, fixed)
+/// 4. the allocation's **topology pattern**: on non-flat topologies
+///    the bandwidth and latency queries additionally depend on
+///    whether two GPUs share a rack or a region, so the key carries
+///    first-appearance-relabeled rack and region labels per GPU plus
+///    the topology multiplier bit-patterns. Flat topologies
+///    canonicalize to empty components, so pre-topology keys — and
+///    cached plans — are untouched;
+/// 5. the [`PlanOptions`] and the (per-predictor, fixed)
 ///    [`ClusterSpec`].
 ///
 /// [`PlanShapeKey`] captures exactly these: two (ssm, alloc) pairs with
@@ -180,6 +187,16 @@ pub struct PlanShapeKey {
     /// (compute, bw, mem) multiplier bit-patterns of the touched
     /// tiers, in first-appearance order (empty when all-reference)
     tier_table: Vec<(u64, u64, u64)>,
+    /// canonical rack pattern: one rack label per GPU in allocation
+    /// order, racks relabeled by first appearance (empty on flat
+    /// topologies)
+    rack_shape: Vec<u32>,
+    /// canonical region pattern, relabeled like `rack_shape` (empty
+    /// on flat topologies)
+    region_shape: Vec<u32>,
+    /// bit-patterns of (rack_bw, region_bw, rack_latency_s,
+    /// region_latency_s) (empty on flat topologies)
+    topo_table: Vec<u64>,
     /// the [`PlanOptions`] fields, hashed structurally
     opts: (bool, Option<usize>, usize),
 }
@@ -224,6 +241,39 @@ impl PlanShapeKey {
                 .collect();
             (tier_shape, table)
         };
+        let (rack_shape, region_shape, topo_table) =
+            if spec.topology.is_flat() {
+                (vec![], vec![], vec![])
+            } else {
+                let relabel = |of: &dyn Fn(usize) -> usize| {
+                    let mut seen: Vec<usize> = vec![];
+                    alloc
+                        .gpus
+                        .iter()
+                        .map(|g| {
+                            let v = of(g.node);
+                            match seen.iter().position(|&x| x == v) {
+                                Some(l) => l as u32,
+                                None => {
+                                    seen.push(v);
+                                    (seen.len() - 1) as u32
+                                }
+                            }
+                        })
+                        .collect::<Vec<u32>>()
+                };
+                let t = &spec.topology;
+                (
+                    relabel(&|n| spec.rack_of(n)),
+                    relabel(&|n| spec.region_of(n)),
+                    vec![
+                        t.rack_bw.to_bits(),
+                        t.region_bw.to_bits(),
+                        t.rack_latency_s.to_bits(),
+                        t.region_latency_s.to_bits(),
+                    ],
+                )
+            };
         PlanShapeKey {
             arch: ssm.arch.name.clone(),
             adapters: ssm
@@ -234,6 +284,9 @@ impl PlanShapeKey {
             shape: alloc_shape(alloc),
             tier_shape,
             tier_table,
+            rack_shape,
+            region_shape,
+            topo_table,
             opts: (opts.fused_kernel, opts.n_nano, opts.n_nano_max),
         }
     }
@@ -976,6 +1029,112 @@ mod tests {
         let pb = plan(&ssm, &b, &spec, &opts).unwrap();
         assert_eq!(pa.step_time_s.to_bits(), pb.step_time_s.to_bits());
         assert_eq!(pa, pb);
+    }
+
+    #[test]
+    fn flat_topology_keys_have_empty_topology_components() {
+        // the byte-freedom contract at the cache-key level: a flat
+        // tree adds nothing, so pre-topology keys (and cached plans)
+        // are untouched
+        let (spec, alloc) = setup(4);
+        assert!(spec.topology.is_flat());
+        let ssm = Ssm::fuse(&[job(0, 8, 4, 512)]).unwrap();
+        let key = PlanShapeKey::of(
+            &ssm,
+            &alloc,
+            &spec,
+            &PlanOptions::default(),
+        );
+        assert!(key.rack_shape.is_empty());
+        assert!(key.region_shape.is_empty());
+        assert!(key.topo_table.is_empty());
+    }
+
+    #[test]
+    fn rack_patterns_key_apart_and_relabel_together() {
+        use crate::cluster::GpuId;
+        let mut spec = ClusterSpec::default_128(); // 16 nodes
+        spec.apply_topology("racks=4:rack_bw=0.25").unwrap();
+        let ssm =
+            Ssm::fuse(&[job(0, 8, 4, 512), job(1, 4, 2, 256)]).unwrap();
+        let opts = PlanOptions::default();
+        let pair = |n1: usize, n2: usize| Allocation {
+            gpus: vec![
+                GpuId { node: n1, idx: 0 },
+                GpuId { node: n2, idx: 0 },
+            ],
+        };
+        // nodes 0,1 share rack 0; nodes 0,4 sit in racks 0 and 1 —
+        // the node-equality pattern is identical, so only the rack
+        // components can keep these apart (and must: cross-rack links
+        // run at rack_bw)
+        let same_rack = pair(0, 1);
+        let cross_rack = pair(0, 4);
+        let k_same = PlanShapeKey::of(&ssm, &same_rack, &spec, &opts);
+        let k_cross =
+            PlanShapeKey::of(&ssm, &cross_rack, &spec, &opts);
+        assert_eq!(alloc_shape(&same_rack), alloc_shape(&cross_rack));
+        assert_ne!(k_same, k_cross);
+        // like-for-like shape: tp=2 allreduce over a 0.25x rack link
+        // is strictly more expensive than over in-rack IB
+        let p_same =
+            plan_with_shape(&ssm, &same_rack, &spec, &opts, 1, 2)
+                .unwrap();
+        let p_cross =
+            plan_with_shape(&ssm, &cross_rack, &spec, &opts, 1, 2)
+                .unwrap();
+        assert!(
+            p_cross.comm_s > p_same.comm_s,
+            "cross-rack comm {} <= same-rack {}",
+            p_cross.comm_s,
+            p_same.comm_s
+        );
+        // physical rack ids relabel away: racks (1,2) pattern-match
+        // racks (0,1) and must share the key and the plan bits
+        let other_racks = pair(4, 8);
+        let k_other =
+            PlanShapeKey::of(&ssm, &other_racks, &spec, &opts);
+        assert_eq!(k_cross, k_other);
+        let p_cross_best =
+            plan(&ssm, &cross_rack, &spec, &opts).unwrap();
+        let p_other = plan(&ssm, &other_racks, &spec, &opts).unwrap();
+        assert_eq!(
+            p_cross_best.step_time_s.to_bits(),
+            p_other.step_time_s.to_bits()
+        );
+    }
+
+    #[test]
+    fn single_tier_gang_strictly_beats_tier_split_gang() {
+        // the modeled half of the placement bugfix: on the pinned
+        // mixed fleet (h100*3:v100, 4 nodes x 4 GPUs), the 8-GPU plan
+        // on pure-h100 nodes is strictly faster than the plan on the
+        // h100+v100 split the count-based allocator used to pick —
+        // gang-synchronous pacing runs the split at v100 speed
+        use crate::cluster::GpuId;
+        let mut spec = ClusterSpec::with_gpus(16);
+        spec.apply_hardware_mix("h100*3:v100").unwrap();
+        let ssm =
+            Ssm::fuse(&[job(0, 8, 4, 512), job(1, 4, 4, 512)]).unwrap();
+        let opts = PlanOptions::default();
+        let gang = |n1: usize, n2: usize| Allocation {
+            gpus: (0..8)
+                .map(|i| GpuId {
+                    node: if i < 4 { n1 } else { n2 },
+                    idx: i % 4,
+                })
+                .collect(),
+        };
+        let pure = gang(0, 1); // both h100
+        let split = gang(0, 3); // h100 + v100 (the old pick)
+        let p_pure = plan(&ssm, &pure, &spec, &opts).unwrap();
+        let p_split = plan(&ssm, &split, &spec, &opts).unwrap();
+        assert!(
+            p_pure.step_time_s < p_split.step_time_s,
+            "single-tier step {} not below split step {}",
+            p_pure.step_time_s,
+            p_split.step_time_s
+        );
     }
 
     #[test]

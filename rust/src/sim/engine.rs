@@ -250,6 +250,17 @@ struct TierUtilTracker {
     acc: Vec<TimeWeighted>,
 }
 
+/// Topology-radius accounting for non-flat clusters: how many racks
+/// each running gang spans, sampled once per gang per scheduling
+/// round. `None` on flat topologies — constructing it would add work
+/// to the flat path, which must stay byte-identical to pre-topology
+/// builds (`SimResult::rack_span_*` simply report 0 there).
+struct RackSpanTracker {
+    span_sum: u64,
+    span_obs: u64,
+    span_max: u64,
+}
+
 /// Origin tag for exogenous fault events, carried in the (otherwise
 /// unused) `epoch` field: model-originated events chain the next draw
 /// from their seeded stream when handled; scripted events (epoch 0)
@@ -378,6 +389,8 @@ pub struct Engine<'a> {
     last_obs_t: f64,
     /// per-tier utilization accumulators (mixed fleets only)
     tier_util: Option<TierUtilTracker>,
+    /// gang rack-span accounting (non-flat topologies only)
+    rack_span: Option<RackSpanTracker>,
     /// scheduling-round counter; stamps (and stales) *reschedule
     /// points* only — completions use the per-job epochs below
     epoch: u64,
@@ -451,11 +464,48 @@ impl<'a> Engine<'a> {
                 });
             }
         }
+        // correlated domain episodes: synthesized once over the
+        // topology's failure domains as epoch-0 scripts reusing the
+        // existing NodeFailure/NodeDegraded machinery — no new event
+        // kinds. A flat topology has no domains and a zero knob
+        // synthesizes nothing, so the flat path stays byte-identical.
+        let domains = cfg.cluster.failure_domains();
+        let domain_faults = if cfg.faults.domain_mtbf_s > 0.0
+            && !domains.is_empty()
+        {
+            crate::workload::synthesize_domain_faults(
+                cfg.faults.domain_mtbf_s,
+                cfg.faults.domain_mttr_s,
+                &domains,
+                cfg.seed,
+                t_max,
+            )
+        } else {
+            vec![]
+        };
+        let domain_stragglers = if cfg.stragglers.domain_mtbs_s > 0.0
+            && !domains.is_empty()
+        {
+            crate::workload::synthesize_domain_stragglers(
+                cfg.stragglers.domain_mtbs_s,
+                cfg.stragglers.domain_mtts_s,
+                cfg.stragglers.severity_min,
+                cfg.stragglers.severity_max,
+                &domains,
+                cfg.seed,
+                t_max,
+            )
+        } else {
+            vec![]
+        };
         // straggler sources: one pending degrade per node from the
         // seeded renewal model (severity + restore are drawn when the
-        // degrade fires), plus the scripted transitions
+        // degrade fires), plus the scripted transitions (user script
+        // and synthesized domain episodes alike)
+        let mut straggler_script = opts.straggler_script.clone();
+        straggler_script.extend(domain_stragglers);
         let mut stragglers =
-            StragglerDriver::new(cfg, &opts.straggler_script);
+            StragglerDriver::new(cfg, &straggler_script);
         if let Some(m) = &mut stragglers.model {
             for node in 0..m.n_nodes() {
                 events.push(Event {
@@ -466,7 +516,7 @@ impl<'a> Engine<'a> {
                 });
             }
         }
-        for e in &opts.straggler_script {
+        for e in &straggler_script {
             events.push(Event {
                 time: e.time,
                 kind: if e.speed < 1.0 {
@@ -487,8 +537,9 @@ impl<'a> Engine<'a> {
                 epoch: FAULT_MODEL_ORIGIN,
             });
         }
-        // deterministic injected faults (pinned scenarios)
-        for f in &opts.fault_script {
+        // deterministic injected faults (pinned scenarios), plus the
+        // synthesized correlated domain failures
+        for f in opts.fault_script.iter().chain(domain_faults.iter()) {
             let kind = match f.kind {
                 FaultKind::NodeFailure => EventKind::NodeFailure,
                 FaultKind::NodeRecovery => EventKind::NodeRecovery,
@@ -549,6 +600,15 @@ impl<'a> Engine<'a> {
                 gpus,
             })
         };
+        let rack_span = if cfg.cluster.topology.is_flat() {
+            None
+        } else {
+            Some(RackSpanTracker {
+                span_sum: 0,
+                span_obs: 0,
+                span_max: 0,
+            })
+        };
         Engine {
             predictor,
             state: SimState::new(cfg, &jobs),
@@ -568,6 +628,7 @@ impl<'a> Engine<'a> {
             estimator,
             last_obs_t: 0.0,
             tier_util,
+            rack_span,
             epoch: 0,
             completion_epoch: HashMap::new(),
             completion_anchor: HashMap::new(),
@@ -1075,6 +1136,7 @@ impl<'a> Engine<'a> {
         }
 
         self.observe_tier_util(t);
+        self.observe_rack_span();
         let stats = self.round_stats(t);
         self.obs.round(&stats, extra);
     }
@@ -1099,6 +1161,29 @@ impl<'a> Engine<'a> {
             if tr.gpus[i] > 0.0 {
                 tw.add(t, busy[i] / tr.gpus[i]);
             }
+        }
+    }
+
+    /// Sample how many racks every running gang spans (non-flat
+    /// topologies only): one observation per gang per round, so the
+    /// mean weights gangs by how long they occupy the cluster.
+    fn observe_rack_span(&mut self) {
+        let Some(rs) = &mut self.rack_span else {
+            return;
+        };
+        for g in &self.state.running {
+            let mut racks: Vec<usize> = g
+                .alloc
+                .gpus
+                .iter()
+                .map(|gpu| self.cfg.cluster.rack_of(gpu.node))
+                .collect();
+            racks.sort_unstable();
+            racks.dedup();
+            let span = racks.len() as u64;
+            rs.span_sum += span;
+            rs.span_obs += 1;
+            rs.span_max = rs.span_max.max(span);
         }
     }
 
@@ -1333,6 +1418,13 @@ impl<'a> Engine<'a> {
                 .collect(),
             None => vec![],
         };
+        let (rack_span_mean, rack_span_max) = match &self.rack_span {
+            Some(rs) if rs.span_obs > 0 => (
+                rs.span_sum as f64 / rs.span_obs as f64,
+                rs.span_max,
+            ),
+            _ => (0.0, 0),
+        };
 
         SimResult {
             policy: self.cfg.policy,
@@ -1380,6 +1472,8 @@ impl<'a> Engine<'a> {
                 .straggler_slowdown,
             migrations: self.obs.stragglers.migrations,
             tier_util,
+            rack_span_mean,
+            rack_span_max,
         }
     }
 }

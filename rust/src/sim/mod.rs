@@ -129,6 +129,12 @@ pub struct SimResult {
     /// constructed there, so homogeneous runs stay byte-identical to
     /// pre-tier builds.
     pub tier_util: Vec<(String, f64)>,
+    /// mean number of racks spanned per running gang, sampled once per
+    /// gang per scheduling round (0.0 on flat topologies — the tracker
+    /// is never constructed there, keeping the flat path byte-stable)
+    pub rack_span_mean: f64,
+    /// maximum racks any gang ever spanned (0 on flat topologies)
+    pub rack_span_max: u64,
 }
 
 impl SimResult {
@@ -415,6 +421,122 @@ mod tests {
         );
         assert_eq!(r.node_degrades, 0);
         assert_eq!(r.restarts, 0);
+    }
+
+    #[test]
+    fn correlated_rack_failure_strictly_degrades_goodput() {
+        // same failure mass, two shapes: rack-correlated (4 nodes of
+        // rack 0 down together for 5000 s) vs spread (the same 4
+        // nodes down 5000 s each, staggered so the episodes never
+        // overlap). The single 20-GPU job fits while any 3 nodes are
+        // up (28 free) but not while a whole rack is out (16 free),
+        // so the correlated shape stalls the job for the whole
+        // episode where the spread shape only pays restart overheads.
+        let mut cfg = ExperimentConfig::default();
+        cfg.cluster = crate::cluster::ClusterSpec::with_gpus(32);
+        cfg.cluster.apply_topology("racks=2:rack_bw=0.5").unwrap();
+        cfg.n_jobs = 1;
+        let job = JobSpec {
+            id: 0,
+            base_model: "llama3-8b".into(),
+            rank: 8,
+            batch_size: 4,
+            seq_len: 512,
+            gpus: 20,
+            total_steps: 20_000,
+            submit_time: 0.0,
+            max_slowdown: 10.0,
+        };
+        let fail = |t: f64, node: u64| crate::workload::ScriptedFault {
+            time: t,
+            kind: crate::workload::FaultKind::NodeFailure,
+            target: node,
+        };
+        let recover =
+            |t: f64, node: u64| crate::workload::ScriptedFault {
+                time: t,
+                kind: crate::workload::FaultKind::NodeRecovery,
+                target: node,
+            };
+        let correlated: Vec<_> = (0..4)
+            .flat_map(|n| {
+                [fail(1_000.0, n), recover(6_000.0, n)]
+            })
+            .collect();
+        let spread: Vec<_> = (0..4)
+            .flat_map(|n| {
+                let t = 1_000.0 + n as f64 * 6_000.0;
+                [fail(t, n as u64), recover(t + 5_000.0, n as u64)]
+            })
+            .collect();
+        let run = |script: Vec<crate::workload::ScriptedFault>| {
+            let opts = EngineOptions {
+                fault_script: script,
+                ..EngineOptions::default()
+            };
+            simulate_jobs_with(&cfg, vec![job.clone()], &opts, &mut [])
+        };
+        let corr = run(correlated);
+        let ind = run(spread);
+        assert_eq!(corr.node_failures, 4);
+        assert_eq!(ind.node_failures, 4);
+        assert!(corr.incomplete_jobs.is_empty());
+        assert!(ind.incomplete_jobs.is_empty());
+        assert!(
+            corr.goodput < ind.goodput,
+            "correlated goodput {} not strictly below spread {}",
+            corr.goodput,
+            ind.goodput
+        );
+        // a 20-GPU gang on 4-GPU nodes of 2 racks must span both —
+        // the non-flat tracker sees it
+        assert!(corr.rack_span_max >= 2, "{}", corr.rack_span_max);
+        assert!(corr.rack_span_mean >= 1.0);
+    }
+
+    #[test]
+    fn domain_episodes_conserve_jobs_and_are_deterministic() {
+        // rack-scoped correlated failures + stragglers on: every job
+        // still completes exactly once (episodes evict and requeue,
+        // never lose jobs) and the run is bit-deterministic
+        let mut cfg = small_cfg(Policy::TLora);
+        cfg.cluster.apply_topology("racks=4:rack_bw=0.5").unwrap();
+        cfg.faults.domain_mtbf_s = 4_000.0;
+        cfg.faults.domain_mttr_s = 300.0;
+        cfg.stragglers.domain_mtbs_s = 6_000.0;
+        cfg.stragglers.domain_mtts_s = 400.0;
+        cfg.validate().unwrap();
+        let r = simulate(&cfg);
+        assert_eq!(r.jct.len(), cfg.n_jobs);
+        assert!(r.incomplete_jobs.is_empty());
+        let r2 = simulate(&cfg);
+        assert_eq!(r.jct, r2.jct);
+        assert_eq!(r.node_failures, r2.node_failures);
+        assert_eq!(r.node_degrades, r2.node_degrades);
+        // with the knobs at 0 the same topology synthesizes nothing
+        let mut quiet = small_cfg(Policy::TLora);
+        quiet.cluster.apply_topology("racks=4:rack_bw=0.5").unwrap();
+        let q = simulate(&quiet);
+        assert_eq!(q.node_failures, 0);
+        assert_eq!(q.node_degrades, 0);
+    }
+
+    #[test]
+    fn single_rack_topology_is_byte_identical_to_flat() {
+        // racks=1 parses to a non-empty spec string but a flat tree:
+        // every metric must match the default cluster bit-for-bit,
+        // and the rack-span tracker must never engage
+        let flat = simulate(&small_cfg(Policy::TLora));
+        let mut cfg = small_cfg(Policy::TLora);
+        cfg.cluster.apply_topology("racks=1").unwrap();
+        let r = simulate(&cfg);
+        assert_eq!(flat.jct, r.jct);
+        assert_eq!(flat.events, r.events);
+        assert_eq!(flat.sched_rounds, r.sched_rounds);
+        assert_eq!(flat.makespan.to_bits(), r.makespan.to_bits());
+        assert_eq!(flat.goodput.to_bits(), r.goodput.to_bits());
+        assert_eq!(r.rack_span_mean, 0.0);
+        assert_eq!(r.rack_span_max, 0);
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! A [`SweepGrid`] is the cartesian product of the evaluation axes every
 //! figure of the paper varies: policy × job count × cluster size ×
 //! arrival-rate scale × trace month × node MTBF × straggler MTBS ×
-//! seed. [`SweepGrid::points`] enumerates the cells in a fixed
+//! hardware mix × topology × seed. [`SweepGrid::points`] enumerates the cells in a fixed
 //! row-major order, so a sweep's output is a pure function of the grid
 //! regardless of how many worker threads execute it. The MTBF axis
 //! (seconds; 0 = no churn) opens the failure/SLO workload dimension;
@@ -50,6 +50,11 @@ pub struct SweepGrid {
     /// reference fleet and keeps the cell key byte-identical to
     /// pre-tier sweeps
     pub hardware_mixes: Vec<String>,
+    /// topology strings (`cluster::parse_topology` syntax, e.g.
+    /// `"racks=4:rack_bw=0.5"`); the empty string is the flat
+    /// single-switch topology and keeps the cell key byte-identical
+    /// to pre-topology sweeps
+    pub topologies: Vec<String>,
     pub seeds: Vec<u64>,
 }
 
@@ -65,6 +70,7 @@ impl Default for SweepGrid {
             mtbfs: vec![base.faults.mtbf_s],
             stragglers: vec![base.stragglers.mtbs_s],
             hardware_mixes: vec![base.cluster.hardware_mix.clone()],
+            topologies: vec![base.cluster.topology.spec_str.clone()],
             seeds: vec![base.seed],
             base,
         }
@@ -82,6 +88,7 @@ impl SweepGrid {
             * self.mtbfs.len()
             * self.stragglers.len()
             * self.hardware_mixes.len()
+            * self.topologies.len()
             * self.seeds.len()
     }
 
@@ -92,6 +99,13 @@ impl SweepGrid {
     /// point's mix comes verbatim from this axis.
     pub fn is_heterogeneous(&self) -> bool {
         self.hardware_mixes.iter().any(|m| !m.is_empty())
+    }
+
+    /// True when any cell of the grid requests a non-flat topology.
+    /// Gates the streaming report's `topology` / rack-span columns the
+    /// same way [`SweepGrid::is_heterogeneous`] gates the tier columns.
+    pub fn has_topology(&self) -> bool {
+        self.topologies.iter().any(|t| !t.is_empty())
     }
 
     pub fn is_empty(&self) -> bool {
@@ -110,6 +124,7 @@ impl SweepGrid {
             ("mtbfs", self.mtbfs.is_empty()),
             ("stragglers", self.stragglers.is_empty()),
             ("hardware_mixes", self.hardware_mixes.is_empty()),
+            ("topologies", self.topologies.is_empty()),
             ("seeds", self.seeds.is_empty()),
         ] {
             if empty {
@@ -122,6 +137,11 @@ impl SweepGrid {
             ClusterSpec::with_gpus(8)
                 .apply_hardware_mix(m)
                 .map_err(|e| format!("hardware mix {m:?}: {e}"))?;
+        }
+        for t in &self.topologies {
+            ClusterSpec::with_gpus(8)
+                .apply_topology(t)
+                .map_err(|e| format!("topology {t:?}: {e}"))?;
         }
         for p in self.points() {
             p.config(&self.base)
@@ -144,22 +164,26 @@ impl SweepGrid {
                             for &mtbf_s in &self.mtbfs {
                                 for &mtbs in &self.stragglers {
                                     for mix in &self.hardware_mixes {
-                                        for &seed in &self.seeds {
-                                            out.push(SweepPoint {
-                                                index,
-                                                policy,
-                                                n_jobs,
-                                                gpus,
-                                                rate_scale,
-                                                month,
-                                                mtbf_s,
-                                                straggler_mtbs_s:
-                                                    mtbs,
-                                                hardware_mix: mix
-                                                    .clone(),
-                                                seed,
-                                            });
-                                            index += 1;
+                                        for topo in &self.topologies {
+                                            for &seed in &self.seeds {
+                                                out.push(SweepPoint {
+                                                    index,
+                                                    policy,
+                                                    n_jobs,
+                                                    gpus,
+                                                    rate_scale,
+                                                    month,
+                                                    mtbf_s,
+                                                    straggler_mtbs_s:
+                                                        mtbs,
+                                                    hardware_mix: mix
+                                                        .clone(),
+                                                    topology: topo
+                                                        .clone(),
+                                                    seed,
+                                                });
+                                                index += 1;
+                                            }
                                         }
                                     }
                                 }
@@ -189,6 +213,8 @@ pub struct SweepPoint {
     pub straggler_mtbs_s: f64,
     /// hardware-mix string ("" = homogeneous reference fleet)
     pub hardware_mix: String,
+    /// topology string ("" = flat single-switch cluster)
+    pub topology: String,
     pub seed: u64,
 }
 
@@ -203,6 +229,9 @@ impl SweepPoint {
         cfg.cluster
             .apply_hardware_mix(&self.hardware_mix)
             .expect("SweepGrid::validate rejects malformed mixes");
+        cfg.cluster
+            .apply_topology(&self.topology)
+            .expect("SweepGrid::validate rejects malformed topologies");
         cfg.trace = month_profile(self.month).scaled(self.rate_scale);
         cfg.faults.mtbf_s = self.mtbf_s;
         cfg.stragglers.mtbs_s = self.straggler_mtbs_s;
@@ -221,8 +250,9 @@ impl SweepPoint {
     /// `f` component is the node MTBF in seconds (0 = fault-free); the
     /// `d` component is the straggler MTBS in seconds (0 = no
     /// degraded nodes). A trailing `/h<mix>` component appears only
-    /// for heterogeneous cells, so homogeneous sweep keys stay
-    /// byte-identical to pre-tier builds.
+    /// for heterogeneous cells and a trailing `/t<topology>` component
+    /// only for non-flat cells, so homogeneous flat sweep keys stay
+    /// byte-identical to pre-tier and pre-topology builds.
     pub fn cell_key(&self) -> String {
         let mut key = format!(
             "{}/j{}/g{}/r{}x/m{}/f{}/d{}",
@@ -237,6 +267,10 @@ impl SweepPoint {
         if !self.hardware_mix.is_empty() {
             key.push_str("/h");
             key.push_str(&self.hardware_mix);
+        }
+        if !self.topology.is_empty() {
+            key.push_str("/t");
+            key.push_str(&self.topology);
         }
         key
     }
@@ -403,6 +437,46 @@ mod tests {
         assert!(g.validate().is_err());
         let mut g = grid();
         g.hardware_mixes.clear();
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn topology_axis_enumerates_and_applies() {
+        let mut g = grid();
+        g.topologies = vec!["".into(), "racks=4:rack_bw=0.5".into()];
+        assert_eq!(g.len(), 2 * 2 * 2 * 2 * 3);
+        let pts = g.points();
+        assert_eq!(pts.len(), g.len());
+        // topology varies faster than hardware mix, slower than seed
+        assert_eq!(pts[0].topology, "");
+        assert_eq!(pts[3].topology, "racks=4:rack_bw=0.5");
+        // the flat cell's key is byte-identical to the pre-topology
+        // format; only non-flat cells grow the /t component
+        assert!(pts[0].cell_key().ends_with("/f0/d0"));
+        assert!(pts[3]
+            .cell_key()
+            .ends_with("/f0/d0/tracks=4:rack_bw=0.5"));
+        assert_ne!(pts[0].cell_key(), pts[3].cell_key());
+        let cfg0 = pts[0].config(&g.base);
+        let cfg1 = pts[3].config(&g.base);
+        assert!(cfg0.cluster.topology.is_flat());
+        assert!(!cfg1.cluster.topology.is_flat());
+        assert_eq!(cfg1.cluster.topology.racks, 4);
+        assert_eq!(cfg1.cluster.topology.rack_bw, 0.5);
+        // the topology survives the gpus-axis cluster rebuild
+        assert_eq!(cfg1.cluster.total_gpus(), pts[3].gpus);
+        assert!(cfg0.validate().is_ok() && cfg1.validate().is_ok());
+        assert!(g.has_topology());
+        assert!(!grid().has_topology());
+    }
+
+    #[test]
+    fn validate_rejects_malformed_topology() {
+        let mut g = grid();
+        g.topologies = vec!["racks=zero".into()];
+        assert!(g.validate().is_err());
+        let mut g = grid();
+        g.topologies.clear();
         assert!(g.validate().is_err());
     }
 }

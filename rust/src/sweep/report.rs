@@ -65,6 +65,13 @@ pub struct CellSummary {
     /// this so single-tier reports stay byte-identical to pre-tier
     /// builds
     pub tier_util: Vec<(String, (f64, f64))>,
+    /// mean racks spanned per scheduled gang, pooled across replicas;
+    /// (0, 0) for flat cells where the tracker never runs — the
+    /// topology columns are gated on the cell's topology string so
+    /// flat reports stay byte-identical to pre-topology builds
+    pub rack_span_mean: (f64, f64),
+    /// worst racks-spanned by any gang across the cell's replicas
+    pub rack_span_max: u64,
 }
 
 impl CellSummary {
@@ -168,6 +175,12 @@ pub fn aggregate(run: &SweepRun) -> Vec<CellSummary> {
                         (name.clone(), mean_ci95(&xs))
                     })
                     .collect(),
+                rack_span_mean: col(&|p| p.result.rack_span_mean),
+                rack_span_max: pts
+                    .iter()
+                    .map(|p| p.result.rack_span_max)
+                    .max()
+                    .unwrap_or(0),
             }
         })
         .collect()
@@ -202,12 +215,17 @@ fn pm(v: (f64, f64), digits: usize) -> String {
 /// homogeneous sweeps render byte-identically to pre-tier builds.
 pub fn sweep_table(title: &str, cells: &[CellSummary]) -> Table {
     let het = cells.iter().any(|c| !c.tier_util.is_empty());
+    let topo =
+        cells.iter().any(|c| !c.point.topology.is_empty());
     let mut headers =
         vec!["scenario", "seeds", "thr (samples/s)", "goodput",
           "mean JCT (s)", "p99 JCT (s)", "GPU util", "slowdown",
           "SLO", "restarts", "migr", "probes", "hit%", "incomplete"];
     if het {
         headers.push("tier util");
+    }
+    if topo {
+        headers.push("rack span");
     }
     let mut t = Table::new(title, &headers);
     for c in cells {
@@ -262,14 +280,26 @@ pub fn sweep_table(title: &str, cells: &[CellSummary]) -> Table {
                     .join(" ")
             });
         }
+        if topo {
+            row.push(if c.point.topology.is_empty() {
+                "-".into()
+            } else {
+                format!(
+                    "{:.2} max {}",
+                    fin(c.rack_span_mean.0),
+                    c.rack_span_max
+                )
+            });
+        }
         t.row(&row);
     }
     t
 }
 
-/// CSV column names; `het` appends the heterogeneity-gated columns.
-/// Shared by the legacy and streaming CSV paths.
-pub(crate) fn csv_headers(het: bool) -> Vec<&'static str> {
+/// CSV column names; `het` appends the heterogeneity-gated columns and
+/// `topo` the topology-gated ones. Shared by the legacy and streaming
+/// CSV paths.
+pub(crate) fn csv_headers(het: bool, topo: bool) -> Vec<&'static str> {
     let mut headers =
         vec!["index", "policy", "n_jobs", "gpus", "rate_scale", "month",
           "mtbf_s", "straggler_mtbs_s", "seed", "throughput",
@@ -284,12 +314,21 @@ pub(crate) fn csv_headers(het: bool) -> Vec<&'static str> {
         headers.push("hardware_mix");
         headers.push("tier_util");
     }
+    if topo {
+        headers.push("topology");
+        headers.push("rack_span_mean");
+        headers.push("rack_span_max");
+    }
     headers
 }
 
 /// One point's CSV cells, in [`csv_headers`] order. Shared by the
 /// legacy and streaming CSV paths.
-pub(crate) fn csv_point_row(p: &PointResult, het: bool) -> Vec<String> {
+pub(crate) fn csv_point_row(
+    p: &PointResult,
+    het: bool,
+    topo: bool,
+) -> Vec<String> {
     let mut row = vec![
         p.point.index.to_string(),
         p.point.policy.slug().to_string(),
@@ -336,6 +375,11 @@ pub(crate) fn csv_point_row(p: &PointResult, het: bool) -> Vec<String> {
                 .join(";"),
         );
     }
+    if topo {
+        row.push(p.point.topology.clone());
+        row.push(format!("{:.6}", fin(p.result.rack_span_mean)));
+        row.push(p.result.rack_span_max.to_string());
+    }
     row
 }
 
@@ -348,9 +392,13 @@ pub fn to_csv(run: &SweepRun) -> String {
         .points
         .iter()
         .any(|p| !p.point.hardware_mix.is_empty());
-    let mut t = Table::new("sweep", &csv_headers(het));
+    let topo = run
+        .points
+        .iter()
+        .any(|p| !p.point.topology.is_empty());
+    let mut t = Table::new("sweep", &csv_headers(het, topo));
     for p in &run.points {
-        t.row(&csv_point_row(p, het));
+        t.row(&csv_point_row(p, het, topo));
     }
     t.to_csv()
 }
@@ -438,6 +486,14 @@ pub(crate) fn point_json(p: &PointResult, include_timing: bool) -> Json {
                 ),
             );
     }
+    // gated on topology: flat points carry no topology fields, so
+    // their JSON is byte-identical to pre-topology builds
+    if !p.point.topology.is_empty() {
+        j = j
+            .set("topology", p.point.topology.as_str())
+            .set("rack_span_mean", fin(p.result.rack_span_mean))
+            .set("rack_span_max", p.result.rack_span_max);
+    }
     if include_timing {
         j = j.set("wall_s", p.wall_s);
     }
@@ -486,6 +542,12 @@ pub(crate) fn cell_json(c: &CellSummary) -> Json {
                         .collect(),
                 ),
             );
+    }
+    if !c.point.topology.is_empty() {
+        j = j
+            .set("topology", c.point.topology.as_str())
+            .set("rack_span_mean", ci(c.rack_span_mean))
+            .set("rack_span_max", c.rack_span_max);
     }
     j
 }
@@ -807,5 +869,66 @@ mod tests {
         let t = sweep_table("demo", &cells).render();
         assert!(t.contains("tier util"), "{t}");
         assert!(t.contains("a100:"), "{t}");
+    }
+
+    fn run_topo() -> SweepRun {
+        let mut g = SweepGrid::default();
+        g.policies = vec![Policy::TLora];
+        g.n_jobs = vec![6];
+        g.gpus = vec![32];
+        g.rate_scales = vec![2.0];
+        g.months = vec![1];
+        g.topologies = vec!["racks=4:rack_bw=0.5".into()];
+        g.seeds = vec![3];
+        runner::run(&g, 1).unwrap()
+    }
+
+    #[test]
+    fn topology_columns_appear_only_for_topo_cells() {
+        // flat sweeps keep the pre-topology schema byte-for-byte
+        let flat = run_small();
+        let header =
+            to_csv(&flat).lines().next().unwrap().to_string();
+        assert!(!header.contains("topology"), "{header}");
+        assert!(!header.contains("rack_span"), "{header}");
+        let j = json::parse(&to_json_canonical(&flat).to_string())
+            .unwrap();
+        let pt = &j.get("points").unwrap().as_arr().unwrap()[0];
+        assert!(pt.get("topology").is_none());
+        assert!(pt.get("rack_span_mean").is_none());
+        let cell = &j.get("cells").unwrap().as_arr().unwrap()[0];
+        assert!(cell.get("topology").is_none());
+
+        // topology sweeps carry the gated columns end to end
+        let topo = run_topo();
+        let csv = to_csv(&topo);
+        let header = csv.lines().next().unwrap();
+        assert!(
+            header.contains("topology")
+                && header.contains("rack_span_mean")
+                && header.contains("rack_span_max"),
+            "{header}"
+        );
+        assert!(csv.contains("racks=4:rack_bw=0.5"), "{csv}");
+        let j = json::parse(&to_json_canonical(&topo).to_string())
+            .unwrap();
+        let pt = &j.get("points").unwrap().as_arr().unwrap()[0];
+        assert_eq!(
+            pt.get("topology").unwrap().as_str().unwrap(),
+            "racks=4:rack_bw=0.5"
+        );
+        let span =
+            pt.get("rack_span_mean").unwrap().as_f64().unwrap();
+        assert!(span >= 1.0, "no gang ever observed: {span}");
+        let cells = aggregate(&topo);
+        assert!(
+            cells[0].key.ends_with("/tracks=4:rack_bw=0.5"),
+            "{}",
+            cells[0].key
+        );
+        assert!(cells[0].rack_span_max >= 1);
+        assert!(cells[0].rack_span_mean.0 >= 1.0);
+        let t = sweep_table("demo", &cells).render();
+        assert!(t.contains("rack span"), "{t}");
     }
 }

@@ -20,21 +20,23 @@
 //! - cell statistics use [`Welford`] accumulators, and the legacy
 //!   `mean_ci95` *is* a Welford fold over the same values in the same
 //!   order — bitwise-equal results;
-//! - seeds vary fastest in grid enumeration, so one cell's replicas
-//!   are adjacent in index order and a **single** live accumulator
-//!   suffices. (Grids with duplicated axis values would split a cell
-//!   across non-adjacent runs; that is detected and rejected — use
-//!   the legacy report for such grids.)
+//! - cells accumulate in a first-appearance-ordered vector with a
+//!   key→index map, so replicas fold in global arrival order even
+//!   when duplicated axis values split a cell across non-adjacent
+//!   runs — exactly the order `aggregate`'s buckets see, hence
+//!   bitwise-equal statistics and the same first-appearance emission
+//!   order.
 //!
-//! Sorted-key JSON puts `cells` before `points`, but cells only
-//! finalize after their last replica. Cells therefore stream straight
-//! to the output while points stream to a [`Spool`] (a temp file for
-//! the CLI/bench, memory for tests) that is spliced — via a fixed
-//! 64 KiB buffer — between the two sections at `finish`. Peak memory
+//! Sorted-key JSON puts `cells` before `points`, but a cell only
+//! finalizes once no later replica can still arrive — at `finish`.
+//! Cells therefore hold O(cells) accumulator state (which the table
+//! form needs anyway) while points stream to a [`Spool`] (a temp file
+//! for the CLI/bench, memory for tests) that is spliced — via a fixed
+//! 64 KiB buffer — after the cells section at `finish`. Peak memory
 //! is O(cells + threads), independent of point count; the
 //! `report_scaling` bench gates this with a counting allocator.
 
-use std::collections::HashSet;
+use std::collections::HashMap;
 use std::io::{self, Read, Seek, Write};
 use std::path::PathBuf;
 
@@ -261,6 +263,8 @@ struct CellAcc {
     /// tier names fixed by the cell's first replica (legacy rule)
     tier_names: Vec<String>,
     tier_utils: Vec<Welford>,
+    rack_span_mean: Welford,
+    rack_span_max: u64,
 }
 
 impl CellAcc {
@@ -295,6 +299,8 @@ impl CellAcc {
             incomplete: 0,
             tier_names,
             tier_utils,
+            rack_span_mean: Welford::default(),
+            rack_span_max: 0,
         };
         acc.push(p);
         acc
@@ -328,6 +334,9 @@ impl CellAcc {
                     .map_or(0.0, |&(_, u)| u),
             );
         }
+        self.rack_span_mean.add(p.result.rack_span_mean);
+        self.rack_span_max =
+            self.rack_span_max.max(p.result.rack_span_max);
     }
 
     fn finalize(self) -> CellSummary {
@@ -362,6 +371,8 @@ impl CellAcc {
                         .map(|w| w.mean_ci95()),
                 )
                 .collect(),
+            rack_span_mean: self.rack_span_mean.mean_ci95(),
+            rack_span_max: self.rack_span_max,
         }
     }
 }
@@ -369,19 +380,21 @@ impl CellAcc {
 /// The emit-as-you-aggregate report core. Feed it [`PointResult`]s in
 /// strict grid-index order (what [`run_streaming`] delivers); each
 /// point is written to the attached sinks immediately and folded into
-/// the live cell accumulator, then freed. `finish` closes the JSON
-/// envelope and returns the aggregated cells (O(cells) — the only
-/// thing the table form needs to buffer, since an aligned table
+/// its cell accumulator (looked up by key, so duplicated axis values
+/// that revisit a cell non-adjacently simply merge), then freed.
+/// `finish` finalizes the cells in first-appearance order, closes the
+/// JSON envelope and returns the aggregated cells (O(cells) — the
+/// only thing the table form needs to buffer, since an aligned table
 /// requires global column widths).
 pub struct StreamReport<'a> {
     het: bool,
+    topo: bool,
     include_timing: bool,
     json: Option<StreamJsonWriter<'a>>,
     csv: Option<&'a mut dyn Write>,
     csv_header_written: bool,
-    cells: Vec<CellSummary>,
-    seen_keys: HashSet<String>,
-    acc: Option<CellAcc>,
+    accs: Vec<CellAcc>,
+    key_index: HashMap<String, usize>,
     total_probes: u64,
     total_hits: u64,
     n_points: usize,
@@ -394,13 +407,13 @@ impl<'a> StreamReport<'a> {
     pub fn new(grid: &SweepGrid, include_timing: bool) -> Self {
         StreamReport {
             het: grid.is_heterogeneous(),
+            topo: grid.has_topology(),
             include_timing,
             json: None,
             csv: None,
             csv_header_written: false,
-            cells: Vec::new(),
-            seen_keys: HashSet::new(),
-            acc: None,
+            accs: Vec::new(),
+            key_index: HashMap::new(),
             total_probes: 0,
             total_hits: 0,
             n_points: 0,
@@ -429,10 +442,11 @@ impl<'a> StreamReport<'a> {
             return Ok(());
         }
         if let Some(out) = self.csv.as_mut() {
-            let headers: Vec<String> = csv_headers(self.het)
-                .iter()
-                .map(|h| h.to_string())
-                .collect();
+            let headers: Vec<String> =
+                csv_headers(self.het, self.topo)
+                    .iter()
+                    .map(|h| h.to_string())
+                    .collect();
             out.write_all(csv_row(&headers).as_bytes())?;
             out.write_all(b"\n")?;
         }
@@ -453,25 +467,16 @@ impl<'a> StreamReport<'a> {
         self.total_probes += p.result.scheduler_probes;
         self.total_hits += p.result.plan_cache_hits;
 
-        // online aggregation: seeds are innermost in grid
-        // enumeration, so replicas of one cell arrive adjacently and
-        // a single live accumulator suffices
+        // online aggregation: replicas fold into their cell's
+        // accumulator in global arrival order — the same order the
+        // legacy `aggregate` buckets see, whether or not the cell's
+        // replicas are contiguous (duplicated axis values aren't)
         let key = p.point.cell_key();
-        match self.acc.as_mut() {
-            Some(acc) if acc.key == key => acc.push(p),
-            _ => {
-                if let Some(done) = self.acc.take() {
-                    self.emit_cell(done)?;
-                }
-                if !self.seen_keys.insert(key.clone()) {
-                    return Err(bad_data(format!(
-                        "cell key '{key}' reappeared non-adjacently \
-                         (duplicated axis values?); streaming \
-                         aggregation needs one contiguous run per \
-                         cell — use the legacy report for this grid"
-                    )));
-                }
-                self.acc = Some(CellAcc::new(key, p));
+        match self.key_index.get(&key) {
+            Some(&i) => self.accs[i].push(p),
+            None => {
+                self.key_index.insert(key.clone(), self.accs.len());
+                self.accs.push(CellAcc::new(key, p));
             }
         }
 
@@ -480,7 +485,7 @@ impl<'a> StreamReport<'a> {
         }
         if self.csv.is_some() {
             self.ensure_csv_header()?;
-            let row = csv_point_row(p, self.het);
+            let row = csv_point_row(p, self.het, self.topo);
             let out = self.csv.as_mut().unwrap();
             out.write_all(csv_row(&row).as_bytes())?;
             out.write_all(b"\n")?;
@@ -488,25 +493,22 @@ impl<'a> StreamReport<'a> {
         Ok(())
     }
 
-    fn emit_cell(&mut self, acc: CellAcc) -> io::Result<()> {
-        let c = acc.finalize();
-        if let Some(json) = self.json.as_mut() {
-            json.cell(&cell_json(&c))?;
-        }
-        self.cells.push(c);
-        Ok(())
-    }
-
-    /// Finalize the live cell, close the JSON envelope, flush CSV,
-    /// and return the aggregated cells in emission order (identical
-    /// to [`super::report::aggregate`] on the collected run).
+    /// Finalize every cell in first-appearance order, close the JSON
+    /// envelope, flush CSV, and return the aggregated cells in
+    /// emission order (identical to [`super::report::aggregate`] on
+    /// the collected run).
     pub fn finish(
         mut self,
         n_threads: usize,
         wall_s: f64,
     ) -> io::Result<Vec<CellSummary>> {
-        if let Some(done) = self.acc.take() {
-            self.emit_cell(done)?;
+        let mut cells = Vec::with_capacity(self.accs.len());
+        for acc in std::mem::take(&mut self.accs) {
+            let c = acc.finalize();
+            if let Some(json) = self.json.as_mut() {
+                json.cell(&cell_json(&c))?;
+            }
+            cells.push(c);
         }
         if let Some(json) = self.json.take() {
             let totals = StreamTotals {
@@ -524,7 +526,7 @@ impl<'a> StreamReport<'a> {
             self.ensure_csv_header()?; // header even for empty grids
             self.csv.as_mut().unwrap().flush()?;
         }
-        Ok(self.cells)
+        Ok(cells)
     }
 }
 
@@ -697,24 +699,75 @@ mod tests {
     }
 
     #[test]
-    fn out_of_order_and_duplicate_cells_rejected() {
+    fn out_of_order_rejected_but_revisited_cells_merge() {
         let g = small_grid();
         let run = runner::run(&g, 1).unwrap();
-        // out of order
+        // out of order still hard-errors: the reorder buffer is the
+        // only thing that makes multi-threaded streaming deterministic
         let mut rep = StreamReport::new(&g, false);
         let err =
             rep.point(&run.points[1]).unwrap_err().to_string();
         assert!(err.contains("out of order"), "{err}");
-        // duplicate non-adjacent cell key: replay point 0 (its cell
-        // closed when point 2's new key arrived)
+        // a cell key reappearing non-adjacently (replay point 0 after
+        // point 2 opened a new cell) used to hard-error; it now folds
+        // into the original accumulator
         let mut rep = StreamReport::new(&g, false);
         rep.point(&run.points[0]).unwrap();
         rep.point(&run.points[1]).unwrap();
         rep.point(&run.points[2]).unwrap();
         let mut replay = run.points[0].clone();
         replay.point.index = 3;
-        let err = rep.point(&replay).unwrap_err().to_string();
-        assert!(err.contains("non-adjacently"), "{err}");
+        rep.point(&replay).unwrap();
+        let cells = rep.finish(1, 0.0).unwrap();
+        assert_eq!(cells.len(), 2, "revisit must not open a new cell");
+        assert_eq!(cells[0].n_seeds, 3);
+        assert_eq!(cells[1].n_seeds, 1);
+    }
+
+    #[test]
+    fn duplicate_axis_grid_streams_byte_identical_to_legacy() {
+        // regression (satellite): a grid whose gpus axis repeats a
+        // value splits each repeated cell across non-adjacent index
+        // runs; the streaming path used to reject this — it must now
+        // aggregate the revisited cells and still match the legacy
+        // report byte for byte
+        let mut g = small_grid();
+        g.gpus = vec![16, 32, 16];
+        let run = runner::run(&g, 2).unwrap();
+        let (canon, csv, cells) = stream_all(&g, &run, false);
+        assert_eq!(canon, to_json_canonical(&run).to_pretty());
+        assert_eq!(csv, to_csv(&run));
+        let legacy = aggregate(&run);
+        assert_eq!(cells.len(), legacy.len());
+        // the duplicated cell pools all four replicas (2 seeds × 2
+        // appearances), like the legacy bucket fold
+        assert_eq!(cells[0].n_seeds, 4);
+        assert_eq!(
+            sweep_table("t", &cells).render(),
+            sweep_table("t", &legacy).render()
+        );
+    }
+
+    #[test]
+    fn streaming_matches_legacy_on_topology_grid() {
+        let mut g = small_grid();
+        g.topologies = vec!["racks=4:rack_bw=0.5".into()];
+        g.gpus = vec![32];
+        g.seeds = vec![3];
+        let run = runner::run(&g, 1).unwrap();
+        let (canon, csv, cells) = stream_all(&g, &run, false);
+        assert_eq!(canon, to_json_canonical(&run).to_pretty());
+        assert_eq!(csv, to_csv(&run));
+        let header = csv.lines().next().unwrap();
+        assert!(
+            header.contains("topology")
+                && header.contains("rack_span_mean"),
+            "{header}"
+        );
+        assert_eq!(
+            sweep_table("t", &cells).render(),
+            sweep_table("t", &aggregate(&run)).render()
+        );
     }
 
     #[test]

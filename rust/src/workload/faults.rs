@@ -34,6 +34,7 @@
 //!   [`synthesize_stragglers`] materializes the stream like
 //!   `synthesize_node_faults` does for failures.
 
+use crate::cluster::FailureDomain;
 use crate::util::f64_cmp;
 use crate::util::rng::Rng;
 
@@ -290,6 +291,119 @@ pub fn synthesize_stragglers(
     out
 }
 
+/// Salt for *domain*-correlated fault streams — distinct from
+/// [`FAULT_SALT`] so enabling rack-scoped episodes never shifts the
+/// per-node streams drawn for the same experiment seed.
+const DOMAIN_FAULT_SALT: u64 = 0xD0E5_FA17;
+
+/// Salt for domain-correlated straggler streams (see
+/// [`DOMAIN_FAULT_SALT`]).
+const DOMAIN_STRAGGLER_SALT: u64 = 0xD0E5_5708;
+
+fn domain_rng(seed: u64, salt: u64, domain: usize) -> Rng {
+    Rng::new(
+        seed ^ salt
+            ^ (domain as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+    )
+}
+
+/// Materialize *correlated* failure episodes over named failure
+/// domains (racks/switches) as a sorted fault script covering
+/// `[0, horizon_s)`.
+///
+/// Each domain owns an independent seeded renewal stream — up-times
+/// exponential with mean `mtbf_s`, down-times exponential with mean
+/// `mttr_s` — and one episode draw fails **every node under the
+/// domain** at the same instant, with one shared recovery time. A
+/// domain's sequence is a pure function of `(seed, domain_index)`, so
+/// the script is bit-deterministic regardless of fleet shape changes
+/// elsewhere. Reuses the existing `NodeFailure`/`NodeRecovery` event
+/// machinery: the engine needs no new event kinds.
+pub fn synthesize_domain_faults(
+    mtbf_s: f64,
+    mttr_s: f64,
+    domains: &[FailureDomain],
+    seed: u64,
+    horizon_s: f64,
+) -> Vec<ScriptedFault> {
+    assert!(mtbf_s > 0.0 && mttr_s > 0.0, "mtbf/mttr must be > 0");
+    let mut out = vec![];
+    for (d, dom) in domains.iter().enumerate() {
+        let mut rng = domain_rng(seed, DOMAIN_FAULT_SALT, d);
+        let mut t = rng.exponential(1.0 / mtbf_s);
+        while t < horizon_s {
+            let rec = t + rng.exponential(1.0 / mttr_s);
+            for &node in &dom.nodes {
+                out.push(ScriptedFault {
+                    time: t,
+                    kind: FaultKind::NodeFailure,
+                    target: node as u64,
+                });
+                out.push(ScriptedFault {
+                    time: rec,
+                    kind: FaultKind::NodeRecovery,
+                    target: node as u64,
+                });
+            }
+            t = rec + rng.exponential(1.0 / mtbf_s);
+        }
+    }
+    out.sort_by(|a, b| {
+        f64_cmp(a.time, b.time).then(a.target.cmp(&b.target))
+    });
+    out
+}
+
+/// Materialize *correlated* straggler episodes over failure domains as
+/// a sorted script covering `[0, horizon_s)` — the shared-switch /
+/// power-domain degradation mode: one draw degrades every node under
+/// the domain to the **same** sampled severity, with one shared
+/// restore time. Same per-domain seeded construction as
+/// [`synthesize_domain_faults`].
+pub fn synthesize_domain_stragglers(
+    mtbs_s: f64,
+    mtts_s: f64,
+    severity_min: f64,
+    severity_max: f64,
+    domains: &[FailureDomain],
+    seed: u64,
+    horizon_s: f64,
+) -> Vec<ScriptedStraggler> {
+    assert!(mtbs_s > 0.0 && mtts_s > 0.0, "mtbs/mtts must be > 0");
+    assert!(
+        severity_min > 0.0
+            && severity_min <= severity_max
+            && severity_max < 1.0,
+        "severity bounds must satisfy 0 < min <= max < 1"
+    );
+    let mut out = vec![];
+    for (d, dom) in domains.iter().enumerate() {
+        let mut rng = domain_rng(seed, DOMAIN_STRAGGLER_SALT, d);
+        let mut t = rng.exponential(1.0 / mtbs_s);
+        while t < horizon_s {
+            let speed = rng.range_f64(severity_min, severity_max);
+            let restore = t + rng.exponential(1.0 / mtts_s);
+            for &node in &dom.nodes {
+                out.push(ScriptedStraggler {
+                    time: t,
+                    node: node as u64,
+                    speed,
+                });
+                out.push(ScriptedStraggler {
+                    time: restore,
+                    node: node as u64,
+                    speed: 1.0,
+                });
+            }
+            t = restore + rng.exponential(1.0 / mtbs_s);
+        }
+    }
+    out.sort_by(|a, b| {
+        f64_cmp(a.time, b.time).then(a.node.cmp(&b.node))
+    });
+    out
+}
+
 /// Materialize the per-node renewal process as a sorted fault script
 /// covering `[0, horizon_s)`. Failure times are measured from t=0;
 /// each failure is followed by its recovery (the recovery may land
@@ -504,6 +618,161 @@ mod tests {
             }
             assert_eq!(i, evs.len());
         }
+    }
+
+    fn two_rack_domains() -> Vec<FailureDomain> {
+        vec![
+            FailureDomain {
+                name: "rack0".into(),
+                nodes: vec![0, 1],
+            },
+            FailureDomain {
+                name: "rack1".into(),
+                nodes: vec![2, 3],
+            },
+        ]
+    }
+
+    #[test]
+    fn domain_episode_touches_exactly_the_domain_nodes() {
+        let domains = two_rack_domains();
+        let script = synthesize_domain_faults(
+            2_000.0, 300.0, &domains, 13, 50_000.0,
+        );
+        assert!(!script.is_empty());
+        for w in script.windows(2) {
+            assert!(w[0].time <= w[1].time);
+        }
+        // group entries into episodes by (time, kind): every episode
+        // must cover exactly one domain's full node set — no more, no
+        // fewer, never a node from another rack
+        let mut episodes: std::collections::BTreeMap<
+            (u64, bool),
+            Vec<u64>,
+        > = std::collections::BTreeMap::new();
+        for f in &script {
+            episodes
+                .entry((
+                    f.time.to_bits(),
+                    f.kind == FaultKind::NodeFailure,
+                ))
+                .or_default()
+                .push(f.target);
+        }
+        for ((bits, _), targets) in &episodes {
+            let hit = domains.iter().any(|d| {
+                let want: Vec<u64> =
+                    d.nodes.iter().map(|&n| n as u64).collect();
+                *targets == want
+            });
+            assert!(
+                hit,
+                "episode at t={} touched {targets:?}, not a domain",
+                f64::from_bits(*bits)
+            );
+        }
+        // per node: failure/recovery strictly alternate and pair up
+        for node in 0..4u64 {
+            let evs: Vec<&ScriptedFault> = script
+                .iter()
+                .filter(|f| f.target == node)
+                .collect();
+            assert!(!evs.is_empty(), "node {node} never failed");
+            for (i, f) in evs.iter().enumerate() {
+                let want = if i % 2 == 0 {
+                    FaultKind::NodeFailure
+                } else {
+                    FaultKind::NodeRecovery
+                };
+                assert_eq!(f.kind, want, "node {node} event {i}");
+            }
+            assert_eq!(evs.len() % 2, 0, "node {node} left down");
+        }
+        // both nodes of a domain share identical episode times
+        let t0: Vec<u64> = script
+            .iter()
+            .filter(|f| f.target == 0)
+            .map(|f| f.time.to_bits())
+            .collect();
+        let t1: Vec<u64> = script
+            .iter()
+            .filter(|f| f.target == 1)
+            .map(|f| f.time.to_bits())
+            .collect();
+        assert_eq!(t0, t1, "rack0 nodes diverged");
+    }
+
+    #[test]
+    fn domain_stragglers_share_one_severity_per_episode() {
+        let domains = two_rack_domains();
+        let script = synthesize_domain_stragglers(
+            2_000.0, 300.0, 0.2, 0.5, &domains, 13, 50_000.0,
+        );
+        assert!(!script.is_empty());
+        let mut degrades: std::collections::BTreeMap<
+            u64,
+            Vec<(u64, u64)>,
+        > = std::collections::BTreeMap::new();
+        for s in script.iter().filter(|s| s.speed < 1.0) {
+            assert!((0.2..=0.5).contains(&s.speed), "{}", s.speed);
+            degrades
+                .entry(s.time.to_bits())
+                .or_default()
+                .push((s.node, s.speed.to_bits()));
+        }
+        for (bits, members) in &degrades {
+            let nodes: Vec<u64> =
+                members.iter().map(|&(n, _)| n).collect();
+            assert!(
+                domains.iter().any(|d| {
+                    let want: Vec<u64> =
+                        d.nodes.iter().map(|&n| n as u64).collect();
+                    nodes == want
+                }),
+                "degrade at t={} hit {nodes:?}",
+                f64::from_bits(*bits)
+            );
+            // correlated: one severity draw for the whole domain
+            assert!(
+                members.iter().all(|&(_, s)| s == members[0].1),
+                "severities diverged within an episode"
+            );
+        }
+        // every degrade is eventually restored
+        for node in 0..4u64 {
+            let evs: Vec<&ScriptedStraggler> = script
+                .iter()
+                .filter(|s| s.node == node)
+                .collect();
+            assert_eq!(evs.len() % 2, 0, "node {node} left degraded");
+        }
+    }
+
+    #[test]
+    fn domain_streams_deterministic_and_salted_apart() {
+        let domains = two_rack_domains();
+        let a = synthesize_domain_faults(
+            1_000.0, 100.0, &domains, 7, 20_000.0,
+        );
+        let b = synthesize_domain_faults(
+            1_000.0, 100.0, &domains, 7, 20_000.0,
+        );
+        assert_eq!(a, b);
+        // a domain's stream never aliases the per-node stream for the
+        // same experiment seed
+        let one = vec![FailureDomain {
+            name: "rack0".into(),
+            nodes: vec![0],
+        }];
+        let dom =
+            synthesize_domain_faults(1_000.0, 100.0, &one, 7, 20_000.0);
+        let node = synthesize_node_faults(1_000.0, 100.0, 1, 7, 20_000.0);
+        assert_ne!(dom[0].time, node[0].time);
+        // and fault vs straggler domain streams are salted apart too
+        let s = synthesize_domain_stragglers(
+            1_000.0, 100.0, 0.2, 0.5, &one, 7, 20_000.0,
+        );
+        assert_ne!(dom[0].time, s[0].time);
     }
 
     #[test]

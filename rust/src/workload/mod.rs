@@ -16,12 +16,14 @@ pub mod faults;
 pub mod trace;
 
 pub use faults::{
+    synthesize_domain_faults, synthesize_domain_stragglers,
     synthesize_node_faults, synthesize_stragglers, FaultKind,
     NodeFaultModel, PreemptionModel, ScriptedFault, ScriptedStraggler,
     StragglerModel,
 };
-pub use trace::{load_csv, save_csv, DiurnalProfile, TenantClass,
-                TraceGenerator, TraceProfile};
+pub use trace::{load_csv, save_csv, stream_csv, stream_csv_file,
+                DiurnalProfile, TenantClass, TraceGenerator,
+                TraceProfile};
 
 /// One LoRA fine-tuning job (fixed at submission, §A.1).
 #[derive(Debug, Clone, PartialEq)]

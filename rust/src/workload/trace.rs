@@ -304,55 +304,127 @@ pub fn save_csv(jobs: &[JobSpec]) -> String {
     out
 }
 
-pub fn load_csv(text: &str) -> Result<Vec<JobSpec>, String> {
-    let mut jobs = vec![];
-    let mut lines = text.lines();
-    let header = lines.next().ok_or("empty csv")?;
-    let cols: Vec<&str> = header.split(',').map(str::trim).collect();
-    let idx = |name: &str| -> Result<usize, String> {
-        cols.iter()
-            .position(|c| *c == name)
-            .ok_or_else(|| format!("missing column {name}"))
-    };
-    let (ci_id, ci_model, ci_rank, ci_batch, ci_seq, ci_gpus, ci_steps,
-         ci_submit, ci_slow) = (
-        idx("job_id")?,
-        idx("base_model")?,
-        idx("rank")?,
-        idx("batch_size")?,
-        idx("seq_len")?,
-        idx("gpus")?,
-        idx("total_steps")?,
-        idx("submit_time")?,
-        idx("max_slowdown")?,
-    );
-    for (lineno, line) in lines.enumerate() {
+/// Parsed header of a job-trace CSV: where each required column sits.
+/// The streaming readers resolve this once, then parse data lines one
+/// at a time — no line outlives its [`JobSpec`].
+#[derive(Debug, Clone, Copy)]
+struct ColumnMap {
+    ci_id: usize,
+    ci_model: usize,
+    ci_rank: usize,
+    ci_batch: usize,
+    ci_seq: usize,
+    ci_gpus: usize,
+    ci_steps: usize,
+    ci_submit: usize,
+    ci_slow: usize,
+}
+
+impl ColumnMap {
+    fn parse(header: &str) -> Result<ColumnMap, String> {
+        let cols: Vec<&str> =
+            header.split(',').map(str::trim).collect();
+        let idx = |name: &str| -> Result<usize, String> {
+            cols.iter()
+                .position(|c| *c == name)
+                .ok_or_else(|| format!("missing column {name}"))
+        };
+        Ok(ColumnMap {
+            ci_id: idx("job_id")?,
+            ci_model: idx("base_model")?,
+            ci_rank: idx("rank")?,
+            ci_batch: idx("batch_size")?,
+            ci_seq: idx("seq_len")?,
+            ci_gpus: idx("gpus")?,
+            ci_steps: idx("total_steps")?,
+            ci_submit: idx("submit_time")?,
+            ci_slow: idx("max_slowdown")?,
+        })
+    }
+
+    /// Parse one data line. `lineno` is the 0-based index among
+    /// post-header lines (blank ones included) so error messages keep
+    /// the eager loader's 1-based whole-file line numbers. Blank lines
+    /// yield `Ok(None)`.
+    fn parse_line(
+        &self,
+        lineno: usize,
+        line: &str,
+    ) -> Result<Option<JobSpec>, String> {
         if line.trim().is_empty() {
-            continue;
+            return Ok(None);
         }
         let f: Vec<&str> = line.split(',').map(str::trim).collect();
         let get = |i: usize| -> Result<&str, String> {
-            f.get(i)
-                .copied()
-                .ok_or_else(|| format!("line {}: missing field", lineno + 2))
+            f.get(i).copied().ok_or_else(|| {
+                format!("line {}: missing field", lineno + 2)
+            })
         };
         let parse_num = |s: &str| -> Result<f64, String> {
-            s.parse()
-                .map_err(|_| format!("line {}: bad number {s}", lineno + 2))
+            s.parse().map_err(|_| {
+                format!("line {}: bad number {s}", lineno + 2)
+            })
         };
-        jobs.push(JobSpec {
-            id: parse_num(get(ci_id)?)? as u64,
-            base_model: get(ci_model)?.to_string(),
-            rank: parse_num(get(ci_rank)?)? as usize,
-            batch_size: parse_num(get(ci_batch)?)? as usize,
-            seq_len: parse_num(get(ci_seq)?)? as usize,
-            gpus: parse_num(get(ci_gpus)?)? as usize,
-            total_steps: parse_num(get(ci_steps)?)? as u64,
-            submit_time: parse_num(get(ci_submit)?)?,
-            max_slowdown: parse_num(get(ci_slow)?)?,
-        });
+        Ok(Some(JobSpec {
+            id: parse_num(get(self.ci_id)?)? as u64,
+            base_model: get(self.ci_model)?.to_string(),
+            rank: parse_num(get(self.ci_rank)?)? as usize,
+            batch_size: parse_num(get(self.ci_batch)?)? as usize,
+            seq_len: parse_num(get(self.ci_seq)?)? as usize,
+            gpus: parse_num(get(self.ci_gpus)?)? as usize,
+            total_steps: parse_num(get(self.ci_steps)?)? as u64,
+            submit_time: parse_num(get(self.ci_submit)?)?,
+            max_slowdown: parse_num(get(self.ci_slow)?)?,
+        }))
     }
-    Ok(jobs)
+}
+
+/// Stream jobs out of in-memory CSV text without building a `Vec`.
+/// Header problems ("empty csv", "missing column …") surface
+/// immediately; per-line problems surface as `Err` items at the line
+/// that has them, with messages byte-identical to the eager loader's.
+pub fn stream_csv(
+    text: &str,
+) -> Result<impl Iterator<Item = Result<JobSpec, String>> + '_, String>
+{
+    let mut lines = text.lines();
+    let header = lines.next().ok_or("empty csv")?;
+    let cols = ColumnMap::parse(header)?;
+    Ok(lines.enumerate().filter_map(move |(lineno, line)| {
+        cols.parse_line(lineno, line).transpose()
+    }))
+}
+
+/// Stream jobs straight off a file through a `BufReader`, one line in
+/// memory at a time — a million-job trace never materializes as text
+/// or as a `Vec<JobSpec>` inside this reader (what the *consumer*
+/// retains is its own business).
+pub fn stream_csv_file(
+    path: &std::path::Path,
+) -> Result<impl Iterator<Item = Result<JobSpec, String>>, String> {
+    use std::io::BufRead;
+    let file = std::fs::File::open(path)
+        .map_err(|e| format!("{}: {e}", path.display()))?;
+    let mut lines = std::io::BufReader::new(file).lines();
+    let header = match lines.next() {
+        None => return Err("empty csv".into()),
+        Some(h) => {
+            h.map_err(|e| format!("{}: {e}", path.display()))?
+        }
+    };
+    let cols = ColumnMap::parse(&header)?;
+    Ok(lines.enumerate().filter_map(move |(lineno, line)| {
+        match line {
+            Err(e) => {
+                Some(Err(format!("line {}: {e}", lineno + 2)))
+            }
+            Ok(l) => cols.parse_line(lineno, &l).transpose(),
+        }
+    }))
+}
+
+pub fn load_csv(text: &str) -> Result<Vec<JobSpec>, String> {
+    stream_csv(text)?.collect()
 }
 
 #[cfg(test)]
@@ -518,6 +590,61 @@ mod tests {
     fn csv_rejects_missing_columns() {
         assert!(load_csv("a,b,c\n1,2,3").is_err());
         assert!(load_csv("").is_err());
+    }
+
+    #[test]
+    fn streaming_reader_matches_eager_loader_exactly() {
+        // golden trace: every field of every job identical between the
+        // one-line-at-a-time path and the materializing path
+        let jobs = TraceGenerator::new(TraceProfile::month2(), 5)
+            .generate(300);
+        let csv = save_csv(&jobs);
+        let eager = load_csv(&csv).unwrap();
+        let streamed: Vec<JobSpec> = stream_csv(&csv)
+            .unwrap()
+            .collect::<Result<_, _>>()
+            .unwrap();
+        assert_eq!(eager, streamed);
+        assert_eq!(streamed, jobs);
+        // error messages are byte-identical too, including line
+        // numbers counted across blank lines
+        let bad = format!("{CSV_HEADER}\n\n1,llama3-8b,8,4,512,x,\
+                           100,1.5,1.3\n");
+        let e_eager = load_csv(&bad).unwrap_err();
+        let e_stream = stream_csv(&bad)
+            .unwrap()
+            .find_map(Result::err)
+            .unwrap();
+        assert_eq!(e_eager, e_stream);
+        assert_eq!(e_eager, "line 3: bad number x");
+        let short = format!("{CSV_HEADER}\n1,llama3-8b,8\n");
+        assert_eq!(
+            load_csv(&short).unwrap_err(),
+            stream_csv(&short).unwrap().find_map(Result::err).unwrap()
+        );
+        // header errors surface before any iteration
+        assert!(stream_csv("").is_err());
+        assert!(stream_csv("a,b\n1,2").is_err());
+    }
+
+    #[test]
+    fn file_streamer_matches_in_memory_paths() {
+        let jobs = TraceGenerator::new(TraceProfile::month1(), 17)
+            .generate(64);
+        let csv = save_csv(&jobs);
+        let path = std::env::temp_dir()
+            .join("tlora_stream_csv_file_test.csv");
+        std::fs::write(&path, &csv).unwrap();
+        let streamed: Vec<JobSpec> = stream_csv_file(&path)
+            .unwrap()
+            .collect::<Result<_, _>>()
+            .unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(streamed, jobs);
+        assert!(stream_csv_file(std::path::Path::new(
+            "/nonexistent/tlora.csv"
+        ))
+        .is_err());
     }
 
     #[test]

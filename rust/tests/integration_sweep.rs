@@ -85,6 +85,11 @@ fn assert_bit_identical(a: &SimResult, b: &SimResult, label: &str) {
         "{label}: straggler accounting"
     );
     assert_eq!(a.tier_util, b.tier_util, "{label}: tier util");
+    assert!(
+        a.rack_span_mean == b.rack_span_mean
+            && a.rack_span_max == b.rack_span_max,
+        "{label}: rack span"
+    );
 }
 
 #[test]
@@ -266,6 +271,65 @@ fn mixed_tier_grid_is_bit_identical_across_thread_counts() {
         .points
         .iter()
         .filter(|p| !p.point.hardware_mix.is_empty())
+    {
+        let direct = simulate(&p.point.config(&g.base));
+        assert_bit_identical(&p.result, &direct, &p.point.label());
+    }
+}
+
+#[test]
+fn topology_grid_is_bit_identical_across_thread_counts() {
+    // the topology axis rides the same determinism contract: the
+    // rack/region tree is a static property priced into plans and
+    // placement, so a non-flat sweep must not depend on worker count,
+    // and its canonical JSON must diff byte-exactly between 1 and 8
+    // threads (divergences localized by the lazy json differ)
+    let mut g = small_grid();
+    g.rate_scales = vec![2.0];
+    g.gpus = vec![32];
+    g.topologies = vec!["".into(), "racks=4:rack_bw=0.5".into()];
+    let serial = run(&g, 1).unwrap();
+    let parallel = run(&g, 8).unwrap();
+    assert_eq!(serial.points.len(), g.len());
+    for (a, b) in serial.points.iter().zip(&parallel.points) {
+        assert_eq!(a.point, b.point);
+        assert_bit_identical(&a.result, &b.result, &a.point.label());
+        if a.point.topology.is_empty() {
+            // flat cells never construct the rack-span tracker
+            assert_eq!(
+                a.result.rack_span_mean,
+                0.0,
+                "{}",
+                a.point.label()
+            );
+            assert_eq!(a.result.rack_span_max, 0);
+        } else {
+            assert!(
+                a.result.rack_span_mean >= 1.0,
+                "{}: no gang ever observed",
+                a.point.label()
+            );
+            assert!(a.result.rack_span_max >= 1);
+        }
+    }
+    let canon =
+        tlora::sweep::to_json_canonical(&serial).to_pretty();
+    let canon_par =
+        tlora::sweep::to_json_canonical(&parallel).to_pretty();
+    if canon != canon_par {
+        panic!(
+            "topology canonical JSON differs across thread counts; \
+             first divergence at {}",
+            tlora::util::json::diff(&canon, &canon_par)
+                .map(|d| d.to_string())
+                .unwrap_or_else(|| "formatting drift".into())
+        );
+    }
+    // each non-flat cell equals a direct simulate of its config
+    for p in serial
+        .points
+        .iter()
+        .filter(|p| !p.point.topology.is_empty())
     {
         let direct = simulate(&p.point.config(&g.base));
         assert_bit_identical(&p.result, &direct, &p.point.label());
