@@ -601,6 +601,21 @@ impl ClusterSpec {
 /// is a throughput property, not a capacity one — and the simulator
 /// prices every group touching it at the slowest member node's rate
 /// ([`Allocator::alloc_speed`]).
+///
+/// **Holes** (single-GPU faults, [`Allocator::set_gpu_down`]): a
+/// failed GPU inside an otherwise-healthy node is *stranded out of the
+/// free lists* — a free GPU moves to the node's `holed` side-list and
+/// a release onto a holed slot lands there too
+/// (strand-but-account: [`Allocator::free_gpus`] still counts it, so
+/// conservation `free_gpus() + held == capacity` holds through any
+/// churn). Because no free list ever contains a holed GPU, every
+/// allocation path — flat, scored/topology, avoiding — respects holes
+/// with zero logic changes, and a hole-free fleet replays the
+/// pre-hole allocation order bit-for-bit (the byte-freedom contract).
+/// Node-level `set_down` composes orthogonally: recovering a node with
+/// a live hole restores exactly `gpus_per_node - holes` allocatable
+/// GPUs, because the holed slots never re-enter the free list until
+/// their own `set_gpu_down(.., false)`.
 #[derive(Debug, Clone)]
 pub struct Allocator {
     spec: ClusterSpec,
@@ -611,6 +626,11 @@ pub struct Allocator {
     /// speed[node] = throughput multiplier (1.0 healthy; a straggler
     /// episode samples a value in (0, 1))
     speed: Vec<f64>,
+    /// gpu_down[node][idx] = that single GPU is failed (a hole)
+    gpu_down: Vec<Vec<bool>>,
+    /// holed[node] = free-but-failed local indices, stranded out of
+    /// `free` until the hole heals
+    holed: Vec<Vec<usize>>,
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -651,11 +671,17 @@ impl Allocator {
             .collect();
         let down = vec![false; spec.n_nodes];
         let speed = vec![1.0; spec.n_nodes];
+        let gpu_down = (0..spec.n_nodes)
+            .map(|_| vec![false; spec.gpus_per_node])
+            .collect();
+        let holed = vec![vec![]; spec.n_nodes];
         Allocator {
             spec,
             free,
             down,
             speed,
+            gpu_down,
+            holed,
         }
     }
 
@@ -663,9 +689,21 @@ impl Allocator {
         &self.spec
     }
 
-    /// All free GPUs, including those stranded on down nodes.
+    /// All free GPUs, including those stranded on down nodes *and*
+    /// free-but-holed GPUs (strand-but-account: a holed GPU is not
+    /// allocatable but is not held by any gang either, so it still
+    /// counts toward the conservation invariant
+    /// `free_gpus() + held == capacity`).
     pub fn free_gpus(&self) -> usize {
-        self.free.iter().map(|f| f.len()).sum()
+        self.free.iter().map(|f| f.len()).sum::<usize>()
+            + self.holed.iter().map(|h| h.len()).sum::<usize>()
+    }
+
+    /// Free (allocatable) GPUs on one node: its free list, which never
+    /// contains holed slots. Counts even when the node is down — pair
+    /// with [`Allocator::is_down`] for usable capacity.
+    pub fn free_on(&self, node: usize) -> usize {
+        self.free[node].len()
     }
 
     /// Free GPUs on healthy nodes — what [`Allocator::allocate`] can
@@ -689,6 +727,57 @@ impl Allocator {
 
     pub fn is_down(&self, node: usize) -> bool {
         self.down[node]
+    }
+
+    /// Mark a single GPU failed (a *hole* in an otherwise-usable node)
+    /// or healed. Idempotent. Failing a free GPU strands it out of the
+    /// node's free list into the `holed` side-list; failing an
+    /// allocated GPU only sets the mask — the strand happens when its
+    /// gang releases ([`Allocator::release`] routes per the mask).
+    /// Healing moves any stranded slot back to the free list; a healed
+    /// GPU still held by a gang simply releases normally later.
+    pub fn set_gpu_down(
+        &mut self,
+        node: usize,
+        idx: usize,
+        down: bool,
+    ) {
+        if self.gpu_down[node][idx] == down {
+            return;
+        }
+        self.gpu_down[node][idx] = down;
+        if down {
+            let before = self.free[node].len();
+            self.free[node].retain(|&i| i != idx);
+            if self.free[node].len() < before {
+                debug_assert!(
+                    !self.holed[node].contains(&idx),
+                    "GPU ({node},{idx}) both free and holed"
+                );
+                self.holed[node].push(idx);
+            }
+        } else if let Some(p) =
+            self.holed[node].iter().position(|&i| i == idx)
+        {
+            self.holed[node].remove(p);
+            debug_assert!(
+                !self.free[node].contains(&idx),
+                "double free of ({node},{idx}) on heal"
+            );
+            self.free[node].push(idx);
+        }
+    }
+
+    /// Is this single GPU failed (holed)?
+    pub fn gpu_is_down(&self, node: usize, idx: usize) -> bool {
+        self.gpu_down[node][idx]
+    }
+
+    /// Number of holed GPUs on `node` — mask bits, so allocated-but-
+    /// failed GPUs count too. The node's surviving capacity is
+    /// `gpus_per_node - holed_gpus(node)`.
+    pub fn holed_gpus(&self, node: usize) -> usize {
+        self.gpu_down[node].iter().filter(|&&d| d).count()
     }
 
     /// Set a node's throughput multiplier (straggler degrade/restore).
@@ -1044,14 +1133,26 @@ impl Allocator {
         Allocation { gpus }
     }
 
-    /// Return an allocation's GPUs to the free pool.
+    /// Return an allocation's GPUs to the free pool. A GPU whose slot
+    /// is holed ([`Allocator::set_gpu_down`] while it was allocated)
+    /// strands into the `holed` side-list instead — accounted but not
+    /// allocatable until the hole heals. With no holes this is exactly
+    /// the pre-hole push (byte-freedom).
     pub fn release(&mut self, alloc: &Allocation) {
         for g in &alloc.gpus {
             debug_assert!(
                 !self.free[g.node].contains(&g.idx),
                 "double free of {g:?}"
             );
-            self.free[g.node].push(g.idx);
+            debug_assert!(
+                !self.holed[g.node].contains(&g.idx),
+                "double free of holed {g:?}"
+            );
+            if self.gpu_down[g.node][g.idx] {
+                self.holed[g.node].push(g.idx);
+            } else {
+                self.free[g.node].push(g.idx);
+            }
         }
     }
 
@@ -1725,6 +1826,12 @@ mod tests {
                                     .gpus
                                     .iter()
                                     .all(|g| !a.is_down(g.node)));
+                                assert!(
+                                    x.gpus.iter().all(|g| !a
+                                        .gpu_is_down(g.node, g.idx)),
+                                    "holed GPU handed out (seed \
+                                     {seed})"
+                                );
                                 live.push(x);
                             }
                             None => {
@@ -1747,6 +1854,14 @@ mod tests {
                         let node = rng.below(8);
                         a.set_down(node, rng.bool(0.5));
                     }
+                    6 => {
+                        // single-GPU hole churn: fail/heal any slot,
+                        // free or allocated — strand-but-account must
+                        // keep conservation exact either way
+                        let node = rng.below(8);
+                        let idx = rng.below(4);
+                        a.set_gpu_down(node, idx, rng.bool(0.5));
+                    }
                     _ => {
                         let node = rng.below(8);
                         a.set_speed(
@@ -1755,7 +1870,8 @@ mod tests {
                         );
                     }
                 }
-                // conservation: free + live == capacity
+                // conservation: free + live == capacity (holed GPUs
+                // count as free-but-stranded, never lost)
                 let held: usize =
                     live.iter().map(|x| x.n_gpus()).sum();
                 assert_eq!(a.free_gpus() + held, 32);
@@ -1772,5 +1888,130 @@ mod tests {
         assert_eq!(alloc.n_gpus(), 10);
         assert!(alloc.gpus.iter().all(|g| g.node != 2));
         assert!(a.allocate_random(3, &mut rng).is_none());
+    }
+
+    #[test]
+    fn gpu_hole_excluded_from_allocation_but_accounted() {
+        let mut a = Allocator::new(spec4x4());
+        a.set_gpu_down(0, 1, true);
+        assert!(a.gpu_is_down(0, 1));
+        assert_eq!(a.holed_gpus(0), 1);
+        // strand-but-account: still counted free, not allocatable
+        assert_eq!(a.free_gpus(), 16);
+        assert_eq!(a.available_gpus(), 15);
+        // a 4-GPU ask can no longer land on the holed node
+        let x = a.allocate(4).unwrap();
+        assert!(!x.spans_nodes());
+        assert_ne!(x.gpus[0].node, 0);
+        // the node's survivors remain allocatable
+        let y = a.allocate(3).unwrap();
+        assert_eq!(y.nodes(), vec![0]);
+        assert!(y.gpus.iter().all(|g| g.idx != 1));
+        // healing restores the slot
+        a.set_gpu_down(0, 1, false);
+        assert_eq!(a.holed_gpus(0), 0);
+        assert_eq!(a.available_gpus(), 16 - 7);
+        let z = a.allocate(1).unwrap();
+        a.release(&x);
+        a.release(&y);
+        a.release(&z);
+        assert_eq!(a.free_gpus(), 16);
+        assert!(a.allocate(16).is_some());
+    }
+
+    #[test]
+    fn release_onto_holed_gpu_strands_until_heal() {
+        // fail a GPU *while allocated*: the mask is set immediately,
+        // the strand happens at release, and the slot stays out of
+        // the pool until healed
+        let mut a = Allocator::new(spec4x4());
+        let x = a.allocate(4).unwrap();
+        let g = x.gpus[2];
+        a.set_gpu_down(g.node, g.idx, true);
+        assert_eq!(a.holed_gpus(g.node), 1);
+        a.release(&x);
+        assert_eq!(a.free_gpus(), 16); // accounted...
+        assert_eq!(a.available_gpus(), 15); // ...but stranded
+        let y = a.allocate(4).unwrap();
+        assert!(y
+            .gpus
+            .iter()
+            .all(|q| (q.node, q.idx) != (g.node, g.idx)));
+        a.set_gpu_down(g.node, g.idx, false);
+        a.release(&y);
+        assert_eq!(a.available_gpus(), 16);
+        // idempotence: double-fail / double-heal never double-moves
+        a.set_gpu_down(0, 0, true);
+        a.set_gpu_down(0, 0, true);
+        a.set_gpu_down(0, 0, false);
+        a.set_gpu_down(0, 0, false);
+        assert_eq!(a.free_gpus(), 16);
+        assert!(a.allocate(16).is_some());
+    }
+
+    #[test]
+    fn node_recovery_with_live_hole_restores_surviving_gpus() {
+        // the double-free regression: a gang releases onto a *down*
+        // node that also has an individually-holed GPU; node recovery
+        // must restore exactly per_node - holes allocatable GPUs and
+        // never resurrect the holed slot into the free list
+        let mut a = Allocator::new(spec4x4());
+        let x = a.allocate(4).unwrap();
+        let node = x.gpus[0].node;
+        a.set_gpu_down(node, 2, true); // hole inside the gang
+        a.set_down(node, true); // then the whole node fails
+        a.release(&x); // eviction returns the gang
+        assert_eq!(a.free_gpus(), 16);
+        assert_eq!(a.available_gpus(), 12);
+        a.set_down(node, false);
+        // exactly per_node - holes come back
+        assert_eq!(a.available_gpus(), 15);
+        assert_eq!(a.holed_gpus(node), 1);
+        let y = a.allocate(15).unwrap();
+        assert!(y
+            .gpus
+            .iter()
+            .all(|g| (g.node, g.idx) != (node, 2)));
+        assert!(a.allocate(1).is_none());
+        // heal: the full fleet is whole again, with no duplicate slot
+        a.set_gpu_down(node, 2, false);
+        let z = a.allocate(1).unwrap();
+        assert_eq!((z.gpus[0].node, z.gpus[0].idx), (node, 2));
+        a.release(&y);
+        a.release(&z);
+        assert_eq!(a.free_gpus(), 16);
+        let all = a.allocate(16).unwrap();
+        let mut slots: Vec<(usize, usize)> =
+            all.gpus.iter().map(|g| (g.node, g.idx)).collect();
+        slots.sort_unstable();
+        slots.dedup();
+        assert_eq!(slots.len(), 16, "duplicate slot after recovery");
+    }
+
+    #[test]
+    fn hole_free_fleet_replays_pre_hole_allocation_order() {
+        // the byte-freedom differential: with no holes ever set, the
+        // allocator must reproduce the pre-hole count-based order
+        // exactly. The expected sequences are the pre-PR algorithm by
+        // construction: free lists init (0..per_node).rev() and pop
+        // from the back, best-fit single node first, then spill
+        // most-free-first.
+        let mut a = Allocator::new(spec4x4());
+        let ids = |al: &Allocation| -> Vec<(usize, usize)> {
+            al.gpus.iter().map(|g| (g.node, g.idx)).collect()
+        };
+        let x = a.allocate(2).unwrap();
+        assert_eq!(ids(&x), vec![(0, 0), (0, 1)]);
+        let y = a.allocate(4).unwrap();
+        assert_eq!(
+            ids(&y),
+            vec![(1, 0), (1, 1), (1, 2), (1, 3)]
+        );
+        a.release(&x); // free[0] is now [3,2,0,1]
+        let z = a.allocate(6).unwrap();
+        assert_eq!(
+            ids(&z),
+            vec![(0, 1), (0, 0), (0, 2), (0, 3), (2, 0), (2, 1)]
+        );
     }
 }

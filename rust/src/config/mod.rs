@@ -200,6 +200,15 @@ pub struct FaultConfig {
     /// Mean recovery time for a domain episode, seconds. Must be > 0
     /// whenever `domain_mtbf_s` > 0.
     pub domain_mttr_s: f64,
+    /// Per-GPU mean time between single-device failures in seconds
+    /// (exponential, seeded independently per (node, gpu)). A hit
+    /// holes one GPU out of its node — the rest of the node keeps
+    /// serving — and evicts only the gangs touching that device. 0
+    /// disables GPU faults entirely.
+    pub gpu_mtbf_s: f64,
+    /// Per-GPU mean time to recovery in seconds (exponential). Must
+    /// be > 0 whenever `gpu_mtbf_s` > 0.
+    pub gpu_mttr_s: f64,
 }
 
 impl Default for FaultConfig {
@@ -215,6 +224,8 @@ impl Default for FaultConfig {
             slo_factor: 3.0,
             domain_mtbf_s: 0.0,
             domain_mttr_s: 600.0,
+            gpu_mtbf_s: 0.0,
+            gpu_mttr_s: 600.0,
         }
     }
 }
@@ -259,6 +270,15 @@ impl FaultConfig {
             return Err(
                 "faults: domain_mttr_s must be > 0 with domain \
                  episodes on"
+                    .into(),
+            );
+        }
+        if self.gpu_mtbf_s < 0.0 {
+            return Err("faults: gpu_mtbf_s must be >= 0".into());
+        }
+        if self.gpu_mtbf_s > 0.0 && self.gpu_mttr_s <= 0.0 {
+            return Err(
+                "faults: gpu_mttr_s must be > 0 with GPU faults on"
                     .into(),
             );
         }
@@ -501,7 +521,9 @@ impl ExperimentConfig {
                     .set("ckpt_write_s", self.faults.ckpt_write_s)
                     .set("slo_factor", self.faults.slo_factor)
                     .set("domain_mtbf_s", self.faults.domain_mtbf_s)
-                    .set("domain_mttr_s", self.faults.domain_mttr_s),
+                    .set("domain_mttr_s", self.faults.domain_mttr_s)
+                    .set("gpu_mtbf_s", self.faults.gpu_mtbf_s)
+                    .set("gpu_mttr_s", self.faults.gpu_mttr_s),
             )
             .set(
                 "hardware",
@@ -650,6 +672,14 @@ impl ExperimentConfig {
                 f.get("domain_mttr_s").and_then(Json::as_f64)
             {
                 self.faults.domain_mttr_s = v;
+            }
+            if let Some(v) = f.get("gpu_mtbf_s").and_then(Json::as_f64)
+            {
+                self.faults.gpu_mtbf_s = v;
+            }
+            if let Some(v) = f.get("gpu_mttr_s").and_then(Json::as_f64)
+            {
+                self.faults.gpu_mttr_s = v;
             }
         }
         if let Some(s) = j.get("stragglers") {
@@ -1071,6 +1101,34 @@ mod tests {
         let d = FaultConfig::default();
         assert_eq!(d.domain_mtbf_s, 0.0);
         assert_eq!(StragglerConfig::default().domain_mtbs_s, 0.0);
+    }
+
+    #[test]
+    fn gpu_fault_knobs_roundtrip_and_validate() {
+        let mut c = ExperimentConfig::default();
+        c.faults.gpu_mtbf_s = 40_000.0;
+        c.faults.gpu_mttr_s = 900.0;
+        c.validate().unwrap();
+        let j = json::parse(&c.to_json().to_string()).unwrap();
+        let back = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(back.faults, c.faults);
+        // partial override: only gpu_mtbf_s set, rest keep defaults
+        let j =
+            json::parse(r#"{"faults": {"gpu_mtbf_s": 1234.0}}"#).unwrap();
+        let mut c2 = ExperimentConfig::default();
+        c2.apply_json(&j).unwrap();
+        assert_eq!(c2.faults.gpu_mtbf_s, 1234.0);
+        assert_eq!(c2.faults.gpu_mttr_s, FaultConfig::default().gpu_mttr_s);
+        // rejections
+        let mut c = ExperimentConfig::default();
+        c.faults.gpu_mtbf_s = -1.0;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.faults.gpu_mtbf_s = 100.0;
+        c.faults.gpu_mttr_s = 0.0;
+        assert!(c.validate().is_err());
+        // defaults keep GPU faults off
+        assert_eq!(FaultConfig::default().gpu_mtbf_s, 0.0);
     }
 
     #[test]

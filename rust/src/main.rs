@@ -3,14 +3,16 @@
 //! ```text
 //! tlora simulate  [--policy tlora|mlora|megatron|...] [--n-jobs N]
 //!                 [--n-gpus N] [--seed S] [--month 1|2|3] [--rate-scale F]
-//!                 [--mtbf S] [--mttr S] [--preempt-rate R]
+//!                 [--mtbf S] [--mttr S] [--gpu-mtbf S] [--gpu-mttr S]
+//!                 [--preempt-rate R]
 //!                 [--straggler-mtbs S] [--straggler-mtts S]
 //!                 [--straggler-oblivious] [--hardware-mix SPEC]
 //!                 [--topology SPEC] [--trace file.csv]
 //! tlora compare   [--n-jobs N] [--n-gpus N] [--seed S]     # all policies
 //! tlora sweep     [--policies a,b|all] [--n-jobs N,..] [--gpus N,..]
 //!                 [--rate-scales F,..] [--months M,..] [--mtbfs S,..]
-//!                 [--stragglers S,..] [--hardware-mix SPEC,..]
+//!                 [--gpu-mtbf S,..] [--stragglers S,..]
+//!                 [--hardware-mix SPEC,..]
 //!                 [--topology SPEC,..] [--seeds S,..] [--threads T]
 //!                 [--out-json f] [--out-csv f] [--canonical]
 //!                 [--legacy-report]
@@ -73,6 +75,9 @@ USAGE: tlora <subcommand> [flags]
 Common flags: --n-jobs N --n-gpus N --seed S --month 1|2|3
               --rate-scale F --policy NAME --artifacts DIR
 Fault flags:  --mtbf SECONDS (0 = off) --mttr SECONDS
+              --gpu-mtbf SECONDS (per-GPU single-device failures,
+              0 = off; a hit holes one GPU out of its node and evicts
+              only the gangs touching it) --gpu-mttr SECONDS
               --preempt-rate EVENTS/S  (simulate/compare)
 Straggler flags: --straggler-mtbs SECONDS (mean time between degrade
               episodes per node, 0 = off) --straggler-mtts SECONDS
@@ -96,7 +101,7 @@ Topology flags: --topology SPEC, a rack/region tree with per-tier
               columns for non-flat cells
 Sweep flags:  --policies a,b|all --n-jobs N,.. --gpus N,..
               --rate-scales F,.. --months M,.. --mtbfs S,..
-              --stragglers S,.. --hardware-mix SPEC,..
+              --gpu-mtbf S,.. --stragglers S,.. --hardware-mix SPEC,..
               --topology SPEC,.. --seeds S,.. --threads T
               --out-json FILE --out-csv FILE
               --canonical (strip wall-clock/thread fields from JSON so
@@ -136,6 +141,10 @@ fn build_config(args: &Args) -> Result<ExperimentConfig, String> {
     cfg.trace = cfg.trace.scaled(scale);
     cfg.faults.mtbf_s = args.get_f64("mtbf", cfg.faults.mtbf_s)?;
     cfg.faults.mttr_s = args.get_f64("mttr", cfg.faults.mttr_s)?;
+    cfg.faults.gpu_mtbf_s =
+        args.get_f64("gpu-mtbf", cfg.faults.gpu_mtbf_s)?;
+    cfg.faults.gpu_mttr_s =
+        args.get_f64("gpu-mttr", cfg.faults.gpu_mttr_s)?;
     cfg.faults.preempt_rate =
         args.get_f64("preempt-rate", cfg.faults.preempt_rate)?;
     cfg.stragglers.mtbs_s =
@@ -222,10 +231,19 @@ fn cmd_simulate(args: &Args) -> i32 {
     ]);
     t.row(&["scheduling rounds".into(), r.sched_rounds.to_string()]);
     t.row(&["events processed".into(), r.events.to_string()]);
-    if cfg.faults.enabled() || r.restarts > 0 {
+    if cfg.faults.enabled() || cfg.faults.gpu_mtbf_s > 0.0
+        || r.restarts > 0
+    {
         t.row(&["node failures".into(), r.node_failures.to_string()]);
         t.row(&["preemptions".into(), r.preemptions.to_string()]);
         t.row(&["restarts".into(), r.restarts.to_string()]);
+        if cfg.faults.gpu_mtbf_s > 0.0 || r.gpu_failures > 0 {
+            t.row(&["GPU failures".into(), r.gpu_failures.to_string()]);
+            t.row(&[
+                "holed GPU-time (s)".into(),
+                format!("{:.1}", r.holed_gpu_time_s),
+            ]);
+        }
         t.row(&[
             "lost step-time (s)".into(),
             format!("{:.1}", r.lost_step_time_s),
@@ -373,6 +391,11 @@ fn cmd_sweep(args: &Args) -> i32 {
             args,
             "mtbfs",
             vec![grid.base.faults.mtbf_s],
+        )?;
+        grid.gpu_mtbfs = parse_list(
+            args,
+            "gpu-mtbf",
+            vec![grid.base.faults.gpu_mtbf_s],
         )?;
         grid.stragglers = parse_list(
             args,

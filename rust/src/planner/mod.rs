@@ -164,7 +164,15 @@ pub fn plan(
 ///    canonicalize to empty components, so pre-topology keys — and
 ///    cached plans — are untouched;
 /// 5. the [`PlanOptions`] and the (per-predictor, fixed)
-///    [`ClusterSpec`].
+///    [`ClusterSpec`];
+/// 6. the **hole pattern** of the nodes the allocation touches: when
+///    single-GPU faults have holed devices out of a touched node, the
+///    key carries that node's *surviving* GPU count per allocation
+///    slot, so plans consulted while a hole is open can never be
+///    served to (or from) the hole-free shape of the same gang. The
+///    component is empty whenever every touched node is hole-free —
+///    in particular on fleets that never see a GPU fault — so
+///    pre-hole keys and cached plans are untouched.
 ///
 /// [`PlanShapeKey`] captures exactly these: two (ssm, alloc) pairs with
 /// equal keys are guaranteed bit-identical [`plan`] outputs, so probing
@@ -197,17 +205,36 @@ pub struct PlanShapeKey {
     /// bit-patterns of (rack_bw, region_bw, rack_latency_s,
     /// region_latency_s) (empty on flat topologies)
     topo_table: Vec<u64>,
+    /// surviving-GPU count of the hosting node, one entry per GPU in
+    /// allocation order (empty whenever every touched node is
+    /// hole-free — the byte-freedom gate for fleets without GPU
+    /// faults)
+    hole_shape: Vec<u32>,
     /// the [`PlanOptions`] fields, hashed structurally
     opts: (bool, Option<usize>, usize),
 }
 
 impl PlanShapeKey {
     /// The canonical shape key of planning `ssm` on `alloc` under
-    /// `opts`, on a fleet described by `spec`.
+    /// `opts`, on a fleet described by `spec` with no holed GPUs.
     pub fn of(
         ssm: &Ssm,
         alloc: &Allocation,
         spec: &ClusterSpec,
+        opts: &PlanOptions,
+    ) -> PlanShapeKey {
+        PlanShapeKey::of_with_holes(ssm, alloc, spec, &[], opts)
+    }
+
+    /// [`PlanShapeKey::of`] on a fleet where `holes[node]` devices of
+    /// each node are individually failed. An empty slice (or all
+    /// zeros, or holes only on untouched nodes) keys identically to
+    /// `of` — bit-for-bit, component-for-component.
+    pub fn of_with_holes(
+        ssm: &Ssm,
+        alloc: &Allocation,
+        spec: &ClusterSpec,
+        holes: &[u32],
         opts: &PlanOptions,
     ) -> PlanShapeKey {
         let mut tier_shape = Vec::with_capacity(alloc.gpus.len());
@@ -274,6 +301,18 @@ impl PlanShapeKey {
                     ],
                 )
             };
+        let hole = |node: usize| holes.get(node).copied().unwrap_or(0);
+        let hole_shape: Vec<u32> =
+            if alloc.gpus.iter().all(|g| hole(g.node) == 0) {
+                vec![]
+            } else {
+                let gpn = spec.gpus_per_node as u32;
+                alloc
+                    .gpus
+                    .iter()
+                    .map(|g| gpn - hole(g.node))
+                    .collect()
+            };
         PlanShapeKey {
             arch: ssm.arch.name.clone(),
             adapters: ssm
@@ -287,6 +326,7 @@ impl PlanShapeKey {
             rack_shape,
             region_shape,
             topo_table,
+            hole_shape,
             opts: (opts.fused_kernel, opts.n_nano, opts.n_nano_max),
         }
     }
@@ -1048,6 +1088,57 @@ mod tests {
         assert!(key.rack_shape.is_empty());
         assert!(key.region_shape.is_empty());
         assert!(key.topo_table.is_empty());
+    }
+
+    #[test]
+    fn hole_free_keys_have_empty_hole_component() {
+        // the byte-freedom contract for single-GPU faults: no holes
+        // on any touched node means no hole component, so pre-hole
+        // keys (and cached plans) are untouched
+        let (spec, alloc) = setup(4);
+        let ssm = Ssm::fuse(&[job(0, 8, 4, 512)]).unwrap();
+        let opts = PlanOptions::default();
+        let plain = PlanShapeKey::of(&ssm, &alloc, &spec, &opts);
+        assert!(plain.hole_shape.is_empty());
+        // an explicit all-zero hole vector keys identically to `of`
+        let zeros = vec![0u32; spec.n_nodes];
+        assert_eq!(
+            PlanShapeKey::of_with_holes(&ssm, &alloc, &spec, &zeros, &opts),
+            plain
+        );
+        // holes on nodes the allocation never touches are invisible
+        let mut elsewhere = vec![0u32; spec.n_nodes];
+        elsewhere[spec.n_nodes - 1] = 3;
+        assert_eq!(
+            PlanShapeKey::of_with_holes(
+                &ssm, &alloc, &spec, &elsewhere, &opts
+            ),
+            plain
+        );
+    }
+
+    #[test]
+    fn hole_patterns_key_apart_by_surviving_count() {
+        let (spec, alloc) = setup(4); // best-fit: all on node 0
+        let ssm = Ssm::fuse(&[job(0, 8, 4, 512)]).unwrap();
+        let opts = PlanOptions::default();
+        let with = |h0: u32| {
+            let mut holes = vec![0u32; spec.n_nodes];
+            holes[0] = h0;
+            PlanShapeKey::of_with_holes(&ssm, &alloc, &spec, &holes, &opts)
+        };
+        let plain = PlanShapeKey::of(&ssm, &alloc, &spec, &opts);
+        let one = with(1);
+        let two = with(2);
+        // a holed node keys apart from its hole-free shape, and the
+        // surviving count (not just hole presence) is what's carried
+        assert_ne!(one, plain);
+        assert_ne!(two, plain);
+        assert_ne!(one, two);
+        assert_eq!(one.hole_shape, vec![7u32; 4]);
+        assert_eq!(two.hole_shape, vec![6u32; 4]);
+        // and the same hole depth keys identically (pure function)
+        assert_eq!(one, with(1));
     }
 
     #[test]

@@ -75,6 +75,14 @@ pub struct Predictor {
     /// shape level: canonical plan key → planner outcome (errors are
     /// cached too — an OOM shape stays OOM)
     shape_cache: HashMap<PlanShapeKey, Result<ParallelPlan, PlanError>>,
+    /// holed (individually failed) GPUs per node, mirrored from the
+    /// allocator by the engine via [`Predictor::set_node_holes`]:
+    /// shape keys consulted while a hole is open carry the node's
+    /// surviving GPU count, so hole-era plans never alias hole-free
+    /// entries. All zeros (every fleet that never sees a GPU fault)
+    /// contributes an empty key component — pre-hole keys and cached
+    /// plans are byte-identical to before this field existed.
+    holes: Vec<u32>,
     /// `false` = cold mode: every shape-level miss *and hit* runs the
     /// planner (the differential tests compare cold vs cached runs)
     shape_cache_enabled: bool,
@@ -96,6 +104,7 @@ fn key_of(jobs: &[JobSpec], alloc: &Allocation) -> CacheKey {
 
 impl Predictor {
     pub fn new(spec: ClusterSpec, opts: PlanOptions) -> Predictor {
+        let holes = vec![0; spec.n_nodes];
         Predictor {
             spec,
             opts,
@@ -104,6 +113,7 @@ impl Predictor {
             group_cache: HashMap::new(),
             shape_cache: HashMap::new(),
             shape_cache_enabled: true,
+            holes,
             probes: 0,
             shape_hits: 0,
             exact_hits: 0,
@@ -123,6 +133,17 @@ impl Predictor {
     /// differentials and the bench's ≥30% probe-drop gate.
     pub fn set_shape_cache(&mut self, enabled: bool) {
         self.shape_cache_enabled = enabled;
+    }
+
+    /// Record that `holed` GPUs of `node` are individually failed
+    /// (0 = hole-free). Called by the engine on every GPU failure and
+    /// recovery so plan-shape keys track the fleet's hole pattern;
+    /// exact-level caches are untouched — a plan for a *given*
+    /// allocation is a pure function of (SSM, allocation, spec,
+    /// options), so entries memoized before a hole opened stay
+    /// bit-identical to what a cold planner run would produce.
+    pub fn set_node_holes(&mut self, node: usize, holed: u32) {
+        self.holes[node] = holed;
     }
 
     /// Total queries absorbed by either cache level.
@@ -155,7 +176,13 @@ impl Predictor {
             self.probes += 1;
             return plan(ssm, alloc, &self.spec, &self.opts);
         }
-        let key = PlanShapeKey::of(ssm, alloc, &self.spec, &self.opts);
+        let key = PlanShapeKey::of_with_holes(
+            ssm,
+            alloc,
+            &self.spec,
+            &self.holes,
+            &self.opts,
+        );
         if let Some(r) = self.shape_cache.get(&key) {
             self.shape_hits += 1;
             return r.clone();
@@ -506,6 +533,50 @@ mod tests {
                 "trial {trial}: cached result differs from cold planner"
             );
         }
+    }
+
+    #[test]
+    fn node_holes_partition_the_shape_cache_but_not_the_plan() {
+        // opening a hole on a touched node re-keys the shape level
+        // (forcing planner runs), but a plan for a *given* allocation
+        // shape is hole-independent, so the result is bit-identical;
+        // closing the hole returns to the original, still-cached
+        // entries. Same-shape allocations on different nodes keep the
+        // queries off the exact level (whose keys carry physical node
+        // ids) so every probe genuinely consults the shape cache.
+        use crate::cluster::GpuId;
+        let (mut p, _) = predictor();
+        let jobs = vec![job(0, 8, 4, 512, 1), job(1, 4, 2, 256, 1)];
+        let on = |node: usize| Allocation {
+            gpus: vec![
+                GpuId { node, idx: 0 },
+                GpuId { node, idx: 1 },
+            ],
+        };
+        let before = p.group_perf(&jobs, &on(1)).unwrap();
+        let probes = p.probes;
+        p.set_node_holes(0, 1);
+        let holed = p.group_perf(&jobs, &on(0)).unwrap();
+        assert!(
+            p.probes > probes,
+            "hole-era keys aliased hole-free entries"
+        );
+        assert_eq!(
+            before.plan, holed.plan,
+            "same allocation shape planned differently under a hole"
+        );
+        let probes = p.probes;
+        p.set_node_holes(0, 0);
+        let shape_hits = p.shape_hits;
+        let healed = p.group_perf(&jobs, &on(2)).unwrap();
+        assert_eq!(p.probes, probes, "heal re-ran the planner");
+        assert!(p.shape_hits > shape_hits, "heal missed the shape level");
+        assert_eq!(before.plan, healed.plan);
+        // holes on nodes the allocation never touches change nothing
+        p.set_node_holes(5, 2);
+        let elsewhere = p.group_perf(&jobs, &on(3)).unwrap();
+        assert_eq!(p.probes, probes, "untouched-node hole re-planned");
+        assert_eq!(before.plan, elsewhere.plan);
     }
 
     #[test]

@@ -38,7 +38,8 @@ use crate::scheduler::predictor::Predictor;
 use crate::scheduler::{NodeSpeedEstimator, NodeView, PolicyHooks};
 use crate::util::stats::{Summary, TimeWeighted};
 use crate::workload::faults::{
-    FaultKind, NodeFaultModel, PreemptionModel, ScriptedFault,
+    FaultKind, GpuFaultKind, GpuFaultModel, NodeFaultModel,
+    PreemptionModel, ScriptedFault, ScriptedGpuFault,
     ScriptedStraggler, StragglerModel,
 };
 use crate::workload::{classify, JobSpec};
@@ -69,6 +70,11 @@ pub struct EngineOptions {
     /// pinned scenarios like "node 0 runs at 0.25× from t=100"
     /// (`workload::faults::ScriptedStraggler`; `speed >= 1` restores).
     pub straggler_script: Vec<ScriptedStraggler>,
+    /// Deterministic injected *single-GPU* faults on top of (or
+    /// instead of) the seeded `gpu_mtbf_s` streams — pinned scenarios
+    /// like "GPU 3 of node 0 dies at t=100"
+    /// (`workload::faults::ScriptedGpuFault`).
+    pub gpu_fault_script: Vec<ScriptedGpuFault>,
     /// Enable the predictor's shape-level plan cache (default). `false`
     /// is *cold mode*: every plan-level consult runs the planner — the
     /// cached-vs-cold differential in `tests/integration_perf.rs`
@@ -91,6 +97,7 @@ impl Default for EngineOptions {
             aimd_settle_obs: 256,
             fault_script: vec![],
             straggler_script: vec![],
+            gpu_fault_script: vec![],
             plan_shape_cache: true,
             global_reissue: false,
         }
@@ -168,6 +175,26 @@ impl ObserverSet {
         extra: &mut [&mut dyn SimObserver],
     ) {
         fan_out!(self, extra, on_node_recovery(t, node));
+    }
+
+    fn gpu_failure(
+        &mut self,
+        t: f64,
+        node: usize,
+        gpu: usize,
+        extra: &mut [&mut dyn SimObserver],
+    ) {
+        fan_out!(self, extra, on_gpu_failure(t, node, gpu));
+    }
+
+    fn gpu_recovery(
+        &mut self,
+        t: f64,
+        node: usize,
+        gpu: usize,
+        extra: &mut [&mut dyn SimObserver],
+    ) {
+        fan_out!(self, extra, on_gpu_recovery(t, node, gpu));
     }
 
     fn node_degraded(
@@ -272,6 +299,8 @@ const FAULT_MODEL_ORIGIN: u64 = 1;
 struct FaultDriver {
     /// per-node MTBF/MTTR streams (None: node failures disabled)
     nodes: Option<NodeFaultModel>,
+    /// per-GPU MTBF/MTTR streams (None: single-GPU faults disabled)
+    gpus: Option<GpuFaultModel>,
     /// Poisson preemption stream (None: preemptions disabled)
     preempt: Option<PreemptionModel>,
     /// per-job restore penalty in seconds
@@ -291,6 +320,17 @@ impl FaultDriver {
         } else {
             None
         };
+        let gpus = if f.gpu_mtbf_s > 0.0 {
+            Some(GpuFaultModel::new(
+                f.gpu_mtbf_s,
+                f.gpu_mttr_s,
+                cfg.cluster.n_nodes,
+                cfg.cluster.gpus_per_node,
+                cfg.seed,
+            ))
+        } else {
+            None
+        };
         let preempt = if f.preempt_rate > 0.0 && !jobs.is_empty() {
             Some(PreemptionModel::new(
                 f.preempt_rate,
@@ -302,6 +342,7 @@ impl FaultDriver {
         };
         FaultDriver {
             nodes,
+            gpus,
             preempt,
             penalties: restore_penalties(cfg, jobs),
         }
@@ -463,6 +504,44 @@ impl<'a> Engine<'a> {
                     epoch: FAULT_MODEL_ORIGIN,
                 });
             }
+        }
+        // single-GPU streams: one pending failure per device, in flat
+        // index order (node-major) — the order synthesize_gpu_faults
+        // pins. Each handled event chains the device's next draw.
+        let gpn = cfg.cluster.gpus_per_node;
+        if let Some(m) = &mut faults.gpus {
+            for node in 0..cfg.cluster.n_nodes {
+                for gpu in 0..gpn {
+                    events.push(Event {
+                        time: m.uptime(node, gpu),
+                        kind: EventKind::GpuFailure,
+                        job_id: (node * gpn + gpu) as u64,
+                        epoch: FAULT_MODEL_ORIGIN,
+                    });
+                }
+            }
+        }
+        for f in &opts.gpu_fault_script {
+            assert!(
+                (f.node as usize) < cfg.cluster.n_nodes
+                    && (f.gpu as usize) < gpn,
+                "gpu_fault_script entry at t={} targets device \
+                 ({}, {}) but the cluster is {} nodes x {} GPUs",
+                f.time,
+                f.node,
+                f.gpu,
+                cfg.cluster.n_nodes,
+                gpn
+            );
+            events.push(Event {
+                time: f.time,
+                kind: match f.kind {
+                    GpuFaultKind::Failure => EventKind::GpuFailure,
+                    GpuFaultKind::Recovery => EventKind::GpuRecovery,
+                },
+                job_id: f.node * gpn as u64 + f.gpu,
+                epoch: 0,
+            });
         }
         // correlated domain episodes: synthesized once over the
         // topology's failure domains as epoch-0 scripts reusing the
@@ -761,6 +840,79 @@ impl<'a> Engine<'a> {
                     time: t + m.uptime(node),
                     kind: EventKind::NodeFailure,
                     job_id: node as u64,
+                    epoch: FAULT_MODEL_ORIGIN,
+                });
+            }
+        }
+    }
+
+    /// A single GPU died at `t`: evict only the gangs actually
+    /// touching the device (restore penalties charged per job), mask
+    /// the hole out of the allocator's free lists, tell the predictor
+    /// the node's surviving-GPU count so plan candidates re-price (and
+    /// re-key) around the hole, and — for model-originated failures —
+    /// chain the repair from the device's own MTTR stream.
+    fn apply_gpu_failure(
+        &mut self,
+        node: usize,
+        gpu: usize,
+        from_model: bool,
+        t: f64,
+        extra: &mut [&mut dyn SimObserver],
+    ) {
+        let evs =
+            self.state.fail_gpu(node, gpu, t, &self.faults.penalties);
+        self.obs.gpu_failure(t, node, gpu, extra);
+        for e in &evs {
+            self.dirty_jobs.insert(e.job_id);
+            self.obs.evict(
+                t,
+                &self.state.states[&e.job_id],
+                EvictCause::GpuFailure,
+                e,
+                extra,
+            );
+        }
+        self.predictor.set_node_holes(
+            node,
+            self.state.allocator.holed_gpus(node) as u32,
+        );
+        if from_model {
+            if let Some(m) = &mut self.faults.gpus {
+                self.events.push(Event {
+                    time: t + m.downtime(node, gpu),
+                    kind: EventKind::GpuRecovery,
+                    job_id: (node * self.cfg.cluster.gpus_per_node
+                        + gpu) as u64,
+                    epoch: FAULT_MODEL_ORIGIN,
+                });
+            }
+        }
+    }
+
+    /// A holed GPU came back at `t`; model-originated recoveries chain
+    /// the device's next failure from its MTBF stream.
+    fn apply_gpu_recovery(
+        &mut self,
+        node: usize,
+        gpu: usize,
+        from_model: bool,
+        t: f64,
+        extra: &mut [&mut dyn SimObserver],
+    ) {
+        self.state.recover_gpu(node, gpu);
+        self.obs.gpu_recovery(t, node, gpu, extra);
+        self.predictor.set_node_holes(
+            node,
+            self.state.allocator.holed_gpus(node) as u32,
+        );
+        if from_model {
+            if let Some(m) = &mut self.faults.gpus {
+                self.events.push(Event {
+                    time: t + m.uptime(node, gpu),
+                    kind: EventKind::GpuFailure,
+                    job_id: (node * self.cfg.cluster.gpus_per_node
+                        + gpu) as u64,
                     epoch: FAULT_MODEL_ORIGIN,
                 });
             }
@@ -1250,6 +1402,26 @@ impl<'a> Engine<'a> {
                         extra,
                     );
                 }
+                EventKind::GpuFailure => {
+                    let gpn = self.cfg.cluster.gpus_per_node;
+                    self.apply_gpu_failure(
+                        ev.job_id as usize / gpn,
+                        ev.job_id as usize % gpn,
+                        from_model,
+                        0.0,
+                        extra,
+                    );
+                }
+                EventKind::GpuRecovery => {
+                    let gpn = self.cfg.cluster.gpus_per_node;
+                    self.apply_gpu_recovery(
+                        ev.job_id as usize / gpn,
+                        ev.job_id as usize % gpn,
+                        from_model,
+                        0.0,
+                        extra,
+                    );
+                }
                 EventKind::NodeDegraded => {
                     self.apply_node_degraded(
                         ev.job_id as usize,
@@ -1300,6 +1472,8 @@ impl<'a> Engine<'a> {
             let mut completions = vec![];
             let mut failures = vec![];
             let mut recoveries = vec![];
+            let mut gpu_failures = vec![];
+            let mut gpu_recoveries = vec![];
             let mut degrades = vec![];
             let mut restores = vec![];
             let mut preemptions = vec![];
@@ -1325,6 +1499,18 @@ impl<'a> Engine<'a> {
                     }
                     EventKind::NodeRecovery => {
                         recoveries.push((
+                            ev.job_id as usize,
+                            ev.epoch == FAULT_MODEL_ORIGIN,
+                        ));
+                    }
+                    EventKind::GpuFailure => {
+                        gpu_failures.push((
+                            ev.job_id as usize,
+                            ev.epoch == FAULT_MODEL_ORIGIN,
+                        ));
+                    }
+                    EventKind::GpuRecovery => {
+                        gpu_recoveries.push((
                             ev.job_id as usize,
                             ev.epoch == FAULT_MODEL_ORIGIN,
                         ));
@@ -1369,6 +1555,29 @@ impl<'a> Engine<'a> {
             }
             for (node, from_model) in recoveries {
                 self.apply_node_recovery(node, from_model, t, extra);
+            }
+            // single-GPU faults after whole-node transitions (rank
+            // order): a node-level outage at the same instant subsumes
+            // the device fault — holing a GPU on an already-evicted
+            // node is an idempotent mask update, never a double-evict
+            let gpn = self.cfg.cluster.gpus_per_node;
+            for (flat, from_model) in gpu_failures {
+                self.apply_gpu_failure(
+                    flat / gpn,
+                    flat % gpn,
+                    from_model,
+                    t,
+                    extra,
+                );
+            }
+            for (flat, from_model) in gpu_recoveries {
+                self.apply_gpu_recovery(
+                    flat / gpn,
+                    flat % gpn,
+                    from_model,
+                    t,
+                    extra,
+                );
             }
             // degrade/restore after failure/recovery (rank order), so
             // an eviction priced at this instant sees the new rate
@@ -1455,6 +1664,8 @@ impl<'a> Engine<'a> {
             ),
             mean_slowdown: self.obs.slowdown.mean_slowdown,
             node_failures: self.obs.faults.node_failures,
+            gpu_failures: self.obs.faults.gpu_failures,
+            holed_gpu_time_s: self.obs.faults.holed_gpu_time_s,
             preemptions: self.obs.faults.preemptions,
             restarts: self.obs.faults.restarts,
             lost_step_time_s: self.obs.faults.lost_step_time_s,

@@ -1,7 +1,7 @@
 //! Deterministic event queue for the simulation engine.
 //!
 //! The engine advances straight from event to event instead of ticking
-//! a fixed horizon. Eight kinds exist:
+//! a fixed horizon. Ten kinds exist:
 //!
 //! * [`EventKind::Arrival`] — a job's submit time was reached;
 //! * [`EventKind::Completion`] — a running job's last step finishes,
@@ -9,6 +9,10 @@
 //! * [`EventKind::NodeFailure`] / [`EventKind::NodeRecovery`] — a
 //!   cluster node goes down / comes back (the fault subsystem;
 //!   `job_id` carries the node index for these two);
+//! * [`EventKind::GpuFailure`] / [`EventKind::GpuRecovery`] — a
+//!   *single GPU* fails / heals while its node keeps serving from the
+//!   survivors (the partial-node fault mode; `job_id` carries the flat
+//!   device index `node * gpus_per_node + gpu`);
 //! * [`EventKind::NodeDegraded`] / [`EventKind::NodeRestored`] — a
 //!   node starts / stops *straggling*: it keeps its GPUs but runs
 //!   every co-located group at a fraction of its nominal rate
@@ -23,18 +27,24 @@
 //! **Determinism tie-break rule:** events order by
 //! `(time, kind, job_id, epoch)` — time via the crate's total f64
 //! order, then `Arrival < Completion < NodeFailure < NodeRecovery <
-//! NodeDegraded < NodeRestored < Preemption < ReschedulePoint`, then
-//! job id. Two runs of the same config therefore pop events in a
-//! bit-identical sequence, which is what keeps the sweep engine's
-//! cross-thread determinism contract intact (DESIGN.md §Determinism).
+//! GpuFailure < GpuRecovery < NodeDegraded < NodeRestored <
+//! Preemption < ReschedulePoint`, then job id. Two runs of the same
+//! config therefore pop events in a bit-identical sequence, which is
+//! what keeps the sweep engine's cross-thread determinism contract
+//! intact (DESIGN.md §Determinism).
 //! The fault ranks encode semantics: a job whose final step lands
 //! exactly when its node dies *completed* (the step finished), and a
-//! zero-downtime blip still orders failure before recovery. Straggler
-//! transitions rank after failure/recovery — a node that dies at the
-//! instant it would have degraded is simply dead — and degrade before
-//! restore, so a zero-length episode is a no-op rather than a
-//! restore-then-degrade inversion; both rank before `Preemption`, so
-//! an eviction priced at the degrade instant sees the new rate.
+//! zero-downtime blip still orders failure before recovery. GPU
+//! faults rank after the node kinds — a whole-node outage subsumes any
+//! same-instant single-device fault on it, so the hole is applied to a
+//! node whose gangs are already evicted (an idempotent mask update) —
+//! and failure before recovery for the same zero-downtime-blip reason.
+//! Straggler transitions rank after all capacity faults — a node that
+//! dies at the instant it would have degraded is simply dead — and
+//! degrade before restore, so a zero-length episode is a no-op rather
+//! than a restore-then-degrade inversion; both rank before
+//! `Preemption`, so an eviction priced at the degrade instant sees the
+//! new rate.
 //!
 //! Completion and reschedule events are *epoch-stamped*; superseded
 //! copies are discarded lazily on pop instead of being searched for
@@ -54,9 +64,10 @@
 //!   differential in `tests/integration_perf.rs` pins that this
 //!   discards exactly the events a global per-round bump would have.
 //!
-//! Arrivals and fault events (failure / recovery / degrade / restore /
-//! preemption) are *exogenous*: they come from the trace or the seeded
-//! fault model, not from the schedule, so they never go stale.
+//! Arrivals and fault events (node and GPU failure / recovery,
+//! degrade / restore, preemption) are *exogenous*: they come from the
+//! trace or the seeded fault model, not from the schedule, so they
+//! never go stale.
 
 use std::cmp::{Ordering, Reverse};
 use std::collections::BinaryHeap;
@@ -76,6 +87,14 @@ pub enum EventKind {
     /// A down node returns to the allocatable pool (`job_id` = node
     /// index).
     NodeRecovery,
+    /// A single GPU fails (`job_id` = flat device index
+    /// `node * gpus_per_node + gpu`): the allocator strands that slot,
+    /// and only the gangs whose allocation touches the device are
+    /// evicted — the node keeps serving from the survivors.
+    GpuFailure,
+    /// A failed GPU heals and returns to the allocatable pool
+    /// (`job_id` = flat device index).
+    GpuRecovery,
     /// A node starts straggling (`job_id` = node index): its GPUs stay
     /// allocatable but every co-located group runs at the episode's
     /// sampled speed multiplier.
@@ -94,19 +113,22 @@ impl EventKind {
     /// Tie-break rank at equal timestamps: arrivals first (a job
     /// arriving exactly when another completes sees the freed GPUs in
     /// the same round), then completions (a final step that lands at
-    /// the failure instant still counts), then failure before recovery
-    /// before degrade before restore before preemption, reschedule
-    /// points last.
+    /// the failure instant still counts), then node failure before
+    /// node recovery before GPU failure before GPU recovery (whole
+    /// nodes subsume same-instant single-device faults) before degrade
+    /// before restore before preemption, reschedule points last.
     fn rank(self) -> u8 {
         match self {
             EventKind::Arrival => 0,
             EventKind::Completion => 1,
             EventKind::NodeFailure => 2,
             EventKind::NodeRecovery => 3,
-            EventKind::NodeDegraded => 4,
-            EventKind::NodeRestored => 5,
-            EventKind::Preemption => 6,
-            EventKind::ReschedulePoint => 7,
+            EventKind::GpuFailure => 4,
+            EventKind::GpuRecovery => 5,
+            EventKind::NodeDegraded => 6,
+            EventKind::NodeRestored => 7,
+            EventKind::Preemption => 8,
+            EventKind::ReschedulePoint => 9,
         }
     }
 }
@@ -139,6 +161,8 @@ impl Event {
             EventKind::Arrival
             | EventKind::NodeFailure
             | EventKind::NodeRecovery
+            | EventKind::GpuFailure
+            | EventKind::GpuRecovery
             | EventKind::NodeDegraded
             | EventKind::NodeRestored
             | EventKind::Preemption => false,
@@ -285,6 +309,8 @@ mod tests {
         q.push(ev(5.0, EventKind::Preemption, 4));
         q.push(ev(5.0, EventKind::NodeRestored, 3));
         q.push(ev(5.0, EventKind::NodeDegraded, 3));
+        q.push(ev(5.0, EventKind::GpuRecovery, 17));
+        q.push(ev(5.0, EventKind::GpuFailure, 17));
         q.push(ev(5.0, EventKind::NodeRecovery, 2));
         q.push(ev(5.0, EventKind::NodeFailure, 2));
         q.push(ev(5.0, EventKind::Completion, 1));
@@ -299,6 +325,8 @@ mod tests {
                 EventKind::Completion,
                 EventKind::NodeFailure,
                 EventKind::NodeRecovery,
+                EventKind::GpuFailure,
+                EventKind::GpuRecovery,
                 EventKind::NodeDegraded,
                 EventKind::NodeRestored,
                 EventKind::Preemption,
@@ -325,6 +353,8 @@ mod tests {
             EventKind::Arrival,
             EventKind::NodeFailure,
             EventKind::NodeRecovery,
+            EventKind::GpuFailure,
+            EventKind::GpuRecovery,
             EventKind::NodeDegraded,
             EventKind::NodeRestored,
             EventKind::Preemption,

@@ -9,11 +9,13 @@
 //!
 //! The simulator is event-driven (§3.4's online reactive scheduler):
 //! time advances straight to the next arrival / exact completion /
-//! node failure / recovery / preemption / reschedule point instead of
+//! node or single-GPU failure / recovery / preemption / reschedule
+//! point instead of
 //! ticking a fixed horizon, with `scheduler.horizon_s` acting as the
 //! *maximum* interval between scheduling rounds. The fault subsystem
 //! (`config::FaultConfig` + `workload::faults`) injects seeded node
-//! churn and preemptions; evicted jobs pay a checkpoint-restore
+//! *and per-GPU* churn and preemptions; evicted jobs pay a
+//! checkpoint-restore
 //! penalty from the adapter-only size model and requeue, and each
 //! policy reacts through its ordinary `PolicyHooks` dispatch (tLoRA
 //! re-fuses elastically, mLoRA repacks FIFO, Megatron restarts in
@@ -98,6 +100,12 @@ pub struct SimResult {
     pub mean_slowdown: f64,
     /// node-failure events applied (fault subsystem; 0 with faults off)
     pub node_failures: u64,
+    /// single-GPU failure events applied (sub-node fault axis; 0 with
+    /// GPU faults off — node failures are counted separately above)
+    pub gpu_failures: u64,
+    /// total device-seconds GPUs spent individually holed (episodes
+    /// open at run end close at the makespan; 0 with GPU faults off)
+    pub holed_gpu_time_s: f64,
     /// preemption evictions applied (no-op preemptions excluded)
     pub preemptions: u64,
     /// total evictions — node failures + preemptions; each charged a
@@ -350,6 +358,8 @@ mod tests {
     fn fault_free_runs_report_zero_churn() {
         let r = simulate(&small_cfg(Policy::TLora));
         assert_eq!(r.node_failures, 0);
+        assert_eq!(r.gpu_failures, 0);
+        assert_eq!(r.holed_gpu_time_s, 0.0);
         assert_eq!(r.preemptions, 0);
         assert_eq!(r.restarts, 0);
         assert_eq!(r.lost_step_time_s, 0.0);
@@ -492,6 +502,130 @@ mod tests {
         // the non-flat tracker sees it
         assert!(corr.rack_span_max >= 2, "{}", corr.rack_span_max);
         assert!(corr.rack_span_mean >= 1.0);
+    }
+
+    #[test]
+    fn single_gpu_fault_evicts_less_and_beats_node_outage() {
+        // the acceptance scenario: the same device-hours of outage,
+        // two granularities. A single-GPU fault on a packed node
+        // evicts only the gang on that device and the scheduler
+        // re-shards onto the node's 3 survivors; the whole-node model
+        // takes all 4 gangs down. Same seed, same workload — the
+        // sub-node model must lose strictly less goodput.
+        let mut cfg = ExperimentConfig::default();
+        cfg.policy = Policy::Megatron; // isolation: 1 gang per job
+        cfg.cluster = crate::cluster::ClusterSpec::with_gpus(16);
+        cfg.seed = 7;
+        let jobs: Vec<JobSpec> = (0..13)
+            .map(|id| JobSpec {
+                id,
+                base_model: "llama3-8b".into(),
+                rank: 8,
+                batch_size: 4,
+                seq_len: 512,
+                gpus: 1,
+                total_steps: 20_000,
+                submit_time: 0.0,
+                max_slowdown: 10.0,
+            })
+            .collect();
+        let gpu_opts = EngineOptions {
+            gpu_fault_script: vec![
+                crate::workload::ScriptedGpuFault {
+                    time: 1_000.0,
+                    kind: crate::workload::GpuFaultKind::Failure,
+                    node: 0,
+                    gpu: 0,
+                },
+                crate::workload::ScriptedGpuFault {
+                    time: 6_000.0,
+                    kind: crate::workload::GpuFaultKind::Recovery,
+                    node: 0,
+                    gpu: 0,
+                },
+            ],
+            ..EngineOptions::default()
+        };
+        let node_opts = EngineOptions {
+            fault_script: vec![
+                crate::workload::ScriptedFault {
+                    time: 1_000.0,
+                    kind: crate::workload::FaultKind::NodeFailure,
+                    target: 0,
+                },
+                crate::workload::ScriptedFault {
+                    time: 6_000.0,
+                    kind: crate::workload::FaultKind::NodeRecovery,
+                    target: 0,
+                },
+            ],
+            ..EngineOptions::default()
+        };
+        let hole =
+            simulate_jobs_with(&cfg, jobs.clone(), &gpu_opts, &mut []);
+        let outage =
+            simulate_jobs_with(&cfg, jobs, &node_opts, &mut []);
+        // only the gang on the failed device is touched
+        assert_eq!(hole.gpu_failures, 1);
+        assert_eq!(hole.node_failures, 0);
+        assert_eq!(hole.restarts, 1, "evicted more than touched gangs");
+        assert!(
+            (hole.holed_gpu_time_s - 5_000.0).abs() < 1e-9,
+            "{}",
+            hole.holed_gpu_time_s
+        );
+        // the whole-node model takes down all 4 resident gangs
+        assert_eq!(outage.node_failures, 1);
+        assert_eq!(outage.gpu_failures, 0);
+        assert_eq!(outage.restarts, 4);
+        assert_eq!(outage.holed_gpu_time_s, 0.0);
+        // both runs finish every job; the sub-node model keeps
+        // strictly more useful work per second
+        assert!(hole.incomplete_jobs.is_empty());
+        assert!(outage.incomplete_jobs.is_empty());
+        assert!(
+            hole.goodput > outage.goodput,
+            "hole goodput {} not strictly above outage {}",
+            hole.goodput,
+            outage.goodput
+        );
+    }
+
+    #[test]
+    fn seeded_gpu_faults_conserve_jobs_and_are_deterministic() {
+        let mut cfg = small_cfg(Policy::TLora);
+        cfg.faults.gpu_mtbf_s = 20_000.0;
+        cfg.faults.gpu_mttr_s = 600.0;
+        cfg.validate().unwrap();
+        let r = simulate(&cfg);
+        assert_eq!(r.jct.len(), cfg.n_jobs);
+        assert!(r.incomplete_jobs.is_empty());
+        let r2 = simulate(&cfg);
+        assert_eq!(r.jct, r2.jct);
+        assert_eq!(r.gpu_failures, r2.gpu_failures);
+        assert_eq!(
+            r.holed_gpu_time_s.to_bits(),
+            r2.holed_gpu_time_s.to_bits()
+        );
+    }
+
+    #[test]
+    fn gpu_fault_gate_off_is_byte_identical() {
+        // the byte-freedom contract at the engine level: with
+        // gpu_mtbf_s = 0 no stream is built, no event is pushed, and
+        // every output bit matches a build that never heard of GPU
+        // faults — even when the (gated-off) mttr knob differs
+        let base = simulate(&small_cfg(Policy::TLora));
+        let mut cfg = small_cfg(Policy::TLora);
+        cfg.faults.gpu_mttr_s = 123.0;
+        let r = simulate(&cfg);
+        assert_eq!(base.jct, r.jct);
+        assert_eq!(base.events, r.events);
+        assert_eq!(base.sched_rounds, r.sched_rounds);
+        assert_eq!(base.makespan.to_bits(), r.makespan.to_bits());
+        assert_eq!(base.goodput.to_bits(), r.goodput.to_bits());
+        assert_eq!(r.gpu_failures, 0);
+        assert_eq!(r.holed_gpu_time_s, 0.0);
     }
 
     #[test]

@@ -51,6 +51,10 @@ pub struct RoundStats {
 pub enum EvictCause {
     /// Its group's allocation touched a failed node.
     NodeFailure,
+    /// Its group's allocation touched a single failed GPU (the rest
+    /// of the node keeps serving; only gangs on the device itself are
+    /// evicted).
+    GpuFailure,
     /// Exogenous preemption (spot reclaim / priority tenant).
     Preemption,
     /// A detection-aware policy moved it off a suspected straggler
@@ -77,6 +81,14 @@ pub trait SimObserver {
 
     /// A node returned to the pool at `t`.
     fn on_node_recovery(&mut self, _t: f64, _node: usize) {}
+
+    /// A single GPU died at `t`; its node's surviving devices keep
+    /// serving.
+    fn on_gpu_failure(&mut self, _t: f64, _node: usize, _gpu: usize) {}
+
+    /// A holed GPU returned to its node's pool at `t`.
+    fn on_gpu_recovery(&mut self, _t: f64, _node: usize, _gpu: usize) {
+    }
 
     /// A node started straggling at `t`: it runs at `speed` × nominal
     /// until restored (a repeat degrade re-samples the severity).
@@ -248,11 +260,20 @@ pub struct FaultObserver {
     slo_factor: f64,
     pub node_failures: u64,
     pub node_recoveries: u64,
+    /// single-GPU faults (the sub-node axis; node_failures excluded)
+    pub gpu_failures: u64,
     pub preemptions: u64,
     /// total evictions (failure + preemption)
     pub restarts: u64,
     pub lost_step_time_s: f64,
     pub restore_delay_s: f64,
+    /// Σ over devices of seconds spent individually holed (episodes
+    /// still open at the end of the run are closed at `t_end`)
+    pub holed_gpu_time_s: f64,
+    /// open holed-device episodes: (node, gpu) → fail time. Never
+    /// iterated except drained *sorted* at finish, so map order
+    /// cannot leak into the float sum.
+    holed_open: HashMap<(usize, usize), f64>,
     pub goodput: f64,
     pub slo_attainment: f64,
 }
@@ -263,10 +284,13 @@ impl FaultObserver {
             slo_factor,
             node_failures: 0,
             node_recoveries: 0,
+            gpu_failures: 0,
             preemptions: 0,
             restarts: 0,
             lost_step_time_s: 0.0,
             restore_delay_s: 0.0,
+            holed_gpu_time_s: 0.0,
+            holed_open: HashMap::new(),
             goodput: 0.0,
             slo_attainment: 1.0,
         }
@@ -298,6 +322,19 @@ impl SimObserver for FaultObserver {
         self.node_recoveries += 1;
     }
 
+    fn on_gpu_failure(&mut self, t: f64, node: usize, gpu: usize) {
+        self.gpu_failures += 1;
+        // a repeat failure without a recovery (scripted) keeps the
+        // original episode open — the device was already holed
+        self.holed_open.entry((node, gpu)).or_insert(t);
+    }
+
+    fn on_gpu_recovery(&mut self, t: f64, node: usize, gpu: usize) {
+        if let Some(start) = self.holed_open.remove(&(node, gpu)) {
+            self.holed_gpu_time_s += (t - start).max(0.0);
+        }
+    }
+
     fn on_evict(
         &mut self,
         _t: f64,
@@ -322,6 +359,12 @@ impl SimObserver for FaultObserver {
     }
 
     fn on_finish(&mut self, t_end: f64, jobs: &[&JobState]) {
+        let mut open: Vec<((usize, usize), f64)> =
+            self.holed_open.drain().collect();
+        open.sort_unstable_by_key(|&(k, _)| k);
+        for (_, start) in open {
+            self.holed_gpu_time_s += (t_end - start).max(0.0);
+        }
         let mut samples = 0.0;
         let mut met = 0usize;
         for s in jobs {
@@ -641,6 +684,34 @@ mod tests {
         o.on_finish(200.0, &[&a, &b]);
         let want = (100.0 * 4.0 + 50.0 * 4.0) / 200.0;
         assert!((o.goodput - want).abs() < 1e-9, "{}", o.goodput);
+    }
+
+    #[test]
+    fn fault_observer_accounts_gpu_holes() {
+        let mut o = FaultObserver::new(3.0);
+        // device (0,1): holed over [10, 40): 30 s
+        o.on_gpu_failure(10.0, 0, 1);
+        o.on_gpu_recovery(40.0, 0, 1);
+        // device (2,3): holed at 50, never recovered — closed at
+        // t_end = 100: 50 s. A repeat (scripted) failure keeps the
+        // original episode open rather than restarting the clock.
+        o.on_gpu_failure(50.0, 2, 3);
+        o.on_gpu_failure(70.0, 2, 3);
+        // recovery of a device that never failed is a no-op
+        o.on_gpu_recovery(60.0, 1, 0);
+        // GPU evictions count as environment damage like node faults
+        let j = job_state(0, 0.0);
+        o.on_evict(50.0, &j, EvictCause::GpuFailure, 0.4, 12.0);
+        o.on_finish(100.0, &[]);
+        assert_eq!(o.gpu_failures, 3);
+        assert_eq!(o.node_failures, 0);
+        assert_eq!(o.restarts, 1);
+        assert!((o.lost_step_time_s - 0.4).abs() < 1e-12);
+        assert!(
+            (o.holed_gpu_time_s - 80.0).abs() < 1e-9,
+            "{}",
+            o.holed_gpu_time_s
+        );
     }
 
     #[test]

@@ -354,8 +354,83 @@ impl SimState {
     }
 
     /// Recover `node`: its GPUs return to the allocatable pool.
+    /// Individually-holed GPUs stay stranded until their own
+    /// [`SimState::recover_gpu`] — node recovery with a live hole
+    /// restores exactly `gpus_per_node - holes` GPUs.
     pub fn recover_node(&mut self, node: usize) {
         self.allocator.set_down(node, false);
+    }
+
+    /// Fail a single GPU `(node, idx)` at time `t`: the allocator
+    /// strands the slot ([`Allocator::set_gpu_down`]) and only the
+    /// groups whose allocation actually *touches the device* die — the
+    /// node's surviving GPUs keep serving their gangs untouched, which
+    /// is the whole fidelity point of partial-node faults
+    /// ([`SimState::fail_node`] one level down the hardware tree).
+    /// Evicted members restore from checkpoint exactly like a node
+    /// failure; the next round's admission re-shards them around the
+    /// hole. Returns the evictions in job-id order.
+    pub fn fail_gpu(
+        &mut self,
+        node: usize,
+        idx: usize,
+        t: f64,
+        penalty: &HashMap<u64, f64>,
+    ) -> Vec<Eviction> {
+        self.allocator.set_gpu_down(node, idx, true);
+        let touches = |a: &Allocation| {
+            a.gpus
+                .iter()
+                .any(|gpu| gpu.node == node && gpu.idx == idx)
+        };
+        let mut affected: Vec<(u64, f64)> = vec![];
+        let mut keep = vec![];
+        for g in self.running.drain(..) {
+            if touches(&g.alloc) {
+                for id in &g.job_ids {
+                    affected.push((*id, g.step_time));
+                }
+            } else {
+                keep.push(g);
+            }
+        }
+        self.running = keep;
+        let mut evictions = vec![];
+        affected.sort_unstable_by_key(|&(id, _)| id);
+        for (id, step_time) in affected {
+            if self.states[&id].completed_at.is_some() {
+                if let Some(a) = self.allocations.remove(&id) {
+                    self.allocator.release(&a);
+                }
+                continue;
+            }
+            evictions.push(self.evict(id, t, step_time, penalty));
+        }
+        // admitted-but-not-running holders touching the device, in
+        // id order (same sweep as fail_node)
+        let mut held: Vec<u64> = self
+            .allocations
+            .iter()
+            .filter(|(_, a)| touches(a))
+            .map(|(id, _)| *id)
+            .collect();
+        held.sort_unstable();
+        for id in held {
+            if self.states[&id].completed_at.is_some() {
+                if let Some(a) = self.allocations.remove(&id) {
+                    self.allocator.release(&a);
+                }
+            } else {
+                evictions.push(self.evict(id, t, 0.0, penalty));
+            }
+        }
+        evictions
+    }
+
+    /// Heal a single GPU: the slot returns to the allocatable pool
+    /// (a no-op for the slot until any gang holding it releases).
+    pub fn recover_gpu(&mut self, node: usize, idx: usize) {
+        self.allocator.set_gpu_down(node, idx, false);
     }
 
     /// Set `node`'s throughput multiplier (straggler degrade/restore)
@@ -387,17 +462,23 @@ impl SimState {
     /// checkpoint-restore penalty charged, requeued — admission then
     /// re-places it preferring nodes outside `avoid` (the suspected
     /// set, a superset of `flagged`). Jobs are migrated only while
-    /// enough capacity to re-place them all exists outside `avoid` at
-    /// this instant — counting both GPUs currently free there *and*
-    /// the GPUs the migrating gang itself releases on unflagged nodes
-    /// (a gang straddling one slow node frees its healthy-node share
-    /// as part of the move; ignoring that credit starved exactly the
-    /// most common migration, the partially-affected gang on a full
-    /// cluster). The guard is best-effort, not a reservation —
+    /// enough capacity to re-place them all exists outside `avoid`,
+    /// tracked through an **in-round reservation ledger**: a per-node
+    /// residual seeded from the live free lists, credited with the
+    /// GPUs the migrating gang itself releases on usable nodes (a
+    /// gang straddling one slow node frees its healthy-node share as
+    /// part of the move), and debited by each accepted migration's
+    /// full re-placement need — so the second migration in a round
+    /// sees the residual the first one left, never the round-start
+    /// snapshot. Slots that are individually *holed*
+    /// ([`Allocator::gpu_is_down`]) release into the strand, not the
+    /// pool, and are never credited — counting them over-committed
+    /// exactly the partially-failed gang this PR models. The ledger
+    /// still reserves against the allocator only for this instant:
     /// competing queued jobs admitted during the restore window can
-    /// still take that capacity first, in which case the
-    /// avoid-fallback may land a migrated job back on a slow node (a
-    /// slow GPU beats no GPU). Returns the evictions in job-id order.
+    /// take the capacity first, in which case the avoid-fallback may
+    /// land a migrated job back on a slow node (a slow GPU beats no
+    /// GPU). Returns the evictions in job-id order.
     pub fn migrate_stragglers(
         &mut self,
         flagged: &[bool],
@@ -405,8 +486,21 @@ impl SimState {
         t: f64,
         penalty: &HashMap<u64, f64>,
     ) -> Vec<Eviction> {
-        let mut budget =
-            self.allocator.available_gpus_avoiding(avoid);
+        let usable = |alloc: &Allocator, node: usize| -> bool {
+            !alloc.is_down(node)
+                && !avoid.get(node).copied().unwrap_or(false)
+        };
+        // the reservation ledger: free GPUs per usable node right now
+        let n_nodes = self.allocator.spec().n_nodes;
+        let mut avail: Vec<usize> = (0..n_nodes)
+            .map(|node| {
+                if usable(&self.allocator, node) {
+                    self.allocator.free_on(node)
+                } else {
+                    0
+                }
+            })
+            .collect();
         let mut ids: Vec<u64> = self
             .allocations
             .iter()
@@ -422,23 +516,38 @@ impl SimState {
         let mut evictions = vec![];
         for id in ids {
             let need = self.states[&id].spec.gpus;
-            // GPUs this gang gives back on usable nodes when it moves:
-            // they join the pool its own re-placement draws from
-            let self_credit = self.allocations[&id]
-                .gpus
-                .iter()
-                .filter(|g| {
-                    !self.allocator.is_down(g.node)
-                        && !avoid
-                            .get(g.node)
-                            .copied()
-                            .unwrap_or(false)
-                })
-                .count();
-            if need > budget + self_credit {
+            // GPUs this gang gives back on usable nodes when it
+            // moves: they join the pool its own re-placement draws
+            // from. Holed slots strand on release and must not count.
+            let mut credit = vec![0usize; n_nodes];
+            for g in &self.allocations[&id].gpus {
+                if usable(&self.allocator, g.node)
+                    && !self.allocator.gpu_is_down(g.node, g.idx)
+                {
+                    credit[g.node] += 1;
+                }
+            }
+            let total: usize = avail.iter().sum::<usize>()
+                + credit.iter().sum::<usize>();
+            if need > total {
                 continue;
             }
-            budget = budget + self_credit - need;
+            // commit the reservation: fold the credit in, then debit
+            // the full need (node order is bookkeeping only — the
+            // accept decision is capacity-total, like the allocator's
+            // own spill)
+            for (node, c) in credit.into_iter().enumerate() {
+                avail[node] += c;
+            }
+            let mut debit = need;
+            for a in avail.iter_mut() {
+                let take = (*a).min(debit);
+                *a -= take;
+                debit -= take;
+                if debit == 0 {
+                    break;
+                }
+            }
             // mechanically identical to an exogenous preemption:
             // group removal, rollback priced at the group rate, gang
             // release, restore window, requeue (the job holds an
@@ -949,6 +1058,98 @@ mod tests {
         let a = &st.allocations[&1];
         assert_eq!(a.n_gpus(), 16);
         assert!(a.gpus.iter().all(|g| g.node != 0));
+    }
+
+    #[test]
+    fn gpu_failure_evicts_only_touching_gangs() {
+        // two gangs on two nodes; one device on the first node dies.
+        // Only the touching gang is evicted — the second keeps
+        // running, and the node's survivors return to the pool while
+        // the holed slot strands.
+        let mut cfg = ExperimentConfig::default();
+        cfg.cluster = ClusterSpec::with_gpus(24);
+        let jobs = vec![job(1, 8), job(2, 8)];
+        let mut st = SimState::new(&cfg, &jobs);
+        let a1 = st.allocator.allocate(8).unwrap();
+        assert_eq!(a1.nodes(), vec![0]);
+        let a2 = st.allocator.allocate(8).unwrap();
+        assert_eq!(a2.nodes(), vec![1]);
+        place(&mut st, 1, a1, 2.0);
+        place(&mut st, 2, a2, 2.0);
+        st.states.get_mut(&1).unwrap().steps_done = 3.5;
+        let penalty: HashMap<u64, f64> = [(1, 5.0)].into();
+        let ev = st.fail_gpu(0, 3, 10.0, &penalty);
+        assert_eq!(ev.len(), 1, "only the touching gang dies");
+        assert_eq!(ev[0].job_id, 1);
+        assert_eq!(ev[0].penalty_s, 5.0);
+        assert!((ev[0].lost_s - 0.5 * 2.0).abs() < 1e-9);
+        assert_eq!(st.running.len(), 1);
+        assert_eq!(st.running[0].job_ids, vec![2]);
+        assert_eq!(st.states[&2].restarts, 0);
+        // 7 survivors free, 1 stranded, job 2's 8 still held
+        assert_eq!(st.allocator.available_gpus(), 15);
+        assert_eq!(st.allocator.free_gpus(), 16);
+        // a hit on a *free* device evicts nobody
+        let ev2 = st.fail_gpu(2, 0, 11.0, &HashMap::new());
+        assert!(ev2.is_empty());
+        assert_eq!(st.allocator.available_gpus(), 14);
+        st.recover_gpu(0, 3);
+        st.recover_gpu(2, 0);
+        assert_eq!(st.allocator.available_gpus(), 16);
+    }
+
+    #[test]
+    fn migration_ledger_sees_residual_and_skips_holed_credit() {
+        // the pinned 2-migration over-commit scenario: 5 nodes x 8.
+        // Gang A holds nodes 0+1 (8+4), gang B nodes 2+3 (8+4);
+        // nodes 0 and 2 are flagged. Two of A's node-1 slots are
+        // holed (devices failed under the gang), so on eviction they
+        // strand instead of freeing. The round-start snapshot plus
+        // full self-credit would accept both migrations (14 free + 4
+        // credit each >= 12 each) — but real post-move capacity is
+        // only 22 of the 24 needed, landing one job back on a flagged
+        // node. The reservation ledger credits only the 2 non-holed
+        // slots and debits A's full need, so B correctly refuses.
+        let mut cfg = ExperimentConfig::default();
+        cfg.cluster = ClusterSpec::with_gpus(40);
+        let jobs = vec![job(1, 12), job(2, 12)];
+        let mut st = SimState::new(&cfg, &jobs);
+        let a1 = st.allocator.allocate(12).unwrap();
+        assert_eq!(a1.nodes(), vec![0, 1], "spill layout changed");
+        let a2 = st.allocator.allocate(12).unwrap();
+        assert_eq!(a2.nodes(), vec![2, 3], "spill layout changed");
+        place(&mut st, 1, a1, 2.0);
+        place(&mut st, 2, a2, 2.0);
+        st.states.get_mut(&1).unwrap().steps_done = 3.5;
+        st.states.get_mut(&2).unwrap().steps_done = 3.5;
+        // holes open under A's node-1 share
+        st.allocator.set_gpu_down(1, 0, true);
+        st.allocator.set_gpu_down(1, 1, true);
+        let flagged = [true, false, true, false, false];
+        let ev = st.migrate_stragglers(
+            &flagged,
+            &flagged,
+            100.0,
+            &HashMap::new(),
+        );
+        assert_eq!(ev.len(), 1, "second migration must see residual");
+        assert_eq!(ev[0].job_id, 1);
+        assert_eq!(st.states[&2].restarts, 0, "B over-committed");
+        assert_eq!(st.states[&2].steps_done, 3.5);
+        // A's re-placement fits entirely off the flagged nodes and
+        // off the stranded slots
+        let mut pred = Predictor::new(
+            cfg.cluster.clone(),
+            PlanOptions::default(),
+        );
+        st.admit_queued(128, &mut pred, 100.0, Some(&flagged));
+        let a = &st.allocations[&1];
+        assert_eq!(a.n_gpus(), 12);
+        assert!(a.gpus.iter().all(|g| g.node != 0 && g.node != 2));
+        assert!(a
+            .gpus
+            .iter()
+            .all(|g| !(g.node == 1 && g.idx < 2)));
     }
 
     #[test]

@@ -2,12 +2,14 @@
 //!
 //! A [`SweepGrid`] is the cartesian product of the evaluation axes every
 //! figure of the paper varies: policy × job count × cluster size ×
-//! arrival-rate scale × trace month × node MTBF × straggler MTBS ×
-//! hardware mix × topology × seed. [`SweepGrid::points`] enumerates the cells in a fixed
+//! arrival-rate scale × trace month × node MTBF × GPU MTBF ×
+//! straggler MTBS × hardware mix × topology × seed. [`SweepGrid::points`] enumerates the cells in a fixed
 //! row-major order, so a sweep's output is a pure function of the grid
 //! regardless of how many worker threads execute it. The MTBF axis
 //! (seconds; 0 = no churn) opens the failure/SLO workload dimension;
-//! the straggler axis (mean seconds between degrade episodes per node;
+//! the GPU-MTBF axis (per-device mean seconds between single-GPU
+//! faults; 0 = no GPU faults) opens the partial-node dimension; the
+//! straggler axis (mean seconds between degrade episodes per node;
 //! 0 = no stragglers) opens the degraded-node dimension. Every other
 //! fault/straggler knob (MTTR, preemption rate, restore cost model,
 //! severity bounds, detection thresholds) comes from the grid's base
@@ -41,6 +43,10 @@ pub struct SweepGrid {
     /// node MTBF values in seconds; 0 disables node failures for the
     /// cell (other fault knobs come from `base.faults`)
     pub mtbfs: Vec<f64>,
+    /// per-GPU MTBF values in seconds (single-device faults that hole
+    /// one GPU out of its node); 0 disables GPU faults for the cell
+    /// (the matching MTTR comes from `base.faults.gpu_mttr_s`)
+    pub gpu_mtbfs: Vec<f64>,
     /// straggler MTBS values in seconds (mean time between degrade
     /// episodes per node); 0 disables stragglers for the cell (other
     /// straggler knobs come from `base.stragglers`)
@@ -68,6 +74,7 @@ impl Default for SweepGrid {
             rate_scales: vec![1.0],
             months: vec![1],
             mtbfs: vec![base.faults.mtbf_s],
+            gpu_mtbfs: vec![base.faults.gpu_mtbf_s],
             stragglers: vec![base.stragglers.mtbs_s],
             hardware_mixes: vec![base.cluster.hardware_mix.clone()],
             topologies: vec![base.cluster.topology.spec_str.clone()],
@@ -86,6 +93,7 @@ impl SweepGrid {
             * self.rate_scales.len()
             * self.months.len()
             * self.mtbfs.len()
+            * self.gpu_mtbfs.len()
             * self.stragglers.len()
             * self.hardware_mixes.len()
             * self.topologies.len()
@@ -108,6 +116,14 @@ impl SweepGrid {
         self.topologies.iter().any(|t| !t.is_empty())
     }
 
+    /// True when any cell of the grid turns single-GPU faults on.
+    /// Gates the streaming report's `gpu_mtbf_s` / `gpu_failures` /
+    /// `holed_gpu_time_s` columns the same way
+    /// [`SweepGrid::has_topology`] gates the rack-span columns.
+    pub fn has_gpu_faults(&self) -> bool {
+        self.gpu_mtbfs.iter().any(|&m| m > 0.0)
+    }
+
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -122,6 +138,7 @@ impl SweepGrid {
             ("rate_scales", self.rate_scales.is_empty()),
             ("months", self.months.is_empty()),
             ("mtbfs", self.mtbfs.is_empty()),
+            ("gpu_mtbfs", self.gpu_mtbfs.is_empty()),
             ("stragglers", self.stragglers.is_empty()),
             ("hardware_mixes", self.hardware_mixes.is_empty()),
             ("topologies", self.topologies.is_empty()),
@@ -162,27 +179,34 @@ impl SweepGrid {
                     for &rate_scale in &self.rate_scales {
                         for &month in &self.months {
                             for &mtbf_s in &self.mtbfs {
-                                for &mtbs in &self.stragglers {
-                                    for mix in &self.hardware_mixes {
-                                        for topo in &self.topologies {
-                                            for &seed in &self.seeds {
-                                                out.push(SweepPoint {
-                                                    index,
-                                                    policy,
-                                                    n_jobs,
-                                                    gpus,
-                                                    rate_scale,
-                                                    month,
-                                                    mtbf_s,
-                                                    straggler_mtbs_s:
-                                                        mtbs,
-                                                    hardware_mix: mix
-                                                        .clone(),
-                                                    topology: topo
-                                                        .clone(),
-                                                    seed,
-                                                });
-                                                index += 1;
+                                for &gpu_mtbf_s in &self.gpu_mtbfs {
+                                    for &mtbs in &self.stragglers {
+                                        for mix in &self.hardware_mixes
+                                        {
+                                            for topo in
+                                                &self.topologies
+                                            {
+                                                for &seed in &self.seeds
+                                                {
+                                                    out.push(SweepPoint {
+                                                        index,
+                                                        policy,
+                                                        n_jobs,
+                                                        gpus,
+                                                        rate_scale,
+                                                        month,
+                                                        mtbf_s,
+                                                        gpu_mtbf_s,
+                                                        straggler_mtbs_s:
+                                                            mtbs,
+                                                        hardware_mix:
+                                                            mix.clone(),
+                                                        topology: topo
+                                                            .clone(),
+                                                        seed,
+                                                    });
+                                                    index += 1;
+                                                }
                                             }
                                         }
                                     }
@@ -209,6 +233,8 @@ pub struct SweepPoint {
     pub month: usize,
     /// node MTBF in seconds (0 = no node failures for this cell)
     pub mtbf_s: f64,
+    /// per-GPU MTBF in seconds (0 = no single-GPU faults for this cell)
+    pub gpu_mtbf_s: f64,
     /// straggler MTBS in seconds (0 = no stragglers for this cell)
     pub straggler_mtbs_s: f64,
     /// hardware-mix string ("" = homogeneous reference fleet)
@@ -234,6 +260,7 @@ impl SweepPoint {
             .expect("SweepGrid::validate rejects malformed topologies");
         cfg.trace = month_profile(self.month).scaled(self.rate_scale);
         cfg.faults.mtbf_s = self.mtbf_s;
+        cfg.faults.gpu_mtbf_s = self.gpu_mtbf_s;
         cfg.stragglers.mtbs_s = self.straggler_mtbs_s;
         cfg.seed = self.seed;
         cfg
@@ -249,10 +276,12 @@ impl SweepPoint {
     /// cell key and are aggregated together by the report layer. The
     /// `f` component is the node MTBF in seconds (0 = fault-free); the
     /// `d` component is the straggler MTBS in seconds (0 = no
-    /// degraded nodes). A trailing `/h<mix>` component appears only
-    /// for heterogeneous cells and a trailing `/t<topology>` component
-    /// only for non-flat cells, so homogeneous flat sweep keys stay
-    /// byte-identical to pre-tier and pre-topology builds.
+    /// degraded nodes). A `/G<gpu_mtbf>` component appears only for
+    /// cells with single-GPU faults on, a trailing `/h<mix>` component
+    /// only for heterogeneous cells and a trailing `/t<topology>`
+    /// component only for non-flat cells, so GPU-fault-free
+    /// homogeneous flat sweep keys stay byte-identical to pre-tier,
+    /// pre-topology and pre-GPU-fault builds.
     pub fn cell_key(&self) -> String {
         let mut key = format!(
             "{}/j{}/g{}/r{}x/m{}/f{}/d{}",
@@ -264,6 +293,9 @@ impl SweepPoint {
             self.mtbf_s,
             self.straggler_mtbs_s
         );
+        if self.gpu_mtbf_s > 0.0 {
+            key.push_str(&format!("/G{}", self.gpu_mtbf_s));
+        }
         if !self.hardware_mix.is_empty() {
             key.push_str("/h");
             key.push_str(&self.hardware_mix);
@@ -375,6 +407,39 @@ mod tests {
         assert_eq!(cfg1.faults.mtbf_s, 1800.0);
         assert!(cfg1.faults.enabled());
         assert!(cfg0.validate().is_ok() && cfg1.validate().is_ok());
+    }
+
+    #[test]
+    fn gpu_mtbf_axis_enumerates_and_applies() {
+        let mut g = grid();
+        g.gpu_mtbfs = vec![0.0, 40_000.0];
+        assert_eq!(g.len(), 2 * 2 * 2 * 2 * 3);
+        let pts = g.points();
+        assert_eq!(pts.len(), g.len());
+        // GPU MTBF varies faster than node MTBF, slower than seed
+        assert_eq!(pts[0].gpu_mtbf_s, 0.0);
+        assert_eq!(pts[3].gpu_mtbf_s, 40_000.0);
+        assert_ne!(pts[0].cell_key(), pts[3].cell_key());
+        // the GPU-fault-free cell's key is byte-identical to the
+        // pre-GPU-fault format; only fault-on cells grow /G
+        assert!(pts[0].cell_key().ends_with("/f0/d0"));
+        assert!(pts[3].cell_key().ends_with("/f0/d0/G40000"));
+        let cfg0 = pts[0].config(&g.base);
+        let cfg1 = pts[3].config(&g.base);
+        assert_eq!(cfg0.faults.gpu_mtbf_s, 0.0);
+        assert_eq!(cfg1.faults.gpu_mtbf_s, 40_000.0);
+        // the matching MTTR rides along from the base config
+        assert_eq!(cfg1.faults.gpu_mttr_s, g.base.faults.gpu_mttr_s);
+        assert!(cfg0.validate().is_ok() && cfg1.validate().is_ok());
+        assert!(g.has_gpu_faults());
+        assert!(!grid().has_gpu_faults());
+        // rejections
+        let mut g = grid();
+        g.gpu_mtbfs.clear();
+        assert!(g.validate().is_err());
+        let mut g = grid();
+        g.gpu_mtbfs = vec![-10.0];
+        assert!(g.validate().is_err());
     }
 
     #[test]

@@ -44,6 +44,13 @@ pub struct CellSummary {
     pub restarts: u64,
     /// total node-failure events across the cell's replicas
     pub node_failures: u64,
+    /// total single-GPU failure events across the cell's replicas —
+    /// the GPU-fault columns are gated on the cell's `gpu_mtbf_s` so
+    /// fault-free reports stay byte-identical to pre-GPU-fault builds
+    pub gpu_failures: u64,
+    /// total simulated seconds individual GPUs spent holed out of
+    /// otherwise-healthy nodes, pooled as (mean, ci95) over replicas
+    pub holed_gpu_time_s: (f64, f64),
     /// total straggler degrade episodes across the cell's replicas
     pub node_degrades: u64,
     /// total voluntary straggler migrations across the cell's replicas
@@ -137,6 +144,13 @@ pub fn aggregate(run: &SweepRun) -> Vec<CellSummary> {
                     .iter()
                     .map(|p| p.result.node_failures)
                     .sum(),
+                gpu_failures: pts
+                    .iter()
+                    .map(|p| p.result.gpu_failures)
+                    .sum(),
+                holed_gpu_time_s: col(&|p| {
+                    p.result.holed_gpu_time_s
+                }),
                 node_degrades: pts
                     .iter()
                     .map(|p| p.result.node_degrades)
@@ -217,10 +231,15 @@ pub fn sweep_table(title: &str, cells: &[CellSummary]) -> Table {
     let het = cells.iter().any(|c| !c.tier_util.is_empty());
     let topo =
         cells.iter().any(|c| !c.point.topology.is_empty());
+    let gpufaults =
+        cells.iter().any(|c| c.point.gpu_mtbf_s > 0.0);
     let mut headers =
         vec!["scenario", "seeds", "thr (samples/s)", "goodput",
           "mean JCT (s)", "p99 JCT (s)", "GPU util", "slowdown",
           "SLO", "restarts", "migr", "probes", "hit%", "incomplete"];
+    if gpufaults {
+        headers.push("gpu fails");
+    }
     if het {
         headers.push("tier util");
     }
@@ -267,6 +286,17 @@ pub fn sweep_table(title: &str, cells: &[CellSummary]) -> Table {
                 format!("{} UNFINISHED", c.incomplete)
             },
         ];
+        if gpufaults {
+            row.push(if c.point.gpu_mtbf_s > 0.0 {
+                format!(
+                    "{} ({:.0}s holed)",
+                    c.gpu_failures,
+                    fin(c.holed_gpu_time_s.0)
+                )
+            } else {
+                "-".into()
+            });
+        }
         if het {
             row.push(if c.tier_util.is_empty() {
                 "-".into()
@@ -296,10 +326,14 @@ pub fn sweep_table(title: &str, cells: &[CellSummary]) -> Table {
     t
 }
 
-/// CSV column names; `het` appends the heterogeneity-gated columns and
-/// `topo` the topology-gated ones. Shared by the legacy and streaming
-/// CSV paths.
-pub(crate) fn csv_headers(het: bool, topo: bool) -> Vec<&'static str> {
+/// CSV column names; `gpufaults` appends the GPU-fault-gated columns,
+/// `het` the heterogeneity-gated ones and `topo` the topology-gated
+/// ones. Shared by the legacy and streaming CSV paths.
+pub(crate) fn csv_headers(
+    het: bool,
+    topo: bool,
+    gpufaults: bool,
+) -> Vec<&'static str> {
     let mut headers =
         vec!["index", "policy", "n_jobs", "gpus", "rate_scale", "month",
           "mtbf_s", "straggler_mtbs_s", "seed", "throughput",
@@ -310,6 +344,11 @@ pub(crate) fn csv_headers(het: bool, topo: bool) -> Vec<&'static str> {
           "straggler_slowdown", "migrations", "sched_rounds",
           "events", "events_stale", "probes", "plan_cache_hits",
           "completed", "incomplete"];
+    if gpufaults {
+        headers.push("gpu_mtbf_s");
+        headers.push("gpu_failures");
+        headers.push("holed_gpu_time_s");
+    }
     if het {
         headers.push("hardware_mix");
         headers.push("tier_util");
@@ -328,6 +367,7 @@ pub(crate) fn csv_point_row(
     p: &PointResult,
     het: bool,
     topo: bool,
+    gpufaults: bool,
 ) -> Vec<String> {
     let mut row = vec![
         p.point.index.to_string(),
@@ -364,6 +404,11 @@ pub(crate) fn csv_point_row(
         p.result.jct.len().to_string(),
         p.result.incomplete_jobs.len().to_string(),
     ];
+    if gpufaults {
+        row.push(p.point.gpu_mtbf_s.to_string());
+        row.push(p.result.gpu_failures.to_string());
+        row.push(format!("{:.6}", fin(p.result.holed_gpu_time_s)));
+    }
     if het {
         row.push(p.point.hardware_mix.clone());
         row.push(
@@ -396,9 +441,13 @@ pub fn to_csv(run: &SweepRun) -> String {
         .points
         .iter()
         .any(|p| !p.point.topology.is_empty());
-    let mut t = Table::new("sweep", &csv_headers(het, topo));
+    let gpufaults = run
+        .points
+        .iter()
+        .any(|p| p.point.gpu_mtbf_s > 0.0);
+    let mut t = Table::new("sweep", &csv_headers(het, topo, gpufaults));
     for p in &run.points {
-        t.row(&csv_point_row(p, het, topo));
+        t.row(&csv_point_row(p, het, topo, gpufaults));
     }
     t.to_csv()
 }
@@ -466,6 +515,18 @@ pub(crate) fn point_json(p: &PointResult, include_timing: bool) -> Json {
         .set("plan_cache_hits", p.result.plan_cache_hits)
         .set("completed", p.result.jct.len())
         .set("incomplete", p.result.incomplete_jobs.len());
+    // gated on the point's GPU-MTBF axis: fault-free points carry no
+    // GPU-fault fields, so their JSON is byte-identical to
+    // pre-GPU-fault builds
+    if p.point.gpu_mtbf_s > 0.0 {
+        j = j
+            .set("gpu_mtbf_s", p.point.gpu_mtbf_s)
+            .set("gpu_failures", p.result.gpu_failures)
+            .set(
+                "holed_gpu_time_s",
+                fin(p.result.holed_gpu_time_s),
+            );
+    }
     // gated on heterogeneity: homogeneous points carry no hardware
     // fields, so their JSON is byte-identical to pre-tier builds
     if !p.point.hardware_mix.is_empty() {
@@ -526,6 +587,12 @@ pub(crate) fn cell_json(c: &CellSummary) -> Json {
         .set("plan_cache_hits", c.plan_cache_hits)
         .set("plan_cache_rate", c.cache_hit_rate())
         .set("incomplete", c.incomplete);
+    if c.point.gpu_mtbf_s > 0.0 {
+        j = j
+            .set("gpu_mtbf_s", c.point.gpu_mtbf_s)
+            .set("gpu_failures", c.gpu_failures)
+            .set("holed_gpu_time_s", ci(c.holed_gpu_time_s));
+    }
     if !c.point.hardware_mix.is_empty() {
         j = j
             .set("hardware_mix", c.point.hardware_mix.as_str())
@@ -869,6 +936,67 @@ mod tests {
         let t = sweep_table("demo", &cells).render();
         assert!(t.contains("tier util"), "{t}");
         assert!(t.contains("a100:"), "{t}");
+    }
+
+    fn run_gpufaults() -> SweepRun {
+        let mut g = SweepGrid::default();
+        g.policies = vec![Policy::TLora];
+        g.n_jobs = vec![8];
+        g.gpus = vec![16];
+        g.rate_scales = vec![2.0];
+        g.months = vec![1];
+        g.gpu_mtbfs = vec![20_000.0];
+        g.seeds = vec![3];
+        runner::run(&g, 1).unwrap()
+    }
+
+    #[test]
+    fn gpu_fault_columns_appear_only_for_fault_cells() {
+        // fault-free sweeps keep the pre-GPU-fault schema byte-for-byte
+        let clean = run_small();
+        let header =
+            to_csv(&clean).lines().next().unwrap().to_string();
+        assert!(!header.contains("gpu_mtbf_s"), "{header}");
+        assert!(!header.contains("gpu_failures"), "{header}");
+        assert!(!header.contains("holed_gpu_time_s"), "{header}");
+        let j = json::parse(&to_json_canonical(&clean).to_string())
+            .unwrap();
+        let pt = &j.get("points").unwrap().as_arr().unwrap()[0];
+        assert!(pt.get("gpu_mtbf_s").is_none());
+        assert!(pt.get("gpu_failures").is_none());
+        let cell = &j.get("cells").unwrap().as_arr().unwrap()[0];
+        assert!(cell.get("gpu_failures").is_none());
+        assert_eq!(aggregate(&clean)[0].gpu_failures, 0);
+
+        // GPU-fault sweeps carry the gated columns end to end
+        let faulty = run_gpufaults();
+        let csv = to_csv(&faulty);
+        let header = csv.lines().next().unwrap();
+        assert!(
+            header.contains("gpu_mtbf_s")
+                && header.contains("gpu_failures")
+                && header.contains("holed_gpu_time_s"),
+            "{header}"
+        );
+        let j = json::parse(&to_json_canonical(&faulty).to_string())
+            .unwrap();
+        let pt = &j.get("points").unwrap().as_arr().unwrap()[0];
+        assert_eq!(
+            pt.get("gpu_mtbf_s").unwrap().as_f64().unwrap(),
+            20_000.0
+        );
+        assert!(pt.get("gpu_failures").is_some());
+        assert!(pt.get("holed_gpu_time_s").is_some());
+        let cells = aggregate(&faulty);
+        assert!(
+            cells[0].key.contains("/G20000"),
+            "{}",
+            cells[0].key
+        );
+        let cell = &j.get("cells").unwrap().as_arr().unwrap()[0];
+        assert!(cell.get("gpu_failures").is_some());
+        let t = sweep_table("demo", &cells).render();
+        assert!(t.contains("gpu fails"), "{t}");
     }
 
     fn run_topo() -> SweepRun {

@@ -255,6 +255,8 @@ struct CellAcc {
     straggler_slowdown: Welford,
     restarts: u64,
     node_failures: u64,
+    gpu_failures: u64,
+    holed_gpu_time_s: Welford,
     node_degrades: u64,
     migrations: u64,
     probes: u64,
@@ -292,6 +294,8 @@ impl CellAcc {
             straggler_slowdown: Welford::default(),
             restarts: 0,
             node_failures: 0,
+            gpu_failures: 0,
+            holed_gpu_time_s: Welford::default(),
             node_degrades: 0,
             migrations: 0,
             probes: 0,
@@ -321,6 +325,8 @@ impl CellAcc {
         self.straggler_slowdown.add(p.result.straggler_slowdown);
         self.restarts += p.result.restarts;
         self.node_failures += p.result.node_failures;
+        self.gpu_failures += p.result.gpu_failures;
+        self.holed_gpu_time_s.add(p.result.holed_gpu_time_s);
         self.node_degrades += p.result.node_degrades;
         self.migrations += p.result.migrations;
         self.probes += p.result.scheduler_probes;
@@ -357,6 +363,8 @@ impl CellAcc {
                 .mean_ci95(),
             restarts: self.restarts,
             node_failures: self.node_failures,
+            gpu_failures: self.gpu_failures,
+            holed_gpu_time_s: self.holed_gpu_time_s.mean_ci95(),
             node_degrades: self.node_degrades,
             migrations: self.migrations,
             probes: self.probes,
@@ -389,6 +397,7 @@ impl CellAcc {
 pub struct StreamReport<'a> {
     het: bool,
     topo: bool,
+    gpufaults: bool,
     include_timing: bool,
     json: Option<StreamJsonWriter<'a>>,
     csv: Option<&'a mut dyn Write>,
@@ -408,6 +417,7 @@ impl<'a> StreamReport<'a> {
         StreamReport {
             het: grid.is_heterogeneous(),
             topo: grid.has_topology(),
+            gpufaults: grid.has_gpu_faults(),
             include_timing,
             json: None,
             csv: None,
@@ -443,7 +453,7 @@ impl<'a> StreamReport<'a> {
         }
         if let Some(out) = self.csv.as_mut() {
             let headers: Vec<String> =
-                csv_headers(self.het, self.topo)
+                csv_headers(self.het, self.topo, self.gpufaults)
                     .iter()
                     .map(|h| h.to_string())
                     .collect();
@@ -485,7 +495,8 @@ impl<'a> StreamReport<'a> {
         }
         if self.csv.is_some() {
             self.ensure_csv_header()?;
-            let row = csv_point_row(p, self.het, self.topo);
+            let row =
+                csv_point_row(p, self.het, self.topo, self.gpufaults);
             let out = self.csv.as_mut().unwrap();
             out.write_all(csv_row(&row).as_bytes())?;
             out.write_all(b"\n")?;
@@ -762,6 +773,31 @@ mod tests {
         assert!(
             header.contains("topology")
                 && header.contains("rack_span_mean"),
+            "{header}"
+        );
+        assert_eq!(
+            sweep_table("t", &cells).render(),
+            sweep_table("t", &aggregate(&run)).render()
+        );
+    }
+
+    #[test]
+    fn streaming_matches_legacy_on_gpu_fault_grid() {
+        // the grid-derived has_gpu_faults() gate must agree with the
+        // legacy writers' any-point check, and the gated columns must
+        // stream byte-identically
+        let mut g = small_grid();
+        g.gpu_mtbfs = vec![0.0, 20_000.0];
+        g.seeds = vec![3];
+        let run = runner::run(&g, 1).unwrap();
+        let (canon, csv, cells) = stream_all(&g, &run, false);
+        assert_eq!(canon, to_json_canonical(&run).to_pretty());
+        assert_eq!(csv, to_csv(&run));
+        let header = csv.lines().next().unwrap();
+        assert!(
+            header.contains("gpu_mtbf_s")
+                && header.contains("gpu_failures")
+                && header.contains("holed_gpu_time_s"),
             "{header}"
         );
         assert_eq!(

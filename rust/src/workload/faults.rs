@@ -33,6 +33,15 @@
 //!   `[severity_min, severity_max]` — drawn per episode.
 //!   [`synthesize_stragglers`] materializes the stream like
 //!   `synthesize_node_faults` does for failures.
+//! * [`GpuFaultModel`] / [`ScriptedGpuFault`] — the *partial-node*
+//!   fault mode: one GPU fails while its node keeps serving from the
+//!   survivors. Per-GPU alternating renewal streams (up-times
+//!   exponential with mean `gpu_mtbf_s`, repairs with mean
+//!   `gpu_mttr_s`), each pure in `(seed, node, gpu)` on its own salt,
+//!   so enabling GPU faults never shifts the node-level streams and a
+//!   device's sequence survives any engine interleaving.
+//!   [`synthesize_gpu_faults`] materializes the stream pinned to the
+//!   engine's lazy draw order.
 
 use crate::cluster::FailureDomain;
 use crate::util::f64_cmp;
@@ -400,6 +409,146 @@ pub fn synthesize_domain_stragglers(
     }
     out.sort_by(|a, b| {
         f64_cmp(a.time, b.time).then(a.node.cmp(&b.node))
+    });
+    out
+}
+
+/// Salt for per-GPU fault streams — distinct from [`FAULT_SALT`],
+/// [`STRAGGLER_SALT`], and the domain salts, so enabling single-GPU
+/// faults never shifts any node-level stream drawn for the same
+/// experiment seed.
+const GPU_FAULT_SALT: u64 = 0x67B0_FA17;
+
+/// Kind of an injected single-GPU fault (mirrors the engine's
+/// `GpuFailure`/`GpuRecovery` event kinds without depending on `sim`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GpuFaultKind {
+    Failure,
+    Recovery,
+}
+
+/// One deterministic injected single-GPU fault: at `time`, GPU `gpu`
+/// of node `node` fails or comes back. Threaded through
+/// `sim::EngineOptions::gpu_fault_script` for pinned scenarios.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScriptedGpuFault {
+    pub time: f64,
+    pub kind: GpuFaultKind,
+    pub node: u64,
+    pub gpu: u64,
+}
+
+/// Per-GPU MTBF/MTTR exponential renewal model: one independent RNG
+/// stream per device, seeded pure in `(seed, node, gpu)` via the flat
+/// device index `node * gpus_per_node + gpu` on [`GPU_FAULT_SALT`].
+/// Same construction as [`NodeFaultModel`], one level down the
+/// hardware tree.
+#[derive(Debug)]
+pub struct GpuFaultModel {
+    mtbf_s: f64,
+    mttr_s: f64,
+    gpus_per_node: usize,
+    rngs: Vec<Rng>,
+}
+
+impl GpuFaultModel {
+    /// `mtbf_s` must be > 0 (zero means "GPU faults disabled" and
+    /// callers should not build the model); `mttr_s` must be > 0 so
+    /// every failure schedules a recovery.
+    pub fn new(
+        mtbf_s: f64,
+        mttr_s: f64,
+        n_nodes: usize,
+        gpus_per_node: usize,
+        seed: u64,
+    ) -> GpuFaultModel {
+        assert!(mtbf_s > 0.0 && mttr_s > 0.0, "mtbf/mttr must be > 0");
+        let rngs = (0..n_nodes * gpus_per_node)
+            .map(|flat| {
+                Rng::new(
+                    seed ^ GPU_FAULT_SALT
+                        ^ (flat as u64 + 1)
+                            .wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                )
+            })
+            .collect();
+        GpuFaultModel {
+            mtbf_s,
+            mttr_s,
+            gpus_per_node,
+            rngs,
+        }
+    }
+
+    pub fn n_gpus(&self) -> usize {
+        self.rngs.len()
+    }
+
+    fn flat(&self, node: usize, gpu: usize) -> usize {
+        debug_assert!(gpu < self.gpus_per_node);
+        node * self.gpus_per_node + gpu
+    }
+
+    /// Draw the next up-time span for device `(node, gpu)` (seconds
+    /// until its next failure, measured from now / from recovery).
+    pub fn uptime(&mut self, node: usize, gpu: usize) -> f64 {
+        let flat = self.flat(node, gpu);
+        self.rngs[flat].exponential(1.0 / self.mtbf_s)
+    }
+
+    /// Draw the repair span for device `(node, gpu)`.
+    pub fn downtime(&mut self, node: usize, gpu: usize) -> f64 {
+        let flat = self.flat(node, gpu);
+        self.rngs[flat].exponential(1.0 / self.mttr_s)
+    }
+}
+
+/// Materialize the per-GPU renewal process as a sorted fault script
+/// covering `[0, horizon_s)` — the single-device analogue of
+/// [`synthesize_node_faults`]. Its prefix is exactly what the engine's
+/// lazy draws produce (uptime → downtime → uptime per device, devices
+/// in flat-index order), which the module tests pin.
+pub fn synthesize_gpu_faults(
+    gpu_mtbf_s: f64,
+    gpu_mttr_s: f64,
+    n_nodes: usize,
+    gpus_per_node: usize,
+    seed: u64,
+    horizon_s: f64,
+) -> Vec<ScriptedGpuFault> {
+    let mut model = GpuFaultModel::new(
+        gpu_mtbf_s,
+        gpu_mttr_s,
+        n_nodes,
+        gpus_per_node,
+        seed,
+    );
+    let mut out = vec![];
+    for node in 0..n_nodes {
+        for gpu in 0..gpus_per_node {
+            let mut t = model.uptime(node, gpu);
+            while t < horizon_s {
+                out.push(ScriptedGpuFault {
+                    time: t,
+                    kind: GpuFaultKind::Failure,
+                    node: node as u64,
+                    gpu: gpu as u64,
+                });
+                let rec = t + model.downtime(node, gpu);
+                out.push(ScriptedGpuFault {
+                    time: rec,
+                    kind: GpuFaultKind::Recovery,
+                    node: node as u64,
+                    gpu: gpu as u64,
+                });
+                t = rec + model.uptime(node, gpu);
+            }
+        }
+    }
+    out.sort_by(|a, b| {
+        f64_cmp(a.time, b.time)
+            .then(a.node.cmp(&b.node))
+            .then(a.gpu.cmp(&b.gpu))
     });
     out
 }
@@ -773,6 +922,102 @@ mod tests {
             1_000.0, 100.0, 0.2, 0.5, &one, 7, 20_000.0,
         );
         assert_ne!(dom[0].time, s[0].time);
+    }
+
+    #[test]
+    fn gpu_streams_deterministic_independent_and_salted_apart() {
+        let mut a = GpuFaultModel::new(1000.0, 100.0, 2, 4, 7);
+        let mut b = GpuFaultModel::new(1000.0, 100.0, 2, 4, 7);
+        assert_eq!(a.n_gpus(), 8);
+        for node in 0..2 {
+            for gpu in 0..4 {
+                for _ in 0..20 {
+                    assert_eq!(
+                        a.uptime(node, gpu),
+                        b.uptime(node, gpu)
+                    );
+                    assert_eq!(
+                        a.downtime(node, gpu),
+                        b.downtime(node, gpu)
+                    );
+                }
+            }
+        }
+        // a device's stream is untouched by draws on other devices
+        let mut c = GpuFaultModel::new(1000.0, 100.0, 2, 4, 7);
+        let mut d = GpuFaultModel::new(1000.0, 100.0, 2, 4, 7);
+        for _ in 0..50 {
+            let _ = d.uptime(0, 0);
+            let _ = d.downtime(0, 1);
+        }
+        assert_eq!(c.uptime(1, 3), d.uptime(1, 3));
+        // GPU streams never alias the node-fault or straggler streams
+        // for the same experiment seed: device (0,0) has flat index 0,
+        // the same position node 0 holds in the node-level models
+        let mut f = NodeFaultModel::new(1000.0, 100.0, 2, 7);
+        let mut g = GpuFaultModel::new(1000.0, 100.0, 2, 4, 7);
+        assert_ne!(f.uptime(0), g.uptime(0, 0));
+        let mut s = StragglerModel::new(1000.0, 100.0, 0.2, 0.5, 2, 7);
+        assert_ne!(s.healthy_span(0), g.downtime(0, 0));
+    }
+
+    #[test]
+    fn synthesized_gpu_faults_alternate_and_match_lazy_draws() {
+        let script = synthesize_gpu_faults(
+            400.0, 40.0, 2, 2, 5, 5_000.0,
+        );
+        assert!(!script.is_empty());
+        for w in script.windows(2) {
+            assert!(w[0].time <= w[1].time);
+        }
+        let mut model = GpuFaultModel::new(400.0, 40.0, 2, 2, 5);
+        for node in 0..2u64 {
+            for gpu in 0..2u64 {
+                let evs: Vec<&ScriptedGpuFault> = script
+                    .iter()
+                    .filter(|f| f.node == node && f.gpu == gpu)
+                    .collect();
+                // failure/recovery strictly alternate and pair up
+                for (i, f) in evs.iter().enumerate() {
+                    let want = if i % 2 == 0 {
+                        GpuFaultKind::Failure
+                    } else {
+                        GpuFaultKind::Recovery
+                    };
+                    assert_eq!(
+                        f.kind, want,
+                        "({node},{gpu}) event {i}"
+                    );
+                }
+                assert_eq!(
+                    evs.len() % 2,
+                    0,
+                    "({node},{gpu}) left down"
+                );
+                // the script is exactly the lazy draw sequence
+                let mut t =
+                    model.uptime(node as usize, gpu as usize);
+                let mut i = 0;
+                while t < 5_000.0 {
+                    assert_eq!(
+                        evs[i].time, t,
+                        "failure {i} ({node},{gpu})"
+                    );
+                    let rec = t
+                        + model
+                            .downtime(node as usize, gpu as usize);
+                    assert_eq!(
+                        evs[i + 1].time,
+                        rec,
+                        "recovery {i} ({node},{gpu})"
+                    );
+                    t = rec
+                        + model.uptime(node as usize, gpu as usize);
+                    i += 2;
+                }
+                assert_eq!(i, evs.len());
+            }
+        }
     }
 
     #[test]

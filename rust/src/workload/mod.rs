@@ -17,9 +17,10 @@ pub mod trace;
 
 pub use faults::{
     synthesize_domain_faults, synthesize_domain_stragglers,
-    synthesize_node_faults, synthesize_stragglers, FaultKind,
-    NodeFaultModel, PreemptionModel, ScriptedFault, ScriptedStraggler,
-    StragglerModel,
+    synthesize_gpu_faults, synthesize_node_faults,
+    synthesize_stragglers, FaultKind, GpuFaultKind, GpuFaultModel,
+    NodeFaultModel, PreemptionModel, ScriptedFault, ScriptedGpuFault,
+    ScriptedStraggler, StragglerModel,
 };
 pub use trace::{load_csv, save_csv, stream_csv, stream_csv_file,
                 DiurnalProfile, TenantClass, TraceGenerator,
