@@ -140,6 +140,16 @@ impl PolicyHooks for TloraHooks {
         true
     }
 
+    fn shrinks_in_place(&self) -> bool {
+        // The fused super-model is elastic by construction (§3.2):
+        // losing one device re-shards the shared backbone at the
+        // surviving width instead of tearing the gang down. Whether
+        // shrink scenarios actually run is gated by `faults.shrink`
+        // in the engine; Megatron/mLoRA keep evict-whole-gang
+        // semantics (no override).
+        true
+    }
+
     fn elastic_admit(
         &self,
         job: &JobSpec,
@@ -545,6 +555,20 @@ mod tests {
         for p in Policy::all() {
             assert_eq!(
                 hooks_for(p).straggler_aware(),
+                p.uses_tlora_scheduler(),
+                "{p:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn only_tlora_scheduler_policies_shrink_in_place() {
+        assert!(!MloraHooks { aimd: false }.shrinks_in_place());
+        assert!(!MloraHooks { aimd: true }.shrinks_in_place());
+        assert!(!MegatronHooks.shrinks_in_place());
+        for p in Policy::all() {
+            assert_eq!(
+                hooks_for(p).shrinks_in_place(),
                 p.uses_tlora_scheduler(),
                 "{p:?}"
             );

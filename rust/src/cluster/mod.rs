@@ -936,8 +936,9 @@ impl Allocator {
 
     /// Placement-aware allocation (callers guarantee
     /// `available_gpus() >= n > 0`). Single-node fits keep the
-    /// tightest-slack rule, breaking slack ties toward the faster
-    /// hardware generation. Spills enumerate one candidate per
+    /// tightest-slack rule, breaking slack ties first toward
+    /// hole-free nodes (fewest failed devices) and then toward the
+    /// faster hardware generation. Spills enumerate one candidate per
     /// hardware tier with enough healthy free capacity (a single-tier
     /// gang) plus the whole healthy fleet as the never-starve
     /// fallback, plan each rack-aware fill without mutating anything,
@@ -947,9 +948,15 @@ impl Allocator {
     /// tier in one rack, so this reduces to exactly the count-based
     /// order of [`Allocator::allocate_flat`].
     fn allocate_scored(&mut self, n: usize) -> Allocation {
-        // best-fit single node (slack, then compute_mult desc, then
-        // first index — a single node is trivially single-tier and
-        // single-rack, so radius cannot discriminate here)
+        // best-fit single node (slack, then fewest holed GPUs, then
+        // compute_mult desc, then first index — a single node is
+        // trivially single-tier and single-rack, so radius cannot
+        // discriminate here). The hole tiebreak prefers a clean node
+        // over an equally tight one carrying failed devices: a holed
+        // node has already demonstrated device attrition, and a gang
+        // packed next to a hole is first in line for the next one.
+        // On a hole-free fleet every count is 0, so the comparison
+        // never discriminates and the order is bit-identical.
         let mut best: Option<(usize, usize)> = None; // (node, slack)
         for (node, f) in self.free.iter().enumerate() {
             if self.down[node] || f.len() < n {
@@ -959,8 +966,12 @@ impl Allocator {
             let better = match best {
                 None => true,
                 Some((b, s)) => {
+                    let (holes, b_holes) =
+                        (self.holed_gpus(node), self.holed_gpus(b));
                     slack < s
+                        || (slack == s && holes < b_holes)
                         || (slack == s
+                            && holes == b_holes
                             && self.spec.compute_mult(node)
                                 > self.spec.compute_mult(b))
                 }
@@ -1072,8 +1083,15 @@ impl Allocator {
         let mut need = n;
         for rid in rack_order {
             let mut order = by_rack[rid].clone();
+            // most-free-first, then fewest holed GPUs (prefer packing
+            // spill shares onto clean nodes), index ties stable — all
+            // hole counts are 0 on a hole-free fleet, so the order is
+            // bit-identical there
             order.sort_by_key(|&i| {
-                std::cmp::Reverse(self.free[i].len())
+                (
+                    std::cmp::Reverse(self.free[i].len()),
+                    self.holed_gpus(i),
+                )
             });
             for node in order {
                 if need == 0 {
@@ -1687,6 +1705,33 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn scored_path_skips_holed_node_for_equally_tight_clean_node() {
+        // hole-aware placement, pinned: node 0 carries a failed
+        // device (3 free, 1 hole), node 1 is merely occupied (3
+        // free, clean). Both offer slack 0 for a 3-GPU gang; the old
+        // order (compute_mult tie, first index) took node 0 — packing
+        // the fresh gang right next to the hole. The hole tiebreak
+        // skips it for the equally tight clean node.
+        let mut a = Allocator::new(spec4x4());
+        a.set_gpu_down(0, 0, true);
+        assert_eq!(a.holed_gpus(0), 1);
+        assert_eq!(a.free_on(0), 3);
+        // occupy one GPU on node 1 (avoid mask steers the ask there)
+        let occ = a
+            .allocate_avoiding(1, &[true, false, true, true])
+            .unwrap();
+        assert_eq!(occ.nodes(), vec![1]);
+        let gang = a.allocate_scored(3);
+        assert_eq!(gang.nodes(), vec![1], "holed node not skipped");
+        // ...but cleanliness is only a tiebreak: a strictly tighter
+        // fit on the holed node still wins over looser clean nodes
+        let mut b = Allocator::new(spec4x4());
+        b.set_gpu_down(0, 0, true);
+        let tight = b.allocate_scored(3);
+        assert_eq!(tight.nodes(), vec![0], "slack must rank first");
     }
 
     #[test]

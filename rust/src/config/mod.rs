@@ -209,6 +209,24 @@ pub struct FaultConfig {
     /// Per-GPU mean time to recovery in seconds (exponential). Must
     /// be > 0 whenever `gpu_mtbf_s` > 0.
     pub gpu_mttr_s: f64,
+    /// Wear coupling for the per-device renewal stream: a device's
+    /// effective MTBF for its next uptime draw is
+    /// `gpu_mtbf_s / (1.0 + gpu_wear_alpha * wear)` where `wear` is
+    /// its accumulated service time in MTBF units plus its past
+    /// failure count. Pure in `(seed, node, gpu)` like the base
+    /// stream. The default `0.0` is an exact float no-op
+    /// (`x / (1.0 + 0.0 * w) == x` in IEEE bits for finite `w`).
+    pub gpu_wear_alpha: f64,
+    /// Graceful degradation: when a `GpuFailure` holes a device inside
+    /// a running gang and the active policy supports it
+    /// (`PolicyHooks::shrinks_in_place`), the gang is shrunk in place —
+    /// re-planned at the surviving width, members rolled back only to
+    /// the last checkpoint boundary without a restart penalty — and
+    /// regrown when the allocator can backfill. Members whose Δ^max
+    /// would be violated at the shrunken rate spill through the normal
+    /// eviction/requeue path. Off (the default) keeps the historic
+    /// evict-whole-gang semantics byte-identically.
+    pub shrink: bool,
 }
 
 impl Default for FaultConfig {
@@ -226,6 +244,8 @@ impl Default for FaultConfig {
             domain_mttr_s: 600.0,
             gpu_mtbf_s: 0.0,
             gpu_mttr_s: 600.0,
+            gpu_wear_alpha: 0.0,
+            shrink: false,
         }
     }
 }
@@ -280,6 +300,13 @@ impl FaultConfig {
             return Err(
                 "faults: gpu_mttr_s must be > 0 with GPU faults on"
                     .into(),
+            );
+        }
+        if !(self.gpu_wear_alpha >= 0.0
+            && self.gpu_wear_alpha.is_finite())
+        {
+            return Err(
+                "faults: gpu_wear_alpha must be finite and >= 0".into()
             );
         }
         Ok(())
@@ -523,7 +550,12 @@ impl ExperimentConfig {
                     .set("domain_mtbf_s", self.faults.domain_mtbf_s)
                     .set("domain_mttr_s", self.faults.domain_mttr_s)
                     .set("gpu_mtbf_s", self.faults.gpu_mtbf_s)
-                    .set("gpu_mttr_s", self.faults.gpu_mttr_s),
+                    .set("gpu_mttr_s", self.faults.gpu_mttr_s)
+                    .set(
+                        "gpu_wear_alpha",
+                        self.faults.gpu_wear_alpha,
+                    )
+                    .set("shrink", self.faults.shrink),
             )
             .set(
                 "hardware",
@@ -680,6 +712,14 @@ impl ExperimentConfig {
             if let Some(v) = f.get("gpu_mttr_s").and_then(Json::as_f64)
             {
                 self.faults.gpu_mttr_s = v;
+            }
+            if let Some(v) =
+                f.get("gpu_wear_alpha").and_then(Json::as_f64)
+            {
+                self.faults.gpu_wear_alpha = v;
+            }
+            if let Some(v) = f.get("shrink").and_then(Json::as_bool) {
+                self.faults.shrink = v;
             }
         }
         if let Some(s) = j.get("stragglers") {
@@ -1129,6 +1169,34 @@ mod tests {
         assert!(c.validate().is_err());
         // defaults keep GPU faults off
         assert_eq!(FaultConfig::default().gpu_mtbf_s, 0.0);
+    }
+
+    #[test]
+    fn shrink_and_wear_knobs_roundtrip_and_validate() {
+        let mut c = ExperimentConfig::default();
+        c.faults.shrink = true;
+        c.faults.gpu_wear_alpha = 0.5;
+        c.validate().unwrap();
+        let j = json::parse(&c.to_json().to_string()).unwrap();
+        let back = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(back.faults, c.faults);
+        // partial override: only shrink set, wear keeps default
+        let j = json::parse(r#"{"faults": {"shrink": true}}"#).unwrap();
+        let mut c2 = ExperimentConfig::default();
+        c2.apply_json(&j).unwrap();
+        assert!(c2.faults.shrink);
+        assert_eq!(c2.faults.gpu_wear_alpha, 0.0);
+        // rejections
+        let mut c = ExperimentConfig::default();
+        c.faults.gpu_wear_alpha = -0.1;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.faults.gpu_wear_alpha = f64::NAN;
+        assert!(c.validate().is_err());
+        // defaults keep both off
+        let d = FaultConfig::default();
+        assert!(!d.shrink);
+        assert_eq!(d.gpu_wear_alpha, 0.0);
     }
 
     #[test]

@@ -4,6 +4,7 @@
 //! tlora simulate  [--policy tlora|mlora|megatron|...] [--n-jobs N]
 //!                 [--n-gpus N] [--seed S] [--month 1|2|3] [--rate-scale F]
 //!                 [--mtbf S] [--mttr S] [--gpu-mtbf S] [--gpu-mttr S]
+//!                 [--gpu-wear-alpha F] [--shrink]
 //!                 [--preempt-rate R]
 //!                 [--straggler-mtbs S] [--straggler-mtts S]
 //!                 [--straggler-oblivious] [--hardware-mix SPEC]
@@ -11,7 +12,7 @@
 //! tlora compare   [--n-jobs N] [--n-gpus N] [--seed S]     # all policies
 //! tlora sweep     [--policies a,b|all] [--n-jobs N,..] [--gpus N,..]
 //!                 [--rate-scales F,..] [--months M,..] [--mtbfs S,..]
-//!                 [--gpu-mtbf S,..] [--stragglers S,..]
+//!                 [--gpu-mtbf S,..] [--shrink B,..] [--stragglers S,..]
 //!                 [--hardware-mix SPEC,..]
 //!                 [--topology SPEC,..] [--seeds S,..] [--threads T]
 //!                 [--out-json f] [--out-csv f] [--canonical]
@@ -78,6 +79,13 @@ Fault flags:  --mtbf SECONDS (0 = off) --mttr SECONDS
               --gpu-mtbf SECONDS (per-GPU single-device failures,
               0 = off; a hit holes one GPU out of its node and evicts
               only the gangs touching it) --gpu-mttr SECONDS
+              --gpu-wear-alpha F (wear coupling: each device's fault
+              rate grows by a factor of (1 + alpha) per prior fault
+              on that device; 0 = memoryless) --shrink (graceful
+              degradation: capable policies shrink a gang in place
+              through a single-GPU failure — re-plan at surviving
+              width, roll back only to the last checkpoint — and
+              regrow on recovery; other policies keep evicting)
               --preempt-rate EVENTS/S  (simulate/compare)
 Straggler flags: --straggler-mtbs SECONDS (mean time between degrade
               episodes per node, 0 = off) --straggler-mtts SECONDS
@@ -101,7 +109,9 @@ Topology flags: --topology SPEC, a rack/region tree with per-tier
               columns for non-flat cells
 Sweep flags:  --policies a,b|all --n-jobs N,.. --gpus N,..
               --rate-scales F,.. --months M,.. --mtbfs S,..
-              --gpu-mtbf S,.. --stragglers S,.. --hardware-mix SPEC,..
+              --gpu-mtbf S,.. --shrink false,true (grid axis; true
+              cells report shrink/regrow columns)
+              --stragglers S,.. --hardware-mix SPEC,..
               --topology SPEC,.. --seeds S,.. --threads T
               --out-json FILE --out-csv FILE
               --canonical (strip wall-clock/thread fields from JSON so
@@ -145,6 +155,11 @@ fn build_config(args: &Args) -> Result<ExperimentConfig, String> {
         args.get_f64("gpu-mtbf", cfg.faults.gpu_mtbf_s)?;
     cfg.faults.gpu_mttr_s =
         args.get_f64("gpu-mttr", cfg.faults.gpu_mttr_s)?;
+    cfg.faults.gpu_wear_alpha =
+        args.get_f64("gpu-wear-alpha", cfg.faults.gpu_wear_alpha)?;
+    if args.has("shrink") {
+        cfg.faults.shrink = true;
+    }
     cfg.faults.preempt_rate =
         args.get_f64("preempt-rate", cfg.faults.preempt_rate)?;
     cfg.stragglers.mtbs_s =
@@ -242,6 +257,14 @@ fn cmd_simulate(args: &Args) -> i32 {
             t.row(&[
                 "holed GPU-time (s)".into(),
                 format!("{:.1}", r.holed_gpu_time_s),
+            ]);
+        }
+        if cfg.faults.shrink || r.shrinks > 0 {
+            t.row(&["gang shrinks".into(), r.shrinks.to_string()]);
+            t.row(&["gang regrows".into(), r.regrows.to_string()]);
+            t.row(&[
+                "degraded-rate time (s)".into(),
+                format!("{:.1}", r.degraded_rate_time_s),
             ]);
         }
         t.row(&[
@@ -411,6 +434,11 @@ fn cmd_sweep(args: &Args) -> i32 {
             args,
             "topology",
             vec![grid.base.cluster.topology.spec_str.clone()],
+        )?;
+        grid.shrinks = parse_list(
+            args,
+            "shrink",
+            vec![grid.base.faults.shrink],
         )?;
         grid.seeds = parse_list(args, "seeds", vec![grid.base.seed])?;
         grid.validate()?;

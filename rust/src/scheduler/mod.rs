@@ -57,6 +57,19 @@ pub trait PolicyHooks {
         false
     }
 
+    /// Can this policy shrink a running gang in place when a single
+    /// GPU inside it fails (`faults.shrink` scenarios)? Capable
+    /// policies keep the surviving members training at the shrunken
+    /// width — rolled back only to the last checkpoint boundary, no
+    /// restart penalty — and regrow when capacity returns; members
+    /// whose Δ^max would be violated at the shrunken rate spill
+    /// through the normal eviction path. Baselines default to today's
+    /// evict-whole-gang semantics; only elastic super-model policies
+    /// (tLoRA) override this, mirroring `straggler_aware`.
+    fn shrinks_in_place(&self) -> bool {
+        false
+    }
+
     /// Elastic shared admission (§3.4): pick the group that should
     /// absorb the queued `job` — an index into `groups` — or `None` to
     /// keep it queued. The engine commits the absorption (perf

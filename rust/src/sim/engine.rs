@@ -24,8 +24,8 @@ use std::collections::HashMap;
 use super::events::{Event, EventKind, EventQueue};
 use super::observer::{
     CompletionObserver, EvictCause, FaultObserver, GroupingObserver,
-    RoundStats, SimObserver, SlowdownObserver, StragglerObserver,
-    TimelineObserver,
+    RoundStats, ShrinkObserver, SimObserver, SlowdownObserver,
+    StragglerObserver, TimelineObserver,
 };
 use super::state::{Eviction, JobState, SimState};
 use super::SimResult;
@@ -113,6 +113,7 @@ struct ObserverSet {
     slowdown: SlowdownObserver,
     faults: FaultObserver,
     stragglers: StragglerObserver,
+    shrink: ShrinkObserver,
 }
 
 /// Fan one observer callback out to every built-in plus the caller's
@@ -126,6 +127,7 @@ macro_rules! fan_out {
         $set.slowdown.$hook($($arg),*);
         $set.faults.$hook($($arg),*);
         $set.stragglers.$hook($($arg),*);
+        $set.shrink.$hook($($arg),*);
         for o in $extra.iter_mut() {
             o.$hook($($arg),*);
         }
@@ -231,6 +233,30 @@ impl ObserverSet {
         );
     }
 
+    fn shrink(
+        &mut self,
+        t: f64,
+        jobs: &[u64],
+        groups: u64,
+        rollback_lost_s: f64,
+        extra: &mut [&mut dyn SimObserver],
+    ) {
+        fan_out!(
+            self,
+            extra,
+            on_shrink(t, jobs, groups, rollback_lost_s)
+        );
+    }
+
+    fn regrow(
+        &mut self,
+        t: f64,
+        job: u64,
+        extra: &mut [&mut dyn SimObserver],
+    ) {
+        fan_out!(self, extra, on_regrow(t, job));
+    }
+
     fn finish(
         &mut self,
         t_end: f64,
@@ -320,13 +346,18 @@ impl FaultDriver {
         } else {
             None
         };
+        // wear-coupled streams: alpha 0.0 is an *exact* no-op (the
+        // per-device draws are bit-identical to the memoryless model),
+        // so routing through with_wear unconditionally keeps
+        // wear-free configs byte-identical
         let gpus = if f.gpu_mtbf_s > 0.0 {
-            Some(GpuFaultModel::new(
+            Some(GpuFaultModel::with_wear(
                 f.gpu_mtbf_s,
                 f.gpu_mttr_s,
                 cfg.cluster.n_nodes,
                 cfg.cluster.gpus_per_node,
                 cfg.seed,
+                f.gpu_wear_alpha,
             ))
         } else {
             None
@@ -428,6 +459,13 @@ pub struct Engine<'a> {
     estimator: Option<NodeSpeedEstimator>,
     /// last time `observe_speeds` ran (estimator bookkeeping)
     last_obs_t: f64,
+    /// graceful degradation active: `faults.shrink` configured *and*
+    /// the policy is elastic enough to shrink gangs in place
+    /// ([`PolicyHooks::shrinks_in_place`]). False routes every
+    /// single-GPU failure through the historic evict path and never
+    /// calls the regrow pass — the off state is byte-identical to the
+    /// pre-shrink engine.
+    shrink_enabled: bool,
     /// per-tier utilization accumulators (mixed fleets only)
     tier_util: Option<TierUtilTracker>,
     /// gang rack-span accounting (non-flat topologies only)
@@ -646,6 +684,8 @@ impl<'a> Engine<'a> {
         }
         let n_jobs = jobs.len();
         let hooks = hooks_for(cfg.policy);
+        let shrink_enabled =
+            cfg.faults.shrink && hooks.shrinks_in_place();
         // the estimator exists only when there is something to detect
         // (seeded model or script), detection is configured on, and
         // the policy actually consumes the signal — otherwise every
@@ -701,11 +741,13 @@ impl<'a> Engine<'a> {
                 stragglers: StragglerObserver::new(
                     cfg.cluster.n_nodes,
                 ),
+                shrink: ShrinkObserver::default(),
             },
             faults,
             stragglers,
             estimator,
             last_obs_t: 0.0,
+            shrink_enabled,
             tier_util,
             rack_span,
             epoch: 0,
@@ -860,6 +902,67 @@ impl<'a> Engine<'a> {
         t: f64,
         extra: &mut [&mut dyn SimObserver],
     ) {
+        if self.shrink_enabled {
+            // graceful degradation: register the hole with the
+            // allocator *and the predictor first* (set_gpu_down is
+            // idempotent — shrink_gpu re-asserts it), so the
+            // shrunken-width re-plan inside shrink_gpu prices and
+            // keys around the hole (the hole-aware
+            // `PlanShapeKey::of_with_holes` path), not the healthy
+            // node shape
+            self.state.allocator.set_gpu_down(node, gpu, true);
+            self.predictor.set_node_holes(
+                node,
+                self.state.allocator.holed_gpus(node) as u32,
+            );
+            let out = self.state.shrink_gpu(
+                node,
+                gpu,
+                t,
+                &self.faults.penalties,
+                &mut self.predictor,
+            );
+            self.obs.gpu_failure(t, node, gpu, extra);
+            for e in &out.evictions {
+                self.dirty_jobs.insert(e.job_id);
+                self.obs.evict(
+                    t,
+                    &self.state.states[&e.job_id],
+                    EvictCause::GpuFailure,
+                    e,
+                    extra,
+                );
+            }
+            // survivors' progress rolled back discontinuously: their
+            // anchored completions must not outlive coincidentally
+            // equal rate bits
+            for id in &out.shrunk_jobs {
+                self.dirty_jobs.insert(*id);
+            }
+            if !out.shrunk_jobs.is_empty() {
+                self.obs.shrink(
+                    t,
+                    &out.shrunk_jobs,
+                    out.groups_shrunk,
+                    out.rollback_lost_s,
+                    extra,
+                );
+            }
+            if from_model {
+                if let Some(m) = &mut self.faults.gpus {
+                    self.events.push(Event {
+                        time: t + m.downtime(node, gpu),
+                        kind: EventKind::GpuRecovery,
+                        job_id: (node
+                            * self.cfg.cluster.gpus_per_node
+                            + gpu)
+                            as u64,
+                        epoch: FAULT_MODEL_ORIGIN,
+                    });
+                }
+            }
+            return;
+        }
         let evs =
             self.state.fail_gpu(node, gpu, t, &self.faults.penalties);
         self.obs.gpu_failure(t, node, gpu, extra);
@@ -1118,6 +1221,17 @@ impl<'a> Engine<'a> {
                         extra,
                     );
                 }
+            }
+        }
+
+        // regrow shrunken gangs before fresh admissions (degraded
+        // running jobs are made whole first — they were admitted
+        // before today's queue). Shrink scenarios only: with shrink
+        // off no partial allocation can exist and the pass never
+        // runs, keeping shrink-free runs byte-identical.
+        if self.shrink_enabled {
+            for id in self.state.regrow_shrunken() {
+                self.obs.regrow(t, id, extra);
             }
         }
 
@@ -1682,6 +1796,12 @@ impl<'a> Engine<'a> {
                 .stragglers
                 .straggler_slowdown,
             migrations: self.obs.stragglers.migrations,
+            shrinks: self.obs.shrink.shrinks,
+            regrows: self.obs.shrink.regrows,
+            degraded_rate_time_s: self
+                .obs
+                .shrink
+                .degraded_rate_time_s,
             tier_util,
             rack_span_mean,
             rack_span_max,

@@ -39,6 +39,12 @@
 //! same-instant single-device fault on it, so the hole is applied to a
 //! node whose gangs are already evicted (an idempotent mask update) —
 //! and failure before recovery for the same zero-downtime-blip reason.
+//! Graceful degradation (`faults.shrink`) adds **no new kinds**:
+//! shrink-in-place rides the `GpuFailure` dispatch at rank 4 and
+//! regrow is a stateless scan for partial allocations in the next
+//! scheduling round (so it observes `GpuRecovery`/allocator backfill
+//! at rank 5 and later), which keeps this tie-break table — and the
+//! bit-identical replay contract built on it — untouched.
 //! Straggler transitions rank after all capacity faults — a node that
 //! dies at the instant it would have degraded is simply dead — and
 //! degrade before restore, so a zero-length episode is a no-op rather

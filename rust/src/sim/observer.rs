@@ -116,6 +116,25 @@ pub trait SimObserver {
     ) {
     }
 
+    /// Gangs shrank in place at `t` (graceful degradation under a
+    /// single-GPU failure, `faults.shrink` scenarios): `jobs` kept
+    /// training at the surviving width, `groups` running gangs were
+    /// shrunk, and `rollback_lost_s` seconds of in-flight work rolled
+    /// back to the survivors' last checkpoint boundaries. Members that
+    /// spilled instead arrive through the usual `on_evict`.
+    fn on_shrink(
+        &mut self,
+        _t: f64,
+        _jobs: &[u64],
+        _groups: u64,
+        _rollback_lost_s: f64,
+    ) {
+    }
+
+    /// A shrunken gang was regrown to its full provisioned width at
+    /// `t` (device recovery or free-pool backfill).
+    fn on_regrow(&mut self, _t: f64, _job: u64) {}
+
     /// The run ended at `t_end`; `jobs` holds every job's final state
     /// sorted by id (completed or not).
     fn on_finish(&mut self, _t_end: f64, _jobs: &[&JobState]) {}
@@ -473,6 +492,85 @@ impl SimObserver for StragglerObserver {
     }
 }
 
+/// Graceful-degradation accounting (`faults.shrink` scenarios): gangs
+/// shrunk in place, regrows back to full width, and the total
+/// simulated seconds jobs spent training *degraded* (shrunken width,
+/// reduced rate).
+///
+/// *degraded_rate_time_s* sums per-job episodes opened at shrink time
+/// and closed by whichever comes first: regrow, eviction (the job left
+/// the degraded gang through the normal spill/churn path), completion,
+/// or the end of the run. A repeat shrink while an episode is open
+/// (a second device dying under the same gang) keeps the original
+/// episode — the job was already degraded. The open-episode map is
+/// never iterated except drained *sorted* at finish, so map order
+/// cannot leak into the float sum.
+#[derive(Debug, Default)]
+pub struct ShrinkObserver {
+    /// gangs shrunk in place (kept running at surviving width)
+    pub shrinks: u64,
+    /// shrunken gangs topped back up to full provisioned width
+    pub regrows: u64,
+    /// Σ over jobs of seconds spent running at shrunken width
+    pub degraded_rate_time_s: f64,
+    /// Σ checkpoint-boundary rollback across surviving members
+    pub rollback_lost_s: f64,
+    /// open degraded episodes: job id → shrink time
+    open: HashMap<u64, f64>,
+}
+
+impl ShrinkObserver {
+    fn close_episode(&mut self, id: u64, t: f64) {
+        if let Some(start) = self.open.remove(&id) {
+            self.degraded_rate_time_s += (t - start).max(0.0);
+        }
+    }
+}
+
+impl SimObserver for ShrinkObserver {
+    fn on_shrink(
+        &mut self,
+        t: f64,
+        jobs: &[u64],
+        groups: u64,
+        rollback_lost_s: f64,
+    ) {
+        self.shrinks += groups;
+        self.rollback_lost_s += rollback_lost_s;
+        for id in jobs {
+            self.open.entry(*id).or_insert(t);
+        }
+    }
+
+    fn on_regrow(&mut self, t: f64, job: u64) {
+        self.regrows += 1;
+        self.close_episode(job, t);
+    }
+
+    fn on_evict(
+        &mut self,
+        t: f64,
+        job: &JobState,
+        _cause: EvictCause,
+        _lost_s: f64,
+        _penalty_s: f64,
+    ) {
+        self.close_episode(job.spec.id, t);
+    }
+
+    fn on_complete(&mut self, t: f64, job: &JobState) {
+        self.close_episode(job.spec.id, t);
+    }
+
+    fn on_finish(&mut self, t_end: f64, _jobs: &[&JobState]) {
+        let mut open: Vec<(u64, f64)> = self.open.drain().collect();
+        open.sort_unstable_by_key(|&(id, _)| id);
+        for (_, start) in open {
+            self.degraded_rate_time_s += (t_end - start).max(0.0);
+        }
+    }
+}
+
 /// Mean slowdown across jobs that ran (expected isolated steps over
 /// actual steps, the §4.2 fairness metric).
 #[derive(Debug, Default)]
@@ -768,6 +866,49 @@ mod tests {
         assert_eq!(f.preemptions, 1);
         assert!((f.lost_step_time_s - 0.2).abs() < 1e-12);
         assert!((f.restore_delay_s - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shrink_observer_episode_accounting() {
+        let mut o = ShrinkObserver::default();
+        // job 1: degraded over [10, 40), closed by regrow: 30 s
+        o.on_shrink(10.0, &[1], 1, 2.5);
+        o.on_regrow(40.0, 1);
+        // job 2: degraded at 50; a second shrink at 70 (another
+        // device died under the same gang) keeps the original
+        // episode; never regrown — closed at t_end = 100: 50 s
+        o.on_shrink(50.0, &[2], 1, 0.0);
+        o.on_shrink(70.0, &[2], 1, 1.5);
+        // regrow of a never-shrunk job counts but opens nothing
+        o.on_regrow(60.0, 9);
+        o.on_finish(100.0, &[]);
+        assert_eq!(o.shrinks, 3);
+        assert_eq!(o.regrows, 2);
+        assert!((o.rollback_lost_s - 4.0).abs() < 1e-12);
+        assert!(
+            (o.degraded_rate_time_s - 80.0).abs() < 1e-9,
+            "{}",
+            o.degraded_rate_time_s
+        );
+    }
+
+    #[test]
+    fn shrink_observer_eviction_and_completion_close_episodes() {
+        let mut o = ShrinkObserver::default();
+        let j1 = job_state(1, 0.0);
+        let mut j2 = job_state(2, 0.0);
+        o.on_shrink(10.0, &[1, 2], 1, 0.0);
+        // job 1 spills out of the degraded gang at 30: 20 s degraded
+        o.on_evict(30.0, &j1, EvictCause::GpuFailure, 0.1, 5.0);
+        // job 2 completes at 60: 50 s degraded
+        j2.completed_at = Some(60.0);
+        o.on_complete(60.0, &j2);
+        o.on_finish(100.0, &[]);
+        assert!(
+            (o.degraded_rate_time_s - 70.0).abs() < 1e-9,
+            "{}",
+            o.degraded_rate_time_s
+        );
     }
 
     #[test]

@@ -9,7 +9,7 @@
 
 use std::collections::HashMap;
 
-use crate::cluster::{Allocation, Allocator};
+use crate::cluster::{Allocation, Allocator, GpuId};
 use crate::config::{ExperimentConfig, SchedulerConfig};
 use crate::kernelsim::overlap::iter_time;
 use crate::kernelsim::AimdController;
@@ -56,6 +56,28 @@ pub struct Eviction {
     pub lost_s: f64,
     /// checkpoint-restore delay charged before the job may run again
     pub penalty_s: f64,
+}
+
+/// Outcome of a shrink-in-place reaction to a single-GPU failure
+/// ([`SimState::shrink_gpu`]): who spilled, who kept training at the
+/// shrunken width, and what the survivors' checkpoint rollback cost.
+#[derive(Debug, Default)]
+pub struct ShrinkOutcome {
+    /// Members spilled through the normal eviction path — Δ^max
+    /// violated at the shrunken rate, an infeasible shrunken-width
+    /// plan, or a gang shrunk to nothing — in job-id order per gang.
+    pub evictions: Vec<Eviction>,
+    /// Members kept training in gangs shrunk in place (plus
+    /// held-but-not-running owners whose gang lost the device),
+    /// sorted by id. These run under-provisioned until
+    /// [`SimState::regrow_shrunken`] tops them back up.
+    pub shrunk_jobs: Vec<u64>,
+    /// Gangs shrunk in place (kept running at surviving width).
+    pub groups_shrunk: u64,
+    /// Simulated seconds of checkpoint-boundary rollback across the
+    /// *surviving* members (the spilled members' lost work is on
+    /// their `Eviction` records), summed in job-id order.
+    pub rollback_lost_s: f64,
 }
 
 /// A group currently executing at a fixed step rate. The rate only
@@ -431,6 +453,277 @@ impl SimState {
     /// (a no-op for the slot until any gang holding it releases).
     pub fn recover_gpu(&mut self, node: usize, idx: usize) {
         self.allocator.set_gpu_down(node, idx, false);
+    }
+
+    /// Graceful-degradation reaction to a single-GPU failure
+    /// ([`SimState::fail_gpu`]'s shrink-in-place alternative, gated by
+    /// `faults.shrink` + [`PolicyHooks::shrinks_in_place`] in the
+    /// engine): instead of tearing down the touched gang, drop the
+    /// dead device from its owner's gang, re-plan the fused group at
+    /// the surviving width, and keep training at reduced throughput.
+    ///
+    /// Per member, the elastic Δ^max machinery decides shrink vs
+    /// spill: the member stays when the shrunken gang's effective
+    /// step time over its *admission-time* isolated baseline
+    /// (`JobState::iso_step_time`, its provisioned-width reference)
+    /// respects its `max_slowdown`; otherwise it spills through the
+    /// normal eviction path — rollback, restore penalty, requeue,
+    /// `restarts += 1` — exactly like [`SimState::fail_gpu`] would
+    /// have treated it. Survivors roll back only to the last durable
+    /// checkpoint boundary (the dead shard's in-flight state is gone)
+    /// but pay **no** restore penalty and keep their admission record:
+    /// the super-model re-shards elastically instead of restarting.
+    ///
+    /// The dead slot strands into the allocator's holed side-list
+    /// immediately (its owner no longer holds it, and `release` routes
+    /// by the down-mask), preserving the strand-but-account
+    /// conservation `free_gpus() + held == capacity`. The same-instant
+    /// scheduling round then re-forms groups from the shrunken owned
+    /// allocations through the ordinary hole-aware dispatch path.
+    /// Falls back to full eviction for a gang whose shrunken width
+    /// cannot hold the fused plan at all. Deterministic: gangs in
+    /// running order, members and holders in job-id order.
+    pub fn shrink_gpu(
+        &mut self,
+        node: usize,
+        idx: usize,
+        t: f64,
+        penalty: &HashMap<u64, f64>,
+        predictor: &mut Predictor,
+    ) -> ShrinkOutcome {
+        self.allocator.set_gpu_down(node, idx, true);
+        let dead = GpuId { node, idx };
+        let touches = |a: &Allocation| {
+            a.gpus
+                .iter()
+                .any(|gpu| gpu.node == node && gpu.idx == idx)
+        };
+        let mut out = ShrinkOutcome::default();
+        let ckpt_oh = self.ckpt_oh_per_step;
+        let mut gi = 0;
+        while gi < self.running.len() {
+            if !touches(&self.running[gi].alloc) {
+                gi += 1;
+                continue;
+            }
+            let old_step = self.running[gi].step_time;
+            let mut members = self.running[gi].job_ids.clone();
+            members.sort_unstable();
+            // the device's owner loses it from its gang; the masked
+            // slot strands now (release routes by the down-mask)
+            let mut owner_ids: Vec<u64> =
+                self.allocations.keys().copied().collect();
+            owner_ids.sort_unstable();
+            if let Some(oid) =
+                owner_ids.into_iter().find(|id| {
+                    touches(&self.allocations[id])
+                })
+            {
+                let a = self.allocations.get_mut(&oid).unwrap();
+                a.gpus.retain(|g| {
+                    !(g.node == node && g.idx == idx)
+                });
+                if a.gpus.is_empty() {
+                    // shrunk to nothing: the owner stays a member as
+                    // an elastic rider (requeued + re-absorbed or
+                    // re-admitted by the following round)
+                    self.allocations.remove(&oid);
+                }
+                self.allocator
+                    .release(&Allocation { gpus: vec![dead] });
+            }
+            // members completed at this very timestamp just release
+            // (mirrors fail_gpu)
+            for id in &members {
+                if self.states[id].completed_at.is_some() {
+                    if let Some(a) = self.allocations.remove(id) {
+                        self.allocator.release(&a);
+                    }
+                }
+            }
+            members.retain(|id| {
+                self.states[id].completed_at.is_none()
+            });
+            // the surviving gang: union of live members' owned gangs
+            // (riders own nothing), re-planned at that width
+            let gang_alloc = |state: &Self, ids: &[u64]| {
+                let mut al = Allocation { gpus: vec![] };
+                for id in ids {
+                    if let Some(a) = state.allocations.get(id) {
+                        al = al.union(a);
+                    }
+                }
+                al
+            };
+            let specs = |state: &Self, ids: &[u64]| -> Vec<JobSpec> {
+                ids.iter()
+                    .map(|id| state.states[id].spec.clone())
+                    .collect()
+            };
+            let shrunk = gang_alloc(self, &members);
+            let perf = if shrunk.gpus.is_empty() {
+                None
+            } else {
+                predictor.group_perf(&specs(self, &members), &shrunk)
+            };
+            let Some(perf) = perf else {
+                // nothing left to run on, or the fused plan does not
+                // fit the surviving width: the whole gang dies the
+                // historic way
+                self.running.remove(gi);
+                for id in members {
+                    out.evictions.push(
+                        self.evict(id, t, old_step, penalty),
+                    );
+                }
+                continue;
+            };
+            // Δ^max spill at the shrunken rate: gang cadence over the
+            // member's provisioned-width baseline
+            let eff = |state: &Self, p: &GroupPerf, al: &Allocation| {
+                (p.step_time_s + ckpt_oh)
+                    / state.allocator.alloc_speed(al)
+            };
+            let step = eff(self, &perf, &shrunk);
+            let (mut survivors, mut spilled) = (vec![], vec![]);
+            for id in members {
+                let st = &self.states[&id];
+                let slow = step / st.iso_step_time.max(1e-12);
+                if slow > st.spec.max_slowdown {
+                    spilled.push(id);
+                } else {
+                    survivors.push(id);
+                }
+            }
+            for id in &spilled {
+                out.evictions.push(
+                    self.evict(*id, t, old_step, penalty),
+                );
+            }
+            // spilled owners took their GPUs with them: re-plan the
+            // remainder (fewer members sharing can only help)
+            let (alloc2, perf2) = if spilled.is_empty() {
+                (shrunk, perf)
+            } else {
+                let al = gang_alloc(self, &survivors);
+                let p = if survivors.is_empty()
+                    || al.gpus.is_empty()
+                {
+                    None
+                } else {
+                    predictor
+                        .group_perf(&specs(self, &survivors), &al)
+                };
+                match p {
+                    Some(p) => (al, p),
+                    None => {
+                        self.running.remove(gi);
+                        for id in survivors {
+                            out.evictions.push(self.evict(
+                                id, t, old_step, penalty,
+                            ));
+                        }
+                        continue;
+                    }
+                }
+            };
+            // survivors: checkpoint-boundary rollback, no restore
+            // penalty, no restart, no requeue — they keep training
+            let k = self.ckpt_interval;
+            for id in &survivors {
+                let st = self.states.get_mut(id).unwrap();
+                let boundary = (st.steps_done / k).floor() * k;
+                out.rollback_lost_s +=
+                    (st.steps_done - boundary) * old_step;
+                st.steps_done = boundary;
+            }
+            let step2 = eff(self, &perf2, &alloc2);
+            let speed2 = self.allocator.alloc_speed(&alloc2);
+            let g = &mut self.running[gi];
+            g.job_ids = survivors.clone();
+            g.alloc = alloc2;
+            g.base_step_time = perf2.step_time_s + ckpt_oh;
+            g.speed = speed2;
+            g.step_time = step2;
+            g.compute_util = perf2.compute_util;
+            g.comp_s = perf2.plan.comp_s;
+            g.comm_s = perf2.plan.comm_s;
+            out.groups_shrunk += 1;
+            out.shrunk_jobs.extend(survivors);
+            gi += 1;
+        }
+        // held-but-not-running owners touching the device (a dispatch
+        // probe failure can leave a job with a gang but no group):
+        // shrink the gang in place too, in id order
+        let mut held: Vec<u64> = self
+            .allocations
+            .iter()
+            .filter(|(_, a)| touches(a))
+            .map(|(id, _)| *id)
+            .collect();
+        held.sort_unstable();
+        for id in held {
+            if self.states[&id].completed_at.is_some() {
+                if let Some(a) = self.allocations.remove(&id) {
+                    self.allocator.release(&a);
+                }
+                continue;
+            }
+            let a = self.allocations.get_mut(&id).unwrap();
+            a.gpus.retain(|g| !(g.node == node && g.idx == idx));
+            let emptied = a.gpus.is_empty();
+            if emptied {
+                self.allocations.remove(&id);
+            }
+            self.allocator.release(&Allocation { gpus: vec![dead] });
+            if emptied {
+                // nothing left to hold: requeue through the normal
+                // path (priced at 0 — it was not running)
+                out.evictions
+                    .push(self.evict(id, t, 0.0, penalty));
+            } else {
+                out.shrunk_jobs.push(id);
+            }
+        }
+        out.shrunk_jobs.sort_unstable();
+        out
+    }
+
+    /// Regrow shrunken gangs: owners left under-provisioned by
+    /// [`SimState::shrink_gpu`] (owned width below their spec width —
+    /// nothing else creates that state) are topped back up to full
+    /// width from the free pool. Runs every scheduling round while
+    /// shrink scenarios are active, which covers both regrow triggers:
+    /// a `GpuRecovery` returning the healed slot, and ordinary
+    /// completions freeing backfill capacity. Deterministic contract:
+    /// candidates in job-id order, all-or-nothing per job (a partial
+    /// top-up would churn the gang rate every round for no policy
+    /// gain), degraded running jobs made whole before the same
+    /// round's fresh admissions. Returns the regrown job ids.
+    pub fn regrow_shrunken(&mut self) -> Vec<u64> {
+        let states = &self.states;
+        let mut ids: Vec<u64> = self
+            .allocations
+            .iter()
+            .filter(|(id, a)| {
+                states[*id].completed_at.is_none()
+                    && a.n_gpus() < states[*id].spec.gpus
+            })
+            .map(|(id, _)| *id)
+            .collect();
+        ids.sort_unstable();
+        let mut regrown = vec![];
+        for id in ids {
+            let need = self.states[&id].spec.gpus
+                - self.allocations[&id].n_gpus();
+            let Some(extra) = self.allocator.allocate(need) else {
+                continue;
+            };
+            let a = self.allocations.get_mut(&id).unwrap();
+            *a = a.union(&extra);
+            regrown.push(id);
+        }
+        regrown
     }
 
     /// Set `node`'s throughput multiplier (straggler degrade/restore)
@@ -1150,6 +1443,142 @@ mod tests {
             .gpus
             .iter()
             .all(|g| !(g.node == 1 && g.idx < 2)));
+    }
+
+    #[test]
+    fn gpu_shrink_keeps_gang_running_and_strands_the_slot() {
+        // one 8-GPU gang fills a single node; one device dies. With a
+        // loose Δ^max the gang shrinks in place: rollback to the last
+        // checkpoint boundary, NO restart/penalty/requeue, the gang
+        // keeps running at width 7, and the dead slot strands. Regrow
+        // tops it back up only once the slot heals (no other free
+        // capacity exists on this 8-GPU fleet).
+        let mut cfg = ExperimentConfig::default();
+        cfg.cluster = ClusterSpec::with_gpus(8);
+        cfg.faults.ckpt_interval_steps = 5;
+        let mut j = job(1, 8);
+        j.max_slowdown = 10.0;
+        let jobs = vec![j];
+        let mut pred = Predictor::new(
+            cfg.cluster.clone(),
+            PlanOptions::default(),
+        );
+        let mut st = SimState::new(&cfg, &jobs);
+        let a = st.allocator.allocate(8).unwrap();
+        let iso = pred
+            .isolated_step_time(&jobs[0], &a)
+            .unwrap();
+        place(&mut st, 1, a, 2.0);
+        st.states.get_mut(&1).unwrap().iso_step_time = iso;
+        st.states.get_mut(&1).unwrap().steps_done = 12.7;
+        let penalty: HashMap<u64, f64> = [(1, 5.0)].into();
+        let out = st.shrink_gpu(0, 3, 50.0, &penalty, &mut pred);
+        assert!(out.evictions.is_empty(), "{:?}", out.evictions);
+        assert_eq!(out.shrunk_jobs, vec![1]);
+        assert_eq!(out.groups_shrunk, 1);
+        assert!((out.rollback_lost_s - 2.7 * 2.0).abs() < 1e-9);
+        // survivor semantics: boundary rollback, no restart machinery
+        assert_eq!(st.states[&1].steps_done, 10.0);
+        assert_eq!(st.states[&1].restarts, 0);
+        assert_eq!(st.states[&1].restart_at, 0.0);
+        assert!(st.queue.is_empty());
+        // the gang keeps running at width 7, dead device dropped
+        assert_eq!(st.running.len(), 1);
+        assert_eq!(st.running[0].job_ids, vec![1]);
+        assert_eq!(st.running[0].alloc.n_gpus(), 7);
+        assert_eq!(st.allocations[&1].n_gpus(), 7);
+        assert!(st.allocations[&1]
+            .gpus
+            .iter()
+            .all(|g| !(g.node == 0 && g.idx == 3)));
+        // a 7-wide gang is strictly slower than its 8-wide baseline
+        assert!(st.running[0].step_time > iso);
+        // strand-but-account: the holed slot is free-but-unusable
+        assert_eq!(st.allocator.free_gpus(), 1);
+        assert_eq!(st.allocator.available_gpus(), 0);
+        // no spare capacity: regrow cannot top up yet
+        assert!(st.regrow_shrunken().is_empty());
+        // the device heals; regrow makes the gang whole again
+        st.recover_gpu(0, 3);
+        assert_eq!(st.regrow_shrunken(), vec![1]);
+        assert_eq!(st.allocations[&1].n_gpus(), 8);
+        assert_eq!(st.allocator.free_gpus(), 0);
+        assert!(st.regrow_shrunken().is_empty(), "already whole");
+    }
+
+    #[test]
+    fn shrink_spills_members_past_their_slowdown_budget() {
+        // Δ^max = 1.0 cannot absorb any shrink (a 7-wide gang is
+        // strictly slower than the 8-wide admission baseline), so the
+        // member spills through the normal eviction path: rollback,
+        // restore penalty, requeue, restarts += 1 — exactly the
+        // fail_gpu outcome.
+        let mut cfg = ExperimentConfig::default();
+        cfg.cluster = ClusterSpec::with_gpus(8);
+        cfg.faults.ckpt_interval_steps = 5;
+        let mut j = job(1, 8);
+        j.max_slowdown = 1.0;
+        let jobs = vec![j];
+        let mut pred = Predictor::new(
+            cfg.cluster.clone(),
+            PlanOptions::default(),
+        );
+        let mut st = SimState::new(&cfg, &jobs);
+        let a = st.allocator.allocate(8).unwrap();
+        let iso = pred
+            .isolated_step_time(&jobs[0], &a)
+            .unwrap();
+        place(&mut st, 1, a, 2.0);
+        st.states.get_mut(&1).unwrap().iso_step_time = iso;
+        st.states.get_mut(&1).unwrap().steps_done = 12.7;
+        let penalty: HashMap<u64, f64> = [(1, 5.0)].into();
+        let out = st.shrink_gpu(0, 3, 50.0, &penalty, &mut pred);
+        assert_eq!(out.evictions.len(), 1);
+        assert_eq!(out.evictions[0].job_id, 1);
+        assert_eq!(out.evictions[0].penalty_s, 5.0);
+        assert!(
+            (out.evictions[0].lost_s - 2.7 * 2.0).abs() < 1e-9
+        );
+        assert!(out.shrunk_jobs.is_empty());
+        assert_eq!(out.groups_shrunk, 0);
+        assert_eq!(out.rollback_lost_s, 0.0);
+        assert_eq!(st.states[&1].steps_done, 10.0);
+        assert_eq!(st.states[&1].restarts, 1);
+        assert_eq!(st.states[&1].restart_at, 55.0);
+        assert_eq!(st.queue, vec![1]);
+        assert!(st.running.is_empty());
+        assert!(st.allocations.is_empty());
+        // 7 survivors released back to the pool, 1 slot stranded
+        assert_eq!(st.allocator.free_gpus(), 8);
+        assert_eq!(st.allocator.available_gpus(), 7);
+    }
+
+    #[test]
+    fn shrink_on_held_but_not_running_gang_drops_the_device() {
+        // a dispatch probe failure can leave a job holding a gang with
+        // no running group; a shrink there just drops the device from
+        // the held allocation (no eviction — it was not running)
+        let mut cfg = ExperimentConfig::default();
+        cfg.cluster = ClusterSpec::with_gpus(24);
+        let jobs = vec![job(1, 8)];
+        let mut pred = Predictor::new(
+            cfg.cluster.clone(),
+            PlanOptions::default(),
+        );
+        let mut st = SimState::new(&cfg, &jobs);
+        let a = st.allocator.allocate(8).unwrap();
+        st.allocations.insert(1, a);
+        let out = st.shrink_gpu(0, 3, 10.0, &HashMap::new(), &mut pred);
+        assert!(out.evictions.is_empty());
+        assert_eq!(out.shrunk_jobs, vec![1]);
+        assert_eq!(out.groups_shrunk, 0);
+        assert_eq!(st.allocations[&1].n_gpus(), 7);
+        assert_eq!(st.allocator.free_gpus(), 17);
+        assert_eq!(st.allocator.available_gpus(), 16);
+        // plenty of spare capacity on the other nodes: regrow
+        // backfills immediately, no recovery needed
+        assert_eq!(st.regrow_shrunken(), vec![1]);
+        assert_eq!(st.allocations[&1].n_gpus(), 8);
     }
 
     #[test]

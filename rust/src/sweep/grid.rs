@@ -3,7 +3,7 @@
 //! A [`SweepGrid`] is the cartesian product of the evaluation axes every
 //! figure of the paper varies: policy × job count × cluster size ×
 //! arrival-rate scale × trace month × node MTBF × GPU MTBF ×
-//! straggler MTBS × hardware mix × topology × seed. [`SweepGrid::points`] enumerates the cells in a fixed
+//! straggler MTBS × hardware mix × topology × shrink-in-place × seed. [`SweepGrid::points`] enumerates the cells in a fixed
 //! row-major order, so a sweep's output is a pure function of the grid
 //! regardless of how many worker threads execute it. The MTBF axis
 //! (seconds; 0 = no churn) opens the failure/SLO workload dimension;
@@ -61,6 +61,11 @@ pub struct SweepGrid {
     /// single-switch topology and keeps the cell key byte-identical
     /// to pre-topology sweeps
     pub topologies: Vec<String>,
+    /// shrink-in-place settings (`faults.shrink`); `false` keeps the
+    /// evict-and-requeue fault semantics and a cell key
+    /// byte-identical to pre-shrink sweeps, `true` lets capable
+    /// policies shrink gangs through single-GPU failures
+    pub shrinks: Vec<bool>,
     pub seeds: Vec<u64>,
 }
 
@@ -78,6 +83,7 @@ impl Default for SweepGrid {
             stragglers: vec![base.stragglers.mtbs_s],
             hardware_mixes: vec![base.cluster.hardware_mix.clone()],
             topologies: vec![base.cluster.topology.spec_str.clone()],
+            shrinks: vec![base.faults.shrink],
             seeds: vec![base.seed],
             base,
         }
@@ -97,6 +103,7 @@ impl SweepGrid {
             * self.stragglers.len()
             * self.hardware_mixes.len()
             * self.topologies.len()
+            * self.shrinks.len()
             * self.seeds.len()
     }
 
@@ -124,6 +131,14 @@ impl SweepGrid {
         self.gpu_mtbfs.iter().any(|&m| m > 0.0)
     }
 
+    /// True when any cell of the grid turns shrink-in-place on. Gates
+    /// the streaming report's `shrink` / `shrinks` / `regrows` /
+    /// `degraded_rate_time_s` columns the same way
+    /// [`SweepGrid::has_gpu_faults`] gates the holed-GPU columns.
+    pub fn has_shrink(&self) -> bool {
+        self.shrinks.iter().any(|&s| s)
+    }
+
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -142,6 +157,7 @@ impl SweepGrid {
             ("stragglers", self.stragglers.is_empty()),
             ("hardware_mixes", self.hardware_mixes.is_empty()),
             ("topologies", self.topologies.is_empty()),
+            ("shrinks", self.shrinks.is_empty()),
             ("seeds", self.seeds.is_empty()),
         ] {
             if empty {
@@ -186,26 +202,32 @@ impl SweepGrid {
                                             for topo in
                                                 &self.topologies
                                             {
-                                                for &seed in &self.seeds
+                                                for &shrink in
+                                                    &self.shrinks
                                                 {
-                                                    out.push(SweepPoint {
-                                                        index,
-                                                        policy,
-                                                        n_jobs,
-                                                        gpus,
-                                                        rate_scale,
-                                                        month,
-                                                        mtbf_s,
-                                                        gpu_mtbf_s,
-                                                        straggler_mtbs_s:
-                                                            mtbs,
-                                                        hardware_mix:
-                                                            mix.clone(),
-                                                        topology: topo
-                                                            .clone(),
-                                                        seed,
-                                                    });
-                                                    index += 1;
+                                                    for &seed in
+                                                        &self.seeds
+                                                    {
+                                                        out.push(SweepPoint {
+                                                            index,
+                                                            policy,
+                                                            n_jobs,
+                                                            gpus,
+                                                            rate_scale,
+                                                            month,
+                                                            mtbf_s,
+                                                            gpu_mtbf_s,
+                                                            straggler_mtbs_s:
+                                                                mtbs,
+                                                            hardware_mix:
+                                                                mix.clone(),
+                                                            topology: topo
+                                                                .clone(),
+                                                            shrink,
+                                                            seed,
+                                                        });
+                                                        index += 1;
+                                                    }
                                                 }
                                             }
                                         }
@@ -241,6 +263,9 @@ pub struct SweepPoint {
     pub hardware_mix: String,
     /// topology string ("" = flat single-switch cluster)
     pub topology: String,
+    /// shrink-in-place gangs through single-GPU failures (false =
+    /// legacy evict-and-requeue semantics)
+    pub shrink: bool,
     pub seed: u64,
 }
 
@@ -261,6 +286,7 @@ impl SweepPoint {
         cfg.trace = month_profile(self.month).scaled(self.rate_scale);
         cfg.faults.mtbf_s = self.mtbf_s;
         cfg.faults.gpu_mtbf_s = self.gpu_mtbf_s;
+        cfg.faults.shrink = self.shrink;
         cfg.stragglers.mtbs_s = self.straggler_mtbs_s;
         cfg.seed = self.seed;
         cfg
@@ -278,10 +304,11 @@ impl SweepPoint {
     /// `d` component is the straggler MTBS in seconds (0 = no
     /// degraded nodes). A `/G<gpu_mtbf>` component appears only for
     /// cells with single-GPU faults on, a trailing `/h<mix>` component
-    /// only for heterogeneous cells and a trailing `/t<topology>`
-    /// component only for non-flat cells, so GPU-fault-free
-    /// homogeneous flat sweep keys stay byte-identical to pre-tier,
-    /// pre-topology and pre-GPU-fault builds.
+    /// only for heterogeneous cells, a trailing `/t<topology>`
+    /// component only for non-flat cells and a trailing `/S1`
+    /// component only for shrink-in-place cells, so GPU-fault-free
+    /// homogeneous flat evict-semantics sweep keys stay byte-identical
+    /// to pre-tier, pre-topology, pre-GPU-fault and pre-shrink builds.
     pub fn cell_key(&self) -> String {
         let mut key = format!(
             "{}/j{}/g{}/r{}x/m{}/f{}/d{}",
@@ -303,6 +330,9 @@ impl SweepPoint {
         if !self.topology.is_empty() {
             key.push_str("/t");
             key.push_str(&self.topology);
+        }
+        if self.shrink {
+            key.push_str("/S1");
         }
         key
     }
@@ -439,6 +469,34 @@ mod tests {
         assert!(g.validate().is_err());
         let mut g = grid();
         g.gpu_mtbfs = vec![-10.0];
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn shrink_axis_enumerates_and_applies() {
+        let mut g = grid();
+        g.shrinks = vec![false, true];
+        assert_eq!(g.len(), 2 * 2 * 2 * 2 * 3);
+        let pts = g.points();
+        assert_eq!(pts.len(), g.len());
+        // shrink varies faster than topology, slower than seed
+        assert!(!pts[0].shrink);
+        assert!(pts[3].shrink);
+        assert_ne!(pts[0].cell_key(), pts[3].cell_key());
+        // the evict-semantics cell's key is byte-identical to the
+        // pre-shrink format; only shrink cells grow the /S1 suffix
+        assert!(pts[0].cell_key().ends_with("/f0/d0"));
+        assert!(pts[3].cell_key().ends_with("/f0/d0/S1"));
+        let cfg0 = pts[0].config(&g.base);
+        let cfg1 = pts[3].config(&g.base);
+        assert!(!cfg0.faults.shrink);
+        assert!(cfg1.faults.shrink);
+        assert!(cfg0.validate().is_ok() && cfg1.validate().is_ok());
+        assert!(g.has_shrink());
+        assert!(!grid().has_shrink());
+        // rejection: the axis must be non-empty like every other
+        let mut g = grid();
+        g.shrinks.clear();
         assert!(g.validate().is_err());
     }
 

@@ -79,6 +79,16 @@ pub struct CellSummary {
     pub rack_span_mean: (f64, f64),
     /// worst racks-spanned by any gang across the cell's replicas
     pub rack_span_max: u64,
+    /// total shrink-in-place events across the cell's replicas — the
+    /// shrink columns are gated on the cell's `shrink` flag so
+    /// evict-semantics reports stay byte-identical to pre-shrink
+    /// builds
+    pub shrinks: u64,
+    /// total regrow-to-full-width events across the cell's replicas
+    pub regrows: u64,
+    /// job-seconds spent training at shrunken width, pooled as
+    /// (mean, ci95) over replicas
+    pub degraded_rate_time_s: (f64, f64),
 }
 
 impl CellSummary {
@@ -195,6 +205,17 @@ pub fn aggregate(run: &SweepRun) -> Vec<CellSummary> {
                     .map(|p| p.result.rack_span_max)
                     .max()
                     .unwrap_or(0),
+                shrinks: pts
+                    .iter()
+                    .map(|p| p.result.shrinks)
+                    .sum(),
+                regrows: pts
+                    .iter()
+                    .map(|p| p.result.regrows)
+                    .sum(),
+                degraded_rate_time_s: col(&|p| {
+                    p.result.degraded_rate_time_s
+                }),
             }
         })
         .collect()
@@ -233,6 +254,7 @@ pub fn sweep_table(title: &str, cells: &[CellSummary]) -> Table {
         cells.iter().any(|c| !c.point.topology.is_empty());
     let gpufaults =
         cells.iter().any(|c| c.point.gpu_mtbf_s > 0.0);
+    let shrink = cells.iter().any(|c| c.point.shrink);
     let mut headers =
         vec!["scenario", "seeds", "thr (samples/s)", "goodput",
           "mean JCT (s)", "p99 JCT (s)", "GPU util", "slowdown",
@@ -245,6 +267,9 @@ pub fn sweep_table(title: &str, cells: &[CellSummary]) -> Table {
     }
     if topo {
         headers.push("rack span");
+    }
+    if shrink {
+        headers.push("shrinks");
     }
     let mut t = Table::new(title, &headers);
     for c in cells {
@@ -321,18 +346,32 @@ pub fn sweep_table(title: &str, cells: &[CellSummary]) -> Table {
                 )
             });
         }
+        if shrink {
+            row.push(if c.point.shrink {
+                format!(
+                    "{} ({} regrown, {:.0}s degraded)",
+                    c.shrinks,
+                    c.regrows,
+                    fin(c.degraded_rate_time_s.0)
+                )
+            } else {
+                "-".into()
+            });
+        }
         t.row(&row);
     }
     t
 }
 
 /// CSV column names; `gpufaults` appends the GPU-fault-gated columns,
-/// `het` the heterogeneity-gated ones and `topo` the topology-gated
-/// ones. Shared by the legacy and streaming CSV paths.
+/// `het` the heterogeneity-gated ones, `topo` the topology-gated
+/// ones and `shrink` the shrink-in-place-gated ones. Shared by the
+/// legacy and streaming CSV paths.
 pub(crate) fn csv_headers(
     het: bool,
     topo: bool,
     gpufaults: bool,
+    shrink: bool,
 ) -> Vec<&'static str> {
     let mut headers =
         vec!["index", "policy", "n_jobs", "gpus", "rate_scale", "month",
@@ -358,6 +397,12 @@ pub(crate) fn csv_headers(
         headers.push("rack_span_mean");
         headers.push("rack_span_max");
     }
+    if shrink {
+        headers.push("shrink");
+        headers.push("shrinks");
+        headers.push("regrows");
+        headers.push("degraded_rate_time_s");
+    }
     headers
 }
 
@@ -368,6 +413,7 @@ pub(crate) fn csv_point_row(
     het: bool,
     topo: bool,
     gpufaults: bool,
+    shrink: bool,
 ) -> Vec<String> {
     let mut row = vec![
         p.point.index.to_string(),
@@ -425,6 +471,15 @@ pub(crate) fn csv_point_row(
         row.push(format!("{:.6}", fin(p.result.rack_span_mean)));
         row.push(p.result.rack_span_max.to_string());
     }
+    if shrink {
+        row.push(p.point.shrink.to_string());
+        row.push(p.result.shrinks.to_string());
+        row.push(p.result.regrows.to_string());
+        row.push(format!(
+            "{:.6}",
+            fin(p.result.degraded_rate_time_s)
+        ));
+    }
     row
 }
 
@@ -445,9 +500,13 @@ pub fn to_csv(run: &SweepRun) -> String {
         .points
         .iter()
         .any(|p| p.point.gpu_mtbf_s > 0.0);
-    let mut t = Table::new("sweep", &csv_headers(het, topo, gpufaults));
+    let shrink = run.points.iter().any(|p| p.point.shrink);
+    let mut t = Table::new(
+        "sweep",
+        &csv_headers(het, topo, gpufaults, shrink),
+    );
     for p in &run.points {
-        t.row(&csv_point_row(p, het, topo, gpufaults));
+        t.row(&csv_point_row(p, het, topo, gpufaults, shrink));
     }
     t.to_csv()
 }
@@ -555,6 +614,19 @@ pub(crate) fn point_json(p: &PointResult, include_timing: bool) -> Json {
             .set("rack_span_mean", fin(p.result.rack_span_mean))
             .set("rack_span_max", p.result.rack_span_max);
     }
+    // gated on the shrink axis: evict-semantics points carry no
+    // shrink fields, so their JSON is byte-identical to pre-shrink
+    // builds
+    if p.point.shrink {
+        j = j
+            .set("shrink", true)
+            .set("shrinks", p.result.shrinks)
+            .set("regrows", p.result.regrows)
+            .set(
+                "degraded_rate_time_s",
+                fin(p.result.degraded_rate_time_s),
+            );
+    }
     if include_timing {
         j = j.set("wall_s", p.wall_s);
     }
@@ -615,6 +687,16 @@ pub(crate) fn cell_json(c: &CellSummary) -> Json {
             .set("topology", c.point.topology.as_str())
             .set("rack_span_mean", ci(c.rack_span_mean))
             .set("rack_span_max", c.rack_span_max);
+    }
+    if c.point.shrink {
+        j = j
+            .set("shrink", true)
+            .set("shrinks", c.shrinks)
+            .set("regrows", c.regrows)
+            .set(
+                "degraded_rate_time_s",
+                ci(c.degraded_rate_time_s),
+            );
     }
     j
 }
@@ -997,6 +1079,64 @@ mod tests {
         assert!(cell.get("gpu_failures").is_some());
         let t = sweep_table("demo", &cells).render();
         assert!(t.contains("gpu fails"), "{t}");
+    }
+
+    fn run_shrink() -> SweepRun {
+        let mut g = SweepGrid::default();
+        g.policies = vec![Policy::TLora];
+        g.n_jobs = vec![8];
+        g.gpus = vec![16];
+        g.rate_scales = vec![2.0];
+        g.months = vec![1];
+        g.gpu_mtbfs = vec![20_000.0];
+        g.shrinks = vec![true];
+        g.seeds = vec![3];
+        runner::run(&g, 1).unwrap()
+    }
+
+    #[test]
+    fn shrink_columns_appear_only_for_shrink_cells() {
+        // evict-semantics sweeps keep the pre-shrink schema
+        // byte-for-byte
+        let off = run_small();
+        let header =
+            to_csv(&off).lines().next().unwrap().to_string();
+        assert!(!header.contains("shrink"), "{header}");
+        assert!(!header.contains("regrows"), "{header}");
+        let j = json::parse(&to_json_canonical(&off).to_string())
+            .unwrap();
+        let pt = &j.get("points").unwrap().as_arr().unwrap()[0];
+        assert!(pt.get("shrink").is_none());
+        assert!(pt.get("shrinks").is_none());
+        let cell = &j.get("cells").unwrap().as_arr().unwrap()[0];
+        assert!(cell.get("shrinks").is_none());
+        assert_eq!(aggregate(&off)[0].shrinks, 0);
+
+        // shrink sweeps carry the gated columns end to end
+        let on = run_shrink();
+        let csv = to_csv(&on);
+        let header = csv.lines().next().unwrap();
+        assert!(
+            header.contains("shrink")
+                && header.contains("shrinks")
+                && header.contains("regrows")
+                && header.contains("degraded_rate_time_s"),
+            "{header}"
+        );
+        let j = json::parse(&to_json_canonical(&on).to_string())
+            .unwrap();
+        let pt = &j.get("points").unwrap().as_arr().unwrap()[0];
+        assert!(pt.get("shrink").unwrap().as_bool().unwrap());
+        assert!(pt.get("shrinks").is_some());
+        assert!(pt.get("regrows").is_some());
+        assert!(pt.get("degraded_rate_time_s").is_some());
+        let cells = aggregate(&on);
+        assert!(cells[0].key.ends_with("/S1"), "{}", cells[0].key);
+        let cell = &j.get("cells").unwrap().as_arr().unwrap()[0];
+        assert!(cell.get("shrinks").is_some());
+        let t = sweep_table("demo", &cells).render();
+        assert!(t.contains("shrinks"), "{t}");
+        assert!(t.contains("regrown"), "{t}");
     }
 
     fn run_topo() -> SweepRun {

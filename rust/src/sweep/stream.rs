@@ -267,6 +267,9 @@ struct CellAcc {
     tier_utils: Vec<Welford>,
     rack_span_mean: Welford,
     rack_span_max: u64,
+    shrinks: u64,
+    regrows: u64,
+    degraded_rate_time_s: Welford,
 }
 
 impl CellAcc {
@@ -305,6 +308,9 @@ impl CellAcc {
             tier_utils,
             rack_span_mean: Welford::default(),
             rack_span_max: 0,
+            shrinks: 0,
+            regrows: 0,
+            degraded_rate_time_s: Welford::default(),
         };
         acc.push(p);
         acc
@@ -343,6 +349,10 @@ impl CellAcc {
         self.rack_span_mean.add(p.result.rack_span_mean);
         self.rack_span_max =
             self.rack_span_max.max(p.result.rack_span_max);
+        self.shrinks += p.result.shrinks;
+        self.regrows += p.result.regrows;
+        self.degraded_rate_time_s
+            .add(p.result.degraded_rate_time_s);
     }
 
     fn finalize(self) -> CellSummary {
@@ -381,6 +391,11 @@ impl CellAcc {
                 .collect(),
             rack_span_mean: self.rack_span_mean.mean_ci95(),
             rack_span_max: self.rack_span_max,
+            shrinks: self.shrinks,
+            regrows: self.regrows,
+            degraded_rate_time_s: self
+                .degraded_rate_time_s
+                .mean_ci95(),
         }
     }
 }
@@ -398,6 +413,7 @@ pub struct StreamReport<'a> {
     het: bool,
     topo: bool,
     gpufaults: bool,
+    shrink: bool,
     include_timing: bool,
     json: Option<StreamJsonWriter<'a>>,
     csv: Option<&'a mut dyn Write>,
@@ -418,6 +434,7 @@ impl<'a> StreamReport<'a> {
             het: grid.is_heterogeneous(),
             topo: grid.has_topology(),
             gpufaults: grid.has_gpu_faults(),
+            shrink: grid.has_shrink(),
             include_timing,
             json: None,
             csv: None,
@@ -452,11 +469,15 @@ impl<'a> StreamReport<'a> {
             return Ok(());
         }
         if let Some(out) = self.csv.as_mut() {
-            let headers: Vec<String> =
-                csv_headers(self.het, self.topo, self.gpufaults)
-                    .iter()
-                    .map(|h| h.to_string())
-                    .collect();
+            let headers: Vec<String> = csv_headers(
+                self.het,
+                self.topo,
+                self.gpufaults,
+                self.shrink,
+            )
+            .iter()
+            .map(|h| h.to_string())
+            .collect();
             out.write_all(csv_row(&headers).as_bytes())?;
             out.write_all(b"\n")?;
         }
@@ -495,8 +516,13 @@ impl<'a> StreamReport<'a> {
         }
         if self.csv.is_some() {
             self.ensure_csv_header()?;
-            let row =
-                csv_point_row(p, self.het, self.topo, self.gpufaults);
+            let row = csv_point_row(
+                p,
+                self.het,
+                self.topo,
+                self.gpufaults,
+                self.shrink,
+            );
             let out = self.csv.as_mut().unwrap();
             out.write_all(csv_row(&row).as_bytes())?;
             out.write_all(b"\n")?;
@@ -798,6 +824,33 @@ mod tests {
             header.contains("gpu_mtbf_s")
                 && header.contains("gpu_failures")
                 && header.contains("holed_gpu_time_s"),
+            "{header}"
+        );
+        assert_eq!(
+            sweep_table("t", &cells).render(),
+            sweep_table("t", &aggregate(&run)).render()
+        );
+    }
+
+    #[test]
+    fn streaming_matches_legacy_on_shrink_grid() {
+        // the grid-derived has_shrink() gate must agree with the
+        // legacy writers' any-point check, and the gated shrink
+        // columns must stream byte-identically
+        let mut g = small_grid();
+        g.gpu_mtbfs = vec![20_000.0];
+        g.shrinks = vec![false, true];
+        g.seeds = vec![3];
+        let run = runner::run(&g, 1).unwrap();
+        let (canon, csv, cells) = stream_all(&g, &run, false);
+        assert_eq!(canon, to_json_canonical(&run).to_pretty());
+        assert_eq!(csv, to_csv(&run));
+        let header = csv.lines().next().unwrap();
+        assert!(
+            header.contains("shrink")
+                && header.contains("shrinks")
+                && header.contains("regrows")
+                && header.contains("degraded_rate_time_s"),
             "{header}"
         );
         assert_eq!(

@@ -449,6 +449,18 @@ pub struct GpuFaultModel {
     mttr_s: f64,
     gpus_per_node: usize,
     rngs: Vec<Rng>,
+    /// Wear coupling α: the effective MTBF for a device's next uptime
+    /// draw is `mtbf_s / (1 + α * wear)` where `wear` is its
+    /// accumulated service time in MTBF units plus its past failure
+    /// count. 0 (the default) reproduces the memoryless renewal
+    /// stream bit-exactly (`x / (1.0 + 0.0 * w) == x` in IEEE bits
+    /// for finite `w`).
+    wear_alpha: f64,
+    /// Accumulated up-time (service) per flat device index, seconds.
+    service_s: Vec<f64>,
+    /// Past failure count per flat device index (a downtime draw is a
+    /// failure that happened).
+    failures: Vec<u64>,
 }
 
 impl GpuFaultModel {
@@ -462,8 +474,35 @@ impl GpuFaultModel {
         gpus_per_node: usize,
         seed: u64,
     ) -> GpuFaultModel {
+        GpuFaultModel::with_wear(
+            mtbf_s,
+            mttr_s,
+            n_nodes,
+            gpus_per_node,
+            seed,
+            0.0,
+        )
+    }
+
+    /// Wear-coupled construction (`faults.gpu_wear_alpha`). The wear
+    /// state lives inside each device's own renewal stream, so draws
+    /// stay pure in `(seed, node, gpu)` exactly like the base model —
+    /// one device aging never shifts another device's stream.
+    pub fn with_wear(
+        mtbf_s: f64,
+        mttr_s: f64,
+        n_nodes: usize,
+        gpus_per_node: usize,
+        seed: u64,
+        wear_alpha: f64,
+    ) -> GpuFaultModel {
         assert!(mtbf_s > 0.0 && mttr_s > 0.0, "mtbf/mttr must be > 0");
-        let rngs = (0..n_nodes * gpus_per_node)
+        assert!(
+            wear_alpha >= 0.0 && wear_alpha.is_finite(),
+            "wear_alpha must be finite and >= 0"
+        );
+        let n = n_nodes * gpus_per_node;
+        let rngs = (0..n)
             .map(|flat| {
                 Rng::new(
                     seed ^ GPU_FAULT_SALT
@@ -477,6 +516,9 @@ impl GpuFaultModel {
             mttr_s,
             gpus_per_node,
             rngs,
+            wear_alpha,
+            service_s: vec![0.0; n],
+            failures: vec![0; n],
         }
     }
 
@@ -491,14 +533,25 @@ impl GpuFaultModel {
 
     /// Draw the next up-time span for device `(node, gpu)` (seconds
     /// until its next failure, measured from now / from recovery).
+    /// With wear coupling on, the draw uses the device's *effective*
+    /// MTBF — degraded by its accumulated service time and past
+    /// failures — and the span itself then ages the device further.
     pub fn uptime(&mut self, node: usize, gpu: usize) -> f64 {
         let flat = self.flat(node, gpu);
-        self.rngs[flat].exponential(1.0 / self.mtbf_s)
+        let wear = self.service_s[flat] / self.mtbf_s
+            + self.failures[flat] as f64;
+        let mtbf_eff = self.mtbf_s / (1.0 + self.wear_alpha * wear);
+        let span = self.rngs[flat].exponential(1.0 / mtbf_eff);
+        self.service_s[flat] += span;
+        span
     }
 
-    /// Draw the repair span for device `(node, gpu)`.
+    /// Draw the repair span for device `(node, gpu)`. Each repair
+    /// records one more past failure in the device's wear state
+    /// (repairs themselves stay memoryless — only the MTBF degrades).
     pub fn downtime(&mut self, node: usize, gpu: usize) -> f64 {
         let flat = self.flat(node, gpu);
+        self.failures[flat] += 1;
         self.rngs[flat].exponential(1.0 / self.mttr_s)
     }
 }
@@ -516,12 +569,38 @@ pub fn synthesize_gpu_faults(
     seed: u64,
     horizon_s: f64,
 ) -> Vec<ScriptedGpuFault> {
-    let mut model = GpuFaultModel::new(
+    synthesize_gpu_faults_wear(
         gpu_mtbf_s,
         gpu_mttr_s,
         n_nodes,
         gpus_per_node,
         seed,
+        horizon_s,
+        0.0,
+    )
+}
+
+/// [`synthesize_gpu_faults`] with wear coupling
+/// (`faults.gpu_wear_alpha`): because the wear state lives inside the
+/// per-device draw sequence itself, the materialized script matches
+/// the engine's lazy wear-coupled draws by construction. `wear_alpha
+/// == 0.0` reproduces the memoryless script bit-exactly.
+pub fn synthesize_gpu_faults_wear(
+    gpu_mtbf_s: f64,
+    gpu_mttr_s: f64,
+    n_nodes: usize,
+    gpus_per_node: usize,
+    seed: u64,
+    horizon_s: f64,
+    wear_alpha: f64,
+) -> Vec<ScriptedGpuFault> {
+    let mut model = GpuFaultModel::with_wear(
+        gpu_mtbf_s,
+        gpu_mttr_s,
+        n_nodes,
+        gpus_per_node,
+        seed,
+        wear_alpha,
     );
     let mut out = vec![];
     for node in 0..n_nodes {
@@ -1018,6 +1097,109 @@ mod tests {
                 assert_eq!(i, evs.len());
             }
         }
+    }
+
+    #[test]
+    fn zero_wear_alpha_is_an_exact_noop() {
+        // α = 0 must reproduce the memoryless stream bit-for-bit:
+        // mtbf / (1.0 + 0.0 * wear) == mtbf in IEEE bits
+        let mut a = GpuFaultModel::new(1000.0, 100.0, 2, 4, 7);
+        let mut b =
+            GpuFaultModel::with_wear(1000.0, 100.0, 2, 4, 7, 0.0);
+        for node in 0..2 {
+            for gpu in 0..4 {
+                for _ in 0..30 {
+                    assert_eq!(
+                        a.uptime(node, gpu).to_bits(),
+                        b.uptime(node, gpu).to_bits()
+                    );
+                    assert_eq!(
+                        a.downtime(node, gpu).to_bits(),
+                        b.downtime(node, gpu).to_bits()
+                    );
+                }
+            }
+        }
+        // and the synthesized scripts match bit-for-bit too
+        let s0 = synthesize_gpu_faults(400.0, 40.0, 2, 2, 5, 5_000.0);
+        let s1 = synthesize_gpu_faults_wear(
+            400.0, 40.0, 2, 2, 5, 5_000.0, 0.0,
+        );
+        assert_eq!(s0.len(), s1.len());
+        for (a, b) in s0.iter().zip(s1.iter()) {
+            assert_eq!(a.time.to_bits(), b.time.to_bits());
+            assert_eq!(a.kind, b.kind);
+            assert_eq!((a.node, a.gpu), (b.node, b.gpu));
+        }
+    }
+
+    #[test]
+    fn wear_shortens_later_uptimes_and_stays_pure_per_device() {
+        let mut base = GpuFaultModel::new(1000.0, 100.0, 2, 2, 11);
+        let mut worn =
+            GpuFaultModel::with_wear(1000.0, 100.0, 2, 2, 11, 0.5);
+        // the first draw sees zero wear: identical to the base stream
+        let u0 = base.uptime(0, 0);
+        let w0 = worn.uptime(0, 0);
+        assert_eq!(u0.to_bits(), w0.to_bits());
+        // both streams consume draws in lockstep, so every later
+        // uptime comes from the same underlying uniform — the worn
+        // device's span is the base span scaled by mtbf_eff/mtbf < 1
+        let _ = base.downtime(0, 0);
+        let _ = worn.downtime(0, 0);
+        let u1 = base.uptime(0, 0);
+        let w1 = worn.uptime(0, 0);
+        assert!(
+            w1 < u1,
+            "worn uptime {w1} not shorter than fresh {u1}"
+        );
+        // purity: heavy wear on (0,0) never shifts (1,1)'s stream
+        let mut fresh =
+            GpuFaultModel::with_wear(1000.0, 100.0, 2, 2, 11, 0.5);
+        assert_eq!(
+            worn.uptime(1, 1).to_bits(),
+            fresh.uptime(1, 1).to_bits()
+        );
+    }
+
+    #[test]
+    fn wear_coupled_script_matches_lazy_draws() {
+        let script = synthesize_gpu_faults_wear(
+            400.0, 40.0, 2, 2, 5, 5_000.0, 0.3,
+        );
+        assert!(!script.is_empty());
+        for w in script.windows(2) {
+            assert!(w[0].time <= w[1].time);
+        }
+        let mut model =
+            GpuFaultModel::with_wear(400.0, 40.0, 2, 2, 5, 0.3);
+        for node in 0..2u64 {
+            for gpu in 0..2u64 {
+                let evs: Vec<&ScriptedGpuFault> = script
+                    .iter()
+                    .filter(|f| f.node == node && f.gpu == gpu)
+                    .collect();
+                let mut t =
+                    model.uptime(node as usize, gpu as usize);
+                let mut i = 0;
+                while t < 5_000.0 {
+                    assert_eq!(evs[i].time, t);
+                    let rec = t
+                        + model
+                            .downtime(node as usize, gpu as usize);
+                    assert_eq!(evs[i + 1].time, rec);
+                    t = rec
+                        + model.uptime(node as usize, gpu as usize);
+                    i += 2;
+                }
+                assert_eq!(i, evs.len());
+            }
+        }
+        // wear strictly accelerates the failure process: at least as
+        // many events in-horizon as the memoryless stream produces
+        let memless =
+            synthesize_gpu_faults(400.0, 40.0, 2, 2, 5, 5_000.0);
+        assert!(script.len() >= memless.len());
     }
 
     #[test]

@@ -25,11 +25,18 @@
 //! 7. straggler robustness — rates stay finite and non-negative under
 //!    random degrade/restore interleavings, and job conservation
 //!    holds under seeded straggler churn (with and without node
-//!    failures), mirroring the failure-churn property.
+//!    failures), mirroring the failure-churn property;
+//! 8. graceful degradation — with wear-coupled single-GPU churn and
+//!    shrink-in-place active, jobs are still conserved, shrink
+//!    bookkeeping stays consistent (only capable policies shrink,
+//!    every regrow pairs with a prior shrink), and the run replays
+//!    bit-identically;
+//! 9. degradation monotonicity — dropping one GPU from a single-node
+//!    gang never lowers the predictor's modeled step time.
 
 use std::collections::HashSet;
 
-use tlora::cluster::{Allocation, Allocator, ClusterSpec};
+use tlora::cluster::{Allocation, Allocator, ClusterSpec, GpuId};
 use tlora::config::{ExperimentConfig, Policy, SchedulerConfig};
 use tlora::planner::PlanOptions;
 use tlora::scheduler::predictor::Predictor;
@@ -377,6 +384,131 @@ fn prop_jobs_conserved_under_node_churn_and_preemption() {
             }
         }
         true
+    });
+}
+
+// ---------------------------------------------------------------------
+// Graceful degradation (shrink-in-place)
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_jobs_conserved_under_gpu_churn_with_shrink() {
+    // 8. with wear-coupled single-GPU churn and shrink-in-place
+    //    active, every job still ends the run in exactly one of
+    //    `jct` / `incomplete_jobs`; shrink bookkeeping stays
+    //    consistent — only shrink-capable policies shrink, every
+    //    regrow consumes a partial allocation a prior shrink created,
+    //    a shrink implies a GPU fault, and degraded-rate time only
+    //    accrues when something shrank — and the whole run replays
+    //    bit-identically from the same seed
+    prop_check(6, &gen_usize(0, 10_000), |&seed| {
+        for policy in [Policy::TLora, Policy::Megatron] {
+            let mut cfg = ExperimentConfig::default();
+            cfg.policy = policy;
+            cfg.n_jobs = 10 + seed % 6;
+            cfg.cluster = ClusterSpec::with_gpus(16);
+            cfg.seed = seed as u64;
+            cfg.trace = TraceProfile::month1().scaled(2.0);
+            cfg.faults.gpu_mtbf_s =
+                15_000.0 + (seed % 5) as f64 * 2_000.0;
+            cfg.faults.gpu_mttr_s = 400.0;
+            cfg.faults.gpu_wear_alpha = 0.5;
+            cfg.faults.shrink = true;
+            let r = simulate(&cfg);
+            let mut seen: Vec<u64> = r
+                .jct
+                .iter()
+                .map(|&(id, _)| id)
+                .chain(r.incomplete_jobs.iter().copied())
+                .collect();
+            seen.sort_unstable();
+            let n_seen = seen.len();
+            seen.dedup();
+            if n_seen != cfg.n_jobs || seen.len() != cfg.n_jobs {
+                return false;
+            }
+            if !r.jct.iter().all(|&(_, v)| v.is_finite() && v > 0.0) {
+                return false;
+            }
+            // shrink accounting is internally consistent
+            if policy == Policy::Megatron
+                && (r.shrinks != 0
+                    || r.regrows != 0
+                    || r.degraded_rate_time_s != 0.0)
+            {
+                return false;
+            }
+            if r.regrows > r.shrinks {
+                return false;
+            }
+            if r.shrinks > 0 && r.gpu_failures == 0 {
+                return false;
+            }
+            if !(r.degraded_rate_time_s.is_finite()
+                && r.degraded_rate_time_s >= 0.0)
+            {
+                return false;
+            }
+            if r.shrinks == 0 && r.degraded_rate_time_s != 0.0 {
+                return false;
+            }
+            // deterministic replay, shrink path included
+            let r2 = simulate(&cfg);
+            if r2.jct != r.jct
+                || r2.shrinks != r.shrinks
+                || r2.regrows != r.regrows
+                || r2.degraded_rate_time_s.to_bits()
+                    != r.degraded_rate_time_s.to_bits()
+            {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_single_node_shrink_never_speeds_a_gang_up() {
+    // 9. degradation monotonicity — dropping one GPU from a
+    //    single-node gang (the shrink-in-place move) never lowers the
+    //    modeled step time: width n-1 on the same node is at most as
+    //    fast as width n. Cross-node gangs are excluded on purpose —
+    //    shrinking a gang off a second node can *remove* an
+    //    inter-node hop and legitimately speed it up, which is why
+    //    the simulator's spill rule re-prices the shrunken plan
+    //    instead of assuming it got slower.
+    let spec = ClusterSpec::with_gpus(8);
+    let g = gen_pair(gen_usize(1, 4000), gen_usize(2, 8));
+    prop_check(16, &g, |&(seed, width)| {
+        let mut pred =
+            Predictor::new(spec.clone(), PlanOptions::default());
+        let mut job =
+            TraceGenerator::new(TraceProfile::month1(), seed as u64)
+                .generate(1)
+                .pop()
+                .unwrap();
+        job.gpus = width;
+        let full = Allocation {
+            gpus: (0..width)
+                .map(|i| GpuId { node: 0, idx: i })
+                .collect(),
+        };
+        let shrunk = Allocation {
+            gpus: (0..width - 1)
+                .map(|i| GpuId { node: 0, idx: i })
+                .collect(),
+        };
+        let jobs = [job];
+        let Some(p_full) = pred.group_perf(&jobs, &full) else {
+            return false;
+        };
+        // mirror the engine: the hole is recorded before the
+        // surviving-width re-plan prices the shrunken gang
+        pred.set_node_holes(0, 1);
+        let Some(p_shrunk) = pred.group_perf(&jobs, &shrunk) else {
+            return false;
+        };
+        p_shrunk.step_time_s >= p_full.step_time_s * (1.0 - 1e-9)
     });
 }
 
